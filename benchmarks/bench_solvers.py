@@ -1,0 +1,70 @@
+"""E7/E8 — real JAX solver runs: per-iteration wall time of CG vs PIPECG
+(and GMRES vs PGMRES) on the paper's ex23 operator, plus the predicted
+TPU-pod speedups from the phase model x noise distribution.
+
+On this CPU container wall-clock differences between CG and PIPECG are NOT
+the paper's effect (1 device = no reduction latency to hide); the numbers
+recorded here are (a) correctness/throughput baselines and (b) the MODEL's
+predictions at P = 256..8192 — which is what the paper's own methodology
+prescribes when the machine at hand cannot expose the latency.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.krylov import (
+    cg,
+    gmres,
+    pgmres,
+    pipecg,
+    tridiagonal_laplacian,
+)
+from repro.core.noise import EX23_N, Hardware, ex23_models, predict_speedup
+from repro.core.perfmodel import Exponential, Shifted
+
+
+def _time(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out.x)
+    return (time.perf_counter() - t0) / reps, out
+
+
+def run():
+    rows = []
+    # reduced-N real runs (full N=2,097,152 also feasible; reduced keeps the
+    # bench under a minute on 1 CPU core)
+    for n, iters in ((65536, 200), (1048576, 50)):
+        A = tridiagonal_laplacian(n, dtype=jnp.float64)
+        b = jnp.ones((n,), jnp.float64)
+        for name, solver in (("cg", cg), ("pipecg", pipecg)):
+            sec, out = _time(jax.jit(lambda bb: solver(A, bb, maxiter=iters)), b)
+            rows.append((f"solver/{name}/n{n}", sec / iters * 1e6,
+                         f"res={float(out.res_norm):.3e} iters={iters}"))
+        for name, solver in (("gmres", gmres), ("pgmres", pgmres)):
+            if n > 100_000:
+                continue
+            sec, out = _time(jax.jit(lambda bb: solver(b=bb, A=A, restart=30)), b)
+            rows.append((f"solver/{name}/n{n}", sec / 30 * 1e6,
+                         f"res={float(out.res_norm):.3e} restart=30"))
+
+    # phase model predictions at pod scale (ex23 sizes, exponential noise)
+    for p in (256, 8192):
+        models = ex23_models(p)
+        noise = Exponential(1.0 / 5e-6)  # 5 us mean OS/step noise
+        pred = predict_speedup(models["cg"], models["pipecg"], noise, K=5000)
+        rows.append((f"solver/predicted_speedup/P{p}", float("nan"),
+                     f"{pred['speedup']:.3f}x  t_spmv={pred['t_spmv']*1e6:.2f}us "
+                     f"t_red={pred['t_reduction']*1e6:.2f}us"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(*r, sep=",")

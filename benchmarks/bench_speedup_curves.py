@@ -1,0 +1,66 @@
+"""E2-E4 — Section 3 speedup curves: analytic (closed/quadrature) vs Monte
+Carlo for uniform / exponential / log-normal / gamma / pareto noise."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.perfmodel import (
+    Exponential,
+    Gamma,
+    LogNormal,
+    Pareto,
+    Uniform,
+    asymptotic_speedup,
+    expected_max_mc,
+    harmonic,
+    simulate,
+    uniform_speedup,
+)
+
+PS = (2, 4, 16, 64, 256, 1024, 8192)
+
+
+def run():
+    rows = []
+    dists = {
+        "uniform": Uniform(0.0, 1.0),
+        "exponential": Exponential(1.0),
+        "lognormal": LogNormal(0.0, 1.0),
+        "gamma_k2": Gamma(2.0, 0.5),
+        "pareto_a2.5": Pareto(1.0, 2.5),
+    }
+    for name, d in dists.items():
+        for P in PS:
+            t0 = time.perf_counter()
+            s = asymptotic_speedup(d, P, method="auto" if name in
+                                   ("uniform", "exponential") else "quad")
+            us = (time.perf_counter() - t0) * 1e6
+            ref = ""
+            if name == "uniform":
+                ref = f" closed={uniform_speedup(P):.4f}"
+            if name == "exponential":
+                ref = f" H_P={harmonic(P):.4f}"
+            rows.append((f"speedup/{name}/P{P}", us, f"{s:.4f}{ref}"))
+
+    # paper §3.4 exact numbers
+    ln = LogNormal(0.0, 1.0)
+    rows.append(("speedup/lognormal_paper/P2", float("nan"),
+                 f"{asymptotic_speedup(ln, 2, 'quad'):.4f} (paper 1.5205)"))
+    rows.append(("speedup/lognormal_paper/P4", float("nan"),
+                 f"{asymptotic_speedup(ln, 4, 'quad'):.4f} (paper 2.2081)"))
+    rows.append(("speedup/exponential_paper/P4", float("nan"),
+                 f"{asymptotic_speedup(Exponential(1.0), 4):.6f} (paper 25/12)"))
+
+    # Monte-Carlo finite-K convergence to the asymptote (exp, P=8)
+    for K in (10, 100, 1000):
+        ms = simulate(Exponential(1.0), P=8, K=K, trials=200, seed=0)
+        rows.append((f"speedup/exp_P8_finiteK{K}", float("nan"),
+                     f"{ms.speedup_of_means:.4f} -> asym {harmonic(8):.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(*r, sep=",")

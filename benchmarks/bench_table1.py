@@ -1,0 +1,31 @@
+"""E5 — Table 1: summary statistics of the calibrated in-silico runs next to
+the paper's observed Piz Daint numbers."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.noise import TABLE1, generate_runs
+from repro.core.stats import fit_report
+
+
+def run():
+    rows = []
+    for alg in ("GMRES", "PGMRES", "CG", "PIPECG"):
+        runs = generate_runs(alg, seed=1)
+        rep = fit_report(runs, name=alg)
+        s = rep.summary
+        p = TABLE1[alg]
+        for k in ("mean", "median", "s", "lambda", "min", "max"):
+            rows.append((f"table1/{alg}/{k}", float("nan"),
+                         f"sim={s[k]:.4f} paper={p[k]:.4f}"))
+    # the speedups Table 1 implies
+    rows.append(("table1/speedup_gmres", float("nan"),
+                 f"{TABLE1['GMRES']['mean']/TABLE1['PGMRES']['mean']:.3f}x (paper data)"))
+    rows.append(("table1/speedup_cg", float("nan"),
+                 f"{TABLE1['CG']['mean']/TABLE1['PIPECG']['mean']:.3f}x (paper data)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(*r, sep=",")

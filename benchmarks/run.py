@@ -1,0 +1,53 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    bench_folk_theorem,
+    bench_speedup_curves,
+    bench_table1,
+    bench_fig5_fig6,
+    bench_solvers,
+    bench_kernels,
+    roofline,
+)
+
+MODULES = [
+    ("folk_theorem (E1: Figs 1-4, Eq 5)", bench_folk_theorem),
+    ("speedup_curves (E2-E4: Sec 3)", bench_speedup_curves),
+    ("table1 (E5)", bench_table1),
+    ("fig5_fig6 (E6)", bench_fig5_fig6),
+    ("solvers (E7/E8)", bench_solvers),
+    ("kernels", bench_kernels),
+    ("roofline (deliverable g)", roofline),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for title, mod in MODULES:
+        t0 = time.time()
+        try:
+            rows = mod.run()
+            for name, us, derived in rows:
+                us_s = f"{us:.3f}" if us == us else ""
+                print(f"{name},{us_s},{derived}")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{title},,FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+            traceback.print_exc()
+        finally:
+            print(f"# {title}: {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

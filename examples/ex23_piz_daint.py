@@ -1,0 +1,66 @@
+"""The paper's experiment, end to end: PETSc KSP ex23 at full size.
+
+N = 2,097,152 tridiagonal Laplacian, 5000 forced Krylov iterates (the Piz
+Daint setup), CG vs PIPECG + GMRES vs PGMRES, followed by the §4 statistical
+pipeline on repeated (noise-injected) run times.
+
+    PYTHONPATH=src python examples/ex23_piz_daint.py [--iters 5000] [--runs 20]
+"""
+import argparse
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.krylov import cg, pipecg, tridiagonal_laplacian
+from repro.core.noise import EX23_ITERS, EX23_N, PIZ_DAINT_P, ex23_models, generate_runs
+from repro.core.perfmodel import Exponential
+from repro.core.noise.simulator import predict_speedup
+from repro.core.stats import fit_report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=EX23_N)
+    ap.add_argument("--iters", type=int, default=500,
+                    help="Krylov iterations (paper: 5000)")
+    ap.add_argument("--runs", type=int, default=20)
+    args = ap.parse_args()
+
+    print(f"[ex23] building tridiagonal Laplacian N={args.n:,}")
+    A = tridiagonal_laplacian(args.n)
+    b = jnp.ones((args.n,), jnp.float64)
+
+    for name, solver in (("CG", cg), ("PIPECG", pipecg)):
+        fn = jax.jit(lambda bb: solver(A, bb, maxiter=args.iters))
+        fn(b)  # compile
+        t0 = time.perf_counter()
+        out = fn(b)
+        jax.block_until_ready(out.x)
+        dt = time.perf_counter() - t0
+        print(f"[ex23] {name:7s}: {args.iters} its in {dt:.2f}s "
+              f"({dt/args.iters*1e6:.1f} us/it on 1 CPU core), "
+              f"final residual {float(out.res_norm):.4e}")
+
+    # model prediction at the paper's scale
+    models = ex23_models(PIZ_DAINT_P)
+    pred = predict_speedup(models["cg"], models["pipecg"],
+                           Exponential(1.0 / 5e-6), K=EX23_ITERS)
+    print(f"[model] predicted pipelining speedup at P={PIZ_DAINT_P}: "
+          f"{pred['speedup']:.2f}x (reduction latency "
+          f"{pred['t_reduction']*1e6:.1f} us >> SpMV {pred['t_spmv']*1e6:.2f} us)")
+
+    # §4: repeated runs -> Table-1 row + distribution verdicts
+    print(f"\n[stats] {args.runs} noise-injected runs per algorithm:")
+    for alg in ("CG", "PIPECG", "GMRES", "PGMRES"):
+        rep = fit_report(generate_runs(alg, n=args.runs, seed=2), name=alg)
+        print("  " + rep.table_row())
+        print("  " + rep.verdict_row())
+
+
+if __name__ == "__main__":
+    main()

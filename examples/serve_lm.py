@@ -1,0 +1,32 @@
+"""Batched serving example: prefill + decode across architectures,
+including hybrid (RG-LRU), attention-free (RWKV-6) and codebook (MusicGen)
+decode paths.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch qwen3-1.7b]
+"""
+import argparse
+
+from repro.configs.registry import list_archs, smoke_config
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="one registry arch (default: a representative trio)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--decode-steps", type=int, default=24)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else [
+        "qwen3-1.7b", "recurrentgemma-2b", "musicgen-medium"]
+    for arch in archs:
+        cfg = smoke_config(arch)
+        print(f"[serve_lm] {arch} (reduced config)")
+        serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
+              decode_steps=args.decode_steps)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Checkpoint/restart: async, atomic, mesh-independent (elastic)."""
+from repro.checkpoint.checkpoint import CheckpointManager  # noqa: F401

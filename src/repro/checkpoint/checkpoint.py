@@ -1,0 +1,144 @@
+"""Mesh-independent checkpointing with async writes and atomic publish.
+
+Layout:  <dir>/step_<n>/arrays.npz + manifest.json  (+ <dir>/LATEST)
+
+- Arrays are gathered to host and stored UNSHARDED -> restore works onto a
+  DIFFERENT mesh shape (elastic scaling: N pods -> M pods).
+- Writes happen on a background thread (training never blocks on disk);
+  ``wait()`` drains the queue; the step directory is renamed into place
+  only after a successful write (atomic publish — a crash mid-write never
+  corrupts LATEST).
+- ``keep`` bounds retained checkpoints (k-of-n retention).
+
+Fault-tolerance runbook (1000+ nodes): on any node failure the job
+restarts from LATEST; the data pipeline is index-based (repro.data) so the
+stream resumes exactly; Krylov solver state (if mid-solve) is re-entered
+from the solver's own (x, iters) — see repro.core.krylov.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+                       for k in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind not in "biufc":  # ml_dtypes (bf16/fp8) -> f32 on disk
+            arr = np.asarray(jnp.asarray(arr).astype(jnp.float32))
+        flat[key] = arr
+    return flat
+
+
+def _unflatten_like(template, flat: Dict[str, np.ndarray]):
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths_leaves:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+                       for k in path)
+        arr = flat[key]
+        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+            arr = np.asarray(jnp.asarray(arr).astype(leaf.dtype))
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_write = async_write
+        self._q: "queue.Queue" = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._thread = None
+        if async_write:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    # -- public api ---------------------------------------------------------
+
+    def save(self, step: int, state, extra: Optional[Dict[str, Any]] = None):
+        flat = _flatten(state)  # gather to host NOW (device buffers freed)
+        if self.async_write:
+            self._q.put((step, flat, extra or {}))
+        else:
+            self._write(step, flat, extra or {})
+
+    def wait(self):
+        if self.async_write:
+            self._q.join()
+        if self._err:
+            raise self._err
+
+    def latest_step(self) -> Optional[int]:
+        f = self.dir / "LATEST"
+        if not f.exists():
+            return None
+        return int(f.read_text().strip())
+
+    def restore(self, template, step: Optional[int] = None,
+                shardings=None) -> Tuple[Any, Dict[str, Any]]:
+        """Restore into the structure (and shardings) of ``template``.
+
+        ``shardings`` (optional pytree of NamedSharding) re-shards onto the
+        CURRENT mesh — the elastic-scaling path."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.dir}")
+        d = self.dir / f"step_{step:010d}"
+        with np.load(d / "arrays.npz") as z:
+            flat = {k: z[k] for k in z.files}
+        manifest = json.loads((d / "manifest.json").read_text())
+        state = _unflatten_like(template, flat)
+        if shardings is not None:
+            state = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), state, shardings)
+        return state, manifest
+
+    # -- internals ------------------------------------------------------------
+
+    def _worker(self):
+        while True:
+            step, flat, extra = self._q.get()
+            try:
+                self._write(step, flat, extra)
+            except BaseException as e:  # surfaced on wait()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray],
+               extra: Dict[str, Any]):
+        final = self.dir / f"step_{step:010d}"
+        tmp = self.dir / f".tmp_step_{step:010d}_{os.getpid()}"
+        tmp.mkdir(parents=True, exist_ok=True)
+        np.savez(tmp / "arrays.npz", **flat)
+        manifest = {"step": step, "time": time.time(),
+                    "n_arrays": len(flat),
+                    "bytes": int(sum(a.nbytes for a in flat.values())),
+                    **extra}
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)                              # atomic publish
+        (self.dir / "LATEST").write_text(str(step))
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(int(p.name.split("_")[1]) for p in self.dir.glob("step_*"))
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)

@@ -1,0 +1,1 @@
+"""Architecture + shape configurations (one module per assigned arch)."""

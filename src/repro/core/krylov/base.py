@@ -1,0 +1,37 @@
+"""Common solver machinery: result container, dot contexts.
+
+A ``DotContext`` abstracts the global reduction: the local (single-device)
+context is a plain ``jnp.vdot``; the distributed context adds ``psum`` over a
+mesh axis (inside shard_map).  This is exactly the paper's model split —
+"local computation" vs "global synchronization".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class SolveResult(NamedTuple):
+    x: jnp.ndarray
+    iters: jnp.ndarray            # number of iterations performed
+    res_norm: jnp.ndarray         # final ||b - A x||_2
+    res_history: jnp.ndarray      # per-iteration residual norms (maxiter,)
+
+
+def local_dot(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(a * b)
+
+
+def make_psum_dot(axis_name: str) -> Callable:
+    def pdot(a, b):
+        return jax.lax.psum(jnp.sum(a * b), axis_name)
+    return pdot
+
+
+def as_matvec(A) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    if callable(A):
+        return A
+    return A.matvec

@@ -1,0 +1,55 @@
+"""BiCGStab for non-symmetric systems (the paper's ref [9] family).
+
+Classical BiCGStab has FOUR synchronization points per iteration (rho,
+<r_hat, v>, <t, s>, <t, t>) — even more reduction-latency exposure than CG,
+which is why pipelined variants of it exist.  We provide the classical
+method (used by tests as a non-SPD baseline) and note that the paper's
+analysis applies verbatim: each removed synchronization converts a
+sum-of-max into a max-of-sum.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.krylov.base import SolveResult, as_matvec, local_dot
+
+
+def bicgstab(A, b, x0=None, *, maxiter=100, tol=0.0, M=None, dot=local_dot
+             ) -> SolveResult:
+    mv = as_matvec(A)
+    M = M if M is not None else (lambda z: z)
+    x = jnp.zeros_like(b) if x0 is None else x0
+
+    r = b - mv(x)
+    r_hat = r
+    rho = dot(r_hat, r)
+    p = r
+    zero = jnp.zeros_like(b)
+    state0 = dict(x=x, r=r, p=p, rho=rho,
+                  done=jnp.asarray(False), iters=jnp.asarray(0, jnp.int32))
+    tol2 = jnp.asarray(tol, b.dtype) ** 2 * dot(b, b)
+    eps = jnp.asarray(1e-300 if b.dtype == jnp.float64 else 1e-30, b.dtype)
+
+    def step(st, _):
+        v = mv(M(st["p"]))
+        alpha = st["rho"] / (dot(r_hat, v) + eps)          # sync 1
+        s = st["r"] - alpha * v
+        t = mv(M(s))
+        omega = dot(t, s) / (dot(t, t) + eps)              # sync 2+3 (fused)
+        x = st["x"] + alpha * M(st["p"]) + omega * M(s)
+        r = s - omega * t
+        rho_new = dot(r_hat, r)                            # sync 4
+        beta = (rho_new / (st["rho"] + eps)) * (alpha / (omega + eps))
+        p = r + beta * (st["p"] - omega * v)
+        rr = dot(r, r)
+        done = st["done"] | (rr <= tol2)
+        new = dict(x=x, r=r, p=p, rho=rho_new, done=done,
+                   iters=st["iters"] + (~done).astype(jnp.int32))
+        new = jax.tree.map(lambda n, o: jnp.where(st["done"], o, n), new, st)
+        return new, jnp.sqrt(jnp.maximum(rr, 0.0))
+
+    st, hist = jax.lax.scan(step, state0, None, length=maxiter)
+    res = jnp.sqrt(jnp.maximum(dot(st["r"], st["r"]), 0.0))
+    return SolveResult(x=st["x"], iters=st["iters"], res_norm=res,
+                       res_history=hist)

@@ -1,0 +1,164 @@
+"""CG / CR and their pipelined variants (PIPECG / PIPECR).
+
+Classical CG has TWO global synchronization points per iteration, each of
+which gates the very next vector update (the reduction result is consumed
+immediately).  PIPECG (Ghysels & Vanroose, Parallel Computing 40(7), 2014)
+rearranges the recurrences so the single fused reduction (gamma, delta) of
+iteration i is consumed only AFTER the SpMV + preconditioner application of
+the same iteration: in MPI terms the reduction becomes a split-phase
+collective (MPI_Iallreduce / MPI_Wait); in XLA terms the all-reduce has no
+data dependence on the SpMV so the async scheduler overlaps them.
+
+CR is CG in the A-inner product: gamma = <r, w>, delta = <w, w> with
+w = A u; both classical and pipelined variants share an implementation with
+an ``ip`` ("id" | "A") switch.  Arithmetic equivalence of the pipelined
+rearrangements is validated in tests/test_krylov_equivalence.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.krylov.base import SolveResult, as_matvec, local_dot
+
+
+def _ip_dots(ip: str, r, u, w, dot):
+    """(gamma, delta) for the CG family.  ip='id' -> CG; ip='A' -> CR."""
+    if ip == "id":
+        return dot(r, u), dot(w, u)
+    return dot(r, w), dot(w, w)
+
+
+# ---------------------------------------------------------------------------
+# Classical CG / CR (synchronizing)
+# ---------------------------------------------------------------------------
+
+def cg(A, b, x0=None, *, maxiter=100, tol=0.0, M=None, dot=local_dot,
+       ip: str = "id") -> SolveResult:
+    """Preconditioned CG (ip='id') or CR (ip='A').
+
+    Fixed-trip-count ``lax.scan`` over iterations (the paper forces 5000
+    iterates; masked updates freeze the state once ``tol`` is reached).
+    """
+    mv = as_matvec(A)
+    M = M if M is not None else (lambda z: z)
+    x = jnp.zeros_like(b) if x0 is None else x0
+
+    r = b - mv(x)
+    u = M(r)
+    w = mv(u)
+    gamma, delta = _ip_dots(ip, r, u, w, dot)
+    p, s = u, w
+    # alpha from the classical formula: gamma / <p, A p>  (s = A p)
+    state0 = dict(x=x, r=r, u=u, w=w, p=p, s=s, gamma=gamma,
+                  done=jnp.asarray(False), iters=jnp.asarray(0, jnp.int32))
+    tol2 = jnp.asarray(tol, b.dtype) ** 2 * dot(b, b)
+
+    def step(st, _):
+        pAp = _ip_dots(ip, st["p"], st["p"], st["s"], dot)[1]  # <s,p> or <s,s>
+        alpha = st["gamma"] / pAp
+        x = st["x"] + alpha * st["p"]
+        r = st["r"] - alpha * st["s"]
+        u = M(r)
+        w = mv(u)
+        gamma_new, _ = _ip_dots(ip, r, u, w, dot)
+        beta = gamma_new / st["gamma"]
+        p = u + beta * st["p"]
+        s = w + beta * st["s"]
+        rr = dot(r, r)
+        done = st["done"] | (rr <= tol2)
+        new = dict(x=x, r=r, u=u, w=w, p=p, s=s, gamma=gamma_new, done=done,
+                   iters=st["iters"] + (~done).astype(jnp.int32))
+        # freeze once converged (masked update keeps trip count static)
+        new = jax.tree.map(
+            lambda n, o: jnp.where(st["done"], o, n), new, st)
+        return new, jnp.sqrt(jnp.maximum(rr, 0.0))
+
+    st, hist = jax.lax.scan(step, state0, None, length=maxiter)
+    res = jnp.sqrt(jnp.maximum(dot(st["r"], st["r"]), 0.0))
+    return SolveResult(x=st["x"], iters=st["iters"], res_norm=res,
+                       res_history=hist)
+
+
+def cr(A, b, x0=None, **kw) -> SolveResult:
+    kw.pop("ip", None)
+    return cg(A, b, x0, ip="A", **kw)
+
+
+# ---------------------------------------------------------------------------
+# Pipelined CG / CR (split-phase reduction)
+# ---------------------------------------------------------------------------
+
+def pipecg(A, b, x0=None, *, maxiter=100, tol=0.0, M=None, dot=local_dot,
+           ip: str = "id") -> SolveResult:
+    """Ghysels-Vanroose pipelined CG (Alg. 4 there; PIPECR via ip='A').
+
+    Per iteration: ONE fused reduction (gamma, delta, ||r||^2) whose result
+    is consumed only after the SpMV ``n = A m`` and preconditioner ``m = M w``
+    — the overlap window.  Extra state (z, q, s, p) vs classical CG is the
+    pipelining cost the paper describes (more AXPYs + storage).
+    """
+    mv = as_matvec(A)
+    M = M if M is not None else (lambda z: z)
+    x = jnp.zeros_like(b) if x0 is None else x0
+
+    r = b - mv(x)
+    u = M(r)
+    w = mv(u)
+    gamma, delta = _ip_dots(ip, r, u, w, dot)
+    m = M(w)
+    n = mv(m)
+    zero = jnp.zeros_like(b)
+    state0 = dict(x=x, r=r, u=u, w=w, m=m, n=n,
+                  z=zero, q=zero, s=zero, p=zero,
+                  gamma=gamma, delta=delta,
+                  gamma_prev=jnp.ones_like(gamma), alpha_prev=jnp.ones_like(gamma),
+                  first=jnp.asarray(True),
+                  done=jnp.asarray(False), iters=jnp.asarray(0, jnp.int32))
+    tol2 = jnp.asarray(tol, b.dtype) ** 2 * dot(b, b)
+
+    def step(st, _):
+        gamma, delta = st["gamma"], st["delta"]
+        beta = jnp.where(st["first"], 0.0, gamma / st["gamma_prev"])
+        alpha = jnp.where(
+            st["first"], gamma / delta,
+            gamma / (delta - beta * gamma / st["alpha_prev"]))
+
+        z = st["n"] + beta * st["z"]
+        q = st["m"] + beta * st["q"]
+        s = st["w"] + beta * st["s"]
+        p = st["u"] + beta * st["p"]
+        x = st["x"] + alpha * p
+        r = st["r"] - alpha * s
+        u = st["u"] - alpha * q
+        w = st["w"] - alpha * z
+
+        # ---- split-phase reduction: initiated here ... ----
+        gamma_new, delta_new = _ip_dots(ip, r, u, w, dot)
+        rr = dot(r, r)
+        # ---- ... overlapped with M-apply + SpMV ... -------
+        m = M(w)
+        n = mv(m)
+        # ---- ... consumed only at the NEXT iteration. -----
+
+        done = st["done"] | (rr <= tol2)
+        new = dict(x=x, r=r, u=u, w=w, m=m, n=n, z=z, q=q, s=s, p=p,
+                   gamma=gamma_new, delta=delta_new,
+                   gamma_prev=gamma, alpha_prev=alpha,
+                   first=jnp.asarray(False), done=done,
+                   iters=st["iters"] + (~done).astype(jnp.int32))
+        new = jax.tree.map(lambda nv, ov: jnp.where(st["done"], ov, nv), new, st)
+        return new, jnp.sqrt(jnp.maximum(rr, 0.0))
+
+    st, hist = jax.lax.scan(step, state0, None, length=maxiter)
+    res = jnp.sqrt(jnp.maximum(dot(st["r"], st["r"]), 0.0))
+    return SolveResult(x=st["x"], iters=st["iters"], res_norm=res,
+                       res_history=hist)
+
+
+def pipecr(A, b, x0=None, **kw) -> SolveResult:
+    kw.pop("ip", None)
+    return pipecg(A, b, x0, ip="A", **kw)

@@ -1,0 +1,87 @@
+"""Distributed Krylov solves: shard_map + ppermute halos + psum dots.
+
+This is the JAX-native rendering of the paper's computational model:
+
+  local computation   = per-shard DIA SpMV + AXPYs           (green boxes)
+  halo exchange       = lax.ppermute with neighbors          (ICI p2p)
+  global sync         = lax.psum for every inner product     (dotted lines)
+
+The *pipelined* solvers (pipecg / pipecr / pgmres) are the SAME functions as
+the local ones — the rearranged data dependencies mean the psum produced at
+the end of iteration i is consumed only after the next SpMV, which is what
+lets XLA's latency-hiding scheduler overlap the collective (split-phase
+semantics, cf. DESIGN.md §Hardware-adaptation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.krylov.base import SolveResult, make_psum_dot
+from repro.core.krylov.operators import DiaMatrix
+
+AXIS = "shards"
+
+
+def halo_exchange(x_local: jnp.ndarray, halo: int, axis_name: str = AXIS):
+    """Return (left_halo, right_halo) of width ``halo`` from the ring
+    neighbors; chain-boundary devices receive zeros (matches the zero
+    padding of DIA bands at the matrix boundary)."""
+    n_dev = jax.lax.axis_size(axis_name)
+    if n_dev == 1 or halo == 0:
+        z = jnp.zeros((halo,) + x_local.shape[1:], x_local.dtype)
+        return z, z
+    right_send = [(i, i + 1) for i in range(n_dev - 1)]   # i -> i+1
+    left_send = [(i + 1, i) for i in range(n_dev - 1)]    # i -> i-1
+    left_halo = jax.lax.ppermute(x_local[-halo:], axis_name, right_send)
+    right_halo = jax.lax.ppermute(x_local[:halo], axis_name, left_send)
+    return left_halo, right_halo
+
+
+def dia_matvec_local(offsets, bands_local, x_local, axis_name: str = AXIS,
+                     use_kernel: bool = False):
+    """Per-shard DIA matvec with halo exchange.
+
+    bands_local: (n_bands, n_local); x_local: (n_local,).
+    """
+    halo = max(abs(o) for o in offsets)
+    left, right = halo_exchange(x_local, halo, axis_name)
+    x_ext = jnp.concatenate([left, x_local, right])
+    n_local = x_local.shape[0]
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.spmv_dia_ext(offsets, bands_local, x_ext, halo)
+    y = jnp.zeros_like(x_local)
+    for k, off in enumerate(offsets):
+        y = y + bands_local[k] * jax.lax.dynamic_slice_in_dim(
+            x_ext, halo + off, n_local)
+    return y
+
+
+def distributed_solve(solver: Callable, A: DiaMatrix, b: jnp.ndarray,
+                      mesh: Mesh, *, use_kernel: bool = False, **solver_kw
+                      ) -> SolveResult:
+    """Run ``solver`` (cg / pipecg / cr / pipecr / gmres / pgmres) with the
+    vector sharded over every device of ``mesh`` (flattened)."""
+    axes = mesh.axis_names
+    spec_v = P(axes)       # vectors sharded over all axes (flattened)
+    spec_b = P(None, axes)  # bands: (n_bands, N) sharded on N
+
+    dot = make_psum_dot(axes if len(axes) > 1 else axes[0])
+    offsets = A.offsets
+
+    def run(bands_local, b_local):
+        mv = functools.partial(dia_matvec_local, offsets, bands_local,
+                               axis_name=axes if len(axes) > 1 else axes[0],
+                               use_kernel=use_kernel)
+        return solver(mv, b_local, dot=dot, **solver_kw)
+
+    out_specs = SolveResult(x=spec_v, iters=P(), res_norm=P(), res_history=P())
+    fn = shard_map(run, mesh=mesh, in_specs=(spec_b, spec_v),
+                   out_specs=out_specs, check_rep=False)
+    return fn(A.bands, b)

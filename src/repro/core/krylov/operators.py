@@ -1,0 +1,138 @@
+"""Linear operators for the Krylov solvers.
+
+The paper's test problem (PETSc KSP tutorial ex23) is a tridiagonal 1-D
+Laplacian of size N = 2,097,152.  We represent banded matrices in DIA
+(diagonal) format — offsets + bands — which maps naturally onto both the
+pure-jnp reference matvec (shifted adds) and the Pallas stencil kernel
+(repro.kernels.spmv_dia).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DiaMatrix:
+    """Banded matrix: ``A[i, i+off] = bands[k, i]`` for ``off = offsets[k]``.
+
+    Entries of a band that would fall outside the matrix must be zero.
+    """
+
+    offsets: Tuple[int, ...]
+    bands: jnp.ndarray  # (n_bands, N)
+
+    @property
+    def n(self) -> int:
+        return self.bands.shape[1]
+
+    @property
+    def halo(self) -> int:
+        return max(abs(o) for o in self.offsets)
+
+    def matvec(self, x: jnp.ndarray) -> jnp.ndarray:
+        """y[i] = sum_k bands[k, i] * x[i + offsets[k]] (pure jnp)."""
+        y = jnp.zeros_like(x)
+        n = x.shape[0]
+        for k, off in enumerate(self.offsets):
+            if off == 0:
+                y = y + self.bands[k] * x
+            elif off > 0:
+                seg = self.bands[k, : n - off] * x[off:]
+                y = y.at[: n - off].add(seg)
+            else:
+                o = -off
+                seg = self.bands[k, o:] * x[: n - o]
+                y = y.at[o:].add(seg)
+        return y
+
+    def diagonal(self) -> jnp.ndarray:
+        k = self.offsets.index(0)
+        return self.bands[k]
+
+    def to_dense(self) -> jnp.ndarray:
+        n = self.n
+        A = jnp.zeros((n, n), self.bands.dtype)
+        for k, off in enumerate(self.offsets):
+            idx = jnp.arange(max(0, -off), min(n, n - off))
+            A = A.at[idx, idx + off].set(self.bands[k, idx])
+        return A
+
+
+def tridiagonal_laplacian(n: int, dtype=jnp.float64) -> DiaMatrix:
+    """The ex23 operator: tridiag(-1, 2, -1)."""
+    main = jnp.full((n,), 2.0, dtype)
+    lo = jnp.full((n,), -1.0, dtype).at[0].set(0.0)       # band at offset -1
+    hi = jnp.full((n,), -1.0, dtype).at[n - 1].set(0.0)   # band at offset +1
+    return DiaMatrix(offsets=(-1, 0, 1), bands=jnp.stack([lo, main, hi]))
+
+
+def laplacian_2d(nx: int, ny: int, dtype=jnp.float64) -> DiaMatrix:
+    """5-point 2-D Laplacian on an nx x ny grid (row-major), as DIA."""
+    n = nx * ny
+    main = jnp.full((n,), 4.0, dtype)
+    i = jnp.arange(n)
+    west = jnp.where(i % nx != 0, -1.0, 0.0).astype(dtype)
+    east = jnp.where(i % nx != nx - 1, -1.0, 0.0).astype(dtype)
+    north = jnp.where(i >= nx, -1.0, 0.0).astype(dtype)
+    south = jnp.where(i < n - nx, -1.0, 0.0).astype(dtype)
+    # zero the out-of-range ends so DIA invariants hold
+    west = west.at[0].set(0.0)
+    bands = jnp.stack([north, west, main, east, south])
+    return DiaMatrix(offsets=(-nx, -1, 0, 1, nx), bands=bands)
+
+
+def glen_law_band(n: int, bandwidth: int = 10, seed: int = 0,
+                  dtype=jnp.float64) -> DiaMatrix:
+    """A denser SPD band matrix standing in for the SNES ex48 (Blatter-Pattyn
+    ice sheet) system: ~``2*bandwidth+1`` nonzeros per row (the paper notes
+    ex48 has ~10x more nonzeros per row than ex23)."""
+    rng = jax.random.PRNGKey(seed)
+    offs = tuple(range(-bandwidth, bandwidth + 1))
+    vals = []
+    for off in offs:
+        if off == 0:
+            continue
+        r = jax.random.uniform(jax.random.fold_in(rng, off + bandwidth), (n,),
+                               dtype, minval=-1.0, maxval=0.0) / (1 + abs(off))
+        # symmetry: band(off)[i] must equal band(-off)[i+off]
+        vals.append((off, r))
+    bands = {}
+    for off, r in vals:
+        if off > 0:
+            r = r.at[n - off:].set(0.0)
+            bands[off] = r
+    for off in list(bands):
+        lo = jnp.zeros((n,), dtype).at[off:].set(bands[off][: n - off])
+        bands[-off] = lo
+    # diagonal dominance -> SPD
+    total = sum(jnp.abs(b) for b in bands.values())
+    bands[0] = total + 1.0
+    offs_sorted = tuple(sorted(bands))
+    return DiaMatrix(offsets=offs_sorted,
+                     bands=jnp.stack([bands[o] for o in offs_sorted]))
+
+
+@dataclasses.dataclass(frozen=True)
+class MatFreeOperator:
+    """Matrix-free operator (e.g. Hessian-vector products)."""
+
+    fn: Callable[[jnp.ndarray], jnp.ndarray]
+    n: int
+
+    def matvec(self, x):
+        return self.fn(x)
+
+
+# --- preconditioners --------------------------------------------------------
+
+def jacobi_preconditioner(A: DiaMatrix) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    inv_d = 1.0 / A.diagonal()
+    return lambda r: inv_d * r
+
+
+def identity_preconditioner(_A=None) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    return lambda r: r

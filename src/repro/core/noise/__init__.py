@@ -1,0 +1,17 @@
+"""OS-noise modeling: calibrated traces + solver phase simulator."""
+from repro.core.noise.simulator import (  # noqa: F401
+    Hardware,
+    SolverPhaseModel,
+    ex23_models,
+    predict_speedup,
+)
+from repro.core.noise.traces import (  # noqa: F401
+    EX23_ITERS,
+    EX23_N,
+    PIZ_DAINT_P,
+    TABLE1,
+    RunModel,
+    calibrated_model,
+    generate_runs,
+    makespan_trace_large,
+)

@@ -1,0 +1,105 @@
+"""Discrete-event model of one Krylov iteration, linking the ROOFLINE
+constants of the target hardware to the stochastic makespan model.
+
+Per-iteration phases (the paper's §4 decomposition):
+  SpMV            — memory-bound stencil: bytes/P / HBM_bw
+  AXPY / orthog.  — memory-bound vector traffic
+  dot reductions  — latency: ~2 log2(P) hops * hop latency  (tree/ring)
+
+Classical CG:   2 reduction sync points, NOT overlapped      (paper Alg. 1)
+PIPECG:         1 fused reduction, overlapped with SpMV      (paper Alg. 4)
+  -> t_step_sync  = t_compute + t_red
+     t_step_pipe  = max(t_compute, t_red) (+ pipeline-fill amortized away)
+
+Combined with a waiting-time distribution this reproduces (i) the
+deterministic folk-theorem bound and (ii) the stochastic >2x regime.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+import numpy as np
+
+from repro.core.perfmodel.distributions import Distribution, Shifted
+from repro.core.perfmodel.expected_max import expected_max
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    """TPU v5e defaults (per chip)."""
+
+    peak_flops: float = 197e12        # bf16 FLOP/s
+    hbm_bw: float = 819e9             # B/s
+    link_bw: float = 50e9             # B/s per ICI link
+    hop_latency: float = 1e-6         # s per collective hop
+    f64_flops: float = 0.4e12         # fp64-ish vector throughput proxy
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverPhaseModel:
+    """Per-iteration times of a distributed Krylov step on P chips."""
+
+    n: int                      # global problem size
+    nnz_per_row: int            # 3 for ex23; ~21 for ex48-like band
+    p: int                      # number of chips
+    dtype_bytes: int = 8
+    hw: Hardware = dataclasses.field(default_factory=Hardware)
+    n_vec_reads: int = 6        # AXPY traffic multiple (CG)
+    n_reductions: int = 2       # sync points per iteration (CG)
+
+    def t_spmv(self) -> float:
+        bytes_local = (self.nnz_per_row + 2) * self.dtype_bytes * self.n / self.p
+        return bytes_local / self.hw.hbm_bw
+
+    def t_axpy(self) -> float:
+        return (self.n_vec_reads * self.dtype_bytes * self.n / self.p
+                / self.hw.hbm_bw)
+
+    def t_reduction(self) -> float:
+        return 2.0 * math.log2(max(self.p, 2)) * self.hw.hop_latency
+
+    def t_compute(self) -> float:
+        return self.t_spmv() + self.t_axpy()
+
+
+def predict_speedup(model_sync: SolverPhaseModel, model_pipe: SolverPhaseModel,
+                    noise: Distribution, K: int) -> Dict[str, float]:
+    """E[T]/E[T'] with per-step noise ~ ``noise`` added to each process.
+
+    Synchronized: every step costs max_p(t_c + w_p) + n_red * t_red.
+    Pipelined:    reductions overlap compute; per-process accumulation.
+    """
+    p = model_sync.p
+    tc_s = model_sync.t_compute()
+    tc_p = model_pipe.t_compute()
+    tr = model_sync.t_reduction()
+
+    shifted = Shifted(base=noise, loc=tc_s)
+    e_max = expected_max(shifted, p)
+    e_t_sync = K * (e_max + model_sync.n_reductions * tr)
+    # pipelined: one overlapped reduction; steady state per-process mean
+    e_t_pipe = K * max(tc_p + float(noise.mean),
+                       model_pipe.n_reductions * tr)
+    return {
+        "t_sync": e_t_sync,
+        "t_pipe": e_t_pipe,
+        "speedup": e_t_sync / e_t_pipe,
+        "t_spmv": model_sync.t_spmv(),
+        "t_reduction": tr,
+        "noise_mean": float(noise.mean),
+        "e_max_step": e_max,
+    }
+
+
+def ex23_models(p: int, hw: Hardware = Hardware()) -> Dict[str, SolverPhaseModel]:
+    """The paper's ex23 problem: tridiagonal, most time in dot products."""
+    from repro.core.noise.traces import EX23_N
+    return {
+        "cg": SolverPhaseModel(n=EX23_N, nnz_per_row=3, p=p, hw=hw,
+                               n_vec_reads=6, n_reductions=2),
+        # PIPECG: more AXPY state (z,q,s,p + x,r,u,w) -> ~2x vector traffic
+        "pipecg": SolverPhaseModel(n=EX23_N, nnz_per_row=3, p=p, hw=hw,
+                                   n_vec_reads=14, n_reductions=1),
+    }

@@ -1,0 +1,94 @@
+"""Run-time trace generation calibrated to the paper's Table 1.
+
+The Piz Daint experiments (PETSc KSP ex23, 8192 cores, 5000 forced Krylov
+iterates, n=12 PGMRES / n=20 PIPECG repeats) cannot be re-run in this
+container; per DESIGN.md we reproduce them *in silico* with the same model
+the paper proposes: per-run total time = deterministic base + stochastic
+OS-noise accumulation, with the noise well-modeled as exponential.
+
+``TABLE1`` records the paper's observed statistics; ``generate_runs``
+produces samples whose summary statistics and test verdicts reproduce the
+paper's (validated in tests/test_table1.py and benchmarks/bench_table1.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+# The paper's Table 1 (observed on Piz Daint).
+TABLE1: Dict[str, Dict[str, float]] = {
+    "GMRES": {"mean": 0.9465, "median": 0.9932, "s": 0.1303, "s2": 0.0170,
+              "lambda": 1.0565, "min": 0.6617, "max": 1.0740, "n": 12},
+    "PGMRES": {"mean": 0.5902, "median": 0.5856, "s": 0.0962, "s2": 0.0092,
+               "lambda": 1.6942, "min": 0.4644, "max": 0.7697, "n": 12},
+    "CG": {"mean": 0.9349, "median": 0.8632, "s": 0.2385, "s2": 0.0569,
+           "lambda": 1.0696, "min": 0.6051, "max": 1.6060, "n": 20},
+    "PIPECG": {"mean": 0.7521, "median": 0.6792, "s": 0.2429,
+               "lambda": 1.3295, "s2": 0.0590, "min": 0.5545, "max": 1.6950,
+               "n": 20},
+}
+
+PIZ_DAINT_P = 8192
+EX23_N = 2_097_152
+EX23_ITERS = 5000
+
+
+@dataclasses.dataclass(frozen=True)
+class RunModel:
+    """runtime = base + Exp(scale): base = noise-free makespan, Exp = the
+    run-level accumulation of OS-noise delays (the paper's finding: run
+    times are consistent with an exponential, not a uniform window)."""
+
+    base: float
+    scale: float
+
+    def sample(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        return self.base + rng.exponential(self.scale, size=n)
+
+
+def calibrated_model(alg: str) -> RunModel:
+    """Method-of-moments calibration against Table 1: base ~ X_min shifted
+    by the expected sample minimum of Exp(scale)."""
+    row = TABLE1[alg]
+    n = int(row["n"])
+    # E[X] = base + scale; E[X_min over n] = base + scale/n
+    # two equations from mean and min:
+    scale = (row["mean"] - row["min"]) / (1.0 - 1.0 / n)
+    base = row["mean"] - scale
+    return RunModel(base=base, scale=scale)
+
+
+def generate_runs(alg: str, n: int = 0, seed: int = 0) -> np.ndarray:
+    row = TABLE1[alg]
+    n = n or int(row["n"])
+    rng = np.random.default_rng(seed + hash(alg) % 65536)
+    return calibrated_model(alg).sample(n, rng)
+
+
+def makespan_trace_large(P: int, K: int, *, t0: float, noise_scale: float,
+                         trials: int, sync: bool, seed: int = 0,
+                         chunk_k: int = 64) -> np.ndarray:
+    """Exact makespan sampling at Piz Daint scale (P=8192, K=5000) without
+    materializing (trials, K, P): stream over K in chunks.
+
+    sync=True  -> T  = sum_k max_p (t0 + w);
+    sync=False -> T' = max_p sum_k (t0 + w).
+    """
+    rng = np.random.default_rng(seed)
+    out = np.empty(trials)
+    for t in range(trials):
+        acc_sync = 0.0
+        acc_proc = np.zeros(P)
+        done = 0
+        while done < K:
+            kb = min(chunk_k, K - done)
+            w = rng.exponential(noise_scale, size=(kb, P))
+            if sync:
+                acc_sync += float(np.sum(w.max(axis=1))) + kb * t0
+            else:
+                acc_proc += w.sum(axis=0) + kb * t0
+            done += kb
+        out[t] = acc_sync if sync else float(acc_proc.max())
+    return out

@@ -1,0 +1,38 @@
+"""Stochastic performance model for pipelined Krylov methods (paper core)."""
+from repro.core.perfmodel.distributions import (  # noqa: F401
+    Deterministic,
+    Distribution,
+    Exponential,
+    Gamma,
+    LogNormal,
+    Pareto,
+    Shifted,
+    Uniform,
+)
+from repro.core.perfmodel.expected_max import (  # noqa: F401
+    expected_max,
+    expected_max_closed,
+    expected_max_mc,
+    expected_max_quad,
+    harmonic,
+)
+from repro.core.perfmodel.folk_theorem import (  # noqa: F401
+    deterministic_makespans,
+    folk_bound,
+    overlap_speedup_bound,
+    staggered_delay_trace,
+    trace_makespans,
+)
+from repro.core.perfmodel.makespan import (  # noqa: F401
+    MakespanSamples,
+    empirical_speedup_curve,
+    simulate,
+    single_delay_makespans,
+)
+from repro.core.perfmodel.speedup import (  # noqa: F401
+    asymptotic_speedup,
+    exponential_speedup,
+    min_procs_exceeding,
+    speedup_table,
+    uniform_speedup,
+)

@@ -1,0 +1,211 @@
+"""Waiting-time distributions (Section 3 of the paper).
+
+Each distribution exposes pdf / cdf / quantile / mean / sample so the
+expected-max machinery (Eq. 8) can use closed forms, quadrature, or Monte
+Carlo interchangeably.  ``Shifted`` composes a deterministic compute time
+T0 with a stochastic waiting time — "the time spent computing ... only
+affects the mean of the distribution" (§3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import ClassVar, Optional
+
+import jax
+import jax.numpy as jnp
+
+SQRT2 = math.sqrt(2.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Distribution:
+    name: ClassVar[str] = "base"
+
+    def pdf(self, x):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def cdf(self, x):
+        raise NotImplementedError
+
+    def quantile(self, u):
+        raise NotImplementedError
+
+    @property
+    def mean(self):
+        raise NotImplementedError
+
+    def sample(self, rng, shape):
+        return self.quantile(jax.random.uniform(rng, shape, jnp.float64
+                                                if jax.config.jax_enable_x64
+                                                else jnp.float32,
+                                                minval=1e-12, maxval=1.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class Uniform(Distribution):
+    a: float = 0.0
+    b: float = 1.0
+    name: ClassVar[str] = "uniform"
+
+    def pdf(self, x):
+        inside = (x >= self.a) & (x <= self.b)
+        return jnp.where(inside, 1.0 / (self.b - self.a), 0.0)
+
+    def cdf(self, x):
+        return jnp.clip((x - self.a) / (self.b - self.a), 0.0, 1.0)
+
+    def quantile(self, u):
+        return self.a + (self.b - self.a) * u
+
+    @property
+    def mean(self):
+        return 0.5 * (self.a + self.b)
+
+
+@dataclasses.dataclass(frozen=True)
+class Exponential(Distribution):
+    lam: float = 1.0
+    name: ClassVar[str] = "exponential"
+
+    def pdf(self, x):
+        return jnp.where(x >= 0, self.lam * jnp.exp(-self.lam * x), 0.0)
+
+    def cdf(self, x):
+        return jnp.where(x >= 0, 1.0 - jnp.exp(-self.lam * x), 0.0)
+
+    def quantile(self, u):
+        return -jnp.log1p(-u) / self.lam
+
+    @property
+    def mean(self):
+        return 1.0 / self.lam
+
+
+@dataclasses.dataclass(frozen=True)
+class LogNormal(Distribution):
+    mu: float = 0.0
+    sigma: float = 1.0
+    name: ClassVar[str] = "lognormal"
+
+    def pdf(self, x):
+        x = jnp.maximum(x, 1e-300)
+        z = (jnp.log(x) - self.mu) / self.sigma
+        return jnp.exp(-0.5 * z * z) / (x * self.sigma * math.sqrt(2 * math.pi))
+
+    def cdf(self, x):
+        x = jnp.maximum(x, 1e-300)
+        return 0.5 + 0.5 * jax.scipy.special.erf(
+            (jnp.log(x) - self.mu) / (SQRT2 * self.sigma))
+
+    def quantile(self, u):
+        return jnp.exp(self.mu + self.sigma * SQRT2
+                       * jax.scipy.special.erfinv(2.0 * u - 1.0))
+
+    @property
+    def mean(self):
+        return math.exp(self.mu + 0.5 * self.sigma ** 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class Gamma(Distribution):
+    """Shape-k, scale-theta gamma (bridges exponential k=1 and ~normal k>>1)."""
+
+    k: float = 2.0
+    theta: float = 1.0
+    name: ClassVar[str] = "gamma"
+
+    def pdf(self, x):
+        x = jnp.maximum(x, 0.0)
+        lg = jax.scipy.special.gammaln(self.k)
+        return jnp.exp((self.k - 1) * jnp.log(jnp.maximum(x, 1e-300))
+                       - x / self.theta - lg - self.k * math.log(self.theta))
+
+    def cdf(self, x):
+        return jax.scipy.special.gammainc(self.k, jnp.maximum(x, 0.0) / self.theta)
+
+    def quantile(self, u):  # no closed form: bisection
+        lo = jnp.zeros_like(u)
+        hi = jnp.full_like(u, self.k * self.theta * 50.0 + 50.0)
+
+        def body(_, lohi):
+            lo, hi = lohi
+            mid = 0.5 * (lo + hi)
+            below = self.cdf(mid) < u
+            return jnp.where(below, mid, lo), jnp.where(below, hi, mid)
+
+        lo, hi = jax.lax.fori_loop(0, 80, body, (lo, hi))
+        return 0.5 * (lo + hi)
+
+    @property
+    def mean(self):
+        return self.k * self.theta
+
+
+@dataclasses.dataclass(frozen=True)
+class Pareto(Distribution):
+    """Heavy tail beyond log-normal; alpha > 1 for finite mean."""
+
+    xm: float = 1.0
+    alpha: float = 2.5
+    name: ClassVar[str] = "pareto"
+
+    def pdf(self, x):
+        ok = x >= self.xm
+        return jnp.where(ok, self.alpha * self.xm ** self.alpha
+                         / jnp.maximum(x, self.xm) ** (self.alpha + 1), 0.0)
+
+    def cdf(self, x):
+        ok = x >= self.xm
+        return jnp.where(ok, 1.0 - (self.xm / jnp.maximum(x, self.xm)) ** self.alpha, 0.0)
+
+    def quantile(self, u):
+        return self.xm * (1.0 - u) ** (-1.0 / self.alpha)
+
+    @property
+    def mean(self):
+        return self.alpha * self.xm / (self.alpha - 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Shifted(Distribution):
+    """T = loc + X: deterministic compute time + stochastic waiting time."""
+
+    base: Distribution = dataclasses.field(default_factory=Exponential)
+    loc: float = 0.0
+    name: ClassVar[str] = "shifted"
+
+    def pdf(self, x):
+        return self.base.pdf(x - self.loc)
+
+    def cdf(self, x):
+        return self.base.cdf(x - self.loc)
+
+    def quantile(self, u):
+        return self.loc + self.base.quantile(u)
+
+    @property
+    def mean(self):
+        return self.loc + self.base.mean
+
+
+@dataclasses.dataclass(frozen=True)
+class Deterministic(Distribution):
+    c: float = 1.0
+    name: ClassVar[str] = "deterministic"
+
+    def pdf(self, x):
+        raise ValueError("point mass has no density")
+
+    def cdf(self, x):
+        return (x >= self.c).astype(jnp.float32)
+
+    def quantile(self, u):
+        return jnp.full_like(jnp.asarray(u, jnp.float32), self.c)
+
+    @property
+    def mean(self):
+        return self.c
+
+    def sample(self, rng, shape):
+        return jnp.full(shape, self.c)

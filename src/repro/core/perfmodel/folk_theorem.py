@@ -1,0 +1,46 @@
+"""Section 2: the deterministic model and the 2x folk theorem.
+
+Eq. (1): T  = sum_k max_p (c_p + w_p) = K max_p T_p   (synchronized)
+Eq. (2): T' = max_p sum_k (c_p + w_p) = K max_p T_p   (pipelined)
+=> deterministic, stationary times admit NO speedup at all.
+
+Eq. (5): one delay W per process, staggered: speedup (2+alpha)/(1+alpha) <= 2
+with alpha = K T0 / W; extended to P processes the bound is P.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+
+def deterministic_makespans(per_process_times: Sequence[float], K: int):
+    """Eq. (1)/(2) for constant per-process step times."""
+    t = jnp.asarray(per_process_times)
+    t_sync = K * jnp.max(t)
+    t_async = jnp.max(K * t)
+    return float(t_sync), float(t_async)
+
+
+def trace_makespans(times: jnp.ndarray):
+    """times (K, P): explicit schedule.  Returns (T, T')."""
+    return (float(jnp.sum(jnp.max(times, axis=1))),
+            float(jnp.max(jnp.sum(times, axis=0))))
+
+
+def staggered_delay_trace(W: float, T0: float, K: int, P: int = 2) -> jnp.ndarray:
+    """Process p waits W on step p (p < K), T0 otherwise (Figs. 3-4)."""
+    times = jnp.full((K, P), T0)
+    for p in range(min(P, K)):
+        times = times.at[p, p].set(W)
+    return times
+
+
+def folk_bound(P: int = 2) -> float:
+    """Upper bound on overlap-only speedup: P (=2 for compute/comm)."""
+    return float(P)
+
+
+def overlap_speedup_bound(alpha: float) -> float:
+    """Eq. (5): (2+alpha)/(1+alpha), alpha = K T0 / W."""
+    return (2.0 + alpha) / (1.0 + alpha)

@@ -1,0 +1,72 @@
+"""Makespan Monte-Carlo simulator (Sections 2-3).
+
+Synchronized  (classical Krylov):  T  = sum_k max_p T_p^k      (Eq. 6)
+Pipelined     (split-phase):       T' = max_p sum_k T_p^k      (Eq. 7)
+
+"The removal of synchronizations can in general be modeled by the
+interchange of the sum over steps and the maximum over process times."
+
+The simulator is fully vectorized over (trials, K, P) and is the engine
+behind the Table-1 / Fig-5/6 reproductions and the straggler-sensitivity
+analysis of the training framework.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.perfmodel.distributions import Distribution
+
+
+class MakespanSamples(NamedTuple):
+    t_sync: jnp.ndarray    # (trials,)
+    t_async: jnp.ndarray   # (trials,)
+
+    @property
+    def speedup_of_means(self) -> float:
+        return float(jnp.mean(self.t_sync) / jnp.mean(self.t_async))
+
+
+def simulate(dist: Distribution, P: int, K: int, trials: int = 256,
+             seed: int = 0, batch: int = 0) -> MakespanSamples:
+    """Draw T_p^k iid from ``dist`` and evaluate both makespans.
+
+    ``batch`` > 0 chunks the trials to bound memory at large K*P.
+    """
+    rng = jax.random.PRNGKey(seed)
+    if batch <= 0:
+        batch = trials
+    outs_s, outs_a = [], []
+    done = 0
+    i = 0
+    while done < trials:
+        nb = min(batch, trials - done)
+        draws = dist.sample(jax.random.fold_in(rng, i), (nb, K, P))
+        outs_s.append(jnp.sum(jnp.max(draws, axis=2), axis=1))
+        outs_a.append(jnp.max(jnp.sum(draws, axis=1), axis=1))
+        done += nb
+        i += 1
+    return MakespanSamples(t_sync=jnp.concatenate(outs_s),
+                           t_async=jnp.concatenate(outs_a))
+
+
+def single_delay_makespans(W: float, T0: float, K: int, P: int = 2
+                           ) -> Dict[str, float]:
+    """The Fig. 3/4 scenario: process 0 waits W on step 1, process 1 on
+    step 2, T0 elsewhere.  Eq. (3): T = 2W + K T0; Eq. (4): T' = W + K T0."""
+    t_sync = 2 * W + K * T0
+    t_async = W + K * T0
+    alpha = K * T0 / W
+    return {"t_sync": t_sync, "t_async": t_async,
+            "speedup": t_sync / t_async,
+            "alpha": alpha,
+            "speedup_formula": (2 + alpha) / (1 + alpha)}  # Eq. (5)
+
+
+def empirical_speedup_curve(dist: Distribution, P: int, Ks, trials: int = 256,
+                            seed: int = 0) -> Dict[int, float]:
+    """Speedup vs number of steps K: converges to E[max]/mu as K grows."""
+    return {int(K): simulate(dist, P, int(K), trials, seed).speedup_of_means
+            for K in Ks}

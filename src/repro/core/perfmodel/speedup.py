@@ -1,0 +1,42 @@
+"""Asymptotic speedup E[T]/E[T'] -> E[max_p T_p] / mu (§3.1).
+
+Closed results validated against the paper:
+  uniform on [0,b]:  2P/(P+1)            (< 2 always, §3.2)
+  exponential:       H_P                 (> 2 for P >= 4; 25/12 at P=4, §3.3)
+  log-normal(0,1):   ~1.5205 at P=2, ~2.2081 at P=4 (numerical, §3.4)
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+from repro.core.perfmodel.distributions import Distribution
+from repro.core.perfmodel.expected_max import expected_max, harmonic
+
+
+def asymptotic_speedup(dist: Distribution, P: int, method: str = "auto") -> float:
+    """Speedup of the pipelined (no-synchronization) variant as K -> inf."""
+    return expected_max(dist, P, method=method) / float(dist.mean)
+
+
+def uniform_speedup(P: int, a: float = 0.0, b: float = 1.0) -> float:
+    return 2.0 * (a + P * b) / ((P + 1) * (a + b))
+
+
+def exponential_speedup(P: int) -> float:
+    return harmonic(P)
+
+
+def speedup_table(dist: Distribution, Ps: Sequence[int],
+                  method: str = "auto") -> Dict[int, float]:
+    return {P: asymptotic_speedup(dist, P, method=method) for P in Ps}
+
+
+def min_procs_exceeding(dist: Distribution, bound: float = 2.0,
+                        pmax: int = 1 << 20) -> int:
+    """Smallest P with asymptotic speedup > bound (paper: P=4 for exp)."""
+    P = 2
+    while P <= pmax:
+        if asymptotic_speedup(dist, P) > bound:
+            return P
+        P += 1 if P < 16 else P // 4
+    return -1

@@ -1,0 +1,16 @@
+"""Statistical identification of the noise distribution (paper §4)."""
+from repro.core.stats.cramer_von_mises import (  # noqa: F401
+    TestResult,
+    cramer_von_mises,
+    cvm_statistic,
+)
+from repro.core.stats.ecdf import ecdf, ecdf_at  # noqa: F401
+from repro.core.stats.lilliefors import lilliefors, lilliefors_statistic  # noqa: F401
+from repro.core.stats.mle import (  # noqa: F401
+    FITTERS,
+    fit_exponential,
+    fit_lognormal,
+    fit_uniform,
+    summary_statistics,
+)
+from repro.core.stats.report import FitReport, ecdf_with_fits, fit_report  # noqa: F401

@@ -1,0 +1,18 @@
+"""Empirical CDF utilities (Figs. 5-6)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def ecdf(samples) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (sorted x, F_n(x)) with F_n(x_i) = i/n (right-continuous)."""
+    x = np.sort(np.asarray(samples, dtype=np.float64))
+    n = x.shape[0]
+    return x, np.arange(1, n + 1) / n
+
+
+def ecdf_at(samples, x) -> np.ndarray:
+    s = np.sort(np.asarray(samples, dtype=np.float64))
+    return np.searchsorted(s, np.asarray(x), side="right") / s.shape[0]

@@ -1,0 +1,70 @@
+"""Distribution-fitting report: the full §4.3 pipeline on a set of runtimes.
+
+For a sample of run times this produces the paper's Table-1 row (summary
+statistics), the CvM uniform/exponential decisions, and the Lilliefors
+log-normal decision — i.e. one column of Table 1 plus the Fig-5/6 verdicts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.stats.cramer_von_mises import TestResult, cramer_von_mises
+from repro.core.stats.ecdf import ecdf
+from repro.core.stats.lilliefors import lilliefors
+from repro.core.stats.mle import FITTERS, summary_statistics
+
+
+@dataclasses.dataclass
+class FitReport:
+    name: str
+    summary: Dict[str, float]
+    uniform: TestResult
+    exponential: TestResult          # shifted (two-parameter) exponential
+    exponential_origin: TestResult   # the paper's literal lambda = 1/xbar fit
+    lognormal: TestResult
+
+    def verdicts(self) -> Dict[str, bool]:
+        """True = REJECT at alpha=0.05."""
+        return {"uniform": self.uniform.reject,
+                "exponential": self.exponential.reject,
+                "lognormal": self.lognormal.reject}
+
+    def table_row(self) -> str:
+        s = self.summary
+        return (f"{self.name:10s} xbar={s['mean']:.4f} med={s['median']:.4f} "
+                f"s={s['s']:.4f} s2={s['s2']:.4f} lam={s['lambda']:.4f} "
+                f"min={s['min']:.4f} max={s['max']:.4f}")
+
+    def verdict_row(self) -> str:
+        v = self.verdicts()
+        fmt = lambda r: "reject" if r else "accept"
+        return (f"{self.name:10s} uniform={fmt(v['uniform'])} "
+                f"exponential={fmt(v['exponential'])} "
+                f"lognormal={fmt(v['lognormal'])}")
+
+
+def fit_report(samples, name: str = "", bootstrap_uniform: int = 500,
+               seed: int = 0) -> FitReport:
+    x = np.asarray(samples, np.float64)
+    return FitReport(
+        name=name,
+        summary=summary_statistics(x),
+        # paper uses tabulated critical values with min/max plug-in
+        uniform=cramer_von_mises(x, "uniform"),
+        exponential=cramer_von_mises(x, "exponential_shifted"),
+        exponential_origin=cramer_von_mises(x, "exponential"),
+        lognormal=lilliefors(x, log=True),
+    )
+
+
+def ecdf_with_fits(samples):
+    """(x, F_emp, {family: F_fit(x)}) for Fig. 5/6 style output."""
+    x, F = ecdf(samples)
+    fits = {}
+    for fam, fitter in FITTERS.items():
+        d = fitter(samples)
+        fits[fam] = np.asarray(d.cdf(x))
+    return x, F, fits

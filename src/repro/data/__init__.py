@@ -1,0 +1,2 @@
+"""Deterministic synthetic data pipeline (resumable, host-sharded)."""
+from repro.data.synthetic import DataConfig, SyntheticTokens  # noqa: F401

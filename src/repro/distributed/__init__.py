@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, overlap combinators, compression,
+fault tolerance."""

@@ -1,0 +1,47 @@
+"""Gradient compression for the cross-pod (DCN) reduction.
+
+At 1000+ nodes the pod-level gradient all-reduce crosses the slow
+data-center network; int8 quantization with per-tensor scales cuts its
+wire bytes 4x (vs fp32 master grads).  Error feedback (Seide et al.)
+accumulates the quantization residual locally so the compressed SGD
+trajectory tracks the exact one.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, error_feedback=None):
+    """Returns (quantized tree, scales tree, new error feedback tree)."""
+    if error_feedback is None:
+        error_feedback = jax.tree.map(jnp.zeros_like, grads)
+    corrected = jax.tree.map(lambda g, e: g + e, grads, error_feedback)
+    q = jax.tree.map(lambda g: quantize_int8(g)[0], corrected)
+    s = jax.tree.map(lambda g: quantize_int8(g)[1], corrected)
+    recon = jax.tree.map(dequantize_int8, q, s)
+    new_ef = jax.tree.map(lambda c, r: c - r, corrected, recon)
+    return q, s, new_ef
+
+
+def decompress_tree(q, s):
+    return jax.tree.map(dequantize_int8, q, s)
+
+
+def compressed_grads(grads, error_feedback=None):
+    """One-shot: quantize+dequantize with error feedback (what the wire
+    would carry); returns (effective grads, new error feedback)."""
+    q, s, ef = compress_tree(grads, error_feedback)
+    return decompress_tree(q, s), ef

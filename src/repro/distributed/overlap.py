@@ -1,0 +1,65 @@
+"""Split-phase collectives, JAX-style: the ``delayed_psum`` combinator.
+
+MPI's MPI_Iallreduce/MPI_Wait pair has no literal JAX equivalent; what the
+paper's pipelined algorithms actually do is move the CONSUMER of a reduction
+past independent work.  In a scan-shaped program (training steps, Krylov
+iterations) the natural rendering is a one-step-delayed reduction: the value
+consumed at step k is the reduction initiated at step k-1, carried through
+the loop state.  XLA then has a full step of independent compute between
+the all-reduce-start and its use, which the TPU latency-hiding scheduler
+exploits.
+
+Users: pipelined grad-norm clipping (repro.optim.clipping), pipelined loss
+metrics, the PIPECG/PGMRES solvers (who achieve the same effect purely by
+algebraic rearrangement inside one step).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DelayedValue(NamedTuple):
+    """Carried state of a one-step-delayed reduction."""
+
+    value: jnp.ndarray       # reduction result from the PREVIOUS step
+    valid: jnp.ndarray       # False on the first step
+
+
+def delayed_init(like: jnp.ndarray) -> DelayedValue:
+    return DelayedValue(value=jnp.zeros_like(like),
+                        valid=jnp.zeros((), jnp.bool_))
+
+
+def delayed_update(prev: DelayedValue, new_reduction: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, DelayedValue]:
+    """Returns (value_to_consume, is_valid, next_carry).
+
+    ``new_reduction`` is this step's freshly-initiated reduction; the
+    returned value is LAST step's — the split-phase contract."""
+    nxt = DelayedValue(value=new_reduction, valid=jnp.ones((), jnp.bool_))
+    return prev.value, prev.valid, nxt
+
+
+def pipelined_scan(body: Callable, reducer: Callable, carry_init,
+                   xs, init_reduction: jnp.ndarray):
+    """lax.scan where ``body(carry, x, delayed_reduction)`` consumes the
+    reduction computed by ``reducer`` one step earlier.
+
+    body    : (carry, x, red_prev) -> (carry, y, red_input)
+    reducer : red_input -> scalar/array reduction (e.g. psum of a norm)
+    """
+    def wrapped(state, x):
+        carry, delayed = state
+        value, valid, _ = delayed_update(delayed, delayed.value)
+        carry, y, red_in = body(carry, x, (value, valid))
+        new_red = reducer(red_in)
+        return (carry, DelayedValue(value=new_red,
+                                    valid=jnp.ones((), jnp.bool_))), y
+
+    (carry, delayed), ys = jax.lax.scan(
+        wrapped, (carry_init, DelayedValue(value=init_reduction,
+                                           valid=jnp.zeros((), jnp.bool_))), xs)
+    return carry, ys, delayed

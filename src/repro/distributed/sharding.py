@@ -1,0 +1,275 @@
+"""Name-based sharding rules (MaxText-style logical rules, simplified).
+
+Mesh axes:
+  pod    — data parallelism across pods (DCN in reality)
+  data   — FSDP + DP within a pod
+  model  — tensor parallelism (flattened head*head_dim, d_ff, vocab, experts)
+
+Key trick: attention projections are sharded on the FLATTENED (H*D) dim,
+which is divisible by 16 for every assigned arch even when H or KV alone is
+not (e.g. arctic H=56, recurrentgemma H=10, musicgen KV=24).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.transformer import Hints
+
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def fit_batch_axes(mesh: Mesh, batch_size: int, strategy: str = "2d"):
+    """Largest prefix-product of batch axes that divides ``batch_size``
+    (e.g. global_batch=1 -> no batch sharding; 128 on (pod,data)=32 -> both).
+
+    strategy='fsdp' also spreads batch over 'model' (pure ZeRO DP: there is
+    no tensor-parallel compute, so 'model' is free for data)."""
+    base = batch_axes(mesh)
+    if strategy == "fsdp" and "model" in mesh.axis_names:
+        base = base + ("model",)
+    axes = []
+    prod = 1
+    for a in base:
+        size = mesh.shape[a]
+        if batch_size % (prod * size) == 0:
+            axes.append(a)
+            prod *= size
+    return tuple(axes)
+
+
+def fit_batch_spec(mesh: Mesh, batch_size: int, strategy: str = "2d"):
+    axes = fit_batch_axes(mesh, batch_size, strategy)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+# (regex on 'path', spec) — first match wins.  Paths look like
+# 'blocks/scan/0/attn/wq/w' (group index stripped of integers).
+PARAM_RULES = [
+    (r"embed/", P("model", "data")),                      # (V, d)
+    (r"head/.*b$", P(None)),
+    (r"head/", P("data", "model")),                       # (d, V)
+    (r"(qnorm|knorm|norm1|norm2|final_norm|ln_x)", P(None)),
+    (r"attn/w[qkv]/w$", P("data", "model")),              # (d, H*D)
+    (r"attn/wo/w$", P("model", "data")),                  # (H*D, d)
+    (r"(ffn|mlp)/(up|gate)/w$", P("data", "model")),      # (d, dff)
+    (r"(ffn|mlp)/down/w$", P("model", "data")),           # (dff, d)
+    (r"moe/router/w$", P("data", None)),                  # (d, E)
+    (r"moe/(up|gate)$", P("model", "data", None)),        # (E, d, f)
+    (r"moe/down$", P("model", None, "data")),             # (E, f, d)
+    (r"rec/(in_x|in_gate)/w$", P("data", "model")),       # (d, w)
+    (r"rec/gate_[ai]/w$", P("model", None)),              # (w, w)
+    (r"rec/out/w$", P("model", "data")),                  # (w, d)
+    (r"rec/conv_w$", P(None, "model")),                   # (K, w)
+    (r"rec/lambda$", P("model")),                         # (w,)
+    (r"tm/w[rkvg]/w$", P("data", "model")),               # rwkv (d, d)
+    (r"tm/wo/w$", P("model", "data")),
+    (r"tm/decay_a/w$", P("data", None)),
+    (r"tm/decay_b/w$", P(None, "model")),
+    (r"tm/u$", P("model", None)),                         # (H, hd)
+    (r"tm/w0$", P("model")),
+    (r"tm/(mu|cm_mu)$", P(None, "model")),
+    (r"tm/cm_k/w$", P("data", "model")),
+    (r"tm/cm_v/w$", P("model", "data")),
+    (r"tm/cm_r/w$", P("data", "model")),
+    (r"/b$", P(None)),                                    # biases replicated
+]
+
+STATE_RULES = [
+    (r"/k$|/v$", lambda b: P(b, "model", None, None)),    # KV cache (B,S,KV,D)
+    (r"/h$", lambda b: P(b, "model")),                    # RG-LRU state (B, w)
+    (r"/conv$", lambda b: P(b, None, "model")),
+    (r"/s$", lambda b: P(b, "model", None, None)),        # RWKV state
+    (r"(tm_last|cm_last)$", lambda b: P(b, None)),
+    (r"pos$", lambda b: P()),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(k.name)
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _match(rules, path: str):
+    for pat, spec in rules:
+        if re.search(pat, path):
+            return spec
+    return None
+
+
+def _maybe_scan_prefix(path: str, spec: P) -> P:
+    if re.search(r"(^|/)scan(/|$)", path):
+        return P(*((None,) + tuple(spec)))
+    return spec
+
+
+def param_pspec(path: str, ndim: int, zero_over_pod: bool = False) -> P:
+    spec = _match(PARAM_RULES, path)
+    if spec is None:
+        spec = P(*([None] * ndim))
+    spec = _maybe_scan_prefix(path, spec)
+    if zero_over_pod:
+        parts = list(spec) + [None] * (ndim - len(tuple(spec)))
+        for i, ax in enumerate(parts):
+            if ax == "data":
+                parts[i] = ("pod", "data")
+                break
+        spec = P(*parts)
+    # pad to ndim
+    parts = list(tuple(spec))
+    if len(parts) < ndim:
+        parts = parts + [None] * (ndim - len(parts))
+    return P(*parts)
+
+
+def param_pspec_fsdp(path: str, shape, mesh_sizes=(("data", 16), ("model", 16))
+                     ) -> P:
+    """Pure-ZeRO rule: shard ONE dimension of every tensor over as many mesh
+    axes as divide it (largest sharding first); no tensor parallelism.
+
+    The compute gathers weights per layer (FSDP) and keeps activations
+    batch-sharded over all axes — no per-layer activation all-reduce."""
+    ndim = len(shape)
+    scan = bool(re.search(r"(^|/)scan(/|$)", path))
+    dims = list(range(1 if scan else 0, ndim))  # never shard the scan dim
+    # candidate axis groups, widest first
+    groups = [tuple(a for a, _ in mesh_sizes),
+              (mesh_sizes[0][0],), (mesh_sizes[1][0],)]
+    sizes = {g: 1 for g in groups}
+    for g in groups:
+        n = 1
+        for a, s in mesh_sizes:
+            if a in g:
+                n *= s
+        sizes[g] = n
+    parts = [None] * ndim
+    # prefer the largest dim for sharding (weight matrices get full spread)
+    for g in groups:
+        ok = [d for d in dims if shape[d] % sizes[g] == 0]
+        if ok:
+            d = max(ok, key=lambda i: shape[i])
+            parts[d] = g if len(g) > 1 else g[0]
+            break
+    return P(*parts)
+
+
+def param_pspecs(params_tree, zero_over_pod: bool = False,
+                 strategy: str = "2d", mesh: Mesh = None):
+    """Tree of PartitionSpec matching a params (or opt-state) pytree."""
+    if strategy == "fsdp":
+        names = tuple(a for a in ("data", "model")
+                      if mesh is None or a in mesh.axis_names)
+        msizes = tuple((a, (mesh.shape[a] if mesh is not None else 16))
+                       for a in names)
+
+        def fn(path, leaf):
+            return param_pspec_fsdp(_path_str(path), leaf.shape, msizes)
+
+        return jax.tree_util.tree_map_with_path(fn, params_tree)
+
+    def fn(path, leaf):
+        return param_pspec(_path_str(path),
+                           jnp.ndim(leaf) if hasattr(leaf, "ndim") else len(leaf.shape),
+                           zero_over_pod)
+    return jax.tree_util.tree_map_with_path(fn, params_tree)
+
+
+def state_pspecs(state_tree, mesh: Mesh):
+    def fn(path, leaf):
+        ps = _path_str(path)
+        rule = _match(STATE_RULES, ps)
+        nd = len(leaf.shape)
+        if rule is None or nd == 0:
+            spec = P(*([None] * nd))
+        else:
+            # batch dim is dim0 of every stateful leaf (after scan prefix)
+            scan = "scan" in ps
+            bdim = leaf.shape[1] if scan and nd > 1 else leaf.shape[0]
+            spec = rule(fit_batch_spec(mesh, bdim))
+        spec = _maybe_scan_prefix(ps, spec) if "scan" in ps else spec
+        parts = list(tuple(spec)) + [None] * (nd - len(tuple(spec)))
+        return P(*parts[:nd])
+
+    return jax.tree_util.tree_map_with_path(fn, state_tree)
+
+
+def batch_pspecs(batch_tree, mesh: Mesh):
+    def fn(path, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        return P(*([fit_batch_spec(mesh, leaf.shape[0])] + [None] * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(fn, batch_tree)
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+class MeshHints(Hints):
+    """Activation sharding constraints bound to a mesh."""
+
+    def __init__(self, mesh: Mesh, strategy: str = "2d"):
+        self.mesh = mesh
+        self.strategy = strategy
+
+    def activation(self, x):
+        b = fit_batch_spec(self.mesh, x.shape[0], self.strategy)
+        spec = P(*([b] + [None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def logits(self, x):
+        b = fit_batch_spec(self.mesh, x.shape[0], self.strategy)
+        vocab = None if self.strategy == "fsdp" else "model"
+        spec = P(*([b] + [None] * (x.ndim - 2) + [vocab]))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def heads(self, x):
+        """(B, S, H, D) attention internals.
+
+        H divisible by 'model'  -> shard heads (Megatron attention).
+        otherwise               -> shard the SEQUENCE dim of q/out
+        (sequence-parallel attention: each chip owns a q-row block and
+        attends against replicated k/v — k/v gathers are MBs while the
+        alternative GSPMD picks, a contraction-sharded QK dot, all-reduces
+        the full S^2 score tensor)."""
+        msize = self.mesh.shape["model"]
+        H, S = x.shape[2], x.shape[1]
+        b = fit_batch_spec(self.mesh, x.shape[0])
+        if H % msize == 0:
+            spec = P(b, None, "model", None)
+        elif S % msize == 0:
+            spec = P(b, "model", None, None)
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def kv_heads(self, x):
+        """k/v in the sequence-parallel fallback stay replicated over
+        'model' (every chip needs every key/value)."""
+        msize = self.mesh.shape["model"]
+        b = fit_batch_spec(self.mesh, x.shape[0])
+        if x.shape[2] % msize == 0:
+            spec = P(b, None, "model", None)
+        else:
+            spec = P(b, None, None, None)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))

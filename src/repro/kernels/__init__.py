@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+spmv_dia      — banded/stencil SpMV (the SpMV the reductions overlap with)
+fused_dots    — all MGS orthogonalization coefficients in one HBM pass
+pipecg_fused  — the whole PIPECG iteration body as one HBM sweep
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd + padded
+wrappers, interpret=True on CPU), ref.py (pure-jnp oracle).
+"""

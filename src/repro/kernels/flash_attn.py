@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: flash attention forward (causal, block-skipping).
+
+This is the structural fix for the dominant memory term of the train cells
+(EXPERIMENTS.md §Perf): the S^2 score tensor never leaves VMEM, so HBM
+traffic drops from ~15 round trips of fp32 scores to exactly one pass over
+q/k/v/o.  The kv loop runs only over blocks at-or-below the diagonal
+(true causal skip — half the FLOPs the masked-dense path spends).
+
+Used on TPU via repro.kernels.ops.flash_mha; validated on CPU in
+interpret mode against ref.flash_attention_ref.  (The CPU dry-run cannot
+execute Mosaic custom-calls, so the dry-run models keep the jnp path; the
+kernel is the TPU deployment path.)
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLK_Q = 128
+BLK_KV = 128
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, blk_q: int, blk_kv: int,
+                      scale: float, causal: bool):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale          # (blk_q, D)
+    D = q.shape[-1]
+    S_kv = k_ref.shape[1]
+    n_kv = S_kv // blk_kv
+    if causal:
+        # process kv blocks only up to the diagonal block of this q block
+        n_kv = jnp.minimum(((qi + 1) * blk_q + blk_kv - 1) // blk_kv, n_kv)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.dslice(j * blk_kv, blk_kv), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(j * blk_kv, blk_kv), :].astype(jnp.float32)
+        s = q @ k.T                                    # (blk_q, blk_kv)
+        if causal:
+            qpos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                         (blk_q, blk_kv), 0)
+            kpos = j * blk_kv + jax.lax.broadcasted_iota(jnp.int32,
+                                                         (blk_q, blk_kv), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((blk_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((blk_q,), jnp.float32)
+    a0 = jnp.zeros((blk_q, D), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, blk_q: int = BLK_Q,
+                    blk_kv: int = BLK_KV, interpret: bool = False):
+    """q, k, v: (BH, S, D) — batch*heads flattened (GQA callers repeat or
+    group kv heads first).  Returns (BH, S, D)."""
+    BH, S, D = q.shape
+    S_kv = k.shape[1]
+    assert S % blk_q == 0 and S_kv % blk_kv == 0, (S, S_kv)
+    scale = 1.0 / math.sqrt(D)
+    kernel = functools.partial(_flash_fwd_kernel, blk_q=blk_q, blk_kv=blk_kv,
+                               scale=scale, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, S // blk_q),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, S_kv, D), lambda b, i: (b, 0, 0)),  # VMEM-resident
+            pl.BlockSpec((1, S_kv, D), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, D), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: fused multi-vector inner products.
+
+The (P)GMRES orthogonalization needs h_{j,i} = <z, v_j> for j = 0..i — a
+(m, n) @ (n,) reduction.  Classical MGS walks V row by row (i+1 passes over
+z); this kernel computes ALL coefficients in ONE pass over HBM, tiling the
+n axis and accumulating the (m,) partials in a VMEM block that every grid
+step revisits (TPU grids execute sequentially, so read-modify-write of the
+same output block across steps is well-defined).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 2048
+
+
+def _fused_dots_kernel(V_ref, z_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # (m, T) x (T,) -> (m,) partial, accumulated across sequential grid steps
+    out_ref[...] += V_ref[...] @ z_ref[...]
+
+
+def fused_dots(V: jnp.ndarray, z: jnp.ndarray, *, block: int = DEFAULT_BLOCK,
+               interpret: bool = False) -> jnp.ndarray:
+    """dots[j] = <V[j], z>;  V (m, n), z (n,) -> (m,).  n % block == 0."""
+    m, n = V.shape
+    assert z.shape == (n,)
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    return pl.pallas_call(
+        _fused_dots_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, block), lambda i: (0, i)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((m,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((m,), V.dtype),
+        interpret=interpret,
+    )(V, z)

@@ -1,0 +1,92 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True`` mode — the kernel
+body executes in Python/XLA for correctness validation; on TPU the same
+calls lower to Mosaic.  Wrappers pad the row dimension to the block size so
+callers never worry about alignment.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused_dots as _fd
+from repro.kernels import pipecg_fused as _pf
+from repro.kernels import spmv_dia as _sd
+from repro.kernels import ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis=0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def spmv_dia_ext(offsets: Tuple[int, ...], bands, x_ext, halo: int):
+    """Banded SpMV on a halo-extended vector (kernel-backed)."""
+    block = min(_sd.DEFAULT_BLOCK, bands.shape[1])
+    if bands.shape[1] % block:
+        bands_p, n = _pad_to(bands, block, axis=1)
+        xp = jnp.pad(x_ext, (0, bands_p.shape[1] - n))
+        y = _sd.spmv_dia(offsets, bands_p, xp, halo, block=block,
+                         interpret=_interpret())
+        return y[:n]
+    return _sd.spmv_dia(offsets, bands, x_ext, halo, block=block,
+                        interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def flash_mha(q, k, v, causal: bool = True):
+    """Flash attention fwd; pads S to the block size."""
+    from repro.kernels import flash_attn as _fa
+
+    S = q.shape[1]
+    blk = min(_fa.BLK_Q, S) if S % min(_fa.BLK_Q, S) == 0 else 1
+    if blk == 1:  # awkward sizes: fall back to padding to 128
+        blk = _fa.BLK_Q
+        qp, n = _pad_to(q, blk, axis=1)
+        kp, _ = _pad_to(k, blk, axis=1)
+        vp, _ = _pad_to(v, blk, axis=1)
+        out = _fa.flash_attention(qp, kp, vp, causal=causal, blk_q=blk,
+                                  blk_kv=blk, interpret=_interpret())
+        return out[:, :n]
+    return _fa.flash_attention(q, k, v, causal=causal, blk_q=blk, blk_kv=blk,
+                               interpret=_interpret())
+
+
+@jax.jit
+def fused_dots(V, z):
+    block = min(_fd.DEFAULT_BLOCK, V.shape[1])
+    if V.shape[1] % block:
+        Vp, n = _pad_to(V, block, axis=1)
+        zp = jnp.pad(z, (0, Vp.shape[1] - n))
+        return _fd.fused_dots(Vp, zp, block=block, interpret=_interpret())
+    return _fd.fused_dots(V, z, block=block, interpret=_interpret())
+
+
+@jax.jit
+def pipecg_fused_step(x, r, u, w, m, n_, z, q, s, p, alpha, beta):
+    block = min(_pf.DEFAULT_BLOCK, x.shape[0])
+    if x.shape[0] % block:
+        vecs = [x, r, u, w, m, n_, z, q, s, p]
+        padded = []
+        for v in vecs:
+            vp, n = _pad_to(v, block)
+            padded.append(vp)
+        outs = _pf.pipecg_fused(*padded, alpha, beta, block=block,
+                                interpret=_interpret())
+        return tuple(o[:n] for o in outs[:8]) + (outs[8],)
+    return _pf.pipecg_fused(x, r, u, w, m, n_, z, q, s, p, alpha, beta,
+                            block=block, interpret=_interpret())

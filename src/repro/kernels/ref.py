@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def spmv_dia_ref(offsets: Sequence[int], bands: jnp.ndarray,
+                 x_ext: jnp.ndarray, halo: int) -> jnp.ndarray:
+    """y[i] = sum_k bands[k, i] * x_ext[i + halo + offsets[k]].
+
+    bands: (n_bands, n); x_ext: (n + 2*halo,) halo-extended local vector.
+    """
+    n = bands.shape[1]
+    y = jnp.zeros((n,), x_ext.dtype)
+    for k, off in enumerate(offsets):
+        y = y + bands[k] * jax.lax.dynamic_slice_in_dim(x_ext, halo + off, n)
+    return y
+
+
+def flash_attention_ref(q, k, v, causal: bool = True) -> jnp.ndarray:
+    """(BH, S, D) causal attention, softmax in fp32."""
+    import math
+    D = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def fused_dots_ref(V: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """dots[j] = <V[j], z> — the MGS orthogonalization coefficients
+    h_{j,i} = <z_{i+1}, v_j> of (P)GMRES as ONE memory pass."""
+    return V @ z
+
+
+def wkv_recurrent_ref(r, k, v, logw, u) -> jnp.ndarray:
+    """Naive RWKV-6 recurrence (scan over time).  Shapes as kernels/wkv.py."""
+    BH, T, D = r.shape
+    rf, kf, vf, wf, uf = (t.astype(jnp.float32) for t in (r, k, v, logw, u))
+
+    def step(S, inp):
+        rt, kt, vt, lwt = inp  # (BH, D) each
+        bonus = jnp.sum(rt * uf * kt, axis=-1, keepdims=True)
+        o = jnp.einsum("bd,bde->be", rt, S) + bonus * vt
+        S = jnp.exp(lwt)[..., None] * S + kt[..., None] * vt[:, None, :]
+        return S, o
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, wf))
+    _, o = jax.lax.scan(step, jnp.zeros((BH, D, D), jnp.float32), xs)
+    return jnp.moveaxis(o, 0, 1)
+
+
+def pipecg_fused_ref(x, r, u, w, m, n_, z, q, s, p, alpha, beta
+                     ) -> Tuple[jnp.ndarray, ...]:
+    """All eight PIPECG vector updates + the three reductions of the NEXT
+    iteration (gamma' = <r',u'>, delta' = <w',u'>, rr' = <r',r'>) fused
+    into a single pass over HBM.
+
+    Returns (x', r', u', w', z', q', s', p', partials (3,)).
+    """
+    z2 = n_ + beta * z
+    q2 = m + beta * q
+    s2 = w + beta * s
+    p2 = u + beta * p
+    x2 = x + alpha * p2
+    r2 = r - alpha * s2
+    u2 = u - alpha * q2
+    w2 = w - alpha * z2
+    gamma = jnp.sum(r2 * u2)
+    delta = jnp.sum(w2 * u2)
+    rr = jnp.sum(r2 * r2)
+    return x2, r2, u2, w2, z2, q2, s2, p2, jnp.stack([gamma, delta, rr])

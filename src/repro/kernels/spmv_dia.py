@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: banded (DIA) SpMV — the paper's compute hot-spot.
+
+TPU adaptation of the stencil SpMV (DESIGN.md §Hardware-adaptation): rows
+are tiled into VMEM blocks sized for the VPU (8x128 lanes); the halo-extended
+input vector stays VMEM-resident (per-chip shards of the paper's problems
+are tiny: ex23 at P=8192 is 256 rows/chip; the tiling matters for the
+single-chip benchmark sizes).  Bands and the output are tiled with explicit
+BlockSpecs; the band loop is unrolled at trace time (static offsets).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+DEFAULT_BLOCK = 8 * LANE  # one (8, 128) VPU tile per grid step
+
+
+def _spmv_kernel(x_ext_ref, bands_ref, y_ref, *, offsets: Sequence[int],
+                 halo: int, block: int):
+    i = pl.program_id(0)
+    base = i * block
+    acc = jnp.zeros((block,), y_ref.dtype)
+    for k, off in enumerate(offsets):  # static unroll over bands
+        xk = pl.load(x_ext_ref, (pl.dslice(base + halo + off, block),))
+        acc = acc + bands_ref[k, :] * xk
+    y_ref[...] = acc
+
+
+def spmv_dia(offsets: Sequence[int], bands: jnp.ndarray, x_ext: jnp.ndarray,
+             halo: int, *, block: int = DEFAULT_BLOCK,
+             interpret: bool = False) -> jnp.ndarray:
+    """y[i] = sum_k bands[k,i] * x_ext[i + halo + offsets[k]].
+
+    bands (n_bands, n); x_ext (n + 2*halo,).  n must be a multiple of
+    ``block`` (the ops.py wrapper pads).
+    """
+    n = bands.shape[1]
+    assert x_ext.shape[0] == n + 2 * halo, (x_ext.shape, n, halo)
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    kernel = functools.partial(_spmv_kernel, offsets=tuple(offsets),
+                               halo=halo, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # halo-extended x: VMEM-resident, same full block every step
+            pl.BlockSpec(x_ext.shape, lambda i: (0,)),
+            # bands: one (n_bands, block) tile per grid step
+            pl.BlockSpec((bands.shape[0], block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x_ext.dtype),
+        interpret=interpret,
+    )(x_ext, bands)

@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: RWKV-6 WKV recurrence (exact, sequential, VMEM state).
+
+The rwkv6-7b train cell's 84 s memory term (EXPERIMENTS.md §Roofline) is the
+chunked-WKV pairwise tensor: the jnp path materializes an (C, C, D) decay
+tensor per chunk in fp32.  This kernel keeps the (Dk x Dv) state in VMEM and
+streams r/k/v/w once — HBM traffic collapses to the I/O floor, and it doubles
+as an exact second oracle for the chunked algebra (the recurrence is the
+definition):
+
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t);   S_t = diag(w_t) S_{t-1} + k_t^T v_t
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, *, T: int, D: int):
+    u = u_ref[0].astype(jnp.float32)                    # (D,)
+
+    def step(t, S):
+        r = r_ref[0, t, :].astype(jnp.float32)
+        k = k_ref[0, t, :].astype(jnp.float32)
+        v = v_ref[0, t, :].astype(jnp.float32)
+        lw = w_ref[0, t, :].astype(jnp.float32)         # log decay, <= 0
+        bonus = jnp.sum(r * u * k)
+        o = r @ S + bonus * v                           # (Dv,)
+        o_ref[0, t, :] = o.astype(o_ref.dtype)
+        return jnp.exp(lw)[:, None] * S + k[:, None] * v[None, :]
+
+    jax.lax.fori_loop(0, T, step, jnp.zeros((D, D), jnp.float32))
+
+
+def wkv_recurrent(r, k, v, logw, u, *, interpret: bool = False):
+    """r/k/v/logw: (BH, T, D); u: (BH, D).  Returns o (BH, T, D) fp32-exact.
+
+    One grid cell per (batch*head): the state never leaves VMEM.
+    """
+    BH, T, D = r.shape
+    kernel = functools.partial(_wkv_kernel, T=T, D=D)
+    seq_spec = pl.BlockSpec((1, T, D), lambda b: (b, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(BH,),
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
+                  pl.BlockSpec((1, D), lambda b: (b, 0))],
+        out_specs=seq_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, T, D), jnp.float32),
+        interpret=interpret,
+    )(r, k, v, logw, u)

@@ -1,0 +1,169 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+(The XLA_FLAGS assignment above must stay the first statement of the file.)
+
+For each cell we record:
+  - compiled.memory_analysis()  (per-device bytes — proves it fits)
+  - compiled.cost_analysis()    (FLOPs / bytes for the roofline)
+  - collective wire bytes parsed from the optimized HLO (trip-count aware)
+  - the analytic FLOPs/bytes model (repro.roofline.flops) used to correct
+    XLA's no-trip-count-scaling cost analysis
+
+Usage:
+  python -m repro.launch.dryrun --arch minitron-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --skip-existing   # full 80-cell sweep
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import SHAPES, TrainConfig
+from repro.configs.registry import cells, get_config, get_shape, list_archs
+from repro.launch.hlo_analysis import analyze_collectives, scan_aware_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import dryrun_lowerable
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _train_cfg_for(arch: str) -> TrainConfig:
+    # XXL MoE needs reduced-precision optimizer states + ZeRO over pod
+    if arch == "arctic-480b":
+        return TrainConfig(model=arch, optimizer_state_dtype="bfloat16",
+                           zero_over_pod=True)
+    return TrainConfig(model=arch)
+
+
+from repro.configs.base import parse_overrides as _parse_overrides
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
+             skip_existing: bool = False, overrides: str = "",
+             tag: str = "") -> dict:
+    import dataclasses
+    stem = f"{arch}__{shape_name}__{mesh_kind}" + (f"__{tag}" if tag else "")
+    out_path = out_dir / f"{stem}.json"
+    if skip_existing and out_path.exists():
+        rec = json.loads(out_path.read_text())
+        if rec.get("status") == "ok":
+            print(f"[skip] {stem}")
+            return rec
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **_parse_overrides(overrides))
+    shape = get_shape(shape_name)
+    tcfg = _train_cfg_for(arch)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "mesh_shape": list(mesh.devices.shape), "status": "fail",
+           "overrides": overrides, "tag": tag}
+    t0 = time.time()
+    try:
+        fn, args = dryrun_lowerable(cfg, shape, tcfg, mesh)
+        lowered = fn.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        rec["lower_s"] = round(t1 - t0, 2)
+        rec["compile_s"] = round(t2 - t1, 2)
+
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: int(getattr(ma, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes",
+                          "alias_size_in_bytes")
+                if hasattr(ma, k)
+            }
+        except Exception as e:  # CPU backend may not implement it
+            rec["memory_analysis"] = {"error": str(e)[:200]}
+
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                    if isinstance(v, (int, float))}
+        except Exception as e:
+            rec["cost_analysis"] = {"error": str(e)[:200]}
+
+        hlo = compiled.as_text()
+        rec["hlo_bytes"] = len(hlo)
+        hlo_dir = out_dir.parent / "hlo"
+        hlo_dir.mkdir(parents=True, exist_ok=True)
+        import gzip
+        with gzip.open(hlo_dir / f"{stem}.hlo.gz", "wt") as f:
+            f.write(hlo)
+        coll = analyze_collectives(hlo)
+        rec["collectives"] = {
+            "total_wire_bytes": coll["total_wire_bytes"],
+            "per_op": coll["per_op"],
+            "while_trip_counts": coll["while_trip_counts"],
+        }
+        rec["scan_aware"] = scan_aware_cost(compiled, hlo)
+        rec["status"] = "ok"
+        print(f"[ok]   {arch} x {shape_name} x {mesh_kind}: "
+              f"lower {rec['lower_s']}s compile {rec['compile_s']}s "
+              f"coll {coll['total_wire_bytes']/2**30:.2f} GiB")
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {arch} x {shape_name} x {mesh_kind}: {rec['error'][:300]}")
+    finally:
+        rec["total_s"] = round(time.time() - t0, 2)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(rec, indent=1, default=float))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=("single", "multi", "both"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--overrides", default="",
+                    help="ModelConfig overrides, e.g. ce_impl=onehot,shard_attn_heads=True")
+    ap.add_argument("--tag", default="", help="suffix for result files")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    if args.list:
+        for a, s in cells():
+            print(f"{a} x {s}")
+        return
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    todo = []
+    if args.all:
+        todo = [(a, s) for a, s in cells()]
+    else:
+        archs = [args.arch] if args.arch else list_archs()
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        todo = [(a, s) for a in archs for s in shapes
+                if (a, s) in set(cells())]
+
+    n_fail = 0
+    for a, s in todo:
+        for m in meshes:
+            rec = run_cell(a, s, m, out_dir, skip_existing=args.skip_existing,
+                           overrides=args.overrides, tag=args.tag)
+            n_fail += rec["status"] != "ok"
+    print(f"done: {len(todo) * len(meshes)} cells, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

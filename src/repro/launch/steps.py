@@ -1,0 +1,195 @@
+"""train_step / serve_step factories + abstract input specs for the dry-run.
+
+Everything here works on ``jax.ShapeDtypeStruct`` stand-ins: the full-scale
+configs are never allocated — only lowered and compiled.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.distributed.sharding import (
+    MeshHints,
+    batch_pspecs,
+    param_pspecs,
+    state_pspecs,
+    to_named,
+)
+from repro.models.transformer import (
+    decode_step,
+    init_decode_state,
+    init_params,
+    loss_fn,
+    prefill,
+)
+from repro.optim import adamw, clipping, schedules
+
+
+# ---------------------------------------------------------------------------
+# Abstract trees
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_opt_state(cfg: ModelConfig, tcfg: TrainConfig):
+    return jax.eval_shape(
+        lambda: adamw.init(init_params(cfg, jax.random.PRNGKey(0)),
+                           tcfg.optimizer_state_dtype))
+
+
+def abstract_train_state(cfg: ModelConfig, tcfg: TrainConfig):
+    return {
+        "params": abstract_params(cfg),
+        "opt": abstract_opt_state(cfg, tcfg),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "prev_gnorm": jax.ShapeDtypeStruct((), jnp.float32),
+    }
+
+
+def abstract_decode_state(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.eval_shape(lambda: init_decode_state(cfg, batch, cache_len))
+
+
+def _sds(shape, dtype, mesh=None, spec=None):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the data batch of one step."""
+    B, S = shape.global_batch, shape.seq_len
+    F = cfg.frontend.num_positions if cfg.frontend is not None else 0
+    n = S - F
+    from repro.distributed.sharding import fit_batch_spec
+    bspec = fit_batch_spec(mesh, B, cfg.sharding) if mesh is not None else None
+
+    if shape.kind in ("train", "prefill"):
+        tok_shape = (B, n, cfg.num_codebooks) if cfg.num_codebooks > 1 else (B, n)
+        specs = {"tokens": _sds(tok_shape, jnp.int32, mesh,
+                                P(*([bspec] + [None] * (len(tok_shape) - 1))))}
+        if F:
+            specs["frontend"] = _sds((B, F, cfg.d_model), jnp.bfloat16, mesh,
+                                     P(bspec, None, None))
+        if shape.kind == "train":
+            specs["labels"] = _sds(tok_shape, jnp.int32, mesh,
+                                   P(*([bspec] + [None] * (len(tok_shape) - 1))))
+        return specs
+
+    # decode: one new token with a cache of S
+    tok_shape = (B, cfg.num_codebooks) if cfg.num_codebooks > 1 else (B,)
+    return {"token": _sds(tok_shape, jnp.int32, mesh,
+                          P(*([bspec] + [None] * (len(tok_shape) - 1))))}
+
+
+def shard_tree(abstract_tree, spec_tree, mesh: Mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        abstract_tree, spec_tree)
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh = None):
+    hints = MeshHints(mesh, cfg.sharding) if mesh is not None else None
+
+    def train_step(state, batch):
+        kw = {"remat": tcfg.remat}
+        if hints is not None:
+            kw["hints"] = hints
+
+        def lfn(p):
+            return loss_fn(p, cfg, batch, **kw)
+
+        (loss, metrics), grads = jax.value_and_grad(lfn, has_aux=True)(state["params"])
+
+        if tcfg.grad_clip > 0:
+            if tcfg.pipelined_clipping:
+                grads, gnorm = clipping.clip_by_delayed_norm(
+                    grads, state["prev_gnorm"], tcfg.grad_clip)
+            else:
+                grads, gnorm = clipping.clip_by_global_norm(grads, tcfg.grad_clip)
+        else:
+            gnorm = clipping.global_norm(grads)
+
+        step = state["step"] + 1
+        lr = schedules.linear_warmup_cosine(
+            step, base_lr=tcfg.learning_rate, warmup_steps=tcfg.warmup_steps,
+            total_steps=max(tcfg.steps, 1))
+        new_params, new_opt = adamw.update(
+            grads, state["opt"], state["params"], lr=lr,
+            weight_decay=tcfg.weight_decay, step=step)
+        new_state = {"params": new_params, "opt": new_opt, "step": step,
+                     "prev_gnorm": gnorm}
+        metrics = dict(metrics, loss=loss, gnorm=gnorm, lr=lr)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh = None):
+    hints = MeshHints(mesh, cfg.sharding) if mesh is not None else None
+
+    def prefill_step(params, batch):
+        kw = {"hints": hints} if hints is not None else {}
+        return prefill(params, cfg, batch, **kw)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh = None):
+    hints = MeshHints(mesh, cfg.sharding) if mesh is not None else None
+
+    def serve_step(params, state, token):
+        kw = {"hints": hints} if hints is not None else {}
+        return decode_step(params, cfg, state, token, **kw)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Dry-run assembly: abstract (fn, args) per (cfg, shape, mesh)
+# ---------------------------------------------------------------------------
+
+def dryrun_lowerable(cfg: ModelConfig, shape: ShapeConfig, tcfg: TrainConfig,
+                     mesh: Mesh) -> Tuple[Any, tuple]:
+    """Returns (jitted_fn, abstract_args) ready for .lower()."""
+    pspecs = param_pspecs(abstract_params(cfg), strategy=cfg.sharding, mesh=mesh)
+    aparams = shard_tree(abstract_params(cfg), pspecs, mesh)
+
+    if shape.kind == "train":
+        ospecs = param_pspecs(
+            abstract_opt_state(cfg, tcfg),
+            zero_over_pod=tcfg.zero_over_pod and "pod" in mesh.axis_names,
+            strategy=cfg.sharding, mesh=mesh)
+        astate = {
+            "params": aparams,
+            "opt": shard_tree(abstract_opt_state(cfg, tcfg), ospecs, mesh),
+            "step": _sds((), jnp.int32, mesh, P()),
+            "prev_gnorm": _sds((), jnp.float32, mesh, P()),
+        }
+        fn = make_train_step(cfg, tcfg, mesh)
+        return jax.jit(fn, donate_argnums=(0,)), (astate, input_specs(cfg, shape, mesh))
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, mesh)
+        return jax.jit(fn), (aparams, input_specs(cfg, shape, mesh))
+
+    # decode
+    adstate = abstract_decode_state(cfg, shape.global_batch, shape.seq_len)
+    dspecs = state_pspecs(adstate, mesh)
+    adstate = shard_tree(adstate, dspecs, mesh)
+    fn = make_decode_step(cfg, mesh)
+    return jax.jit(fn, donate_argnums=(1,)), (
+        aparams, adstate, input_specs(cfg, shape, mesh)["token"])

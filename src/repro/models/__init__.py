@@ -1,0 +1,10 @@
+"""Model zoo: a single decoder LM covering all assigned architectures."""
+from repro.models.transformer import (  # noqa: F401
+    Hints,
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    loss_fn,
+    prefill,
+)

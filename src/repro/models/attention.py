@@ -1,0 +1,257 @@
+"""GQA attention: dense (short-seq), chunked flash (long-seq), decode w/ cache.
+
+Layouts
+-------
+activations:  x (B, S, d_model)
+q             (B, S, H, D)            H = num query heads
+k, v          (B, S, KV, D)           KV = num kv heads (GQA)
+KV cache      (B, S_cache, KV, D)     decode: S_cache sharded over 'model'
+                                      (flash-decoding style; the softmax over
+                                      the sharded S dim becomes tiny psums)
+
+The grouped einsums keep q in (B, KV, G, S, D) internally so KV heads are
+never materialized H times.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear, init_rmsnorm, linear, rms_norm, rope
+
+NEG_INF = -1e30
+DENSE_MAX_SEQ = 8192   # above this, use the chunked (flash) path
+Q_CHUNK = 1024
+KV_CHUNK = 1024
+
+
+def init_attention(rng, cfg):
+    ks = jax.random.split(rng, 6)
+    d, H, KV, D = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": init_linear(ks[0], d, H * D, dt, cfg.use_bias),
+        "wk": init_linear(ks[1], d, KV * D, dt, cfg.use_bias),
+        "wv": init_linear(ks[2], d, KV * D, dt, cfg.use_bias),
+        "wo": init_linear(ks[3], H * D, d, dt, cfg.use_bias),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = init_rmsnorm(D, dt)
+        p["knorm"] = init_rmsnorm(D, dt)
+    return p
+
+
+def _qkv(p, cfg, x, positions, dtype):
+    B, S, _ = x.shape
+    H, KV, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = linear(p["wq"], x, dtype).reshape(B, S, H, D)
+    k = linear(p["wk"], x, dtype).reshape(B, S, KV, D)
+    v = linear(p["wv"], x, dtype).reshape(B, S, KV, D)
+    if cfg.qk_norm:
+        q = rms_norm(p["qnorm"], q, cfg.norm_eps)
+        k = rms_norm(p["knorm"], k, cfg.norm_eps)
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask(qpos, kpos, window):
+    m = qpos[:, None] >= kpos[None, :]
+    if window:
+        m = m & (qpos[:, None] - kpos[None, :] < window)
+    return m
+
+
+def _dense_attend(q, k, v, qpos, kpos, window, softcap, sdtype=jnp.float32):
+    """q (B,S,H,D), k/v (B,Skv,KV,D) -> (B,S,H,D).
+
+    ``sdtype`` is the storage dtype of the S^2 score tensors (fp32 default;
+    bf16 halves the dominant HBM traffic of training attention — the sum
+    reduction still accumulates in fp32)."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, D)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(sdtype)
+    scores = scores * jnp.asarray(1.0 / math.sqrt(D), sdtype)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    mask = _mask(qpos, kpos, window)
+    neg = jnp.asarray(jnp.finfo(sdtype).min / 2, sdtype)
+    scores = jnp.where(mask[None, None, None], scores, neg)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True,
+                    dtype=jnp.float32).astype(sdtype)  # fp32 accumulation
+    w = (p / jnp.maximum(denom, jnp.asarray(1e-30, sdtype))).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(B, S, H, D)
+
+
+def _flash_attend(q, k, v, qpos, kpos, window, softcap, q_chunk=Q_CHUNK,
+                  kv_chunk=KV_CHUNK, sdtype=jnp.float32):
+    """Double-chunked online-softmax attention (pure JAX flash).
+
+    Memory is O(q_chunk * kv_chunk) per (batch, head); both loops are
+    lax.scan so the HLO stays small under the layer scan.
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    Skv = k.shape[1]
+    G = H // KV
+    nq, nk = S // q_chunk, Skv // kv_chunk
+    assert S % q_chunk == 0 and Skv % kv_chunk == 0, (S, Skv)
+    scale = 1.0 / math.sqrt(D)
+
+    qg = q.reshape(B, nq, q_chunk, KV, G, D).transpose(1, 0, 3, 4, 2, 5)  # (nq,B,KV,G,Cq,D)
+    kc = k.reshape(B, nk, kv_chunk, KV, D).transpose(1, 0, 3, 2, 4)       # (nk,B,KV,Ck,D)
+    vc = v.reshape(B, nk, kv_chunk, KV, D).transpose(1, 0, 3, 2, 4)
+    qpos_c = qpos.reshape(nq, q_chunk)
+    kpos_c = kpos.reshape(nk, kv_chunk)
+
+    def q_step(_, qi):
+        qch, qp = qi  # (B,KV,G,Cq,D), (Cq,)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kch, vch, kp = ki
+            s = (jnp.einsum("bkgqd,bkcd->bkgqc", qch, kch).astype(sdtype)
+                 * jnp.asarray(scale, sdtype)).astype(jnp.float32)
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            msk = _mask(qp, kp, window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p.astype(qch.dtype), vch
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kc, vc, kpos_c))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(qch.dtype)
+
+    _, out = jax.lax.scan(q_step, None, (qg, qpos_c))  # (nq,B,KV,G,Cq,D)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, D)
+    return out
+
+
+def _kernel_attend(q, k, v):
+    """Pallas flash-attention path (TPU): scores never leave VMEM.
+
+    GQA kv heads are repeated to H (the kernel reads them H/KV times from
+    HBM; the grouped-kv kernel variant is future work)."""
+    from repro.kernels.ops import flash_mha
+
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    out = flash_mha(fold(q), fold(k), fold(v), causal=True)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+def attend(q, k, v, qpos, kpos, window=0, softcap=0.0,
+           dense_max=DENSE_MAX_SEQ, sdtype=jnp.float32, use_kernel=False):
+    if (use_kernel and jax.default_backend() == "tpu" and window == 0
+            and softcap == 0.0 and q.shape[1] == k.shape[1]):
+        return _kernel_attend(q, k, v)
+    if k.shape[1] <= dense_max:
+        return _dense_attend(q, k, v, qpos, kpos, window, softcap,
+                             sdtype=sdtype)
+    return _flash_attend(q, k, v, qpos, kpos, window, softcap,
+                         q_chunk=min(Q_CHUNK, q.shape[1]),
+                         kv_chunk=min(KV_CHUNK, k.shape[1]), sdtype=sdtype)
+
+
+class AttnState(NamedTuple):
+    """Decode-time KV cache for one attention layer."""
+
+    k: jnp.ndarray  # (B, S_cache, KV, D)
+    v: jnp.ndarray  # (B, S_cache, KV, D)
+
+
+def init_attn_state(cfg, batch, cache_len, dtype) -> AttnState:
+    KV, D = cfg.num_kv_heads, cfg.head_dim
+    z = jnp.zeros((batch, cache_len, KV, D), dtype)
+    return AttnState(k=z, v=z)
+
+
+def attention_block(p, cfg, x, positions, dtype, *, mode="train",
+                    state: Optional[AttnState] = None, pos=None, window=0,
+                    hints=None):
+    """Run one attention layer.
+
+    mode:
+      train   -> full self attention over x; returns (out, None)
+      prefill -> same, but also returns the cache (k, v)
+      decode  -> x is (B, 1, d); read/update cache at ``pos``
+    """
+    B = x.shape[0]
+    if mode in ("train", "prefill"):
+        q, k, v = _qkv(p, cfg, x, positions, dtype)
+        if cfg.shard_attn_heads and hints is not None:
+            q = hints.heads(q)
+            k = hints.kv_heads(k)
+            v = hints.kv_heads(v)
+        out = attend(q, k, v, positions, positions, window=window,
+                     softcap=cfg.attn_logit_softcap,
+                     dense_max=cfg.dense_attn_max_seq,
+                     sdtype=jnp.dtype(cfg.scores_dtype),
+                     use_kernel=cfg.attn_kernel)
+        if cfg.save_attn_out:
+            # remat hint: keep the (small, bf16) attention output so the
+            # backward pass never recomputes the S^2 score path
+            from jax.ad_checkpoint import checkpoint_name
+            out = checkpoint_name(out, "attn_out")
+        if cfg.shard_attn_heads and hints is not None:
+            out = hints.heads(out)
+        new_state = AttnState(k=k, v=v) if mode == "prefill" else None
+    else:
+        assert state is not None and pos is not None
+        q, k, v = _qkv(p, cfg, x, positions, dtype)  # S == 1
+        S_cache = state.k.shape[1]
+        rolling = bool(window) and S_cache == window  # ring buffer (local attn)
+        slot = (jax.lax.rem(pos, jnp.asarray(S_cache, pos.dtype))
+                if rolling else pos)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(state.k, k, slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(state.v, v, slot, axis=1)
+        kpos = jnp.arange(S_cache, dtype=jnp.int32)
+        H, KV, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        G = H // KV
+        qg = q.reshape(B, KV, G, 1, D)
+        # mixed-precision dot: bf16 operands, f32 accumulation — avoids the
+        # operand-upcast round trip over the (huge) cache
+        s = jnp.einsum("bkgqd,bskd->bkgqs", qg, k_cache,
+                       preferred_element_type=jnp.float32)
+        s *= 1.0 / math.sqrt(D)
+        if cfg.attn_logit_softcap:
+            s = jnp.tanh(s / cfg.attn_logit_softcap) * cfg.attn_logit_softcap
+        if rolling:
+            # every slot holds one of the last ``window`` positions once full
+            valid = (kpos <= pos)  # before wrap: slots > pos are unwritten
+        else:
+            valid = kpos <= pos
+            if window:
+                valid = valid & (kpos > pos - window)
+        s = jnp.where(valid[None, None, None, None], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(dtype)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", w, v_cache).reshape(B, 1, H * D)
+        out = linear(p["wo"], out, dtype)
+        return out, AttnState(k=k_cache, v=v_cache)
+
+    H, D = cfg.num_heads, cfg.head_dim
+    out = linear(p["wo"], out.reshape(B, -1, H * D), dtype)
+    return out, new_state

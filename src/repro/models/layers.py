@@ -1,0 +1,129 @@
+"""Common neural-net primitives (pure functional, param-dict style).
+
+All params are stored in ``param_dtype`` (fp32 master by default) and cast to
+the compute ``dtype`` (bf16) at use.  Norm statistics and softmaxes run in
+fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def _normal(rng, shape, stddev, dtype):
+    return (stddev * jax.random.normal(rng, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def init_linear(rng, d_in, d_out, dtype, use_bias=False, stddev=None):
+    stddev = stddev if stddev is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": _normal(rng, (d_in, d_out), stddev, dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x, dtype):
+    y = x @ p["w"].astype(dtype)
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p, x, eps):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Positional encodings
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta):
+    """Apply rotary embedding.  x: (..., S, H, D); positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    # angles: (..., S, half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (S, half) or (B,S,half)
+    if ang.ndim == 2:  # (S, half) -> broadcast over batch
+        ang = ang[None]
+    cos = jnp.cos(ang)[..., None, :]  # (B?, S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions, d, dtype):
+    """Classic transformer sinusoidal embedding; positions (S,) -> (S, d)."""
+    half = d // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, d_model, d_ff, gated, dtype, use_bias=False):
+    ks = jax.random.split(rng, 3)
+    p = {"down": init_linear(ks[0], d_ff, d_model, dtype, use_bias)}
+    p["up"] = init_linear(ks[1], d_model, d_ff, dtype, use_bias)
+    if gated:
+        p["gate"] = init_linear(ks[2], d_model, d_ff, dtype, use_bias)
+    return p
+
+
+def mlp(p, x, gated, dtype):
+    up = linear(p["up"], x, dtype)
+    if gated:
+        h = jax.nn.silu(linear(p["gate"], x, dtype)) * up
+    else:
+        h = jax.nn.gelu(up)
+    return linear(p["down"], h, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cross entropy
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels, mask: Optional[jnp.ndarray] = None,
+                  impl: str = "gather"):
+    """Mean CE over valid positions; logsumexp in fp32. labels: int32.
+
+    impl='gather'  — take_along_axis over the vocab axis.  Simple, but when
+        the vocab axis is TP-sharded GSPMD resolves the gather by
+        all-gathering the logits (hundreds of GiB/step at 256k vocab).
+    impl='onehot'  — label log-prob via a one-hot contraction that GSPMD
+        partitions along the sharded vocab axis; the only collectives left
+        are the (B, S)-sized psums of the max/sum/label terms.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    if impl == "onehot":
+        V = logits.shape[-1]
+        oh = jax.nn.one_hot(labels, V, dtype=lf.dtype)
+        ll = jnp.sum(lf * oh, axis=-1)
+    else:
+        ll = jnp.take_along_axis(lf, labels[..., None].astype(jnp.int32),
+                                 axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

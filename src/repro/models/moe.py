@@ -1,0 +1,106 @@
+"""Mixture-of-Experts FFN with sort-based dispatch (static shapes).
+
+Dispatch algorithm (all static shapes, GSPMD/pjit friendly):
+  1. router logits (T, E) -> top-k expert ids + normalized weights
+  2. flatten the (T, k) assignments, stable-argsort by expert id
+  3. position-in-expert via segment offsets; entries beyond the per-expert
+     capacity C = ceil(k*T/E * capacity_factor) are DROPPED (Switch-style)
+  4. build an (E, C) table of assignment slots (sentinel = T for empty),
+     gather tokens -> (E, C, d), run the expert FFN as grouped einsums,
+     scatter-add back weighted by the router weight.
+
+Sharding: expert weight tensors are (E, d, d_ff) with E on the 'model' axis
+(expert parallelism) and d on 'data' (FSDP); the gathered activation tensor
+(E, C, d) shards E over 'model' and C over 'data'.  The baseline relies on
+GSPMD to insert the dispatch collectives; the hillclimbed variant (see
+EXPERIMENTS.md §Perf) uses an explicit shard_map all_to_all.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear
+
+
+def capacity(cfg_moe, num_tokens: int) -> int:
+    c = int(math.ceil(cfg_moe.top_k * num_tokens / cfg_moe.num_experts
+                      * cfg_moe.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def init_moe(rng, cfg):
+    m = cfg.moe
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 5)
+    std = 1.0 / math.sqrt(d)
+    p = {
+        "router": init_linear(ks[0], d, m.num_experts, dt),
+        "up": (std * jax.random.normal(ks[1], (m.num_experts, d, m.d_ff), jnp.float32)).astype(dt),
+        "down": ((1.0 / math.sqrt(m.d_ff))
+                 * jax.random.normal(ks[2], (m.num_experts, m.d_ff, d), jnp.float32)).astype(dt),
+    }
+    if cfg.gated_mlp:
+        p["gate"] = (std * jax.random.normal(ks[3], (m.num_experts, d, m.d_ff), jnp.float32)).astype(dt)
+    return p
+
+
+def moe_ffn(p, cfg, x, dtype, rng: Optional[jax.Array] = None):
+    """x (B, S, d) -> (B, S, d) plus aux losses dict."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, K = m.num_experts, m.top_k
+    C = capacity(m, T)
+    xf = x.reshape(T, d)
+
+    # --- router (fp32) -----------------------------------------------------
+    logits = (xf.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    gate_w, gate_idx = jax.lax.top_k(probs, K)                   # (T, K)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        (jax.nn.one_hot(gate_idx, E, dtype=jnp.float32).sum(1)), axis=0)
+    aux_loss = E * jnp.sum(me * ce) / K
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    # --- sort-based dispatch ------------------------------------------------
+    flat_e = gate_idx.reshape(-1)                                # (T*K,)
+    flat_w = gate_w.reshape(-1).astype(dtype)
+    sort_idx = jnp.argsort(flat_e, stable=True)                  # (T*K,)
+    sorted_e = flat_e[sort_idx]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos_in_e = jnp.arange(T * K) - seg_start[sorted_e]
+    keep = pos_in_e < C
+    slot = sorted_e * C + pos_in_e                               # target slot
+    slot = jnp.where(keep, slot, E * C)                          # overflow bin
+    table = jnp.full((E * C + 1,), T * K, jnp.int32)             # sentinel
+    table = table.at[slot].set(sort_idx.astype(jnp.int32), mode="drop")
+    table = table[: E * C].reshape(E, C)                         # (E, C)
+
+    tok_of = jnp.minimum(table // K, T)                          # sentinel -> T (pad row)
+    w_of = jnp.concatenate([flat_w, jnp.zeros((1,), dtype)])[
+        jnp.minimum(table, T * K)]                               # (E, C)
+    xpad = jnp.concatenate([xf.astype(dtype), jnp.zeros((1, d), dtype)], axis=0)
+    gx = xpad[tok_of]                                            # (E, C, d)
+
+    # --- expert compute (grouped einsum) -------------------------------------
+    up = jnp.einsum("ecd,edf->ecf", gx, p["up"].astype(dtype))
+    if cfg.gated_mlp:
+        up = jax.nn.silu(jnp.einsum("ecd,edf->ecf", gx, p["gate"].astype(dtype))) * up
+    else:
+        up = jax.nn.gelu(up)
+    out_e = jnp.einsum("ecf,efd->ecd", up, p["down"].astype(dtype))  # (E, C, d)
+
+    # --- combine -------------------------------------------------------------
+    out = jnp.zeros((T + 1, d), dtype)
+    out = out.at[tok_of].add(out_e * w_of[..., None])
+    out = out[:T].reshape(B, S, d)
+    return out, {"moe_aux": aux_loss, "moe_z": z_loss}

@@ -1,0 +1,290 @@
+"""Recurrent blocks: RG-LRU (Griffin / RecurrentGemma) and RWKV-6 (Finch).
+
+Both are sub-quadratic: O(S) time, O(1) state — which is why the assigned
+``long_500k`` decode shape runs only for these families.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a u_t);  i_t = sigmoid(W_i u_t)
+    a_t = exp(c * softplus(Lambda) * (-r_t))        in (0, 1)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * u_t)
+computed with an associative scan over the sequence (parallel depth log S).
+
+RWKV-6 time-mix (per head, Dk x Dv state S):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with data-dependent per-channel decay w_t = exp(-exp(w0 + tanh(x W_A) W_B)).
+Computed in chunks: intra-chunk pairwise (exact, numerically safe: every
+exponent is <= 0) + inter-chunk state carry.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear, linear
+
+RWKV_CHUNK = 64
+RGLRU_C = 8.0
+
+
+# ===========================================================================
+# RG-LRU block
+# ===========================================================================
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray      # (B, W) recurrent state, fp32
+    conv: jnp.ndarray   # (B, conv_width - 1, W) temporal-conv tail
+
+
+def init_rglru(rng, cfg):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 7)
+    # Lambda init so a^c in [0.9, 0.999] at r=1 (Griffin appendix)
+    u = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / RGLRU_C))  # softplus^-1(-log u / c)
+    return {
+        "in_x": init_linear(ks[0], d, w, dt, cfg.use_bias),
+        "in_gate": init_linear(ks[1], d, w, dt, cfg.use_bias),
+        "conv_w": (0.1 * jax.random.normal(ks[2], (cfg.conv1d_width, w), jnp.float32)).astype(dt),
+        "gate_a": init_linear(ks[3], w, w, dt),
+        "gate_i": init_linear(ks[4], w, w, dt),
+        "lambda": lam.astype(dt),
+        "out": init_linear(ks[6], w, d, dt, cfg.use_bias),
+    }
+
+
+def _causal_conv1d(u, conv_w, tail=None):
+    """u (B,S,W), conv_w (K,W); causal depthwise conv via shifted adds.
+
+    tail (B,K-1,W) carries the last K-1 inputs of the previous segment
+    (decode / chunked prefill)."""
+    K = conv_w.shape[0]
+    B, S, W = u.shape
+    if tail is None:
+        tail = jnp.zeros((B, K - 1, W), u.dtype)
+    ext = jnp.concatenate([tail, u], axis=1)  # (B, S+K-1, W)
+    out = jnp.zeros_like(u)
+    for i in range(K):
+        out = out + ext[:, i : i + S, :] * conv_w[K - 1 - i][None, None, :]
+    new_tail = ext[:, -(K - 1) :, :] if K > 1 else jnp.zeros((B, 0, W), u.dtype)
+    return out, new_tail
+
+
+def _rglru_scan(u, a, h0):
+    """h_t = a_t h_{t-1} + b_t with b = sqrt(1-a^2) * u; associative scan.
+
+    u, a: (B, S, W) fp32;  h0: (B, W) fp32.  Returns h (B,S,W), h_last."""
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * u
+    # fold h0 into the first element
+    b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh, hh[:, -1, :]
+
+
+def rglru_block(p, cfg, x, dtype, *, mode="train", state: Optional[RGLRUState] = None):
+    """Griffin recurrent block: (in-proj -> conv -> RG-LRU) * gelu-gate -> out."""
+    B, S, _ = x.shape
+    w = cfg.lru_width or cfg.d_model
+    gate = jax.nn.gelu(linear(p["in_gate"], x, dtype))
+    u = linear(p["in_x"], x, dtype)
+
+    tail = state.conv if state is not None else None
+    u, new_tail = _causal_conv1d(u, p["conv_w"].astype(dtype), tail)
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(linear(p["gate_a"], u, dtype).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear(p["gate_i"], u, dtype).astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r  # <= 0
+    a = jnp.exp(log_a)
+
+    h0 = state.h if state is not None else jnp.zeros((B, w), jnp.float32)
+    if mode == "decode":  # S == 1: single recurrence step
+        b = jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * (i * uf)
+        h = a[:, 0] * h0 + b[:, 0]
+        hh = h[:, None, :]
+        h_last = h
+    else:
+        hh, h_last = _rglru_scan(i * uf, a, h0)
+
+    y = (hh.astype(dtype)) * gate
+    out = linear(p["out"], y, dtype)
+    new_state = RGLRUState(h=h_last, conv=new_tail) if mode != "train" else None
+    return out, new_state
+
+
+# ===========================================================================
+# RWKV-6 block (time-mix + channel-mix)
+# ===========================================================================
+
+class RWKVState(NamedTuple):
+    s: jnp.ndarray        # (B, H, Dk, Dv) wkv state, fp32
+    tm_last: jnp.ndarray  # (B, d) last token input of time-mix (token shift)
+    cm_last: jnp.ndarray  # (B, d) last token input of channel-mix
+
+
+DECAY_LORA = 64
+
+
+def init_rwkv(rng, cfg):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 12)
+    p = {
+        # token-shift mixing coefficients for r,k,v,g,w
+        "mu": (0.5 * jnp.ones((5, d), jnp.float32)).astype(dt),
+        "wr": init_linear(ks[0], d, d, dt),
+        "wk": init_linear(ks[1], d, d, dt),
+        "wv": init_linear(ks[2], d, d, dt),
+        "wg": init_linear(ks[3], d, d, dt),
+        "wo": init_linear(ks[4], d, d, dt),
+        # data-dependent decay: w_t = exp(-exp(w0 + tanh(x A) B))
+        "w0": (-6.0 * jnp.ones((d,), jnp.float32)).astype(dt),
+        "decay_a": init_linear(ks[5], d, DECAY_LORA, dt),
+        "decay_b": init_linear(ks[6], DECAY_LORA, d, dt),
+        "u": (0.5 * jax.random.normal(ks[7], (H, hd), jnp.float32)).astype(dt),
+        "ln_x": jnp.ones((d,), dt),  # group-norm scale on wkv output
+        # channel mix
+        "cm_mu": (0.5 * jnp.ones((2, d), jnp.float32)).astype(dt),
+        "cm_k": init_linear(ks[8], d, cfg.d_ff, dt),
+        "cm_v": init_linear(ks[9], cfg.d_ff, d, dt),
+        "cm_r": init_linear(ks[10], d, d, dt),
+    }
+    return p
+
+
+def _token_shift(x, last):
+    """shift right by one along S; position 0 takes ``last`` (B, d)."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _wkv_chunked(r, k, v, logw, u, s0, chunk=RWKV_CHUNK):
+    """Chunked RWKV-6 wkv.   r,k,v: (B,S,H,D); logw: (B,S,H,D) (<=0, fp32);
+    u: (H,D); s0: (B,H,Dk,Dv) fp32.  Returns o (B,S,H,D) fp32, s_last.
+
+    Exact chunked form; all exponents <= 0 so no overflow:
+      L_i = cumsum_j<=i logw_j  (within chunk; L_0 = 0 excludes current token)
+      o_i = (r_i * exp(L_i)) @ S_prev
+            + sum_{j<i} [sum_c r_ic k_jc exp(L_i,c - L_j+1...  see below]
+            + r_i (u * k_i) . v_i
+      state' = exp(L_C) * S_prev + sum_j (exp(L_C - L_{j+1}) * k_j)^T v_j
+    where exp(L_i - L_{j+1}) multiplies decays for steps j+1..i-1... We use
+    the convention  D_i = sum_{t<=i} logw_t  with decay applied AFTER the
+    token is added, matching  S_t = diag(w_t) S_{t-1} + k_t^T v_t  and
+    o_t read from S_{t-1}.
+    """
+    B, S, H, D = r.shape
+    n = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    rc = r.reshape(B, n, chunk, H, D).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    kc = k.reshape(B, n, chunk, H, D).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    vc = v.reshape(B, n, chunk, H, D).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    wc = logw.reshape(B, n, chunk, H, D).transpose(1, 0, 3, 2, 4)  # (n,B,H,C,D)
+    uf = u.astype(jnp.float32)
+
+    def step(s, inp):
+        rch, kch, vch, wch = inp  # (B,H,C,D)
+        # Dcum[i] = sum_{t<=i} logw_t ; state seen by token i decayed by Dcum[i-1]
+        Dcum = jnp.cumsum(wch, axis=2)                       # (B,H,C,D)
+        Dprev = Dcum - wch                                   # sum_{t<i}
+        # o_state: r_i * exp(Dprev_i) @ s
+        r_dec = rch * jnp.exp(Dprev)
+        o_state = jnp.einsum("bhcd,bhde->bhce", r_dec, s)
+        # intra-chunk: token j contributes to i>j with decay exp(Dprev_i - Dcum_j)
+        # pairwise (C,C,D) exponent = Dprev_i - Dcum_j  (<= 0 for j < i)
+        expo = Dprev[:, :, :, None, :] - Dcum[:, :, None, :, :]  # (B,H,i,j,D)
+        iidx = jnp.arange(chunk)
+        lower = (iidx[:, None] > iidx[None, :])  # strictly j < i
+        expo = jnp.where(lower[None, None, :, :, None], expo, -jnp.inf)
+        att = jnp.einsum("bhid,bhijd,bhjd->bhij", rch, jnp.exp(expo), kch)
+        # diagonal (current token) bonus with u
+        diag = jnp.einsum("bhid,hd->bhi", rch * kch, uf)
+        o_intra = jnp.einsum("bhij,bhjd->bhid", att, vch) + diag[..., None] * vch
+        # state update
+        dec_all = jnp.exp(Dcum[:, :, -1:, :] - Dcum)         # exp(D_C - D_j)
+        k_dec = kch * dec_all
+        s_new = jnp.exp(Dcum[:, :, -1, :])[..., None] * s + jnp.einsum(
+            "bhjd,bhje->bhde", k_dec, vch
+        )
+        return s_new, o_state + o_intra
+
+    s_last, oc = jax.lax.scan(step, s0.astype(jnp.float32), (rc, kc, vc, wc))
+    o = oc.transpose(1, 0, 3, 2, 4).reshape(B, S, H, D)
+    return o, s_last
+
+
+def _group_norm(x, scale, eps, H):
+    """Per-head layer norm of (B,S,H*D) grouped by head."""
+    B, S, d = x.shape
+    xg = x.reshape(B, S, H, d // H).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=-1, keepdims=True)
+    var = jnp.var(xg, axis=-1, keepdims=True)
+    y = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (y.reshape(B, S, d) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rwkv_time_mix(p, cfg, x, dtype, *, mode="train", state: Optional[RWKVState] = None):
+    """RWKV-6 time-mix sub-block (caller applies the pre-norm and adds the
+    residual; channel-mix is the separate ``rwkv_channel_mix``)."""
+    B, S, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    last = state.tm_last if state is not None else jnp.zeros((B, d), dtype)
+    xs = _token_shift(x, last.astype(dtype))
+    mu = p["mu"].astype(dtype)
+    xr, xk, xv, xg, xw = (x + (xs - x) * mu[i] for i in range(5))
+    r = linear(p["wr"], xr, dtype).reshape(B, S, H, hd)
+    k = linear(p["wk"], xk, dtype).reshape(B, S, H, hd)
+    v = linear(p["wv"], xv, dtype).reshape(B, S, H, hd)
+    g = jax.nn.silu(linear(p["wg"], xg, dtype))
+    # data-dependent decay (fp32, always <= 0)
+    dec = linear(p["decay_b"], jnp.tanh(linear(p["decay_a"], xw, dtype)), dtype)
+    logw = -jnp.exp(jnp.clip(p["w0"].astype(jnp.float32) + dec.astype(jnp.float32), -20.0, 4.0))
+    logw = logw.reshape(B, S, H, hd)
+
+    s0 = state.s if state is not None else jnp.zeros((B, H, hd, hd), jnp.float32)
+    if mode == "decode":  # S == 1 exact single step
+        rf, kf, vf = (t.astype(jnp.float32)[:, 0] for t in (r, k, v))  # (B,H,D)
+        uf = p["u"].astype(jnp.float32)
+        o = (
+            jnp.einsum("bhd,bhde->bhe", rf, s0)
+            + jnp.sum(rf * uf[None] * kf, axis=-1, keepdims=True) * vf
+        )
+        s_new = jnp.exp(logw[:, 0])[..., None] * s0 + kf[..., None] * vf[:, :, None, :]
+        o = o[:, None].reshape(B, 1, d)
+    else:
+        o, s_new = _wkv_chunked(r, k, v, logw, p["u"], s0,
+                                chunk=min(RWKV_CHUNK, S))
+        o = o.reshape(B, S, d)
+    o = _group_norm(o.astype(dtype), p["ln_x"], 64e-5, H) * g
+    out = linear(p["wo"], o, dtype)
+    new_state = None
+    if mode != "train":
+        new_state = RWKVState(s=s_new, tm_last=x[:, -1, :],
+                              cm_last=jnp.zeros((B, d), x.dtype))
+    return out, new_state
+
+
+def rwkv_channel_mix(p, cfg, x, dtype, *, mode="train", last=None):
+    B, S, d = x.shape
+    lastv = last if last is not None else jnp.zeros((B, d), dtype)
+    xs = _token_shift(x, lastv.astype(dtype))
+    mu = p["cm_mu"].astype(dtype)
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    k = jnp.square(jax.nn.relu(linear(p["cm_k"], xk, dtype)))
+    kv = linear(p["cm_v"], k, dtype)
+    out = jax.nn.sigmoid(linear(p["cm_r"], xr, dtype)) * kv
+    new_last = x[:, -1, :] if mode != "train" else None
+    return out, new_last

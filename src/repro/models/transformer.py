@@ -1,0 +1,413 @@
+"""The unified decoder LM covering all 10 assigned architectures.
+
+Layer stack = ``cfg.block_pattern`` cycled over ``cfg.num_layers``.  Layers
+are grouped by one pattern period and scanned with ``lax.scan`` over stacked
+parameters (keeps HLO size O(1) in depth); the remainder ``num_layers %
+len(pattern)`` layers are applied unrolled.
+
+Modes:
+  train   — full forward + cross-entropy loss
+  prefill — full forward, returns last-position logits + layer states (cache)
+  decode  — one token with per-layer state (KV cache / recurrent state)
+
+Modality frontends (pixtral patches, musicgen frames) are STUBS per the
+assignment: precomputed embeddings occupy the first F backbone positions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ATTN_LOCAL, RECURRENT, RWKV, ModelConfig
+from repro.models.attention import (
+    AttnState,
+    attention_block,
+    init_attention,
+    init_attn_state,
+)
+from repro.models.layers import (
+    cross_entropy,
+    init_linear,
+    init_mlp,
+    init_rmsnorm,
+    linear,
+    mlp,
+    rms_norm,
+    sinusoidal_positions,
+)
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.recurrent import (
+    RGLRUState,
+    RWKVState,
+    init_rglru,
+    init_rwkv,
+    rglru_block,
+    rwkv_channel_mix,
+    rwkv_time_mix,
+)
+
+AUX_KEYS = ("moe_aux", "moe_z")
+MOE_AUX_COEF = 0.01
+MOE_Z_COEF = 1e-3
+
+
+class Hints:
+    """Sharding hints; the default is a no-op (single-device tests)."""
+
+    mesh = None
+
+    def activation(self, x):  # (B, S, d) residual stream
+        return x
+
+    def logits(self, x):
+        return x
+
+    def heads(self, x):  # (B, S, H, D) attention internals
+        return x
+
+    def kv_heads(self, x):  # (B, S, KV, D)
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(rng, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(rng, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: Dict[str, Any] = {"norm1": init_rmsnorm(cfg.d_model, dt),
+                         "norm2": init_rmsnorm(cfg.d_model, dt)}
+    if kind in (ATTN, ATTN_LOCAL):
+        p["attn"] = init_attention(ks[0], cfg)
+    elif kind == RECURRENT:
+        p["rec"] = init_rglru(ks[0], cfg)
+    elif kind == RWKV:
+        p["tm"] = init_rwkv(ks[0], cfg)
+        return p  # rwkv: channel-mix lives inside 'tm' params (cm_*)
+    if cfg.moe is not None:
+        p["moe"] = init_moe(ks[1], cfg)
+        if cfg.moe.dense_residual:
+            p["ffn"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dt, cfg.use_bias)
+    else:
+        p["ffn"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dt, cfg.use_bias)
+    return p
+
+
+def _init_group(rng, cfg: ModelConfig):
+    pat = cfg.block_pattern
+    ks = jax.random.split(rng, len(pat))
+    return tuple(_init_block(ks[i], cfg, kind) for i, kind in enumerate(pat))
+
+
+def init_params(cfg: ModelConfig, rng) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.param_dtype)
+    k_embed, k_groups, k_rem, k_head = jax.random.split(rng, 4)
+    d, V = cfg.d_model, cfg.vocab_size
+    pat = cfg.block_pattern
+    n_groups = cfg.num_layers // len(pat)
+    n_rem = cfg.num_layers % len(pat)
+
+    embed = {}
+    if cfg.num_codebooks > 1:
+        eks = jax.random.split(k_embed, cfg.num_codebooks)
+        for i in range(cfg.num_codebooks):
+            embed[f"cb{i}"] = (0.02 * jax.random.normal(eks[i], (V, d), jnp.float32)).astype(dt)
+    else:
+        embed["tokens"] = (0.02 * jax.random.normal(k_embed, (V, d), jnp.float32)).astype(dt)
+
+    scan_params = jax.vmap(lambda r: _init_group(r, cfg))(
+        jax.random.split(k_groups, n_groups))
+    rem_kinds = cfg.layer_kinds()[n_groups * len(pat):]
+    rem_ks = jax.random.split(k_rem, max(n_rem, 1))
+    rem_params = tuple(_init_block(rem_ks[i], cfg, kind)
+                       for i, kind in enumerate(rem_kinds))
+
+    params = {
+        "embed": embed,
+        "blocks": {"scan": scan_params, "rem": rem_params},
+        "final_norm": init_rmsnorm(d, dt),
+    }
+    if not cfg.tie_embeddings:
+        if cfg.num_codebooks > 1:
+            hks = jax.random.split(k_head, cfg.num_codebooks)
+            params["head"] = {f"cb{i}": init_linear(hks[i], d, V, dt)
+                              for i in range(cfg.num_codebooks)}
+        else:
+            params["head"] = init_linear(k_head, d, V, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Per-layer state (decode / prefill)
+# ---------------------------------------------------------------------------
+
+def _init_block_state(cfg: ModelConfig, kind: str, batch: int, cache_len: int, dtype):
+    if kind in (ATTN, ATTN_LOCAL):
+        eff = min(cache_len, cfg.window) if (kind == ATTN_LOCAL and cfg.window) else cache_len
+        return init_attn_state(cfg, batch, eff, dtype)
+    if kind == RECURRENT:
+        w = cfg.lru_width or cfg.d_model
+        return RGLRUState(h=jnp.zeros((batch, w), jnp.float32),
+                          conv=jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype))
+    if kind == RWKV:
+        hd = cfg.rwkv_head_dim
+        H = cfg.d_model // hd
+        return RWKVState(s=jnp.zeros((batch, H, hd, hd), jnp.float32),
+                         tm_last=jnp.zeros((batch, cfg.d_model), dtype),
+                         cm_last=jnp.zeros((batch, cfg.d_model), dtype))
+    raise ValueError(kind)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int):
+    """Zero decode state for all layers (scan-stacked + remainder)."""
+    dtype = jnp.dtype(cfg.dtype)
+    pat = cfg.block_pattern
+    n_groups = cfg.num_layers // len(pat)
+    n_rem = cfg.num_layers % len(pat)
+
+    def group_state(_):
+        return tuple(_init_block_state(cfg, kind, batch, cache_len, dtype)
+                     for kind in pat)
+
+    scan_state = jax.vmap(group_state)(jnp.arange(n_groups))
+    rem_kinds = cfg.layer_kinds()[n_groups * len(pat):]
+    rem_state = tuple(_init_block_state(cfg, kind, batch, cache_len, dtype)
+                      for kind in rem_kinds)
+    return {"scan": scan_state, "rem": rem_state, "pos": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+def _zero_aux():
+    return {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+
+
+def _ffn_part(p, cfg, h, dtype, hints: Hints = Hints()):
+    aux = _zero_aux()
+    if cfg.moe is not None:
+        if cfg.moe_impl == "ep" and getattr(hints, "mesh", None) is not None:
+            from repro.models.moe_ep import moe_ffn_ep
+            out, moe_aux = moe_ffn_ep(p["moe"], cfg, h, dtype, hints.mesh)
+        else:
+            out, moe_aux = moe_ffn(p["moe"], cfg, h, dtype)
+        aux.update(moe_aux)
+        if cfg.moe.dense_residual:
+            out = out + mlp(p["ffn"], h, cfg.gated_mlp, dtype)
+        return out, aux
+    return mlp(p["ffn"], h, cfg.gated_mlp, dtype), aux
+
+
+def apply_block(p, cfg: ModelConfig, kind: str, x, positions, *, mode="train",
+                state=None, pos=None, hints: Hints = Hints()):
+    dtype = jnp.dtype(cfg.dtype)
+    eps = cfg.norm_eps
+    h = rms_norm(p["norm1"], x, eps)
+    aux = _zero_aux()
+
+    if kind in (ATTN, ATTN_LOCAL):
+        window = cfg.window if kind == ATTN_LOCAL else 0
+        a_out, new_state = attention_block(
+            p["attn"], cfg, h, positions, dtype, mode=mode, state=state,
+            pos=pos, window=window, hints=hints)
+        if cfg.parallel_block:
+            f_out, aux = _ffn_part(p, cfg, h, dtype, hints)
+            return hints.activation(x + a_out + f_out), new_state, aux
+        x = x + a_out
+        h2 = rms_norm(p["norm2"], x, eps)
+        f_out, aux = _ffn_part(p, cfg, h2, dtype, hints)
+        return hints.activation(x + f_out), new_state, aux
+
+    if kind == RECURRENT:
+        r_out, new_state = rglru_block(p["rec"], cfg, h, dtype, mode=mode, state=state)
+        x = x + r_out
+        h2 = rms_norm(p["norm2"], x, eps)
+        f_out, aux = _ffn_part(p, cfg, h2, dtype, hints)
+        return hints.activation(x + f_out), new_state, aux
+
+    if kind == RWKV:
+        tm_out, tm_state = rwkv_time_mix(p["tm"], cfg, h, dtype, mode=mode, state=state)
+        x = x + tm_out
+        h2 = rms_norm(p["norm2"], x, eps)
+        cm_last = state.cm_last if state is not None else None
+        cm_out, new_cm_last = rwkv_channel_mix(p["tm"], cfg, h2, dtype, mode=mode,
+                                               last=cm_last)
+        new_state = None
+        if mode != "train":
+            new_state = RWKVState(s=tm_state.s, tm_last=tm_state.tm_last,
+                                  cm_last=new_cm_last)
+        return hints.activation(x + cm_out), new_state, aux
+
+    raise ValueError(kind)
+
+
+def _apply_group(group_params, cfg, x, positions, *, mode, group_state=None,
+                 pos=None, hints: Hints = Hints()):
+    pat = cfg.block_pattern
+    new_states = []
+    aux_sum = _zero_aux()
+    for i, kind in enumerate(pat):
+        st = group_state[i] if group_state is not None else None
+        x, ns, aux = apply_block(group_params[i], cfg, kind, x, positions,
+                                 mode=mode, state=st, pos=pos, hints=hints)
+        new_states.append(ns)
+        aux_sum = {k: aux_sum[k] + aux[k] for k in AUX_KEYS}
+    return x, tuple(new_states), aux_sum
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.num_codebooks > 1:
+        x = sum(params["embed"][f"cb{i}"].astype(dtype)[tokens[..., i]]
+                for i in range(cfg.num_codebooks))
+    else:
+        x = params["embed"]["tokens"].astype(dtype)[tokens]
+    return x
+
+
+def unembed(params, cfg: ModelConfig, x, hints: Hints = Hints()):
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.num_codebooks > 1:
+        if cfg.tie_embeddings:
+            return tuple(hints.logits(x @ params["embed"][f"cb{i}"].astype(dtype).T)
+                         for i in range(cfg.num_codebooks))
+        return tuple(hints.logits(linear(params["head"][f"cb{i}"], x, dtype))
+                     for i in range(cfg.num_codebooks))
+    if cfg.tie_embeddings:
+        return hints.logits(x @ params["embed"]["tokens"].astype(dtype).T)
+    return hints.logits(linear(params["head"], x, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, batch, *, mode="train", remat="full",
+            hints: Hints = Hints()):
+    """Full-sequence forward.  batch: tokens (B, S_tok[, ncb]),
+    optional 'frontend' (B, F, d).  Returns (x_final, states|None, aux)."""
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    x = embed_tokens(params, cfg, tokens)
+    if cfg.frontend is not None:
+        fe = batch["frontend"].astype(dtype)
+        x = jnp.concatenate([fe, x], axis=1)
+    B, S, d = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    if cfg.num_heads and not cfg.use_rope:
+        x = x + sinusoidal_positions(positions, d, dtype)[None]
+    x = hints.activation(x)
+
+    pat = cfg.block_pattern
+    n_groups = cfg.num_layers // len(pat)
+
+    def group_fn(x, group_params):
+        return _apply_group(group_params, cfg, x, positions, mode=mode, hints=hints)
+
+    if remat == "full":
+        policy = (jax.checkpoint_policies.save_only_these_names("attn_out")
+                  if cfg.save_attn_out
+                  else jax.checkpoint_policies.nothing_saveable)
+        group_fn = jax.checkpoint(group_fn, policy=policy)
+
+    def scan_body(carry, group_params):
+        x, aux_acc = carry
+        x, states, aux = group_fn(x, group_params)
+        aux_acc = {k: aux_acc[k] + aux[k] for k in AUX_KEYS}
+        return (x, aux_acc), (states if mode == "prefill" else 0)
+
+    (x, aux), scan_states = jax.lax.scan(
+        scan_body, (x, _zero_aux()), params["blocks"]["scan"])
+
+    rem_kinds = cfg.layer_kinds()[n_groups * len(pat):]
+    rem_states = []
+    for i, kind in enumerate(rem_kinds):
+        x, st, aux_i = apply_block(params["blocks"]["rem"][i], cfg, kind, x,
+                                   positions, mode=mode, hints=hints)
+        rem_states.append(st)
+        aux = {k: aux[k] + aux_i[k] for k in AUX_KEYS}
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    states = None
+    if mode == "prefill":
+        states = {"scan": scan_states, "rem": tuple(rem_states),
+                  "pos": jnp.asarray(S, jnp.int32)}
+    return x, states, aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, remat="full", hints: Hints = Hints()):
+    """Training loss.  labels (B, S_tok[, ncb]); optional 'mask' (B, S_tok)."""
+    x, _, aux = forward(params, cfg, batch, mode="train", remat=remat, hints=hints)
+    F = cfg.frontend.num_positions if cfg.frontend is not None else 0
+    x_tok = x[:, F:, :]
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if cfg.num_codebooks > 1:
+        logits = unembed(params, cfg, x_tok, hints)
+        ce = sum(cross_entropy(logits[i], labels[..., i], mask, cfg.ce_impl)
+                 for i in range(cfg.num_codebooks)) / cfg.num_codebooks
+    else:
+        logits = unembed(params, cfg, x_tok, hints)
+        ce = cross_entropy(logits, labels, mask, cfg.ce_impl)
+    total = ce + MOE_AUX_COEF * aux["moe_aux"] + MOE_Z_COEF * aux["moe_z"]
+    metrics = {"ce": ce, **aux}
+    return total, metrics
+
+
+def prefill(params, cfg: ModelConfig, batch, *, hints: Hints = Hints()):
+    """Inference prefill: returns (last-position logits, decode state)."""
+    x, states, _ = forward(params, cfg, batch, mode="prefill", remat="none",
+                           hints=hints)
+    logits = unembed(params, cfg, x[:, -1:, :], hints)
+    return logits, states
+
+
+def decode_step(params, cfg: ModelConfig, state, token, *, hints: Hints = Hints()):
+    """One decode step.  token (B,[ncb]) int32; state from init_decode_state
+    or prefill.  Returns (new_state, logits (B, 1, V))."""
+    pos = state["pos"]
+    tok = token[:, None] if cfg.num_codebooks == 1 else token[:, None, :]
+    x = embed_tokens(params, cfg, tok)
+    B, _, d = x.shape
+    positions = pos[None].astype(jnp.int32)
+    if cfg.num_heads and not cfg.use_rope:
+        x = x + sinusoidal_positions(positions, d, jnp.dtype(cfg.dtype))[None]
+
+    pat = cfg.block_pattern
+
+    def scan_body(x, xs):
+        group_params, group_state = xs
+        x, new_states, _ = _apply_group(group_params, cfg, x, positions,
+                                        mode="decode", group_state=group_state,
+                                        pos=pos, hints=hints)
+        return x, new_states
+
+    # decode_unroll=True statically unrolls the layer loop: each layer's KV
+    # slice becomes an independent buffer XLA can update IN PLACE, instead
+    # of a loop-carried stacked array it may copy every iteration
+    x, new_scan_states = jax.lax.scan(
+        scan_body, x, (params["blocks"]["scan"], state["scan"]),
+        unroll=(cfg.num_layers // len(pat)) if cfg.decode_unroll else 1)
+
+    n_groups = cfg.num_layers // len(pat)
+    rem_kinds = cfg.layer_kinds()[n_groups * len(pat):]
+    new_rem = []
+    for i, kind in enumerate(rem_kinds):
+        x, st, _ = apply_block(params["blocks"]["rem"][i], cfg, kind, x,
+                               positions, mode="decode",
+                               state=state["rem"][i], pos=pos, hints=hints)
+        new_rem.append(st)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params, cfg, x, hints)
+    new_state = {"scan": new_scan_states, "rem": tuple(new_rem), "pos": pos + 1}
+    return new_state, logits

@@ -1,0 +1,2 @@
+"""Optimizers: AdamW, schedules, (pipelined) clipping, Krylov–Newton."""
+from repro.optim import adamw, clipping, schedules  # noqa: F401

@@ -1,0 +1,47 @@
+"""Functional AdamW with optional reduced-precision states.
+
+States can be kept in bf16 for XXL models (e.g. arctic-480b) — see
+EXPERIMENTS.md memory table.  Master params stay in ``param_dtype``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init(params, state_dtype: str = "float32") -> Dict[str, Any]:
+    dt = jnp.dtype(state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+
+def update(grads, opt_state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+           weight_decay=0.1, step=None):
+    """Returns (new_params, new_opt_state).  Bias correction uses ``step``
+    (1-based)."""
+    step = jnp.asarray(step, jnp.float32)
+    c1 = 1.0 - jnp.power(b1, step)
+    c2 = 1.0 - jnp.power(b2, step)
+
+    def moments(g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        return m_new, v_new
+
+    def upd(p, g, m, v):
+        m_new, v_new = moments(g, m, v)
+        delta = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps) \
+            + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    m_, v_ = opt_state["m"], opt_state["v"]
+    new_params = jax.tree.map(upd, params, grads, m_, v_)
+    # (three maps re-trace the moment math; XLA CSEs the duplicates)
+    new_m = jax.tree.map(lambda g, m, v, _m=None: moments(g, m, v)[0].astype(m.dtype),
+                         grads, m_, v_)
+    new_v = jax.tree.map(lambda g, m, v: moments(g, m, v)[1].astype(v.dtype),
+                         grads, m_, v_)
+    return new_params, {"m": new_m, "v": new_v}

@@ -1,0 +1,42 @@
+"""Global-norm gradient clipping — synchronous and PIPELINED variants.
+
+The pipelined variant is the paper's split-phase collective applied to
+training: the global-norm reduction initiated at step k is *consumed at step
+k+1* (its value is carried in the train state), so the reduction no longer
+serializes the optimizer update against the full gradient tree.  This is the
+``delayed_psum`` pattern of repro.distributed.overlap in optimizer form.
+
+Cost of the rearrangement (mirroring the Krylov case): one step of staleness
+in the clip threshold — harmless for the slowly-varying gradient norm, and
+arithmetically identical whenever the norm is below the clip threshold.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Synchronous clipping: the norm gates every update (classical CG-style
+    data dependency)."""
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def clip_by_delayed_norm(grads, prev_norm: jnp.ndarray, max_norm: float):
+    """Pipelined clipping: clip with the PREVIOUS step's norm; return this
+    step's norm for the next step (split-phase collective).
+
+    Returns (clipped_grads, this_norm).  ``prev_norm <= 0`` (first step)
+    disables clipping for that step.
+    """
+    norm = global_norm(grads)  # reduction initiated now, consumed next step
+    safe_prev = jnp.where(prev_norm > 0, prev_norm, max_norm)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(safe_prev, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm

@@ -1,0 +1,16 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_cosine(step, *, base_lr, warmup_steps, total_steps, min_ratio=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * jnp.minimum(1.0, step / jnp.maximum(warmup_steps, 1))
+    t = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, base_lr * cos)
+
+
+def constant(step, *, base_lr, **_):
+    return jnp.full_like(jnp.asarray(step, jnp.float32), base_lr)

@@ -1,0 +1,19 @@
+"""Shared test configuration.
+
+x64 is enabled globally: the Krylov/statistics layers need double precision
+and the model layers pin their dtypes explicitly, so bf16/f32 paths are
+unaffected.  NOTE: XLA_FLAGS device-count forcing is deliberately NOT set
+here — tests see the 1 real CPU device; multi-device behavior is tested in
+subprocesses (tests/test_krylov_distributed.py).
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,73 @@
+"""HLO parsing: collective byte accounting and while-loop trip counts."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import (
+    analyze_collectives,
+    shape_bytes,
+    _split_computations,
+)
+
+FAKE_HLO = """
+HloModule jit_f
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%cond.1 (p: (s32[], f32[128])) -> pred[] {
+  %c = s32[] constant(28)
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body.2 (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %x = f32[128]{0} get-tuple-element(%p), index=1
+  %ar = f32[128]{0} all-reduce(%x), to_apply=%add
+  ROOT %t = (s32[], f32[128]) tuple(%i2, %ar)
+}
+
+ENTRY %main (a: f32[128]) -> f32[128] {
+  %ag = f32[256]{0} all-gather(%a), dimensions={0}
+  %w = (s32[], f32[128]) while(%init), condition=%cond.1, body=%body.2
+  ROOT %out = f32[128]{0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[128]{0}") == 512
+    assert shape_bytes("(bf16[4,8]{1,0}, s32[2])") == 64 + 8
+    assert shape_bytes("pred[]") == 1
+
+
+def test_split_computations():
+    comps = _split_computations(FAKE_HLO)
+    assert any("cond" in c for c in comps)
+    assert "__entry__" in comps
+
+
+def test_trip_count_scaling():
+    out = analyze_collectives(FAKE_HLO)
+    assert out["while_trip_counts"] == {"body.2": 28}
+    ar = out["per_op"]["all-reduce"]
+    assert ar["count"] == 28                      # scaled by the trip count
+    assert ar["bytes"] == 28 * 512
+    assert ar["wire_bytes"] == 2 * 28 * 512       # ring all-reduce = 2x
+    ag = out["per_op"]["all-gather"]
+    assert ag["count"] == 1 and ag["bytes"] == 1024
+
+
+def test_real_compiled_scan_trip_count():
+    """A scanned computation compiled on CPU exposes its trip count."""
+    def f(x):
+        def body(c, _):
+            return c * 1.5 + 1.0, None
+        y, _ = jax.lax.scan(body, x, None, length=13)
+        return y
+
+    hlo = jax.jit(f).lower(jnp.float32(1.0)).compile().as_text()
+    out = analyze_collectives(hlo)
+    if out["while_trip_counts"]:  # XLA may fully unroll tiny loops
+        assert 13 in out["while_trip_counts"].values()

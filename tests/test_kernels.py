@@ -1,0 +1,87 @@
+"""Per-kernel allclose vs the ref.py oracle, swept over shapes/dtypes
+(parametrized + hypothesis-driven shape fuzzing), interpret=True on CPU."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.kernels import ops, ref
+
+DTYPES = [jnp.float32, jnp.float64]
+
+
+def _tol(dt):
+    return dict(rtol=2e-5, atol=2e-5) if dt == jnp.float32 else dict(rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n,offsets", [
+    (1024, (-1, 0, 1)),
+    (4096, (-1, 0, 1)),
+    (777, (-1, 0, 1)),
+    (2048, tuple(range(-5, 6))),
+    (1000, (-10, -3, 0, 3, 10)),
+])
+def test_spmv_dia_matches_ref(rng, n, offsets, dtype):
+    halo = max(abs(o) for o in offsets)
+    bands = jnp.asarray(rng.standard_normal((len(offsets), n)), dtype)
+    x_ext = jnp.asarray(rng.standard_normal(n + 2 * halo), dtype)
+    got = ops.spmv_dia_ext(offsets, bands, x_ext, halo)
+    want = ref.spmv_dia_ref(offsets, bands, x_ext, halo)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("m,n", [(1, 2048), (8, 4096), (31, 5000), (33, 4096)])
+def test_fused_dots_matches_ref(rng, m, n, dtype):
+    V = jnp.asarray(rng.standard_normal((m, n)), dtype)
+    z = jnp.asarray(rng.standard_normal(n), dtype)
+    got = ops.fused_dots(V, z)
+    want = ref.fused_dots_ref(V, z)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5 if dtype == jnp.float32 else 1e-11,
+                               atol=2e-3 if dtype == jnp.float32 else 1e-9)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n", [1024, 4096, 3333])
+def test_pipecg_fused_matches_ref(rng, n, dtype):
+    vs = [jnp.asarray(rng.standard_normal(n), dtype) for _ in range(10)]
+    got = ops.pipecg_fused_step(*vs, 0.37, -0.21)
+    want = ref.pipecg_fused_ref(*vs, 0.37, -0.21)
+    for g, w in zip(got[:8], want[:8]):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(got[8]), np.asarray(want[8]),
+                               rtol=3e-4 if dtype == jnp.float32 else 1e-10,
+                               atol=1e-2 if dtype == jnp.float32 else 1e-8)
+
+
+@given(n=st.integers(8, 600), nb=st.integers(1, 4), seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_spmv_dia_shape_fuzz(n, nb, seed):
+    """Hypothesis sweep: arbitrary sizes/band counts stay allclose."""
+    r = np.random.default_rng(seed)
+    offsets = tuple(sorted(r.choice(np.arange(-4, 5), size=nb, replace=False).tolist()))
+    halo = max(abs(o) for o in offsets)
+    bands = jnp.asarray(r.standard_normal((len(offsets), n)))
+    x_ext = jnp.asarray(r.standard_normal(n + 2 * halo))
+    got = ops.spmv_dia_ext(offsets, bands, x_ext, halo)
+    want = ref.spmv_dia_ref(offsets, bands, x_ext, halo)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-10,
+                               atol=1e-10)
+
+
+def test_kernel_backed_operator_in_solver(rng):
+    """pipecg with the kernel-backed local SpMV reproduces the jnp path."""
+    from repro.core.krylov import tridiagonal_laplacian, pipecg
+    from repro.core.krylov.distributed import dia_matvec_local
+    import functools
+
+    A = tridiagonal_laplacian(256)
+    b = jnp.asarray(rng.standard_normal(256))
+    x_ext = jnp.pad(b, (1, 1))
+    got = ops.spmv_dia_ext(A.offsets, A.bands, x_ext, 1)
+    want = A.matvec(b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12)

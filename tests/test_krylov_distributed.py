@@ -1,0 +1,61 @@
+"""Distributed (shard_map) solvers == local solvers, on 8 forced host
+devices in a subprocess (so the main test process keeps 1 device)."""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp, numpy as np
+    from repro.core.krylov import (tridiagonal_laplacian, cg, pipecg, gmres,
+                                   pgmres, distributed_solve)
+
+    mesh = jax.make_mesh((8,), ("shards",))
+    n = 512
+    A = tridiagonal_laplacian(n)
+    b = jnp.asarray(np.random.default_rng(0).standard_normal(n))
+
+    for name, solver, kw in [("cg", cg, dict(maxiter=200)),
+                             ("pipecg", pipecg, dict(maxiter=200)),
+                             ("gmres", gmres, dict(restart=30)),
+                             ("pgmres", pgmres, dict(restart=30))]:
+        loc = solver(A, b, **kw)
+        dist = distributed_solve(solver, A, b, mesh, **kw)
+        err = float(jnp.max(jnp.abs(loc.x - dist.x)))
+        scale = float(jnp.max(jnp.abs(loc.x))) + 1e-30
+        assert err / scale < 1e-8, (name, err, scale)
+        print(name, "ok", err)
+
+    # kernel-backed SpMV inside shard_map
+    dist_k = distributed_solve(pipecg, A, b, mesh, use_kernel=True, maxiter=50)
+    dist_j = distributed_solve(pipecg, A, b, mesh, use_kernel=False, maxiter=50)
+    assert float(jnp.max(jnp.abs(dist_k.x - dist_j.x))) < 1e-10
+    print("kernel-backed ok")
+
+    # HLO contains the collectives of the model (psum + halo exchange)
+    import functools
+    txt = jax.jit(functools.partial(distributed_solve, pipecg, A, mesh=mesh,
+                                    maxiter=5)).lower(b).compile().as_text()
+    assert "all-reduce" in txt and "collective-permute" in txt
+    print("collectives ok")
+""")
+
+
+@pytest.mark.slow
+def test_distributed_matches_local():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "collectives ok" in out.stdout

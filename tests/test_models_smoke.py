@@ -1,0 +1,125 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch runs a
+reduced-config forward/train step on CPU with finite outputs + right shapes,
+plus decode/prefill consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import cells, get_config, list_archs, smoke_config
+from repro.models import (
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    F = cfg.frontend.num_positions if cfg.frontend is not None else 0
+    n = S - F
+    rng = jax.random.PRNGKey(seed)
+    shape = (B, n, cfg.num_codebooks) if cfg.num_codebooks > 1 else (B, n)
+    tokens = jax.random.randint(rng, shape, 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if F:
+        batch["frontend"] = 0.01 * jax.random.normal(
+            jax.random.fold_in(rng, 7), (B, F, cfg.d_model)).astype(jnp.bfloat16)
+    return batch
+
+
+def test_all_ten_archs_assigned():
+    assert len(ARCHS) == 10
+    assert {get_config(a).family for a in ARCHS} == {
+        "dense", "moe", "hybrid", "ssm", "vlm", "audio"}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    batch = _batch(cfg)
+    (loss, metrics), grads = jax.jit(
+        lambda p, b: jax.value_and_grad(
+            lambda q: loss_fn(q, cfg, b, remat="full"), has_aux=True)(p)
+    )(params, batch)
+    assert jnp.isfinite(loss), (arch, loss)
+    gn = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gn) and float(gn) > 0.0, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_no_nans(arch):
+    cfg = smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    batch = _batch(cfg)
+    x, _, _ = jax.jit(lambda p, b: forward(p, cfg, b, mode="train",
+                                           remat="none"))(params, batch)
+    B = batch["tokens"].shape[0]
+    S = 32
+    assert x.shape == (B, S, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(x.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_prefill(arch):
+    """Greedy parity: token-by-token decode reproduces the prefill logits of
+    the final position (bf16 tolerance; validates cache/state handling)."""
+    cfg = smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    S = 16
+    batch = _batch(cfg, B=2, S=S, seed=3)
+    logits_p, _ = jax.jit(lambda p, b: prefill(p, cfg, b))(params, batch)
+
+    n_tok = batch["tokens"].shape[1]
+    F = cfg.frontend.num_positions if cfg.frontend is not None else 0
+    state = init_decode_state(cfg, 2, S)
+    dfn = jax.jit(lambda p, s, t: decode_step(p, cfg, s, t))
+    # feed frontend positions first (zero tokens stand in; skip for parity
+    # archs without frontend)
+    if F:
+        pytest.skip("frontend archs: decode parity covered via serve driver")
+    logits_d = None
+    for i in range(n_tok):
+        tok = batch["tokens"][:, i]
+        state, logits_d = dfn(params, state, tok)
+
+    lp = logits_p[0] if isinstance(logits_p, tuple) else logits_p
+    ld = logits_d[0] if isinstance(logits_d, tuple) else logits_d
+    np.testing.assert_allclose(
+        np.asarray(lp[:, -1, :], np.float32), np.asarray(ld[:, -1, :], np.float32),
+        rtol=0.15, atol=0.15)
+    # argmax agreement is the serving-level contract
+    agree = np.mean(np.argmax(np.asarray(lp[:, -1, :], np.float32), -1)
+                    == np.argmax(np.asarray(ld[:, -1, :], np.float32), -1))
+    assert agree >= 0.5, (arch, agree)
+
+
+def test_cells_gating():
+    """long_500k runs ONLY for the sub-quadratic archs (DESIGN.md)."""
+    cs = cells()
+    long_archs = {a for a, s in cs if s == "long_500k"}
+    assert long_archs == {"recurrentgemma-2b", "rwkv6-7b"}
+    assert len(cs) == 10 * 3 + 2  # 32 applicable cells
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_magnitude(arch):
+    """Analytic parameter counts land in the right ballpark of the name."""
+    import re
+    cfg = get_config(arch)
+    counts = cfg.param_counts()
+    m = re.search(r"(\d+(?:\.\d+)?)b\b", arch.lower())
+    if not m:
+        pytest.skip("no size in name")
+    expected = float(m.group(1)) * 1e9
+    # olmoe-1b-7b: take the 7 (total); musicgen-medium has no number
+    if arch == "olmoe-1b-7b":
+        expected = 7e9
+    assert 0.4 * expected < counts["total"] < 2.2 * expected, (
+        arch, counts["total"], expected)

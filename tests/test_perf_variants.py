@@ -1,0 +1,137 @@
+"""Correctness of the §Perf hillclimb knobs: the optimized configurations
+must be semantically equivalent to the baselines."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import smoke_config
+from repro.models import decode_step, init_decode_state, init_params, loss_fn
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    rng = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    return {"tokens": tokens, "labels": tokens}
+
+
+def test_onehot_ce_equals_gather_ce():
+    cfg = smoke_config("qwen3-1.7b")
+    cfg2 = dataclasses.replace(cfg, ce_impl="onehot")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b = _batch(cfg)
+    l1, _ = loss_fn(params, cfg, b, remat="none")
+    l2, _ = loss_fn(params, cfg2, b, remat="none")
+    assert float(jnp.abs(l1 - l2)) < 1e-5
+
+
+def test_decode_unroll_equals_scan():
+    cfg = smoke_config("qwen3-1.7b")
+    cfg2 = dataclasses.replace(cfg, decode_unroll=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    st1 = init_decode_state(cfg, 2, 16)
+    st2 = init_decode_state(cfg2, 2, 16)
+    tok = jnp.asarray([3, 7], jnp.int32)
+    for _ in range(3):
+        st1, l1 = decode_step(params, cfg, st1, tok)
+        st2, l2 = decode_step(params, cfg2, st2, tok)
+        tok = jnp.argmax(l1[:, -1], -1).astype(jnp.int32)
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32), rtol=1e-5)
+
+
+def test_scores_dtype_bf16_close():
+    cfg = smoke_config("minitron-8b")
+    cfg2 = dataclasses.replace(cfg, scores_dtype="bfloat16")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b = _batch(cfg)
+    l1, _ = loss_fn(params, cfg, b, remat="none")
+    l2, _ = loss_fn(params, cfg2, b, remat="none")
+    assert float(jnp.abs(l1 - l2)) < 0.05  # bf16 softmax tolerance
+
+
+def test_save_attn_out_equals_baseline():
+    cfg = smoke_config("qwen3-1.7b")
+    cfg2 = dataclasses.replace(cfg, save_attn_out=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b = _batch(cfg)
+
+    g1 = jax.grad(lambda p: loss_fn(p, cfg, b, remat="full")[0])(params)
+    g2 = jax.grad(lambda p: loss_fn(p, cfg2, b, remat="full")[0])(params)
+    for a, c in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(c, np.float32),
+                                   rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.slow
+def test_moe_ep_matches_gather_impl():
+    """EP (shard_map) MoE == GSPMD gather MoE on a 2x2 device mesh with a
+    generous capacity factor (no drops), run in a subprocess."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.registry import smoke_config
+        from repro.configs.base import MoEConfig
+        from repro.distributed.sharding import MeshHints, param_pspecs, to_named
+        from repro.models import init_params, loss_fn
+
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        cfg = smoke_config("olmoe-1b-7b")
+        cfg = dataclasses.replace(cfg, moe=MoEConfig(
+            num_experts=4, top_k=2, d_ff=64, capacity_factor=8.0))
+        cfg_ep = dataclasses.replace(cfg, moe_impl="ep")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        rng = jax.random.PRNGKey(1)
+        b = {"tokens": jax.random.randint(rng, (4, 16), 0, cfg.vocab_size)}
+        b["labels"] = b["tokens"]
+
+        hints = MeshHints(mesh)
+        l1, m1 = jax.jit(lambda p, bb: loss_fn(p, cfg, bb, remat="none",
+                                               hints=hints))(params, b)
+        l2, m2 = jax.jit(lambda p, bb: loss_fn(p, cfg_ep, bb, remat="none",
+                                               hints=hints))(params, b)
+        d = abs(float(l1) - float(l2))
+        assert d < 2e-2, (float(l1), float(l2))
+        print("moe ep ok", float(l1), float(l2))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "moe ep ok" in out.stdout
+
+
+def test_fsdp_param_specs_shard_every_big_tensor():
+    from repro.configs.registry import get_config
+    from repro.distributed import sharding as sh
+
+    cfg = get_config("qwen3-1.7b")
+    tree = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    specs = sh.param_pspecs(tree, strategy="fsdp")
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    from jax.sharding import PartitionSpec as P
+    spec_leaves = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    for (path, leaf), spec in zip(leaves, spec_leaves):
+        if np.prod(leaf.shape) >= 1 << 20:  # every big tensor is sharded
+            assert any(ax is not None for ax in tuple(spec)), (path, spec)
+        # and no sharded dim is indivisible
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            n = np.prod([{"data": 16, "model": 16}[a]
+                         for a in (ax if isinstance(ax, tuple) else (ax,))])
+            assert dim % n == 0, (path, spec, leaf.shape)

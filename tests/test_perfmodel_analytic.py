@@ -1,0 +1,73 @@
+"""E2-E4, E9: every analytic number in Section 3 of the paper."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.perfmodel import (
+    Exponential,
+    LogNormal,
+    Uniform,
+    asymptotic_speedup,
+    expected_max,
+    expected_max_mc,
+    expected_max_quad,
+    harmonic,
+    min_procs_exceeding,
+    uniform_speedup,
+)
+
+
+def test_uniform_speedup_formula():
+    """§3.2: E[max] = (a+Pb)/(P+1); speedup on [0,b] = 2P/(P+1) < 2."""
+    for P in (2, 3, 4, 8, 20, 100):
+        s = asymptotic_speedup(Uniform(0.0, 1.0), P)
+        assert s == pytest.approx(2 * P / (P + 1), rel=1e-12)
+        assert s < 2.0
+    # general [a, b]
+    u = Uniform(0.5, 2.0)
+    assert expected_max(u, 7) == pytest.approx((0.5 + 7 * 2.0) / 8)
+
+
+def test_exponential_speedup_is_harmonic():
+    """§3.3: speedup = H_P; 25/12 at P=4 (> 2)."""
+    assert asymptotic_speedup(Exponential(1.0), 4) == pytest.approx(25 / 12)
+    assert asymptotic_speedup(Exponential(1.0), 4) > 2.0
+    for P in (2, 3, 10, 100):
+        assert asymptotic_speedup(Exponential(2.5), P) == pytest.approx(
+            harmonic(P), rel=1e-12)  # scale-invariant
+
+
+def test_exponential_harmonic_asymptotics():
+    g = 0.5772156649015329
+    assert harmonic(8192) == pytest.approx(math.log(8192) + g, abs=1e-4)
+
+
+def test_lognormal_paper_numbers():
+    """§3.4: E[max] ~= 2.5069 (P=2), 3.6406 (P=4); speedups 1.5205, 2.2081."""
+    ln = LogNormal(0.0, 1.0)
+    assert expected_max_quad(ln, 2) == pytest.approx(2.5069, abs=2e-3)
+    assert expected_max_quad(ln, 4) == pytest.approx(3.6406, abs=2e-3)
+    assert asymptotic_speedup(ln, 2, method="quad") == pytest.approx(1.5205, abs=1e-3)
+    s4 = asymptotic_speedup(ln, 4, method="quad")
+    assert s4 == pytest.approx(2.2081, abs=1e-3)
+    assert s4 > 2.0
+
+
+def test_min_procs_exceeding_two_exponential():
+    """Paper: 'PIPECG could possibly attain speedup greater than 2 when
+    P >= 4' for exponential noise."""
+    assert min_procs_exceeding(Exponential(1.0), 2.0) == 4
+
+
+def test_quadrature_matches_closed_forms():
+    for P in (2, 4, 64, 8192):
+        assert expected_max_quad(Uniform(0.0, 1.0), P) == pytest.approx(
+            P / (P + 1), abs=1e-6)
+        assert expected_max_quad(Exponential(1.0), P) == pytest.approx(
+            harmonic(P), rel=1e-4)
+
+
+def test_monte_carlo_matches_closed():
+    assert expected_max_mc(Exponential(1.0), 4, trials=200_000) == pytest.approx(
+        25 / 12, rel=5e-3)

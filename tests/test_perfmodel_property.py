@@ -1,0 +1,96 @@
+"""Property-based tests (hypothesis) for the makespan model invariants."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.perfmodel import (
+    Exponential,
+    Gamma,
+    LogNormal,
+    Pareto,
+    Shifted,
+    Uniform,
+    expected_max_quad,
+    folk_bound,
+    overlap_speedup_bound,
+    simulate,
+    single_delay_makespans,
+    staggered_delay_trace,
+    trace_makespans,
+)
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+@given(hnp.arrays(np.float64, hnp.array_shapes(min_dims=2, max_dims=2,
+                                               min_side=1, max_side=12),
+                  elements=st.floats(0.0, 1e6)))
+@settings(**SETTINGS)
+def test_sync_makespan_dominates_async(times):
+    """THE paper inequality: sum_k max_p >= max_p sum_k, for ANY schedule.
+
+    Removing synchronizations can never slow the (idealized) execution."""
+    t_sync, t_async = trace_makespans(jnp.asarray(times))
+    assert t_sync >= t_async - 1e-9 * max(t_async, 1.0)
+
+
+@given(st.integers(2, 64), st.floats(0.1, 100.0), st.floats(0.01, 10.0),
+       st.integers(1, 50))
+@settings(**SETTINGS)
+def test_single_delay_speedup_below_two(P, W, T0, K):
+    """Eq. (5): the deterministic single-delay speedup never exceeds 2."""
+    out = single_delay_makespans(W=W, T0=T0, K=K, P=2)
+    assert out["speedup"] <= 2.0 + 1e-12
+    assert abs(out["speedup"] - overlap_speedup_bound(out["alpha"])) < 1e-9
+
+
+@given(st.integers(2, 20), st.integers(2, 8), st.floats(1.0, 50.0),
+       st.floats(0.01, 1.0))
+@settings(**SETTINGS)
+def test_staggered_trace_matches_formula(K, P, W, T0):
+    hypothesis.assume(K >= P)
+    times = staggered_delay_trace(W=W, T0=T0, K=K, P=P)
+    t_sync, t_async = trace_makespans(times)
+    if W >= T0:
+        # every delayed step is the per-step max
+        assert abs(t_sync - (P * W + (K - P) * T0)) < 1e-9
+        assert abs(t_async - (W + (K - 1) * T0)) < 1e-9
+        assert t_sync / t_async <= folk_bound(P) + 1e-12
+
+
+@given(st.sampled_from(["uniform", "exp", "lognormal", "gamma", "pareto"]),
+       st.integers(2, 16))
+@settings(**SETTINGS)
+def test_expected_max_monotone_in_p(fam, P):
+    dist = {"uniform": Uniform(0.0, 1.0), "exp": Exponential(1.3),
+            "lognormal": LogNormal(0.0, 0.7), "gamma": Gamma(2.0, 0.5),
+            "pareto": Pareto(1.0, 2.5)}[fam]
+    a = expected_max_quad(dist, P)
+    b = expected_max_quad(dist, P + 1)
+    assert b >= a - 1e-9
+    assert a >= float(dist.mean) - 1e-6  # E[max] >= E[X]
+
+
+@given(st.integers(2, 8), st.integers(2, 40))
+@settings(max_examples=10, deadline=None)
+def test_simulated_speedup_between_one_and_emax_ratio(P, K):
+    """Finite-K speedup is >= 1 and below the asymptotic E[max]/mu."""
+    dist = Exponential(1.0)
+    ms = simulate(dist, P=P, K=K, trials=200, seed=1)
+    s = ms.speedup_of_means
+    asym = expected_max_quad(dist, P) / dist.mean
+    assert 1.0 - 0.05 <= s <= asym * 1.05
+
+
+@given(st.floats(0.1, 10.0), st.floats(0.0, 5.0))
+@settings(**SETTINGS)
+def test_shifted_mean_and_quantiles(scale, loc):
+    d = Shifted(base=Exponential(1.0 / scale), loc=loc)
+    assert abs(float(d.mean) - (loc + scale)) < 1e-9
+    u = np.linspace(0.01, 0.99, 11)
+    q = np.asarray(d.quantile(jnp.asarray(u)))
+    assert (np.diff(q) >= 0).all()
+    np.testing.assert_allclose(np.asarray(d.cdf(jnp.asarray(q))), u, atol=1e-9)

@@ -1,0 +1,81 @@
+"""Sharding-rule structural checks for every assigned arch (no devices
+needed: validates divisibility and spec shape against the production mesh
+axis sizes)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import get_config, list_archs
+from repro.distributed import sharding as sh
+from repro.models import init_params
+
+MESH_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _abstract_params(cfg):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_specs_divisible(arch):
+    """Every sharded dimension of every parameter divides the mesh axis —
+    so GSPMD never pads weights (activations may still shard unevenly)."""
+    cfg = get_config(arch)
+    tree = _abstract_params(cfg)
+    specs = sh.param_pspecs(tree)
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    spec_leaves = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(spec_leaves)
+    for (path, leaf), spec in zip(leaves, spec_leaves):
+        assert len(tuple(spec)) == len(leaf.shape), (path, spec, leaf.shape)
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = 1
+            for a in axes:
+                assert a in MESH_SIZES, (path, spec)
+                total *= MESH_SIZES[a]
+            assert dim % total == 0, (sh._path_str(path), spec, leaf.shape)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_flattened_head_dims_divisible(arch):
+    """The q/kv projections shard on H*D, which must divide model=16 even
+    when H or KV alone does not (arctic 56H, recurrentgemma 10H...)."""
+    cfg = get_config(arch)
+    if cfg.num_heads == 0:
+        pytest.skip("attention-free")
+    assert (cfg.num_heads * cfg.head_dim) % 16 == 0
+    assert (cfg.num_kv_heads * cfg.head_dim) % 16 == 0
+    assert cfg.d_ff % 16 == 0 and cfg.vocab_size % 16 == 0
+    assert cfg.d_model % 32 == 0  # FSDP over (pod, data) in ZeRO mode
+
+
+def test_zero_over_pod_rewrites_data_dim():
+    spec = sh.param_pspec("blocks/rem/0/ffn/up/w", 2, zero_over_pod=True)
+    assert tuple(spec) == (("pod", "data"), "model")
+    spec2 = sh.param_pspec("blocks/scan/ffn/up/w", 3, zero_over_pod=True)
+    assert tuple(spec2) == (None, ("pod", "data"), "model")
+
+
+def test_scan_prefix_applied():
+    spec = sh.param_pspec("blocks/scan/0/attn/wq/w", 3)
+    assert tuple(spec) == (None, "data", "model")
+    spec_rem = sh.param_pspec("blocks/rem/0/attn/wq/w", 2)
+    assert tuple(spec_rem) == ("data", "model")
+
+
+def test_fit_batch_axes():
+    mesh_axes = {"pod": 2, "data": 16}
+
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    m = FakeMesh()
+    assert sh.fit_batch_axes(m, 256) == ("pod", "data")
+    assert sh.fit_batch_axes(m, 1) == ()
+    assert sh.fit_batch_axes(m, 2) == ("pod",)
+    assert sh.fit_batch_spec(m, 1) is None

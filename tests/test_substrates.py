@@ -1,0 +1,249 @@
+"""Substrate tests: optimizer, clipping, data, checkpoint, compression,
+overlap combinator, fault analysis."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core.perfmodel import Exponential
+from repro.data import DataConfig, SyntheticTokens
+from repro.distributed.compression import compressed_grads, quantize_int8, dequantize_int8
+from repro.distributed.fault import analyze_step_times, pipelining_benefit
+from repro.distributed.overlap import DelayedValue, delayed_init, delayed_update
+from repro.optim import adamw, clipping, schedules
+from repro.optim.krylov_newton import krylov_newton_step
+
+
+# --- adamw -------------------------------------------------------------------
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adamw.init(params)
+    target = jnp.asarray([1.0, 2.0])
+    for step in range(1, 400):
+        g = {"w": 2 * (params["w"] - target)}
+        params, opt = adamw.update(g, opt, params, lr=0.05, weight_decay=0.0,
+                                   step=step)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_adamw_reference_single_step():
+    """One step against the textbook update."""
+    p = {"w": jnp.asarray([1.0])}
+    g = {"w": jnp.asarray([0.5])}
+    opt = adamw.init(p)
+    new_p, new_opt = adamw.update(g, opt, p, lr=0.1, b1=0.9, b2=0.95,
+                                  eps=1e-8, weight_decay=0.0, step=1)
+    m = 0.1 * 0.5
+    v = 0.05 * 0.25
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.95)
+    want = 1.0 - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    assert float(new_p["w"][0]) == pytest.approx(want, rel=1e-6)
+    assert float(new_opt["m"]["w"][0]) == pytest.approx(m, rel=1e-6)
+
+
+def test_adamw_bf16_states():
+    p = {"w": jnp.ones((4,), jnp.float32)}
+    opt = adamw.init(p, "bfloat16")
+    assert opt["m"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.full((4,), 0.1, jnp.float32)}
+    new_p, new_opt = adamw.update(g, opt, p, lr=0.01, step=1)
+    assert new_opt["v"]["w"].dtype == jnp.bfloat16
+    assert bool(jnp.all(jnp.isfinite(new_p["w"])))
+
+
+# --- clipping (the paper's split-phase collective in the optimizer) -----------
+
+def test_sync_clip_scales_to_max_norm():
+    g = {"a": jnp.asarray([3.0, 4.0])}  # norm 5
+    clipped, norm = clipping.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    assert float(clipping.global_norm(clipped)) == pytest.approx(1.0)
+
+
+def test_delayed_clip_uses_previous_norm():
+    g = {"a": jnp.asarray([3.0, 4.0])}
+    # prev norm 10 -> scale 0.1; returned norm is CURRENT (5)
+    clipped, norm = clipping.clip_by_delayed_norm(g, jnp.asarray(10.0), 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    assert float(clipping.global_norm(clipped)) == pytest.approx(0.5)
+    # first step (prev <= 0): no clipping beyond max_norm/max_norm
+    clipped0, _ = clipping.clip_by_delayed_norm(g, jnp.asarray(0.0), 1.0)
+    assert float(clipping.global_norm(clipped0)) == pytest.approx(5.0)
+
+
+def test_delayed_equals_sync_below_threshold():
+    """When norms stay under the clip, pipelined == synchronous exactly —
+    the paper's arithmetic-equivalence property."""
+    g = {"a": jnp.asarray([0.3, 0.4])}
+    c1, n1 = clipping.clip_by_global_norm(g, 1.0)
+    c2, n2 = clipping.clip_by_delayed_norm(g, jnp.asarray(0.9), 1.0)
+    np.testing.assert_allclose(np.asarray(c1["a"]), np.asarray(c2["a"]))
+    assert float(n1) == float(n2)
+
+
+# --- schedules ---------------------------------------------------------------
+
+def test_schedule_warmup_and_decay():
+    lr0 = schedules.linear_warmup_cosine(0, base_lr=1.0, warmup_steps=10,
+                                         total_steps=100)
+    lr10 = schedules.linear_warmup_cosine(10, base_lr=1.0, warmup_steps=10,
+                                          total_steps=100)
+    lr100 = schedules.linear_warmup_cosine(100, base_lr=1.0, warmup_steps=10,
+                                           total_steps=100)
+    assert float(lr0) == 0.0
+    assert float(lr10) == pytest.approx(1.0)
+    assert float(lr100) == pytest.approx(0.1, abs=1e-6)
+
+
+# --- data ----------------------------------------------------------------------
+
+def test_data_deterministic_and_resumable():
+    cfg = DataConfig(vocab_size=128, seq_len=16, global_batch=4, seed=7)
+    d1 = SyntheticTokens(cfg)
+    d2 = SyntheticTokens(cfg)
+    b5a = d1.batch(5)
+    b5b = d2.batch(5)
+    np.testing.assert_array_equal(np.asarray(b5a["tokens"]),
+                                  np.asarray(b5b["tokens"]))
+    it = d2.iter_from(5)
+    np.testing.assert_array_equal(np.asarray(next(it)["tokens"]),
+                                  np.asarray(b5a["tokens"]))
+    assert b5a["tokens"].shape == (4, 16)
+    assert int(b5a["tokens"].max()) < 128
+    # labels are next-token shifted
+    np.testing.assert_array_equal(np.asarray(b5a["labels"][:, :-1]),
+                                  np.asarray(b5a["tokens"][:, 1:]))
+
+
+def test_data_learnable_structure():
+    """The Markov component makes labels predictable beyond unigram."""
+    cfg = DataConfig(vocab_size=64, seq_len=512, global_batch=2, seed=1)
+    d = SyntheticTokens(cfg)
+    b = d.batch(0)
+    t = np.asarray(b["tokens"]).reshape(-1)
+    # conditional entropy < marginal entropy
+    joint = {}
+    for a, c in zip(t[:-1], t[1:]):
+        joint[(a, c)] = joint.get((a, c), 0) + 1
+    assert len(joint) < 64 * 64 * 0.5
+
+
+# --- checkpoint ------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+             "step": jnp.asarray(5, jnp.int32),
+             "nested": ({"m": jnp.ones((2,), jnp.bfloat16)},)}
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_write=True)
+    mgr.save(5, state, {"loss": 1.23})
+    mgr.wait()
+    assert mgr.latest_step() == 5
+    restored, manifest = mgr.restore(jax.tree.map(jnp.zeros_like, state))
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+    assert restored["nested"][0]["m"].dtype == jnp.bfloat16
+    assert manifest["loss"] == 1.23
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"x": jnp.asarray(float(s))})
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.glob("step_*"))
+    assert steps == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_restart_resumes_training(tmp_path):
+    from repro.configs.base import TrainConfig
+    from repro.configs.registry import smoke_config
+    from repro.launch.train import train
+
+    cfg = smoke_config("qwen3-1.7b")
+    t1 = TrainConfig(model=cfg.name, steps=6, checkpoint_dir=str(tmp_path),
+                     checkpoint_every=3)
+    out1 = train(cfg, t1, seq_len=32, batch=2, log_every=0)
+    t2 = TrainConfig(model=cfg.name, steps=10, checkpoint_dir=str(tmp_path))
+    out2 = train(cfg, t2, seq_len=32, batch=2, log_every=0)
+    assert out2["steps"] == 4  # resumed from step 6
+
+
+# --- compression ----------------------------------------------------------------
+
+def test_int8_roundtrip_error_bounded(rng):
+    g = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+    q, s = quantize_int8(g)
+    r = dequantize_int8(q, s)
+    assert q.dtype == jnp.int8
+    assert float(jnp.max(jnp.abs(r - g))) <= float(s) * 0.51
+
+
+def test_error_feedback_preserves_signal(rng):
+    """Sum of compressed grads tracks sum of true grads (EF property)."""
+    true_sum = jnp.zeros(64)
+    comp_sum = jnp.zeros(64)
+    ef = None
+    for i in range(50):
+        g = {"w": jnp.asarray(np.random.default_rng(i).standard_normal(64),
+                              jnp.float32)}
+        eff, ef = compressed_grads(g, ef)
+        true_sum = true_sum + g["w"]
+        comp_sum = comp_sum + eff["w"]
+    resid = float(jnp.linalg.norm(true_sum - comp_sum))
+    assert resid < float(jnp.linalg.norm(true_sum)) * 0.05 + 1.0
+
+
+# --- overlap combinator ----------------------------------------------------------
+
+def test_delayed_value_semantics():
+    d = delayed_init(jnp.asarray(0.0))
+    assert not bool(d.valid)
+    v, valid, d2 = delayed_update(d, jnp.asarray(7.0))
+    assert float(v) == 0.0 and not bool(valid)
+    v2, valid2, _ = delayed_update(d2, jnp.asarray(9.0))
+    assert float(v2) == 7.0 and bool(valid2)
+
+
+# --- fault / straggler ------------------------------------------------------------
+
+def test_straggler_detection(rng):
+    times = rng.exponential(0.1, size=(100, 16)) + 1.0
+    times[:, 3] += 3.0  # persistent straggler
+    rep = analyze_step_times(times, restart_cost_steps=10)
+    assert rep.persistent_outlier == 3
+    assert rep.recommend_restart
+    assert rep.sync_overhead_frac > 0.5
+
+
+def test_pipelining_benefit_interchange(rng):
+    times = rng.exponential(1.0, size=(50, 8))
+    out = pipelining_benefit(times)
+    assert out["t_sync"] >= out["t_pipe"]
+    assert out["speedup"] >= 1.0
+
+
+# --- krylov-newton -----------------------------------------------------------------
+
+def test_krylov_newton_quadratic_one_step():
+    """On a quadratic, one damped-Newton step with enough CG iters jumps to
+    (near) the optimum; PIPECG and CG agree."""
+    A = jnp.asarray([[3.0, 0.5], [0.5, 1.0]])
+    b = jnp.asarray([1.0, -2.0])
+
+    def loss(p):
+        w = p["w"]
+        return 0.5 * w @ A @ w - b @ w
+
+    p0 = {"w": jnp.zeros(2)}
+    p_star = jnp.linalg.solve(A, b)
+    for pipelined in (False, True):
+        p1, m = krylov_newton_step(loss, p0, cg_iters=10, damping=1e-9,
+                                   pipelined=pipelined)
+        np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p_star),
+                                   rtol=1e-5, atol=1e-6)

@@ -1,0 +1,50 @@
+"""E5/E6: the calibrated trace generator reproduces Table 1 and the paper's
+test verdicts (reject uniform for the CG family; exponential consistent)."""
+import numpy as np
+import pytest
+
+from repro.core.noise import TABLE1, calibrated_model, generate_runs
+from repro.core.stats import fit_report
+
+
+@pytest.mark.parametrize("alg", list(TABLE1))
+def test_calibrated_mean_min(alg):
+    m = calibrated_model(alg)
+    row = TABLE1[alg]
+    n = int(row["n"])
+    # moment conditions used in calibration
+    assert m.base + m.scale == pytest.approx(row["mean"], rel=1e-9)
+    assert m.base + m.scale / n == pytest.approx(row["min"], rel=1e-9)
+
+
+@pytest.mark.parametrize("alg", list(TABLE1))
+def test_generated_stats_near_table1(alg):
+    """Across seeds, mean/median are near Table 1 (small-n noise allowed)."""
+    rows = [fit_report(generate_runs(alg, seed=s), name=alg).summary
+            for s in range(8)]
+    mean = np.mean([r["mean"] for r in rows])
+    med = np.mean([r["median"] for r in rows])
+    assert mean == pytest.approx(TABLE1[alg]["mean"], rel=0.15)
+    assert med == pytest.approx(TABLE1[alg]["median"], rel=0.2)
+
+
+def test_verdicts_match_paper_conclusions():
+    """Aggregate over seeds: uniform rejected for the n=20 CG family;
+    shifted-exponential accepted (cannot be rejected) for all."""
+    rej_uniform_cg = 0
+    rej_exp_total = 0
+    n_seeds = 10
+    for s in range(n_seeds):
+        for alg in ("CG", "PIPECG"):
+            rep = fit_report(generate_runs(alg, seed=s), name=alg)
+            rej_uniform_cg += rep.uniform.reject
+            rej_exp_total += rep.exponential.reject
+    assert rej_uniform_cg / (2 * n_seeds) > 0.5   # uniform mostly rejected
+    assert rej_exp_total / (2 * n_seeds) < 0.3    # exponential rarely rejected
+
+
+def test_pipelined_speedup_in_table1():
+    """Table 1 itself shows the speedup: GMRES/PGMRES ~ 1.60x."""
+    assert TABLE1["GMRES"]["mean"] / TABLE1["PGMRES"]["mean"] == pytest.approx(
+        1.60, abs=0.05)
+    assert TABLE1["CG"]["mean"] / TABLE1["PIPECG"]["mean"] > 1.2

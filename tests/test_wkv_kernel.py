@@ -1,0 +1,64 @@
+"""WKV Pallas kernel vs naive recurrence vs the model's chunked algebra —
+three independent implementations of the RWKV-6 recurrence must agree."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.wkv import wkv_recurrent
+
+
+def _inputs(rng, BH=3, T=96, D=16):
+    r = jnp.asarray(rng.standard_normal((BH, T, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((BH, T, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((BH, T, D)), jnp.float32)
+    logw = -jnp.exp(jnp.asarray(rng.standard_normal((BH, T, D)) - 2.0,
+                                jnp.float32))  # <= 0
+    u = jnp.asarray(0.3 * rng.standard_normal((BH, D)), jnp.float32)
+    return r, k, v, logw, u
+
+
+@pytest.mark.parametrize("BH,T,D", [(2, 64, 16), (3, 96, 32), (1, 128, 64)])
+def test_kernel_matches_naive_recurrence(rng, BH, T, D):
+    r, k, v, logw, u = _inputs(rng, BH, T, D)
+    got = wkv_recurrent(r, k, v, logw, u, interpret=True)
+    want = ref.wkv_recurrent_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_kernel_matches_model_chunked_algebra(rng):
+    """The model's chunked WKV (_wkv_chunked) and the exact kernel agree —
+    validating the intra/inter-chunk decay algebra end to end."""
+    from repro.models.recurrent import _wkv_chunked
+
+    B, T, H, D = 2, 128, 2, 16
+    r = jnp.asarray(rng.standard_normal((B, T, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, T, H, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, H, D)), jnp.float32)
+    logw = -jnp.exp(jnp.asarray(rng.standard_normal((B, T, H, D)) - 2.0,
+                                jnp.float32))
+    u = jnp.asarray(0.3 * rng.standard_normal((H, D)), jnp.float32)
+
+    o_chunk, s_last = _wkv_chunked(r, k, v, logw, u,
+                                   jnp.zeros((B, H, D, D)), chunk=32)
+
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, T, D)
+    u_bh = jnp.tile(u, (B, 1))
+    o_kern = wkv_recurrent(fold(r), fold(k), fold(v), fold(logw), u_bh,
+                           interpret=True)
+    o_kern = o_kern.reshape(B, H, T, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(o_kern), np.asarray(o_chunk),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_decay_bounds_keep_state_finite(rng):
+    """Strong decay (w ~ 0) and weak decay (w ~ 1) both stay finite over a
+    long sequence (numerical-safety property of the log-space formulation)."""
+    BH, T, D = 1, 256, 8
+    r, k, v, _, u = _inputs(rng, BH, T, D)
+    for scale in (-8.0, -1e-4):
+        logw = jnp.full((BH, T, D), scale, jnp.float32)
+        o = wkv_recurrent(r, k, v, logw, u, interpret=True)
+        assert bool(jnp.all(jnp.isfinite(o)))
