@@ -2,9 +2,34 @@
 
 interpret-mode wall time is meaningless for TPU perf, so the 'derived'
 column reports the MODELED v5e time from the kernel's HBM byte count —
-the quantity the fusion actually improves (see kernels/pipecg_fused.py)."""
+the quantity the fusion actually improves (see kernels/pipecg_fused.py and
+kernels/pipecg_spmv_fused.py).
+
+Traffic accounting for one PIPECG iteration (words, n = vector length,
+nb = number of bands; Jacobi-preconditioned DIA operator):
+
+  naive (engine="naive", separate XLA ops):
+      8 AXPYs x 3 + 3 dots x 2              = 30 n   (update + dots)
+    + M-apply (2 reads + 1 write)           =  3 n
+    + SpMV (nb bands + x read + y write)    = (nb+2) n
+                                     total  = (35+nb) n   -> 38 n tridiag
+  pipecg_fused (update-kernel engine path):
+      10 reads + 8 writes                   = 18 n
+    + M-apply + SpMV as above               = (nb+5) n    -> 26 n tridiag
+  pipecg_spmv_fused (single sweep, k RHS batched):
+      x,r reads + x,r,u,p writes            =  6 n  per RHS
+    + u,p resident reads                    =  2 n  per RHS
+    + bands + diag^-1 resident              = (nb+1) n / k
+                                     total  = (8 + (nb+1)/k) n -> 12 n
+                                              tridiag at k=1, 8.5 n at k=8
+
+Emits BENCH_kernels.json next to the repo root so the perf trajectory is
+tracked PR over PR.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -16,9 +41,29 @@ from repro.kernels import ops, ref
 
 HW = Hardware()
 
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_kernels.json")
+
+
+def _words_naive_iter(n, nb):
+    return (35 + nb) * n
+
+
+def _words_update_kernel_iter(n, nb):
+    return (23 + nb) * n
+
+
+def _words_single_sweep_iter(n, nb, k=1):
+    return (8 + (nb + 1) / k) * n
+
+
+def _modeled_us(words, dtype_bytes=4):
+    return words * dtype_bytes / HW.hbm_bw * 1e6
+
 
 def run():
     rows = []
+    record = {"hw": {"hbm_bw_Bps": HW.hbm_bw}, "kernels": {}}
     rng = np.random.default_rng(0)
     n = 1 << 16
 
@@ -31,6 +76,9 @@ def run():
     bytes_moved = (3 * n + n + n) * 4  # bands + x + y
     rows.append(("kernel/spmv_dia/n65536", bytes_moved / HW.hbm_bw * 1e6,
                  f"err={err:.1e} modeled_us_v5e={bytes_moved/HW.hbm_bw*1e6:.2f}"))
+    record["kernels"]["spmv_dia"] = {"n": n, "err": err,
+                                     "words_per_row": 5.0,
+                                     "modeled_us_v5e": bytes_moved / HW.hbm_bw * 1e6}
 
     # fused_dots (m=32)
     V = jnp.asarray(rng.standard_normal((32, n)), jnp.float32)
@@ -40,8 +88,10 @@ def run():
     mgs_bytes = 32 * (n + n) * 4  # re-reading z per row
     rows.append(("kernel/fused_dots/m32", fused_bytes / HW.hbm_bw * 1e6,
                  f"err={err:.1e} vs_mgs_sweeps={mgs_bytes/fused_bytes:.2f}x"))
+    record["kernels"]["fused_dots"] = {"n": n, "m": 32, "err": err,
+                                       "traffic_vs_mgs": mgs_bytes / fused_bytes}
 
-    # pipecg_fused
+    # pipecg_fused (update-only fusion)
     vs = [jnp.asarray(rng.standard_normal(n), jnp.float32) for _ in range(10)]
     got = ops.pipecg_fused_step(*vs, 0.3, 0.1)
     want = ref.pipecg_fused_ref(*vs, 0.3, 0.1)
@@ -51,6 +101,58 @@ def run():
     naive_bytes = (8 * 3 + 3 * 2) * n * 4  # 8 AXPYs + 3 dots, unfused
     rows.append(("kernel/pipecg_fused", fused_bytes / HW.hbm_bw * 1e6,
                  f"err={err:.1e} traffic_reduction={naive_bytes/fused_bytes:.2f}x"))
+    record["kernels"]["pipecg_fused"] = {"n": n, "err": err,
+                                         "traffic_vs_naive": naive_bytes / fused_bytes}
+
+    # pipecg_spmv_fused (single sweep, whole preconditioned iteration)
+    nb = 3
+    bands_np = rng.standard_normal((nb, n))
+    bands_np[0, 0] = 0.0
+    bands_np[2, -1] = 0.0
+    bands_f = jnp.asarray(bands_np, jnp.float32)
+    inv_d = jnp.asarray(1.0 / (1.0 + np.abs(rng.standard_normal(n))), jnp.float32)
+    for k_rhs in (1, 8):
+        xs = [jnp.asarray(rng.standard_normal((k_rhs, n)), jnp.float32)
+              for _ in range(4)]
+        al = jnp.asarray(rng.standard_normal(k_rhs), jnp.float32)
+        be = jnp.asarray(rng.standard_normal(k_rhs), jnp.float32)
+        got = ops.pipecg_spmv_fused_step(offsets, bands_f, inv_d, *xs, al, be)
+        want = ref.pipecg_spmv_fused_ref(offsets, bands_f, inv_d, *xs, al, be)
+        err = max(float(jnp.max(jnp.abs(a.astype(jnp.float64)
+                                        - b.astype(jnp.float64))))
+                  for a, b in zip(got, want))
+        w_naive = _words_naive_iter(n, nb)
+        w_fused = _words_single_sweep_iter(n, nb, k_rhs)
+        us = _modeled_us(w_fused)
+        rows.append((f"kernel/pipecg_spmv_fused/k{k_rhs}", us,
+                     f"err={err:.1e} words_per_iter={w_fused/n:.1f}n "
+                     f"naive={w_naive/n:.0f}n "
+                     f"modeled_speedup={w_naive/w_fused:.2f}x"))
+        record["kernels"][f"pipecg_spmv_fused_k{k_rhs}"] = {
+            "n": n, "k_rhs": k_rhs, "err": err,
+            "words_per_iter_over_n": w_fused / n,
+            "naive_words_over_n": w_naive / n,
+            "update_kernel_words_over_n": _words_update_kernel_iter(n, nb) / n,
+            "modeled_speedup_vs_naive": w_naive / w_fused,
+            "modeled_us_v5e": us,
+        }
+
+    # block-size autotuner: choice + cache behavior
+    from repro.kernels import autotune
+    blk = autotune.best_block("pipecg_spmv", n, jnp.float32,
+                              words_per_row=6.0, resident_words=6.0 * n,
+                              min_block=2)
+    t0 = time.perf_counter()
+    autotune.best_block("pipecg_spmv", n, jnp.float32,
+                        words_per_row=6.0, resident_words=6.0 * n, min_block=2)
+    cached_us = (time.perf_counter() - t0) * 1e6
+    rows.append(("kernel/autotune/pipecg_spmv", cached_us,
+                 f"block={blk} backend={jax.default_backend()}"))
+    record["autotune"] = {"block": blk, "backend": jax.default_backend()}
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+    rows.append(("kernel/json", float("nan"), f"wrote {os.path.basename(JSON_PATH)}"))
     return rows
 
 

@@ -36,6 +36,60 @@ def _time(fn, *args, reps=3, **kw):
     return (time.perf_counter() - t0) / reps, out
 
 
+def _engine_rows(rows):
+    """Iteration-engine comparison: naive vs fused PIPECG on one chip.
+
+    CPU wall time of the interpret-mode kernel is NOT TPU perf; the
+    meaningful derived quantity is the per-iteration HBM word count each
+    engine moves (see bench_kernels.py for the accounting) and the modeled
+    v5e time it implies.  Residual equality is asserted as a correctness
+    gate.
+    """
+    from benchmarks.bench_kernels import (_modeled_us, _words_naive_iter,
+                                          _words_single_sweep_iter)
+    from repro.core.krylov.cg import pipecg_multi
+
+    n, iters, nb = 65536, 30, 3
+    A = tridiagonal_laplacian(n, dtype=jnp.float64)
+    b = jnp.ones((n,), jnp.float64)
+    words = {"naive": _words_naive_iter(n, nb),
+             "fused": _words_single_sweep_iter(n, nb)}
+    res = {}
+    for name in ("naive", "fused"):
+        sec, out = _time(
+            jax.jit(lambda bb, e=name: pipecg(A, bb, maxiter=iters, engine=e)),
+            b)
+        res[name] = out
+        w = words[name]
+        # 4 B/word: benches run fp32 (no x64 here), matching bench_kernels'
+        # model so BENCH_kernels.json and these rows stay comparable
+        modeled_us = _modeled_us(w)
+        rows.append((f"solver/pipecg_engine_{name}/n{n}", sec / iters * 1e6,
+                     f"res={float(out.res_norm):.3e} words_per_iter={w/n:.0f}n "
+                     f"modeled_us_v5e_per_iter={modeled_us:.2f}"))
+    # benches run fp32 (no x64 here) and ex23 at this n has cond ~ 4e8, so
+    # the recurrence vs derived-vector formulations legitimately drift at
+    # the 1e-4 level; the tight fp64 equivalence gate lives in
+    # tests/test_engine_equivalence.py.
+    scale = float(jnp.max(jnp.abs(res["naive"].x))) + 1e-30
+    drift = float(jnp.max(jnp.abs(res["naive"].x - res["fused"].x))) / scale
+    assert drift < 1e-2, drift
+    rows.append((f"solver/pipecg_engine_drift/n{n}", float("nan"),
+                 f"rel_x_drift_fp32={drift:.1e}"))
+
+    # batched multi-RHS: 8 systems share the operator reads
+    k = 8
+    B = jnp.ones((k, n), jnp.float64) * (1.0 + jnp.arange(k)[:, None])
+    sec, out = _time(
+        jax.jit(lambda bb: pipecg_multi(A, bb, maxiter=iters, engine="fused")),
+        B)
+    w = _words_single_sweep_iter(n, nb, k)  # per RHS
+    rows.append((f"solver/pipecg_multi_fused/k{k}/n{n}",
+                 sec / (iters * k) * 1e6,
+                 f"res_max={float(jnp.max(out.res_norm)):.3e} "
+                 f"words_per_iter_per_rhs={w/n:.1f}n"))
+
+
 def run():
     rows = []
     # reduced-N real runs (full N=2,097,152 also feasible; reduced keeps the
@@ -53,6 +107,8 @@ def run():
             sec, out = _time(jax.jit(lambda bb: solver(b=bb, A=A, restart=30)), b)
             rows.append((f"solver/{name}/n{n}", sec / 30 * 1e6,
                          f"res={float(out.res_norm):.3e} restart=30"))
+
+    _engine_rows(rows)
 
     # phase model predictions at pod scale (ex23 sizes, exponential noise)
     for p in (256, 8192):

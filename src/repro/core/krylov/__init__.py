@@ -1,8 +1,16 @@
 """The paper's solvers: classical + pipelined Krylov methods."""
 from repro.core.krylov.base import SolveResult, local_dot, make_psum_dot  # noqa: F401
 from repro.core.krylov.bicgstab import bicgstab  # noqa: F401
-from repro.core.krylov.cg import cg, cr, pipecg, pipecr  # noqa: F401
+from repro.core.krylov.cg import cg, cr, pipecg, pipecg_multi, pipecr  # noqa: F401
 from repro.core.krylov.distributed import distributed_solve  # noqa: F401
+from repro.core.krylov.engine import (  # noqa: F401
+    ENGINES,
+    Engine,
+    FusedEngine,
+    NaiveEngine,
+    get_engine,
+    register_engine,
+)
 from repro.core.krylov.gmres import gmres, gmres_restarted  # noqa: F401
 from repro.core.krylov.operators import (  # noqa: F401
     DiaMatrix,

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.krylov.base import SolveResult, as_matvec, local_dot
+from repro.core.krylov.engine import get_engine
 
 
 def _ip_dots(ip: str, r, u, w, dot):
@@ -37,13 +38,28 @@ def _ip_dots(ip: str, r, u, w, dot):
 # ---------------------------------------------------------------------------
 
 def cg(A, b, x0=None, *, maxiter=100, tol=0.0, M=None, dot=local_dot,
-       ip: str = "id") -> SolveResult:
+       ip: str = "id", engine=None) -> SolveResult:
     """Preconditioned CG (ip='id') or CR (ip='A').
 
     Fixed-trip-count ``lax.scan`` over iterations (the paper forces 5000
     iterates; masked updates freeze the state once ``tol`` is reached).
+
+    ``engine`` ("naive" / "fused" / Engine / None) selects the iteration
+    engine for the SpMV and preconditioner applications; None keeps the
+    historical inline path (required for the shard_map distributed mode,
+    which passes a psum ``dot`` and a matvec closure).
     """
-    mv = as_matvec(A)
+    eng = get_engine(engine)
+    if eng is not None:
+        if dot is not local_dot:
+            raise ValueError(
+                "engine= computes local reductions and cannot honor a custom "
+                "dot (e.g. the distributed psum dot); use engine=None there")
+        from repro.core.krylov.engine import _resolve_M
+        mv = lambda v: eng.spmv(A, v)
+        M = _resolve_M(A, M)
+    else:
+        mv = as_matvec(A)
     M = M if M is not None else (lambda z: z)
     x = jnp.zeros_like(b) if x0 is None else x0
 
@@ -93,14 +109,27 @@ def cr(A, b, x0=None, **kw) -> SolveResult:
 # ---------------------------------------------------------------------------
 
 def pipecg(A, b, x0=None, *, maxiter=100, tol=0.0, M=None, dot=local_dot,
-           ip: str = "id") -> SolveResult:
+           ip: str = "id", engine=None) -> SolveResult:
     """Ghysels-Vanroose pipelined CG (Alg. 4 there; PIPECR via ip='A').
 
     Per iteration: ONE fused reduction (gamma, delta, ||r||^2) whose result
     is consumed only after the SpMV ``n = A m`` and preconditioner ``m = M w``
     — the overlap window.  Extra state (z, q, s, p) vs classical CG is the
     pipelining cost the paper describes (more AXPYs + storage).
+
+    ``engine`` ("naive" / "fused" / Engine / None) routes the whole
+    iteration through an iteration engine (see core/krylov/engine.py);
+    ``engine="fused"`` with a DIA operator and identity/Jacobi M runs each
+    iteration as ONE Pallas HBM sweep.  ``engine=None`` keeps the
+    historical inline path (used by the distributed shard_map mode).
     """
+    if engine is not None:
+        if dot is not local_dot:
+            raise ValueError(
+                "engine= computes local reductions and cannot honor a custom "
+                "dot (e.g. the distributed psum dot); use engine=None there")
+        return _pipecg_engine(A, b, x0, maxiter=maxiter, tol=tol, M=M,
+                              ip=ip, engine=engine)
     mv = as_matvec(A)
     M = M if M is not None else (lambda z: z)
     x = jnp.zeros_like(b) if x0 is None else x0
@@ -162,3 +191,94 @@ def pipecg(A, b, x0=None, *, maxiter=100, tol=0.0, M=None, dot=local_dot,
 def pipecr(A, b, x0=None, **kw) -> SolveResult:
     kw.pop("ip", None)
     return pipecg(A, b, x0, ip="A", **kw)
+
+
+# ---------------------------------------------------------------------------
+# Engine-driven PIPECG (single- and multi-RHS)
+# ---------------------------------------------------------------------------
+
+def _pipecg_scalars(st, ip_unused=None):
+    """(alpha, beta) from the carried fused-reduction results."""
+    gamma, delta = st["gamma"], st["delta"]
+    beta = jnp.where(st["first"], jnp.zeros_like(gamma),
+                     gamma / st["gamma_prev"])
+    alpha = jnp.where(st["first"], gamma / delta,
+                      gamma / (delta - beta * gamma / st["alpha_prev"]))
+    return alpha, beta
+
+
+def _pipecg_engine(A, b, x0=None, *, maxiter=100, tol=0.0, M=None,
+                   ip: str = "id", engine="naive") -> SolveResult:
+    """PIPECG with the vector work delegated to an iteration engine.
+
+    Same scalar recurrences and masked-freeze semantics as the inline
+    ``pipecg``; only WHO performs the AXPYs/dots/SpMV differs.
+    """
+    eng = get_engine(engine)
+    vecs, gamma, delta = eng.pipecg_init(A, b, x0, M, ip)
+    one = jnp.ones_like(gamma)
+    state0 = dict(vecs=vecs, gamma=gamma, delta=delta,
+                  gamma_prev=one, alpha_prev=one,
+                  first=jnp.asarray(True),
+                  done=jnp.zeros(gamma.shape, bool),
+                  iters=jnp.zeros(gamma.shape, jnp.int32))
+    bb = jnp.sum(b * b, axis=-1)
+    tol2 = jnp.asarray(tol, b.dtype) ** 2 * bb
+
+    def step(st, _):
+        alpha, beta = _pipecg_scalars(st)
+        vecs, gamma_new, delta_new, rr = eng.pipecg_iter(
+            A, M, ip, st["vecs"], alpha, beta)
+        done = st["done"] | (rr <= tol2)
+        mask = st["done"]
+
+        def frz(nv, ov):  # freeze converged systems (masked update)
+            m = (mask.reshape(mask.shape + (1,) * (nv.ndim - mask.ndim))
+                 if nv.ndim > mask.ndim else mask)
+            return jnp.where(m, ov, nv)
+
+        new = dict(vecs=jax.tree.map(frz, vecs, st["vecs"]),
+                   gamma=frz(gamma_new, st["gamma"]),
+                   delta=frz(delta_new, st["delta"]),
+                   gamma_prev=frz(st["gamma"], st["gamma_prev"]),
+                   alpha_prev=frz(alpha, st["alpha_prev"]),
+                   first=jnp.asarray(False), done=done,
+                   iters=st["iters"] + (~done).astype(jnp.int32))
+        return new, jnp.sqrt(jnp.maximum(rr, 0.0))
+
+    st, hist = jax.lax.scan(step, state0, None, length=maxiter)
+    r = st["vecs"]["r"]
+    res = jnp.sqrt(jnp.maximum(jnp.sum(r * r, axis=-1), 0.0))
+    if hist.ndim == 2:  # batched: (maxiter, k) -> (k, maxiter)
+        hist = hist.T
+    return SolveResult(x=st["vecs"]["x"], iters=st["iters"], res_norm=res,
+                       res_history=hist)
+
+
+def pipecg_multi(A, B, X0=None, *, maxiter=100, tol=0.0, M=None,
+                 ip: str = "id", engine="fused") -> SolveResult:
+    """Batched PIPECG: solve A x_j = b_j for every row of ``B`` (k, n).
+
+    With ``engine="fused"`` and a DIA operator the k systems share one
+    kernel sweep per iteration — the band and diag^-1 reads are amortized
+    over the batch (the kernel's leading grid dimension).  Each RHS keeps
+    its own alpha/beta trajectory.  Other engines fall back to ``vmap``
+    over the single-RHS iteration.
+
+    Returns a SolveResult with x (k, n), res_norm (k,), iters (k,),
+    res_history (k, maxiter).
+    """
+    eng = get_engine(engine)
+    from repro.core.krylov.engine import FusedEngine, _jacobi_inv_diag
+
+    k, n = B.shape
+    native_batch = (isinstance(eng, FusedEngine)
+                    and _jacobi_inv_diag(A, M, n, B.dtype) is not None)
+    if native_batch:
+        # FusedEngine's single-sweep path is batch-shaped already
+        return _pipecg_engine(A, B, X0, maxiter=maxiter, tol=tol, M=M,
+                              ip=ip, engine=eng)
+    solve = lambda b, x0: _pipecg_engine(
+        A, b, x0, maxiter=maxiter, tol=tol, M=M, ip=ip, engine=eng)
+    X0 = jnp.zeros_like(B) if X0 is None else X0
+    return jax.vmap(solve)(B, X0)

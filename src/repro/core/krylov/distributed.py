@@ -28,11 +28,28 @@ from repro.core.krylov.operators import DiaMatrix
 AXIS = "shards"
 
 
+def _axis_size(axis_name) -> int:
+    """Static size of a mapped axis (or product over a tuple of axes).
+
+    ``jax.lax.axis_size`` only exists in newer JAX; fall back to the axis
+    env, which shard_map populates on this version (0.4.x).
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    from jax._src import core as _core
+    env = _core.get_axis_env()
+    names = axis_name if isinstance(axis_name, tuple) else (axis_name,)
+    size = 1
+    for nm in names:
+        size *= env.axis_size(nm)
+    return size
+
+
 def halo_exchange(x_local: jnp.ndarray, halo: int, axis_name: str = AXIS):
     """Return (left_halo, right_halo) of width ``halo`` from the ring
     neighbors; chain-boundary devices receive zeros (matches the zero
     padding of DIA bands at the matrix boundary)."""
-    n_dev = jax.lax.axis_size(axis_name)
+    n_dev = _axis_size(axis_name)
     if n_dev == 1 or halo == 0:
         z = jnp.zeros((halo,) + x_local.shape[1:], x_local.dtype)
         return z, z

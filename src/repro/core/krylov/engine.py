@@ -1,0 +1,234 @@
+"""Pluggable iteration engines: WHO executes a solver iteration's vector work.
+
+The solvers in this package describe Krylov recurrences; an *engine*
+decides how the memory-bound inner loop hits the hardware:
+
+* ``NaiveEngine`` — plain jnp ops, one XLA op per AXPY/dot (~30n words per
+  PIPECG iteration of vector traffic, plus M-apply + SpMV sweeps).
+* ``FusedEngine`` — Pallas-backed.  For a DIA operator with identity or
+  Jacobi preconditioning, a whole PIPECG iteration (8 updates + M-apply +
+  SpMV + the fused reduction) is ONE kernel sweep
+  (kernels/pipecg_spmv_fused.py, ~(9 + n_bands) n words); otherwise it
+  falls back to the update-only fusion kernel (kernels/pipecg_fused.py)
+  with explicit operator / preconditioner applications.  GMRES-family
+  orthogonalization coefficients go through the one-pass multi-dot kernel
+  (kernels/fused_dots.py).
+
+Engines are selected per solve via ``engine="naive" | "fused"`` (or an
+Engine instance) on ``cg`` / ``pipecg`` / ``pipecr`` / ``gmres`` /
+``pgmres``; ``engine=None`` keeps the historical inline-jnp code paths
+untouched (the distributed shard_map solvers rely on those).
+
+The registry is open: third-party engines register with
+``@register_engine``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.krylov.operators import DiaMatrix
+
+ENGINES: Dict[str, "Engine"] = {}
+
+
+def register_engine(cls):
+    """Class decorator: instantiate + register under ``cls.name``."""
+    ENGINES[cls.name] = cls()
+    return cls
+
+
+def get_engine(engine: Union[str, "Engine", None]) -> Optional["Engine"]:
+    if engine is None or isinstance(engine, Engine):
+        return engine
+    try:
+        return ENGINES[engine]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {engine!r}; registered: {sorted(ENGINES)}"
+        ) from None
+
+
+def _jacobi_inv_diag(A, M, n, dtype):
+    """inv_diag for the single-sweep path, or None if M is not expressible.
+
+    M may be None (identity), the string "jacobi", or a callable; callables
+    are opaque, so only the first two qualify for in-kernel preconditioning.
+    """
+    if not isinstance(A, DiaMatrix):
+        return None
+    if M is None:
+        return jnp.ones((n,), dtype)
+    if M == "jacobi":
+        return (1.0 / A.diagonal()).astype(dtype)
+    return None
+
+
+def _resolve_M(A, M) -> Callable:
+    if M is None:
+        return lambda z: z
+    if M == "jacobi":
+        inv_d = 1.0 / A.diagonal()
+        return lambda z: inv_d * z
+    return M
+
+
+class Engine:
+    """Iteration-engine interface.
+
+    ``pipecg_init`` returns an opaque vector-state pytree plus the first
+    (gamma, delta); ``pipecg_iter`` advances it by one iteration and
+    returns the next fused-reduction results.  ``dots`` is the GMRES-family
+    multi-dot; ``spmv`` / ``precond`` the standalone operator applications.
+    """
+
+    name = "abstract"
+
+    def spmv(self, A, x):
+        """Operator application; batched (k, n) inputs are vmapped."""
+        if x.ndim == 2:
+            return jax.vmap(lambda v: self._spmv(A, v))(x)
+        return self._spmv(A, v=x)
+
+    def _spmv(self, A, v):
+        raise NotImplementedError
+
+    def precond(self, A, M, r):
+        return _resolve_M(A, M)(r)
+
+    def dots(self, V, z):
+        raise NotImplementedError
+
+    def pipecg_init(self, A, b, x0, M, ip: str):
+        raise NotImplementedError
+
+    def pipecg_iter(self, A, M, ip: str, vecs, alpha, beta):
+        raise NotImplementedError
+
+
+def _ip_pick(ip: str, ru, wu, rw, ww):
+    """(gamma, delta) from the five fused partials."""
+    return (ru, wu) if ip == "id" else (rw, ww)
+
+
+def _rdot(a, b):
+    """Row-wise dot: scalar for (n,) operands, (k,) for batched (k, n)."""
+    return jnp.sum(a * b, axis=-1)
+
+
+@register_engine
+class NaiveEngine(Engine):
+    """Reference engine: every AXPY / dot / SpMV is a separate jnp op."""
+
+    name = "naive"
+
+    def _spmv(self, A, v):
+        return A.matvec(v) if hasattr(A, "matvec") else A(v)
+
+    def dots(self, V, z):
+        return V @ z
+
+    def pipecg_init(self, A, b, x0, M, ip):
+        Mf = _resolve_M(A, M)
+        x = jnp.zeros_like(b) if x0 is None else x0
+        r = b - self.spmv(A, x)
+        u = Mf(r)
+        w = self.spmv(A, u)
+        gamma = _rdot(r, u) if ip == "id" else _rdot(r, w)
+        delta = _rdot(w, u) if ip == "id" else _rdot(w, w)
+        m = Mf(w)
+        n_ = self.spmv(A, m)
+        zero = jnp.zeros_like(b)
+        vecs = dict(x=x, r=r, u=u, w=w, m=m, n=n_,
+                    z=zero, q=zero, s=zero, p=zero)
+        return vecs, gamma, delta
+
+    def pipecg_iter(self, A, M, ip, st, alpha, beta):
+        Mf = _resolve_M(A, M)
+        alpha = jnp.asarray(alpha)[..., None] if jnp.ndim(alpha) else alpha
+        beta = jnp.asarray(beta)[..., None] if jnp.ndim(beta) else beta
+        z = st["n"] + beta * st["z"]
+        q = st["m"] + beta * st["q"]
+        s = st["w"] + beta * st["s"]
+        p = st["u"] + beta * st["p"]
+        x = st["x"] + alpha * p
+        r = st["r"] - alpha * s
+        u = st["u"] - alpha * q
+        w = st["w"] - alpha * z
+        gamma = _rdot(r, u) if ip == "id" else _rdot(r, w)
+        delta = _rdot(w, u) if ip == "id" else _rdot(w, w)
+        rr = _rdot(r, r)
+        m = Mf(w)
+        n_ = self.spmv(A, m)
+        return (dict(x=x, r=r, u=u, w=w, m=m, n=n_, z=z, q=q, s=s, p=p),
+                gamma, delta, rr)
+
+
+@register_engine
+class FusedEngine(Engine):
+    """Pallas-backed engine: minimal HBM sweeps per iteration."""
+
+    name = "fused"
+
+    def _spmv(self, A, v):
+        if isinstance(A, DiaMatrix):
+            from repro.kernels import ops as kops
+            h = A.halo
+            return kops.spmv_dia_ext(A.offsets, A.bands, jnp.pad(v, (h, h)), h)
+        return A.matvec(v) if hasattr(A, "matvec") else A(v)
+
+    def dots(self, V, z):
+        from repro.kernels import ops as kops
+        return kops.fused_dots(V, z)
+
+    def pipecg_init(self, A, b, x0, M, ip):
+        inv_d = _jacobi_inv_diag(A, M, b.shape[-1], b.dtype)
+        Mf = _resolve_M(A, M)
+        x = jnp.zeros_like(b) if x0 is None else x0
+        r = b - self.spmv(A, x)
+        u = Mf(r)
+        w = self.spmv(A, u)
+        gamma = _rdot(r, u) if ip == "id" else _rdot(r, w)
+        delta = _rdot(w, u) if ip == "id" else _rdot(w, w)
+        if inv_d is not None:
+            # single-sweep path: only (x, r, u, p) round-trip HBM per
+            # iteration (diag^-1 is re-derived in pipecg_iter from the
+            # trace-constant A — loop-invariant, hoisted out of the scan)
+            return dict(x=x, r=r, u=u, p=jnp.zeros_like(b)), gamma, delta
+        # fallback: update-kernel path carries the full 10-vector state
+        m = Mf(w)
+        n_ = self.spmv(A, m)
+        zero = jnp.zeros_like(b)
+        vecs = dict(x=x, r=r, u=u, w=w, m=m, n=n_,
+                    z=zero, q=zero, s=zero, p=zero)
+        return vecs, gamma, delta
+
+    def pipecg_iter(self, A, M, ip, st, alpha, beta):
+        from repro.kernels import ops as kops
+
+        if "w" not in st:  # single-sweep mega-kernel state
+            # loop-invariant under jit (A is a trace constant): XLA hoists
+            # the 1/diag out of the solver scan
+            inv_d = _jacobi_inv_diag(A, M, st["x"].shape[-1], st["x"].dtype)
+            x, r, u, p, red = kops.pipecg_spmv_fused_step(
+                A.offsets, A.bands, inv_d,
+                st["x"], st["r"], st["u"], st["p"], alpha, beta)
+            gamma, delta = _ip_pick(ip, red[..., 0], red[..., 1],
+                                    red[..., 3], red[..., 4])
+            return dict(x=x, r=r, u=u, p=p), gamma, delta, red[..., 2]
+
+        # two-sweep fallback: fused updates+dots, then M-apply + SpMV
+        Mf = _resolve_M(A, M)
+        (x, r, u, w, z, q, s, p, red) = kops.pipecg_fused_step(
+            st["x"], st["r"], st["u"], st["w"], st["m"], st["n"],
+            st["z"], st["q"], st["s"], st["p"], alpha, beta)
+        if ip == "id":
+            gamma, delta = red[0], red[1]
+        else:
+            gamma, delta = _rdot(r, w), _rdot(w, w)
+        m = Mf(w)
+        n_ = self.spmv(A, m)
+        return (dict(x=x, r=r, u=u, w=w, m=m, n=n_, z=z, q=q, s=s, p=p),
+                gamma, delta, red[2])

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.krylov.base import SolveResult, as_matvec, local_dot
+from repro.core.krylov.engine import get_engine
 
 
 def _lstsq_hessenberg(H, beta, m):
@@ -23,14 +24,29 @@ def _lstsq_hessenberg(H, beta, m):
 
 
 def gmres(A, b, x0=None, *, restart: int = 30, tol: float = 0.0,
-          M=None, dot=local_dot) -> SolveResult:
+          M=None, dot=local_dot, engine=None) -> SolveResult:
     """Single-cycle GMRES(restart) — Algorithm 1 of the paper.
 
     Returns the minimizer over the Krylov space of dimension ``restart``.
     ``res_history[i]`` is the GMRES residual estimate after i+1 Arnoldi steps
     (from the progressive Givens recurrence).
+
+    ``engine`` (see core/krylov/engine.py) switches the orthogonalization
+    from per-coefficient MGS dots to the engine's one-pass multi-dot
+    (classical Gram-Schmidt order: all h_{j,i} from the SAME z, one HBM
+    sweep via kernels/fused_dots.py).  CGS and MGS agree in exact
+    arithmetic; the minimizer is identical, per-step coefficients differ
+    at roundoff level.
     """
-    mv = as_matvec(A)
+    eng = get_engine(engine)
+    if eng is not None:
+        if dot is not local_dot:
+            raise ValueError(
+                "engine= computes local reductions and cannot honor a custom "
+                "dot (e.g. the distributed psum dot); use engine=None there")
+        mv = lambda v: eng.spmv(A, v)
+    else:
+        mv = as_matvec(A)
     M = M if M is not None else (lambda z: z)
     x = jnp.zeros_like(b) if x0 is None else x0
     m = restart
@@ -50,15 +66,21 @@ def gmres(A, b, x0=None, *, restart: int = 30, tol: float = 0.0,
         V, H, cs, sn, g, hist = carry
         z = M(mv(V[i]))
 
-        def mgs_body(j, zh):
-            z, hcol = zh
-            active = j <= i
-            hji = jnp.where(active, dot(z, V[j]), 0.0)
-            z = z - hji * V[j]
-            return z, hcol.at[j].set(hji)
+        if eng is not None:
+            # classical GS: every h_{j,i} from the same z, ONE memory pass
+            active = (jnp.arange(m + 1) <= i).astype(dt)
+            hcol = eng.dots(V, z) * active
+            z = z - hcol @ V
+        else:
+            def mgs_body(j, zh):
+                z, hcol = zh
+                active = j <= i
+                hji = jnp.where(active, dot(z, V[j]), 0.0)
+                z = z - hji * V[j]
+                return z, hcol.at[j].set(hji)
 
-        z, hcol = jax.lax.fori_loop(0, m + 1, mgs_body,
-                                    (z, jnp.zeros((m + 1,), dt)))
+            z, hcol = jax.lax.fori_loop(0, m + 1, mgs_body,
+                                        (z, jnp.zeros((m + 1,), dt)))
         hnorm = jnp.sqrt(dot(z, z))
         hcol = hcol.at[i + 1].set(hnorm)
         V = V.at[i + 1].set(z / jnp.where(hnorm > 0, hnorm, 1.0))
@@ -95,7 +117,7 @@ def gmres(A, b, x0=None, *, restart: int = 30, tol: float = 0.0,
 
 def gmres_restarted(A, b, x0=None, *, restart: int = 30, cycles: int = 5,
                     tol: float = 0.0, M=None, dot=local_dot,
-                    inner=None) -> SolveResult:
+                    inner=None, engine=None) -> SolveResult:
     """GMRES(m) with restarts: ``cycles`` outer cycles of ``restart`` inner
     Arnoldi steps (``inner=pgmres`` gives restarted PGMRES)."""
     solver = inner if inner is not None else gmres
@@ -103,8 +125,9 @@ def gmres_restarted(A, b, x0=None, *, restart: int = 30, cycles: int = 5,
     hists = []
     iters = 0
     res = None
-    for _ in range(cycles):
-        out = solver(A, b, x, restart=restart, tol=tol, M=M, dot=dot)
+    kw = {} if engine is None else {"engine": engine}  # keep the pre-engine
+    for _ in range(cycles):                            # inner= contract intact
+        out = solver(A, b, x, restart=restart, tol=tol, M=M, dot=dot, **kw)
         x = out.x
         hists.append(out.res_history)
         iters += int(out.iters)

@@ -18,12 +18,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.krylov.base import SolveResult, as_matvec, local_dot
+from repro.core.krylov.engine import get_engine
 from repro.core.krylov.gmres import _lstsq_hessenberg
 
 
 def pgmres(A, b, x0=None, *, restart: int = 30, tol: float = 0.0,
-           M=None, dot=local_dot) -> SolveResult:
-    mv = as_matvec(A)
+           M=None, dot=local_dot, engine=None) -> SolveResult:
+    """``engine`` routes the fused h_{j,i} batch (line 18) and the SpMV
+    through an iteration engine (one-pass multi-dot kernel); None keeps
+    the inline path used by the distributed mode."""
+    eng = get_engine(engine)
+    if eng is not None:
+        if dot is not local_dot:
+            raise ValueError(
+                "engine= computes local reductions and cannot honor a custom "
+                "dot (e.g. the distributed psum dot); use engine=None there")
+        mv = lambda v: eng.spmv(A, v)
+    else:
+        mv = as_matvec(A)
     M = M if M is not None else (lambda z: z)
     x = jnp.zeros_like(b) if x0 is None else x0
     m = restart
@@ -76,7 +88,10 @@ def pgmres(A, b, x0=None, *, restart: int = 30, tol: float = 0.0,
         # 18: h_{j,i} <- <z_{i+1}, v_j>, j = 0..i   (fused reduction;
         #     overlaps with the next iteration's SpMV on line 3).
         # One batched reduction -> a single global synchronization.
-        dots = jax.vmap(lambda v: dot(v, z_next))(V)     # (m+2,)
+        if eng is not None:
+            dots = eng.dots(V, z_next)                   # one HBM pass
+        else:
+            dots = jax.vmap(lambda v: dot(v, z_next))(V)  # (m+2,)
         dmask = (jnp.arange(m + 2) <= i).astype(dt)
         H = H.at[: m + 2, i].set(dots * dmask)
         return V, Z, H

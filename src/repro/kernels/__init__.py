@@ -1,9 +1,15 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-spmv_dia      — banded/stencil SpMV (the SpMV the reductions overlap with)
-fused_dots    — all MGS orthogonalization coefficients in one HBM pass
-pipecg_fused  — the whole PIPECG iteration body as one HBM sweep
+spmv_dia         — banded/stencil SpMV (the SpMV the reductions overlap with)
+fused_dots       — all orthogonalization coefficients in one HBM pass
+pipecg_fused     — the 8 PIPECG updates + 3 dots as one HBM sweep
+pipecg_spmv_fused — a WHOLE preconditioned PIPECG iteration (updates +
+                   Jacobi + DIA SpMV + reductions) as one HBM sweep,
+                   batched over right-hand sides
 
 Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd + padded
-wrappers, interpret=True on CPU), ref.py (pure-jnp oracle).
+wrappers, interpret=True on CPU), ref.py (pure-jnp oracle).  autotune.py
+picks tile sizes (modeled HBM traffic on CPU, measured on TPU), cached per
+(kind, n, dtype, backend).  The solver-facing selection between jnp ops and
+these kernels lives in core/krylov/engine.py.
 """

@@ -1,0 +1,91 @@
+"""Block-size autotuner for the Pallas kernels.
+
+Two regimes, mirroring how the rest of the repo treats the CPU container:
+
+* interpret mode (no TPU): wall time is meaningless, so candidates are
+  ranked by MODELED HBM traffic — padded bytes actually moved for the
+  given (n, block), with a small per-grid-step overhead term so that,
+  at equal traffic, fewer/larger tiles win.
+* TPU: candidates are compiled and timed (median of ``reps`` runs) via a
+  caller-supplied ``probe(block) -> jittable thunk``.
+
+Choices are cached per (kind, n, dtype, backend) for the process lifetime;
+``clear_cache`` exists for tests.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_CANDIDATES = (256, 512, 1024, 2048, 4096, 8192)
+# modeled fixed cost of one grid step, expressed in words of equivalent
+# HBM traffic (DMA issue + kernel dispatch); only a tie-breaker.
+STEP_OVERHEAD_WORDS = 512
+
+_CACHE: Dict[Tuple, int] = {}
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def modeled_words(n: int, block: int, *, words_per_row: float,
+                  resident_words: float = 0.0) -> float:
+    """Modeled HBM words moved by a tiled sweep over ``n`` padded rows."""
+    n_pad = -(-n // block) * block
+    steps = n_pad // block
+    return (n_pad * words_per_row + resident_words
+            + steps * STEP_OVERHEAD_WORDS)
+
+
+def _measure(thunk: Callable[[], jax.Array], reps: int = 5) -> float:
+    out = thunk()
+    jax.block_until_ready(out)  # compile + warm
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(thunk())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def best_block(kind: str, n: int, dtype, *,
+               words_per_row: float, resident_words: float = 0.0,
+               min_block: int = 1,
+               candidates: Sequence[int] = DEFAULT_CANDIDATES,
+               probe: Optional[Callable[[int], Callable[[], jax.Array]]] = None,
+               backend: Optional[str] = None) -> int:
+    """Pick a block size for a tiled kernel sweep.
+
+    kind            — cache namespace (e.g. "pipecg_spmv", "spmv_dia")
+    words_per_row   — tiled words moved per (padded) row
+    resident_words  — words fetched once per sweep regardless of block
+    min_block       — hard floor (e.g. 2*halo for stencil kernels)
+    probe           — block -> thunk; required for measured (TPU) tuning
+    """
+    backend = backend or jax.default_backend()
+    # min_block is part of the key: the same (kind, n) tuned for a narrow
+    # band must not hand its block to a caller with a wider halo floor
+    key = (kind, n, jnp.dtype(dtype).name, backend, min_block)
+    if key in _CACHE:
+        return _CACHE[key]
+
+    feasible = sorted({min(c, n) for c in candidates if min(c, n) >= min_block})
+    if not feasible:
+        feasible = [max(n, min_block)]
+
+    if backend == "tpu" and probe is not None:
+        scored = [(_measure(probe(b)), b) for b in feasible]
+    else:
+        scored = [(modeled_words(n, b, words_per_row=words_per_row,
+                                 resident_words=resident_words), b)
+                  for b in feasible]
+    # min score; ties resolved toward the LARGER block (fewer grid steps)
+    best = min(scored, key=lambda sb: (sb[0], -sb[1]))[1]
+    _CACHE[key] = best
+    return best

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import fused_dots as _fd
 from repro.kernels import pipecg_fused as _pf
+from repro.kernels import pipecg_spmv_fused as _ps
 from repro.kernels import spmv_dia as _sd
 from repro.kernels import ref
 
@@ -74,6 +75,51 @@ def fused_dots(V, z):
         zp = jnp.pad(z, (0, Vp.shape[1] - n))
         return _fd.fused_dots(Vp, zp, block=block, interpret=_interpret())
     return _fd.fused_dots(V, z, block=block, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("block",))
+def pipecg_spmv_fused_step(offsets: Tuple[int, ...], bands, inv_diag,
+                           x, r, u, p, alpha, beta, block: int = None):
+    """Single-sweep PIPECG iteration (updates + Jacobi + SpMV + dots).
+
+    Accepts (n,) vectors with scalar alpha/beta, or batched (k, n) vectors
+    with (k,) alpha/beta.  Pads the row dimension to the block size; the
+    default block comes from the autotuner.
+    """
+    from repro.kernels import autotune
+
+    squeeze = x.ndim == 1
+    if squeeze:
+        x, r, u, p = (v[None] for v in (x, r, u, p))
+        alpha = jnp.asarray(alpha)[None]
+        beta = jnp.asarray(beta)[None]
+    n = x.shape[1]
+    halo = max(abs(o) for o in offsets)
+    if block is None:
+        block = autotune.best_block(
+            "pipecg_spmv", n, x.dtype,
+            # tiled words/row: x,r reads + x,r,u,p writes
+            words_per_row=6.0,
+            # once-per-sweep: u, p (+2h), bands (+h), diag^-1 (+h)
+            resident_words=(2 + bands.shape[0] + 1) * n,
+            min_block=2 * halo)
+    block = max(min(block, n), 1)
+    pad = (-n) % block
+    if pad:
+        bands_p, _ = _pad_to(bands, block, axis=1)
+        invd_p = jnp.pad(inv_diag, (0, pad))
+        vecs = [jnp.pad(v, ((0, 0), (0, pad))) for v in (x, r, u, p)]
+        outs = _ps.pipecg_spmv_fused(offsets, bands_p, invd_p, *vecs,
+                                     alpha, beta, block=block,
+                                     interpret=_interpret())
+        outs = tuple(o[:, :n] for o in outs[:4]) + (outs[4],)
+    else:
+        outs = _ps.pipecg_spmv_fused(offsets, bands, inv_diag, x, r, u, p,
+                                     alpha, beta, block=block,
+                                     interpret=_interpret())
+    if squeeze:
+        outs = tuple(o[0] for o in outs)
+    return outs
 
 
 @jax.jit

@@ -1,0 +1,169 @@
+"""Pallas TPU kernel: a WHOLE preconditioned PIPECG iteration in one sweep.
+
+``pipecg_fused`` collapses the eight AXPYs + three dots into one HBM pass,
+but the iteration still needs two more sweeps: the Jacobi apply
+``m = diag(A)^-1 w`` and the DIA SpMV ``n = A m``.  This kernel removes
+those too, by exploiting the exact-arithmetic identities of the
+Ghysels-Vanroose recurrences
+
+    s_i = A p_i,    q_i = M s_i,    z_i = A q_i,    w_i = A u_i,
+
+so the only state that must round-trip HBM is (x, r, u, p).  Everything
+else is re-derived inside the tile sweep:
+
+    p' = u + beta p                                   (tile +-2h)
+    s' = A p'                                         (tile +-h)
+    q' = diag^-1 s'                                   (tile +-h)
+    x' = x + alpha p'      r' = r - alpha s'
+    u' = u - alpha q'                                 (tile +-h)
+    w' = A u'                                         (tile)
+    partials: <r',u'>, <w',u'>, <r',r'>, <r',w'>, <w',w'>
+
+The halo recompute duplicates O(halo) flops per tile — free on a
+memory-bound kernel.  ``u``, ``p``, the bands and ``diag^-1`` ride along
+VMEM-resident with zero halos (the spmv_dia trick), so per iteration the
+kernel moves
+
+    reads:  x, r (tiled) + u, p, diag^-1 (resident) + bands (resident)
+    writes: x', r', u', p'
+    ==  (9 + n_bands) n words  ==  12n for the tridiagonal ex23 operator
+
+vs ~38n for the unfused chain (8 AXPYs x 3 + 3 dots x 2 + M-apply x 3 +
+SpMV x 5).  A leading multi-RHS grid dimension batches k right-hand sides
+over the same resident operator, amortizing the band + diag reads.
+
+Caveat on the 12n figure: it is the traffic of the pallas_call itself.
+The host-side wrapper zero-extends u and p by 2h with ``jnp.pad`` each
+call — an XLA copy (~4n extra words) that a production path would avoid
+by carrying halo-extended state between iterations; it is kept here
+because the padded layout would leak into every engine-state consumer
+for a constant-factor win the interpret-mode benchmarks cannot observe.
+
+The reduction partials feed BOTH inner-product modes: CG-style (ip='id':
+gamma=<r,u>, delta=<w,u>) and CR-style (ip='A': gamma=<r,w>, delta=<w,w>).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 1024
+NRED = 5  # <r,u>, <w,u>, <r,r>, <r,w>, <w,w>
+
+
+def _kernel(ab_ref, bands_ref, invd_ref, u_ref, p_ref, x_ref, r_ref,
+            xo, ro, uo, po, red_o, *, offsets: Sequence[int], halo: int,
+            block: int):
+    j = pl.program_id(0)          # RHS index (batch)
+    i = pl.program_id(1)          # tile index
+    base = i * block
+    h = halo
+    alpha = ab_ref[0, 0]
+    beta = ab_ref[0, 1]
+
+    # stage 1: p' = u + beta p on rows [base-2h, base+block+2h)
+    #   (u_ref / p_ref are zero-extended by 2h, so index 0 == row -2h)
+    u_2h = pl.load(u_ref, (pl.dslice(0, 1), pl.dslice(base, block + 4 * h)))[0]
+    p_2h = pl.load(p_ref, (pl.dslice(0, 1), pl.dslice(base, block + 4 * h)))[0]
+    p2_2h = u_2h + beta * p_2h
+
+    # stage 2: s' = A p' and q' = diag^-1 s' on rows [base-h, base+block+h)
+    #   (bands_ref / invd_ref are zero-extended by h, index 0 == row -h)
+    s2_h = jnp.zeros((block + 2 * h,), xo.dtype)
+    for k, off in enumerate(offsets):  # static unroll over bands
+        bk = pl.load(bands_ref,
+                     (pl.dslice(k, 1), pl.dslice(base, block + 2 * h)))[0]
+        s2_h = s2_h + bk * jax.lax.dynamic_slice_in_dim(
+            p2_2h, h + off, block + 2 * h)
+    invd_h = pl.load(invd_ref, (pl.dslice(base, block + 2 * h),))
+    q2_h = invd_h * s2_h
+
+    # stage 3: u' = u - alpha q' on rows [base-h, base+block+h)
+    u2_h = jax.lax.dynamic_slice_in_dim(u_2h, h, block + 2 * h) - alpha * q2_h
+
+    # stage 4: w' = A u' on the tile rows [base, base+block)
+    w2 = jnp.zeros((block,), xo.dtype)
+    for k, off in enumerate(offsets):
+        bk = pl.load(bands_ref,
+                     (pl.dslice(k, 1), pl.dslice(base + h, block)))[0]
+        w2 = w2 + bk * jax.lax.dynamic_slice_in_dim(u2_h, h + off, block)
+
+    # tile-level updates
+    p2 = jax.lax.dynamic_slice_in_dim(p2_2h, 2 * h, block)
+    s2 = jax.lax.dynamic_slice_in_dim(s2_h, h, block)
+    u2 = jax.lax.dynamic_slice_in_dim(u2_h, h, block)
+    x2 = x_ref[0, :] + alpha * p2
+    r2 = r_ref[0, :] - alpha * s2
+
+    xo[0, :] = x2
+    ro[0, :] = r2
+    uo[0, :] = u2
+    po[0, :] = p2
+
+    @pl.when(i == 0)
+    def _init():
+        red_o[...] = jnp.zeros_like(red_o)
+
+    # next iteration's fused reduction partials
+    red_o[0, 0] += jnp.sum(r2 * u2)
+    red_o[0, 1] += jnp.sum(w2 * u2)
+    red_o[0, 2] += jnp.sum(r2 * r2)
+    red_o[0, 3] += jnp.sum(r2 * w2)
+    red_o[0, 4] += jnp.sum(w2 * w2)
+
+
+def pipecg_spmv_fused(offsets: Sequence[int], bands: jnp.ndarray,
+                      inv_diag: jnp.ndarray, x, r, u, p, alpha, beta, *,
+                      block: int = DEFAULT_BLOCK, interpret: bool = False
+                      ) -> Tuple[jnp.ndarray, ...]:
+    """One full preconditioned PIPECG iteration, single HBM sweep.
+
+    All vectors are (k, n) — k right-hand sides batched over the leading
+    grid dimension; ``alpha`` / ``beta`` are (k,).  ``bands`` is
+    (n_bands, n), ``inv_diag`` (n,); both are shared across the batch.
+    n must be a multiple of ``block`` (the ops.py wrapper pads).
+
+    Returns (x', r', u', p', red) with red (k, 5) =
+    (<r',u'>, <w',u'>, <r',r'>, <r',w'>, <w',w'>) per RHS.
+    """
+    k_rhs, n = x.shape
+    halo = max(abs(o) for o in offsets)
+    assert n % block == 0, (n, block)
+    assert block >= 2 * halo, (block, halo)
+    grid = (k_rhs, n // block)
+    dt = x.dtype
+
+    ab = jnp.stack([jnp.asarray(alpha, dt), jnp.asarray(beta, dt)], axis=-1)
+    ab = ab.reshape(k_rhs, 2)
+    # zero halo extensions (resident operands; fetched once, revisited)
+    bands_e = jnp.pad(bands, ((0, 0), (halo, halo)))
+    invd_e = jnp.pad(inv_diag, (halo, halo))
+    u_e = jnp.pad(u, ((0, 0), (2 * halo, 2 * halo)))
+    p_e = jnp.pad(p, ((0, 0), (2 * halo, 2 * halo)))
+
+    kern = functools.partial(_kernel, offsets=tuple(offsets), halo=halo,
+                             block=block)
+    vec_spec = pl.BlockSpec((1, block), lambda j, i: (j, i))
+    resident = lambda shape: pl.BlockSpec(shape, lambda j, i: (0,) * len(shape))
+    outs = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda j, i: (j, 0)),          # alpha/beta
+            resident(bands_e.shape),                            # bands (+h)
+            resident(invd_e.shape),                             # diag^-1 (+h)
+            pl.BlockSpec((1, n + 4 * halo), lambda j, i: (j, 0)),  # u (+2h)
+            pl.BlockSpec((1, n + 4 * halo), lambda j, i: (j, 0)),  # p (+2h)
+            vec_spec,                                           # x
+            vec_spec,                                           # r
+        ],
+        out_specs=[vec_spec] * 4 + [pl.BlockSpec((1, NRED), lambda j, i: (j, 0))],
+        out_shape=[jax.ShapeDtypeStruct((k_rhs, n), dt)] * 4
+        + [jax.ShapeDtypeStruct((k_rhs, NRED), dt)],
+        interpret=interpret,
+    )(ab, bands_e, invd_e, u_e, p_e, x, r)
+    return tuple(outs)

@@ -57,6 +57,34 @@ def wkv_recurrent_ref(r, k, v, logw, u) -> jnp.ndarray:
     return jnp.moveaxis(o, 0, 1)
 
 
+def pipecg_spmv_fused_ref(offsets, bands, inv_diag, x, r, u, p, alpha, beta
+                          ) -> Tuple[jnp.ndarray, ...]:
+    """Whole-iteration oracle for the single-sweep PIPECG kernel.
+
+    Batched over the leading axis: x/r/u/p (k, n), alpha/beta (k,).
+    Derived-vector formulation (exact-arithmetic equal to the recurrences):
+    s' = A p', q' = diag^-1 s', w' = A u'.
+    """
+    def one(x, r, u, p, alpha, beta):
+        y = spmv_dia_ref  # alias
+        n = x.shape[0]
+        halo = max(abs(o) for o in offsets)
+        ext = lambda v: jnp.pad(v, (halo, halo))
+        p2 = u + beta * p
+        s2 = y(offsets, bands, ext(p2), halo)
+        q2 = inv_diag * s2
+        x2 = x + alpha * p2
+        r2 = r - alpha * s2
+        u2 = u - alpha * q2
+        w2 = y(offsets, bands, ext(u2), halo)
+        red = jnp.stack([jnp.sum(r2 * u2), jnp.sum(w2 * u2),
+                         jnp.sum(r2 * r2), jnp.sum(r2 * w2),
+                         jnp.sum(w2 * w2)])
+        return x2, r2, u2, p2, red
+
+    return jax.vmap(one)(x, r, u, p, jnp.asarray(alpha), jnp.asarray(beta))
+
+
 def pipecg_fused_ref(x, r, u, w, m, n_, z, q, s, p, alpha, beta
                      ) -> Tuple[jnp.ndarray, ...]:
     """All eight PIPECG vector updates + the three reductions of the NEXT

@@ -85,11 +85,15 @@ def moe_ffn(p, cfg, x, dtype, rng: Optional[jax.Array] = None):
     table = table.at[slot].set(sort_idx.astype(jnp.int32), mode="drop")
     table = table[: E * C].reshape(E, C)                         # (E, C)
 
-    tok_of = jnp.minimum(table // K, T)                          # sentinel -> T (pad row)
-    w_of = jnp.concatenate([flat_w, jnp.zeros((1,), dtype)])[
-        jnp.minimum(table, T * K)]                               # (E, C)
-    xpad = jnp.concatenate([xf.astype(dtype), jnp.zeros((1, d), dtype)], axis=0)
-    gx = xpad[tok_of]                                            # (E, C, d)
+    # OOB-fill gathers instead of a concatenated pad row: the (T+1, d)
+    # odd-size operand miscompiles under the GSPMD partitioner (observed on
+    # CPU: xf sharded over 'data' + the concat row -> wrong gathered rows),
+    # while clamp-free OOB semantics partition correctly.  Sentinel slots
+    # (table == T*K, so tok_of == T) read as zeros and scatter into nothing.
+    tok_of = table // K                                          # sentinel -> T (OOB)
+    w_of = jnp.take(flat_w, table, axis=0, mode="fill", fill_value=0)  # (E, C)
+    gx = jnp.take(xf.astype(dtype), tok_of, axis=0, mode="fill",
+                  fill_value=0)                                  # (E, C, d)
 
     # --- expert compute (grouped einsum) -------------------------------------
     up = jnp.einsum("ecd,edf->ecf", gx, p["up"].astype(dtype))
@@ -100,7 +104,7 @@ def moe_ffn(p, cfg, x, dtype, rng: Optional[jax.Array] = None):
     out_e = jnp.einsum("ecf,efd->ecd", up, p["down"].astype(dtype))  # (E, C, d)
 
     # --- combine -------------------------------------------------------------
-    out = jnp.zeros((T + 1, d), dtype)
-    out = out.at[tok_of].add(out_e * w_of[..., None])
-    out = out[:T].reshape(B, S, d)
+    out = jnp.zeros((T, d), dtype)
+    out = out.at[tok_of].add(out_e * w_of[..., None], mode="drop")
+    out = out.reshape(B, S, d)
     return out, {"moe_aux": aux_loss, "moe_z": z_loss}

@@ -74,11 +74,12 @@ def _ep_local(xl, rw, up, gate, down, *, cfg, model_axis: str,
     table = table.at[slot].set(sort_idx.astype(jnp.int32), mode="drop")
     table = table[: E_l * C].reshape(E_l, C)
 
-    tok_of = jnp.minimum(table // K, T)
-    w_of = jnp.concatenate([flat_w, jnp.zeros((1,), dtype)])[
-        jnp.minimum(table, T * K)]
-    xpad = jnp.concatenate([xf.astype(dtype), jnp.zeros((1, d), dtype)], axis=0)
-    gx = xpad[tok_of]                                    # (E_l, C, d) LOCAL
+    # OOB-fill gathers / OOB-drop scatter, mirroring repro.models.moe
+    # (no pad-row concats; sentinel slots read zeros, scatter nowhere)
+    tok_of = table // K
+    w_of = jnp.take(flat_w, table, axis=0, mode="fill", fill_value=0)
+    gx = jnp.take(xf.astype(dtype), tok_of, axis=0, mode="fill",
+                  fill_value=0)                          # (E_l, C, d) LOCAL
 
     up_h = jnp.einsum("ecd,edf->ecf", gx, up.astype(dtype))
     if gate is not None:
@@ -87,10 +88,10 @@ def _ep_local(xl, rw, up, gate, down, *, cfg, model_axis: str,
         up_h = jax.nn.gelu(up_h)
     out_e = jnp.einsum("ecf,efd->ecd", up_h, down.astype(dtype))
 
-    out = jnp.zeros((T + 1, d), dtype)
-    out = out.at[tok_of].add(out_e * w_of[..., None])
+    out = jnp.zeros((T, d), dtype)
+    out = out.at[tok_of].add(out_e * w_of[..., None], mode="drop")
     # merge expert contributions across the model axis (the ONLY collective)
-    out = jax.lax.psum(out[:T], model_axis)
+    out = jax.lax.psum(out, model_axis)
     return out.reshape(B_l, S, d), aux_loss, z_loss
 
 

@@ -1,0 +1,169 @@
+"""FusedEngine == NaiveEngine: trajectories of the engine-routed solvers.
+
+The FusedEngine single-sweep kernel uses the derived-vector formulation
+(s = A p, q = M s, w = A u recomputed in-tile) which equals the
+Ghysels-Vanroose recurrences in exact arithmetic; in fp64 the histories
+agree far below the fp32-tolerance gate of the acceptance criteria, until
+the residual hits the roundoff floor (where the derived-vector variant is
+the MORE stable of the two — it stagnates flat instead of wandering).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.krylov import (
+    ENGINES,
+    cg,
+    get_engine,
+    gmres,
+    pgmres,
+    pipecg,
+    pipecg_multi,
+    pipecr,
+    glen_law_band,
+    tridiagonal_laplacian,
+)
+
+RTOL = 1e-4  # the acceptance gate; fp64 actually achieves ~1e-8
+
+
+def _hist_close(a, b, rtol=RTOL, floor_rel=1e-10):
+    """Residual histories equal to rtol, above the roundoff floor."""
+    ha, hb = np.asarray(a), np.asarray(b)
+    floor = floor_rel * max(ha.max(), 1.0)
+    mask = ha > floor
+    assert mask.sum() > 0
+    np.testing.assert_allclose(ha[mask], hb[mask], rtol=rtol)
+
+
+@pytest.fixture(scope="module")
+def tri_system():
+    A = tridiagonal_laplacian(200)
+    b = jnp.asarray(np.random.default_rng(0).standard_normal(200))
+    return A, b
+
+
+def test_engine_registry():
+    assert set(ENGINES) >= {"naive", "fused"}
+    assert get_engine("fused") is ENGINES["fused"]
+    assert get_engine(None) is None
+    assert get_engine(ENGINES["naive"]) is ENGINES["naive"]
+    with pytest.raises(ValueError):
+        get_engine("warp-drive")
+
+
+def test_naive_engine_matches_legacy_pipecg(tri_system):
+    A, b = tri_system
+    r0 = pipecg(A, b, maxiter=80)
+    r1 = pipecg(A, b, maxiter=80, engine="naive")
+    np.testing.assert_allclose(np.asarray(r0.res_history),
+                               np.asarray(r1.res_history), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(r0.x), np.asarray(r1.x),
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_fused_engine_matches_naive_pipecg(tri_system):
+    A, b = tri_system
+    r1 = pipecg(A, b, maxiter=80, engine="naive")
+    r2 = pipecg(A, b, maxiter=80, engine="fused")
+    _hist_close(r1.res_history, r2.res_history)
+    scale = float(jnp.max(jnp.abs(r1.x)))
+    assert float(jnp.max(jnp.abs(r1.x - r2.x))) / scale < RTOL
+
+
+def test_fused_engine_pipecr(tri_system):
+    A, b = tri_system
+    r1 = pipecr(A, b, maxiter=60, engine="naive")
+    r2 = pipecr(A, b, maxiter=60, engine="fused")
+    _hist_close(r1.res_history, r2.res_history)
+
+
+def test_fused_engine_jacobi_preconditioned():
+    """Denser band (halo=10) + in-kernel Jacobi M."""
+    A = glen_law_band(300, bandwidth=10)
+    b = jnp.asarray(np.random.default_rng(1).standard_normal(300))
+    r1 = pipecg(A, b, maxiter=60, M="jacobi", engine="naive")
+    r2 = pipecg(A, b, maxiter=60, M="jacobi", engine="fused")
+    _hist_close(r1.res_history, r2.res_history)
+    assert float(r2.res_norm) < 1e-10  # fully converges
+
+
+@pytest.mark.parametrize("n", [200, 777, 1024])
+def test_fused_engine_non_multiple_block_sizes(n):
+    """Sizes that do / do not divide the kernel block (wrapper pads)."""
+    A = tridiagonal_laplacian(n)
+    b = jnp.asarray(np.random.default_rng(2).standard_normal(n))
+    r1 = pipecg(A, b, maxiter=50, engine="naive")
+    r2 = pipecg(A, b, maxiter=50, engine="fused")
+    _hist_close(r1.res_history, r2.res_history)
+
+
+def test_fused_engine_tol_freezing(tri_system):
+    A, b = tri_system
+    r = pipecg(A, b, maxiter=200, tol=1e-6, engine="fused")
+    assert int(r.iters) < 200
+    assert float(r.res_norm) <= 1e-6 * float(jnp.linalg.norm(b)) * 1.01
+
+
+def test_multi_rhs_batched_matches_single(tri_system):
+    """The batched kernel grid dimension: each RHS == its single-RHS solve,
+    and the fused batch == the vmapped naive batch."""
+    A, b = tri_system
+    B = jnp.stack([b, 2.0 * b + 1.0, jnp.flip(b)])
+    mF = pipecg_multi(A, B, maxiter=60, engine="fused")
+    mN = pipecg_multi(A, B, maxiter=60, engine="naive")
+    assert mF.x.shape == B.shape
+    assert mF.res_history.shape == (3, 60)
+    for j in range(B.shape[0]):
+        single = pipecg(A, B[j], maxiter=60, engine="fused")
+        np.testing.assert_allclose(np.asarray(single.x), np.asarray(mF.x[j]),
+                                   rtol=1e-12, atol=1e-12)
+        _hist_close(mN.res_history[j], mF.res_history[j])
+
+
+def test_multi_rhs_non_multiple_block(tri_system):
+    A = tridiagonal_laplacian(777)
+    B = jnp.asarray(np.random.default_rng(3).standard_normal((2, 777)))
+    mF = pipecg_multi(A, B, maxiter=40, engine="fused")
+    mN = pipecg_multi(A, B, maxiter=40, engine="naive")
+    for j in range(2):
+        _hist_close(mN.res_history[j], mF.res_history[j])
+
+
+def test_cg_engine_spmv_routing(tri_system):
+    A, b = tri_system
+    g0 = cg(A, b, maxiter=80)
+    gF = cg(A, b, maxiter=80, engine="fused")
+    np.testing.assert_allclose(np.asarray(g0.x), np.asarray(gF.x),
+                               rtol=1e-10, atol=1e-10)
+
+
+def test_gmres_engine_orthogonalization(tri_system):
+    """Engine GMRES uses one-pass CGS dots; same minimizer as MGS."""
+    A, b = tri_system
+    g0 = gmres(A, b, restart=60)
+    gF = gmres(A, b, restart=60, engine="fused")
+    assert abs(float(g0.res_norm) - float(gF.res_norm)) < 1e-8
+    np.testing.assert_allclose(np.asarray(g0.x), np.asarray(gF.x),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_pgmres_engine_fused_dots(tri_system):
+    A, b = tri_system
+    p0 = pgmres(A, b, restart=60)
+    pF = pgmres(A, b, restart=60, engine="fused")
+    assert abs(float(p0.res_norm) - float(pF.res_norm)) < 1e-8
+    np.testing.assert_allclose(np.asarray(p0.x), np.asarray(pF.x),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_fused_engine_callable_M_fallback(tri_system):
+    """An opaque callable M cannot run in-kernel: the FusedEngine falls
+    back to the update-kernel path and must still match naive."""
+    A, b = tri_system
+    inv_d = 1.0 / A.diagonal()
+    M = lambda r: inv_d * r
+    r1 = pipecg(A, b, maxiter=60, M=M, engine="naive")
+    r2 = pipecg(A, b, maxiter=60, M=M, engine="fused")
+    _hist_close(r1.res_history, r2.res_history)

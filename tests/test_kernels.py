@@ -1,11 +1,16 @@
 """Per-kernel allclose vs the ref.py oracle, swept over shapes/dtypes
 (parametrized + hypothesis-driven shape fuzzing), interpret=True on CPU."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:  # only the shape-fuzz test needs hypothesis (see requirements-dev.txt)
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels import ops, ref
 
@@ -58,10 +63,7 @@ def test_pipecg_fused_matches_ref(rng, n, dtype):
                                atol=1e-2 if dtype == jnp.float32 else 1e-8)
 
 
-@given(n=st.integers(8, 600), nb=st.integers(1, 4), seed=st.integers(0, 100))
-@settings(max_examples=20, deadline=None)
-def test_spmv_dia_shape_fuzz(n, nb, seed):
-    """Hypothesis sweep: arbitrary sizes/band counts stay allclose."""
+def _spmv_fuzz_case(n, nb, seed):
     r = np.random.default_rng(seed)
     offsets = tuple(sorted(r.choice(np.arange(-4, 5), size=nb, replace=False).tolist()))
     halo = max(abs(o) for o in offsets)
@@ -71,6 +73,19 @@ def test_spmv_dia_shape_fuzz(n, nb, seed):
     want = ref.spmv_dia_ref(offsets, bands, x_ext, halo)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-10,
                                atol=1e-10)
+
+
+if HAVE_HYPOTHESIS:
+    @given(n=st.integers(8, 600), nb=st.integers(1, 4), seed=st.integers(0, 100))
+    @settings(max_examples=20, deadline=None)
+    def test_spmv_dia_shape_fuzz(n, nb, seed):
+        """Hypothesis sweep: arbitrary sizes/band counts stay allclose."""
+        _spmv_fuzz_case(n, nb, seed)
+else:
+    @pytest.mark.parametrize("n,nb,seed", [(8, 1, 0), (97, 2, 1), (600, 4, 2)])
+    def test_spmv_dia_shape_fuzz(n, nb, seed):
+        """Deterministic fallback sweep (hypothesis not installed)."""
+        _spmv_fuzz_case(n, nb, seed)
 
 
 def test_kernel_backed_operator_in_solver(rng):

@@ -1,10 +1,14 @@
 """Property-based tests (hypothesis) for the makespan model invariants."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
-import jax.numpy as jnp
-import numpy as np
-from hypothesis import given, settings
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (see requirements-dev.txt)")
+import hypothesis.extra.numpy as hnp  # noqa: E402
+import hypothesis.strategies as st  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core.perfmodel import (
     Exponential,
