@@ -1,0 +1,56 @@
+"""Campaign bench: the smoke preset through the full experiments pipeline.
+
+Runs ``repro.experiments.run_campaign`` (discrete-event measurement,
+fitting round-trip, real noisy shard_map execution, validation, report
+emission) and surfaces the acceptance checks plus the key measured-vs-
+modeled cells as harness rows.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+_DEFAULT_OUT = Path(__file__).resolve().parent.parent / "results"
+
+
+def run(out_dir=None):
+    import jax
+    from repro.experiments import get_preset, run_campaign
+
+    # match the campaign CLI: the execution stage wants fp64 so both
+    # entry points write consistent artifacts; restored afterwards so
+    # other bench modules keep their fp32 design regardless of ordering
+    prev_x64 = bool(jax.config.jax_enable_x64)
+    jax.config.update("jax_enable_x64", True)
+
+    default = out_dir is None
+    out = Path(out_dir) if out_dir is not None else _DEFAULT_OUT
+    json_out = (out.parent / "BENCH_campaign.json" if default
+                else out / "BENCH_campaign.json")
+    try:
+        result = run_campaign(get_preset("smoke"), out_dir=out,
+                              json_out=json_out)
+    finally:
+        jax.config.update("jax_enable_x64", prev_x64)
+
+    rows = []
+    for check, ok in result["validation"]["acceptance"].items():
+        rows.append((f"campaign/acceptance/{check.replace(' ', '_')}",
+                     float("nan"), "PASS" if ok else "FAIL"))
+    for c in result["cells"]:
+        if c["solver"] != "pipecg":
+            continue
+        rows.append((f"campaign/speedup/{c['noise']}/P{c['P']}", float("nan"),
+                     f"measured={c['measured_speedup']:.4f} "
+                     f"modeled={c['modeled_speedup']:.4f} "
+                     f"rel_err={c['rel_err']:.4f}"))
+    for noise, fit in result["wait_fits"].items():
+        rows.append((f"campaign/fit/{noise}", float("nan"),
+                     f"best={fit['best_family']} "
+                     f"injected={fit['injected_family'] or '(trace)'}"))
+    rows.append(("campaign/report", float("nan"), str(out / "REPORT.md")))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(*r, sep=",")

@@ -1,42 +1,31 @@
 """E6 — Figs. 5-6: ECDFs + MLE fits + test decisions for the simulated
-PGMRES (n=12) and PIPECG (n=20) run sets; writes CSV point files."""
+PGMRES (n=12) and PIPECG (n=20) run sets; writes CSV point files through
+the campaign reporting API (repro.experiments.report)."""
 from __future__ import annotations
 
 from pathlib import Path
 
-import numpy as np
-
 from repro.core.noise import generate_runs
-from repro.core.stats import ecdf_with_fits, fit_report
+from repro.experiments.fitting import fit_cell
+from repro.experiments.report import write_ecdf_csv
 
-OUT = Path(__file__).resolve().parent.parent / "results" / "figures"
+_DEFAULT_OUT = Path(__file__).resolve().parent.parent / "results"
 
 
-def run():
+def run(out_dir=None):
+    out = Path(out_dir) if out_dir is not None else _DEFAULT_OUT
     rows = []
-    OUT.mkdir(parents=True, exist_ok=True)
     for alg, n in (("PGMRES", 12), ("PIPECG", 20)):
         runs = generate_runs(alg, n=n, seed=1)
-        x, F, fits = ecdf_with_fits(runs)
-        csv = OUT / f"fig_{alg.lower()}_ecdf.csv"
-        with open(csv, "w") as f:
-            f.write("x,ecdf," + ",".join(fits) + "\n")
-            for i in range(len(x)):
-                f.write(f"{x[i]:.6f},{F[i]:.6f},"
-                        + ",".join(f"{fits[k][i]:.6f}" for k in fits) + "\n")
-        rep = fit_report(runs, name=alg)
-        rows.append((f"fig56/{alg}/uniform", float("nan"),
-                     f"T={rep.uniform.modified_statistic:.4f} "
-                     f"crit={rep.uniform.critical_value:.3f} "
-                     f"{'REJECT' if rep.uniform.reject else 'accept'}"))
-        rows.append((f"fig56/{alg}/exponential", float("nan"),
-                     f"T={rep.exponential.modified_statistic:.4f} "
-                     f"crit={rep.exponential.critical_value:.3f} "
-                     f"{'REJECT' if rep.exponential.reject else 'accept'}"))
-        rows.append((f"fig56/{alg}/lognormal", float("nan"),
-                     f"T={rep.lognormal.statistic:.4f} "
-                     f"crit={rep.lognormal.critical_value:.3f} "
-                     f"{'REJECT' if rep.lognormal.reject else 'accept'}"))
+        csv = write_ecdf_csv(out, alg, runs, stem=f"fig_{alg.lower()}_ecdf")
+        fit = fit_cell(runs, name=alg)
+        for fam in ("uniform", "exponential", "lognormal"):
+            s = fit["statistics"][fam]
+            rows.append((f"fig56/{alg}/{fam}", float("nan"),
+                         f"T={s['T']:.4f} crit={s['crit']:.3f} "
+                         f"{'REJECT' if fit['verdicts'][fam] else 'accept'}"))
+        rows.append((f"fig56/{alg}/best_family", float("nan"),
+                     fit["best_family"]))
         rows.append((f"fig56/{alg}/ecdf_csv", float("nan"), str(csv)))
     return rows
 

@@ -61,7 +61,9 @@ def _modeled_us(words, dtype_bytes=4):
     return words * dtype_bytes / HW.hbm_bw * 1e6
 
 
-def run():
+def run(out_dir=None):
+    json_path = (JSON_PATH if out_dir is None
+                 else os.path.join(out_dir, "BENCH_kernels.json"))
     rows = []
     record = {"hw": {"hbm_bw_Bps": HW.hbm_bw}, "kernels": {}}
     rng = np.random.default_rng(0)
@@ -150,9 +152,10 @@ def run():
                  f"block={blk} backend={jax.default_backend()}"))
     record["autotune"] = {"block": blk, "backend": jax.default_backend()}
 
-    with open(JSON_PATH, "w") as f:
+    os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+    with open(json_path, "w") as f:
         json.dump(record, f, indent=2, sort_keys=True)
-    rows.append(("kernel/json", float("nan"), f"wrote {os.path.basename(JSON_PATH)}"))
+    rows.append(("kernel/json", float("nan"), f"wrote {os.path.basename(json_path)}"))
     return rows
 
 

@@ -1,10 +1,9 @@
-"""E2-E4 — Section 3 speedup curves: analytic (closed/quadrature) vs Monte
-Carlo for uniform / exponential / log-normal / gamma / pareto noise."""
+"""E2-E4 — Section 3 speedup curves through the campaign API: analytic
+(closed/quadrature) predictions vs discrete-event Monte-Carlo measurement
+for uniform / exponential / log-normal / gamma / pareto noise."""
 from __future__ import annotations
 
 import time
-
-import numpy as np
 
 from repro.core.perfmodel import (
     Exponential,
@@ -13,11 +12,11 @@ from repro.core.perfmodel import (
     Pareto,
     Uniform,
     asymptotic_speedup,
-    expected_max_mc,
     harmonic,
-    simulate,
     uniform_speedup,
 )
+from repro.experiments.runner import measured_makespans
+from repro.experiments.validation import modeled_speedup
 
 PS = (2, 4, 16, 64, 256, 1024, 8192)
 
@@ -34,8 +33,7 @@ def run():
     for name, d in dists.items():
         for P in PS:
             t0 = time.perf_counter()
-            s = asymptotic_speedup(d, P, method="auto" if name in
-                                   ("uniform", "exponential") else "quad")
+            s = modeled_speedup(d, P)
             us = (time.perf_counter() - t0) * 1e6
             ref = ""
             if name == "uniform":
@@ -53,11 +51,13 @@ def run():
     rows.append(("speedup/exponential_paper/P4", float("nan"),
                  f"{asymptotic_speedup(Exponential(1.0), 4):.6f} (paper 25/12)"))
 
-    # Monte-Carlo finite-K convergence to the asymptote (exp, P=8)
+    # Monte-Carlo finite-K convergence to the asymptote (exp, P=8),
+    # via the campaign's streamed discrete-event measurement
     for K in (10, 100, 1000):
-        ms = simulate(Exponential(1.0), P=8, K=K, trials=200, seed=0)
+        mm = measured_makespans(Exponential(1.0), P=8, iters=K, trials=200,
+                                seed=0)
         rows.append((f"speedup/exp_P8_finiteK{K}", float("nan"),
-                     f"{ms.speedup_of_means:.4f} -> asym {harmonic(8):.4f}"))
+                     f"{mm.speedup:.4f} -> asym {harmonic(8):.4f}"))
     return rows
 
 

@@ -148,7 +148,14 @@ def markdown_table(cells) -> str:
     return hdr + "\n".join(rows)
 
 
-def run():
+def run(out_dir=None):
+    """Analyze cells and write roofline_single.json.
+
+    Dry-run inputs are always read from the repo's results/ tree; the
+    JSON artifact honors ``out_dir`` when given.
+    """
+    out = Path(out_dir) if out_dir is not None else RESULTS
+    out.mkdir(parents=True, exist_ok=True)
     cells = all_cells("single")
     rows = []
     for c in cells:
@@ -156,7 +163,7 @@ def run():
                      f"dom={c['dominant']} frac={c['roofline_fraction']:.3f} "
                      f"comp={c['t_compute_s']:.3f}s mem={c['t_memory_s']:.3f}s "
                      f"coll={c['t_collective_s']:.3f}s"))
-    (RESULTS / "roofline_single.json").write_text(
+    (out / "roofline_single.json").write_text(
         json.dumps(cells, indent=1, default=float))
     return rows
 

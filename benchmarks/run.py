@@ -1,14 +1,21 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+
+``--out-dir DIR`` redirects every file artifact (figure CSVs, BENCH
+JSONs, REPORT.md); modules whose ``run`` accepts ``out_dir`` receive it,
+the rest produce no files.  Default: the repo's ``results/``.
 """
 from __future__ import annotations
 
+import argparse
+import inspect
 import sys
 import time
 import traceback
 
 from benchmarks import (
+    bench_campaign,
     bench_folk_theorem,
     bench_speedup_curves,
     bench_table1,
@@ -25,17 +32,27 @@ MODULES = [
     ("fig5_fig6 (E6)", bench_fig5_fig6),
     ("solvers (E7/E8)", bench_solvers),
     ("kernels", bench_kernels),
+    ("campaign (smoke preset)", bench_campaign),
     ("roofline (deliverable g)", roofline),
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.run")
+    ap.add_argument("--out-dir", default=None,
+                    help="directory for all file artifacts "
+                         "(default: repo results/)")
+    args = ap.parse_args(argv)
+
     print("name,us_per_call,derived")
     failures = 0
     for title, mod in MODULES:
         t0 = time.time()
         try:
-            rows = mod.run()
+            kw = {}
+            if "out_dir" in inspect.signature(mod.run).parameters:
+                kw["out_dir"] = args.out_dir
+            rows = mod.run(**kw)
             for name, us, derived in rows:
                 us_s = f"{us:.3f}" if us == us else ""
                 print(f"{name},{us_s},{derived}")

@@ -11,11 +11,17 @@ the local ones — the rearranged data dependencies mean the psum produced at
 the end of iteration i is consumed only after the next SpMV, which is what
 lets XLA's latency-hiding scheduler overlap the collective (split-phase
 semantics, cf. DESIGN.md §Hardware-adaptation).
+
+``distributed_solve(..., noise=...)`` splices a host-side NoiseHook
+(core/noise/injection.py) into the per-shard SpMV so every Krylov
+iteration stalls for a freshly sampled waiting time — the campaign
+runner's in-silico rendering of the paper's noisy Piz Daint runs
+(DESIGN.md §In-silico-noise-traces).
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +30,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.krylov.base import SolveResult, make_psum_dot
 from repro.core.krylov.operators import DiaMatrix
+from repro.core.noise.injection import NoiseHook
 
 AXIS = "shards"
 
@@ -81,10 +88,17 @@ def dia_matvec_local(offsets, bands_local, x_local, axis_name: str = AXIS,
 
 
 def distributed_solve(solver: Callable, A: DiaMatrix, b: jnp.ndarray,
-                      mesh: Mesh, *, use_kernel: bool = False, **solver_kw
+                      mesh: Mesh, *, use_kernel: bool = False,
+                      noise: Optional[NoiseHook] = None, **solver_kw
                       ) -> SolveResult:
     """Run ``solver`` (cg / pipecg / cr / pipecr / gmres / pgmres) with the
-    vector sharded over every device of ``mesh`` (flattened)."""
+    vector sharded over every device of ``mesh`` (flattened).
+
+    ``noise`` (a ``NoiseHook`` or None): when given, each per-shard SpMV is
+    followed by a host callback that sleeps a sampled waiting time; the
+    callback's zero result is added to the SpMV output so the stall sits on
+    the data-dependent critical path (cannot be hoisted or elided).
+    """
     axes = mesh.axis_names
     spec_v = P(axes)       # vectors sharded over all axes (flattened)
     spec_b = P(None, axes)  # bands: (n_bands, N) sharded on N
@@ -93,9 +107,23 @@ def distributed_solve(solver: Callable, A: DiaMatrix, b: jnp.ndarray,
     offsets = A.offsets
 
     def run(bands_local, b_local):
-        mv = functools.partial(dia_matvec_local, offsets, bands_local,
-                               axis_name=axes if len(axes) > 1 else axes[0],
-                               use_kernel=use_kernel)
+        mv0 = functools.partial(dia_matvec_local, offsets, bands_local,
+                                axis_name=axes if len(axes) > 1 else axes[0],
+                                use_kernel=use_kernel)
+        if noise is None:
+            mv = mv0
+        else:
+            from jax.experimental import io_callback
+
+            def mv(v):
+                y = mv0(v)
+                # io_callback is effectful, so XLA may not elide, cache or
+                # hoist it out of the solver scan; its (zero) result is
+                # added to y so the sleep stays on the critical path.
+                tick = io_callback(noise,
+                                   jax.ShapeDtypeStruct((), jnp.float32),
+                                   ordered=False)
+                return y + tick.astype(y.dtype)
         return solver(mv, b_local, dot=dot, **solver_kw)
 
     out_specs = SolveResult(x=spec_v, iters=P(), res_norm=P(), res_history=P())

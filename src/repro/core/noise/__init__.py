@@ -1,4 +1,10 @@
-"""OS-noise modeling: calibrated traces + solver phase simulator."""
+"""OS-noise modeling: calibrated traces, solver phase simulator, and
+wall-clock noise injection for real solver runs."""
+from repro.core.noise.injection import NoiseHook, make_noise_hook  # noqa: F401
+from repro.core.noise.sampling import (  # noqa: F401
+    sample_np,
+    scale_distribution,
+)
 from repro.core.noise.simulator import (  # noqa: F401
     Hardware,
     SolverPhaseModel,
@@ -10,8 +16,10 @@ from repro.core.noise.traces import (  # noqa: F401
     EX23_N,
     PIZ_DAINT_P,
     TABLE1,
+    EmpiricalDistribution,
     RunModel,
     calibrated_model,
     generate_runs,
     makespan_trace_large,
+    trace_distribution,
 )

@@ -1,0 +1,95 @@
+"""Wall-clock noise injection for real solver runs
+(DESIGN.md §In-silico-noise-traces).
+
+The paper measures solvers under *ambient* OS noise; this container has
+none worth speaking of, so the campaign runner (repro.experiments) injects
+its own: a host-side callback that sleeps a freshly sampled waiting time is
+spliced into the per-iteration critical path of the shard_map solvers
+(core/krylov/distributed.py).  Because the callback's (zero) result is
+added to the iterate, XLA cannot hoist or elide the delay — every Krylov
+iteration really does stall for ``scale * W`` seconds with ``W ~ dist``,
+which is exactly the T_p = t_compute + W_p decomposition of the paper's
+Eq. (6)/(7).
+
+The injector records every sample it injects, so the fitting stage can
+verify that the distribution recovered from *measured* run times matches
+the one that was injected (the campaign's round-trip check).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.perfmodel.distributions import Distribution
+
+
+class NoiseHook:
+    """Samples waiting times from ``dist`` and sleeps them on the host.
+
+    Parameters
+    ----------
+    dist:
+        Waiting-time distribution (units: dimensionless draws; the hook
+        multiplies by ``scale`` to get seconds).
+    scale:
+        Seconds per unit draw.  ``scale=1e-3`` with ``Exponential(1.0)``
+        injects exponential waits with a 1 ms mean.
+    seed:
+        Host-side numpy RNG seed (independent of any JAX PRNG).
+
+    The hook is *stateful on the host*: each call advances the RNG and
+    appends the injected wait (in seconds) to ``record``.  On a
+    multi-device mesh XLA runs the per-shard callbacks on separate host
+    threads, so draw + record are guarded by a lock (the sleep itself is
+    outside it — stalls must overlap across shards, not serialize).
+    """
+
+    def __init__(self, dist: Distribution, scale: float = 1e-3,
+                 seed: int = 0, record_cap: int = 100_000):
+        self.dist = dist
+        self.scale = float(scale)
+        self._rng = np.random.default_rng(seed)
+        self._lock = threading.Lock()
+        self.record: List[float] = []
+        self._cap = record_cap
+
+    def sample(self) -> float:
+        """Draw one waiting time in seconds (records it, does not sleep).
+
+        Uses the native numpy samplers (core/noise/sampling.py) — no JAX
+        dispatch on the measured critical path.
+        """
+        from repro.core.noise.sampling import sample_np
+        with self._lock:
+            w = float(sample_np(self.dist, self._rng, ())) * self.scale
+            if len(self.record) < self._cap:
+                self.record.append(w)
+        return w
+
+    def __call__(self) -> np.ndarray:
+        """io_callback entry point: sleep a sampled wait, return 0.0.
+
+        Must stay routed through an *effectful* callback
+        (``jax.experimental.io_callback``) — a pure_callback is legal to
+        hoist out of the solver scan as loop-invariant, which silently
+        collapses all iterations' stalls into one.  Returns a float32
+        zero scalar so the caller can add it to a live value and keep the
+        delay on the data-dependent critical path.
+        """
+        time.sleep(self.sample())
+        return np.zeros((), np.float32)
+
+    def waits(self) -> np.ndarray:
+        """All injected waits so far, in seconds, as an array."""
+        return np.asarray(self.record, np.float64)
+
+
+def make_noise_hook(dist: Optional[Distribution], scale: float = 1e-3,
+                    seed: int = 0) -> Optional[NoiseHook]:
+    """``NoiseHook`` factory that forwards ``None`` (= no injection)."""
+    if dist is None:
+        return None
+    return NoiseHook(dist, scale=scale, seed=seed)

@@ -2,9 +2,10 @@
 
 The Piz Daint experiments (PETSc KSP ex23, 8192 cores, 5000 forced Krylov
 iterates, n=12 PGMRES / n=20 PIPECG repeats) cannot be re-run in this
-container; per DESIGN.md we reproduce them *in silico* with the same model
-the paper proposes: per-run total time = deterministic base + stochastic
-OS-noise accumulation, with the noise well-modeled as exponential.
+container; per DESIGN.md §In-silico-noise-traces we reproduce them *in
+silico* with the same model the paper proposes: per-run total time =
+deterministic base + stochastic OS-noise accumulation, with the noise
+well-modeled as exponential.
 
 ``TABLE1`` records the paper's observed statistics; ``generate_runs``
 produces samples whose summary statistics and test verdicts reproduce the
@@ -13,9 +14,12 @@ paper's (validated in tests/test_table1.py and benchmarks/bench_table1.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import ClassVar, Dict
 
+import jax.numpy as jnp
 import numpy as np
+
+from repro.core.perfmodel.distributions import Distribution
 
 # The paper's Table 1 (observed on Piz Daint).
 TABLE1: Dict[str, Dict[str, float]] = {
@@ -61,10 +65,74 @@ def calibrated_model(alg: str) -> RunModel:
 
 
 def generate_runs(alg: str, n: int = 0, seed: int = 0) -> np.ndarray:
+    """Sample ``n`` calibrated run times for ``alg`` (deterministic in
+    ``seed``: the per-algorithm stream offset is a stable CRC, not
+    Python's per-process-randomized ``hash``)."""
+    import zlib
     row = TABLE1[alg]
     n = n or int(row["n"])
-    rng = np.random.default_rng(seed + hash(alg) % 65536)
+    rng = np.random.default_rng(seed + zlib.crc32(alg.encode()) % 65536)
     return calibrated_model(alg).sample(n, rng)
+
+
+@dataclasses.dataclass(frozen=True)
+class EmpiricalDistribution(Distribution):
+    """Distribution backed by recorded samples (a noise *trace*).
+
+    Quantiles interpolate the empirical quantile function; the CDF is the
+    right-continuous ECDF.  This is what lets recorded traces (Table-1
+    calibrated runs, or waits recorded by a NoiseHook) flow through the
+    same E[max] / asymptotic-speedup machinery as the closed-form families
+    of the paper's §3 — see DESIGN.md §In-silico-noise-traces.
+
+    ``samples`` must be a sorted 1-D tuple of floats (use
+    ``from_samples``); units are whatever the trace was recorded in.
+    """
+
+    samples: tuple = ()
+    trace_name: str = "trace"
+    name: ClassVar[str] = "empirical"
+
+    @staticmethod
+    def from_samples(x, trace_name: str = "trace") -> "EmpiricalDistribution":
+        """Build from any array-like of recorded values (sorts a copy)."""
+        xs = np.sort(np.asarray(x, np.float64))
+        return EmpiricalDistribution(samples=tuple(float(v) for v in xs),
+                                     trace_name=trace_name)
+
+    def _xs(self):
+        return jnp.asarray(self.samples)
+
+    def cdf(self, x):
+        """Right-continuous ECDF: #(samples <= x) / n."""
+        xs = self._xs()
+        return jnp.searchsorted(xs, jnp.asarray(x), side="right") / len(
+            self.samples)
+
+    def quantile(self, u):
+        """Linear interpolation of the empirical quantile function."""
+        xs = self._xs()
+        n = len(self.samples)
+        grid = (jnp.arange(1, n + 1) - 0.5) / n
+        return jnp.interp(jnp.asarray(u), grid, xs)
+
+    @property
+    def mean(self):
+        """Sample mean of the trace."""
+        return float(np.mean(self.samples))
+
+
+def trace_distribution(alg: str, n: int = 256, seed: int = 0
+                       ) -> EmpiricalDistribution:
+    """Recorded-trace noise source for the campaign runner.
+
+    Draws ``n`` run times from the Table-1 calibrated model for ``alg``
+    (one of GMRES / PGMRES / CG / PIPECG) and wraps them as an
+    ``EmpiricalDistribution`` — the campaign's ``trace:<ALG>`` noise names
+    resolve here.
+    """
+    runs = generate_runs(alg, n=n, seed=seed)
+    return EmpiricalDistribution.from_samples(runs, trace_name=f"trace:{alg}")
 
 
 def makespan_trace_large(P: int, K: int, *, t0: float, noise_scale: float,

@@ -1,4 +1,12 @@
-"""Stochastic performance model for pipelined Krylov methods (paper core)."""
+"""Stochastic performance model for pipelined Krylov methods (paper core).
+
+Usage::
+
+    >>> from repro.core.perfmodel import Exponential, asymptotic_speedup
+    >>> asymptotic_speedup(Exponential(1.0), P=4)     # H_4 = 25/12 > 2
+    >>> from repro.core.perfmodel import simulate
+    >>> simulate(Exponential(1.0), P=8, K=1000).speedup_of_means
+"""
 from repro.core.perfmodel.distributions import (  # noqa: F401
     Deterministic,
     Distribution,

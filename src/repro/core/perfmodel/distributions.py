@@ -20,6 +20,14 @@ SQRT2 = math.sqrt(2.0)
 
 @dataclasses.dataclass(frozen=True)
 class Distribution:
+    """Waiting-time distribution interface (units: arbitrary but
+    consistent time unit; campaign code treats draws as dimensionless and
+    scales to seconds where needed).
+
+    Subclasses provide ``pdf`` / ``cdf`` / ``quantile`` (vectorized over
+    jnp arrays), the scalar ``mean``, and inherit inverse-CDF ``sample``.
+    """
+
     name: ClassVar[str] = "base"
 
     def pdf(self, x):  # pragma: no cover - abstract
@@ -44,6 +52,8 @@ class Distribution:
 
 @dataclasses.dataclass(frozen=True)
 class Uniform(Distribution):
+    """Uniform on [a, b] — the paper's §3.2 waiting-time window."""
+
     a: float = 0.0
     b: float = 1.0
     name: ClassVar[str] = "uniform"
@@ -65,6 +75,9 @@ class Uniform(Distribution):
 
 @dataclasses.dataclass(frozen=True)
 class Exponential(Distribution):
+    """Exponential with rate ``lam`` (mean 1/lam) — §3.3, the OS-noise
+    model the paper's measurements support."""
+
     lam: float = 1.0
     name: ClassVar[str] = "exponential"
 
@@ -84,6 +97,8 @@ class Exponential(Distribution):
 
 @dataclasses.dataclass(frozen=True)
 class LogNormal(Distribution):
+    """Log-normal: ln X ~ N(mu, sigma^2) — §3.4 (quadrature only)."""
+
     mu: float = 0.0
     sigma: float = 1.0
     name: ClassVar[str] = "lognormal"
@@ -191,6 +206,9 @@ class Shifted(Distribution):
 
 @dataclasses.dataclass(frozen=True)
 class Deterministic(Distribution):
+    """Point mass at ``c``: the deterministic (no-noise) limit, in which
+    the folk theorem forbids any speedup (§2)."""
+
     c: float = 1.0
     name: ClassVar[str] = "deterministic"
 

@@ -34,6 +34,11 @@ def harmonic(P: int) -> float:
 
 
 def expected_max_closed(dist: Distribution, P: int) -> Optional[float]:
+    """Closed-form E[max of P iid draws], or None when no closed form.
+
+    Known: Uniform (a+Pb)/(P+1); Exponential H_P/lambda; Deterministic c;
+    Shifted recurses on its base.  Units follow the distribution's.
+    """
     if isinstance(dist, Uniform):
         return (dist.a + P * dist.b) / (P + 1)
     if isinstance(dist, Exponential):
@@ -50,6 +55,12 @@ _GL_NODES = 512
 
 
 def expected_max_quad(dist: Distribution, P: int, nodes: int = _GL_NODES) -> float:
+    """E[max] by Gauss-Legendre quadrature of int_0^1 Q(v^(1/P)) dv.
+
+    Needs only ``dist.quantile``; the substitution keeps the integrand
+    well-conditioned even at P = 8192 (see module docstring).  ``nodes``
+    trades accuracy for time (512 is ~1e-6 relative on the §3 families).
+    """
     x, w = np.polynomial.legendre.leggauss(nodes)
     v = 0.5 * (x + 1.0)          # [0, 1]
     w = 0.5 * w
@@ -60,12 +71,19 @@ def expected_max_quad(dist: Distribution, P: int, nodes: int = _GL_NODES) -> flo
 
 def expected_max_mc(dist: Distribution, P: int, trials: int = 20000,
                     seed: int = 0) -> float:
+    """E[max] by Monte Carlo: mean over ``trials`` of max over P draws."""
     rng = jax.random.PRNGKey(seed)
     draws = dist.sample(rng, (trials, P))
     return float(jnp.mean(jnp.max(draws, axis=1)))
 
 
 def expected_max(dist: Distribution, P: int, method: str = "auto") -> float:
+    """E[max of P iid draws] from ``dist`` — Eq. (8) of the paper.
+
+    ``method``: ``"auto"`` (closed form when known, else quadrature),
+    ``"closed"`` (raise when unavailable), ``"quad"``, or ``"mc"``.
+    Result is in the distribution's time unit.
+    """
     if method in ("auto", "closed"):
         c = expected_max_closed(dist, P)
         if c is not None:

@@ -21,6 +21,9 @@ from repro.core.perfmodel.distributions import Distribution
 
 
 class MakespanSamples(NamedTuple):
+    """Monte-Carlo makespan samples: synchronized vs pipelined, one entry
+    per trial, in the sampled distribution's time unit."""
+
     t_sync: jnp.ndarray    # (trials,)
     t_async: jnp.ndarray   # (trials,)
 

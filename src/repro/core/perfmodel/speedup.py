@@ -4,6 +4,12 @@ Closed results validated against the paper:
   uniform on [0,b]:  2P/(P+1)            (< 2 always, §3.2)
   exponential:       H_P                 (> 2 for P >= 4; 25/12 at P=4, §3.3)
   log-normal(0,1):   ~1.5205 at P=2, ~2.2081 at P=4 (numerical, §3.4)
+
+Usage::
+
+    >>> from repro.core.perfmodel import Exponential, asymptotic_speedup
+    >>> asymptotic_speedup(Exponential(1.0), P=4)   # H_4 = 25/12
+    2.0833...
 """
 from __future__ import annotations
 
@@ -14,26 +20,67 @@ from repro.core.perfmodel.expected_max import expected_max, harmonic
 
 
 def asymptotic_speedup(dist: Distribution, P: int, method: str = "auto") -> float:
-    """Speedup of the pipelined (no-synchronization) variant as K -> inf."""
+    """Speedup of the pipelined (no-synchronization) variant as K -> inf.
+
+    Parameters
+    ----------
+    dist:
+        Per-step time distribution T_p (any time unit; the speedup is a
+        unitless ratio).
+    P:
+        Number of processes taking the per-step maximum.
+    method:
+        ``"auto"`` (closed form when available, else Gauss-Legendre
+        quadrature), ``"closed"``, ``"quad"``, or ``"mc"`` — forwarded to
+        ``expected_max``.
+
+    Returns the ratio E[max of P iid draws] / E[draw] (paper Eq. 8).
+    """
     return expected_max(dist, P, method=method) / float(dist.mean)
 
 
 def uniform_speedup(P: int, a: float = 0.0, b: float = 1.0) -> float:
+    """Closed-form §3.2 speedup for Uniform(a, b): 2(a + Pb)/((P+1)(a+b)).
+
+    Strictly below 2 for every P when a = 0 — the stochastic face of the
+    folk theorem.  ``a``/``b`` are in the same (arbitrary) time unit.
+    """
     return 2.0 * (a + P * b) / ((P + 1) * (a + b))
 
 
 def exponential_speedup(P: int) -> float:
+    """Closed-form §3.3 speedup for Exponential waits: the harmonic sum H_P.
+
+    Independent of the rate lambda (the ratio is scale-free); exceeds 2
+    from P = 4 on (H_4 = 25/12).
+    """
     return harmonic(P)
 
 
 def speedup_table(dist: Distribution, Ps: Sequence[int],
                   method: str = "auto") -> Dict[int, float]:
+    """``{P: asymptotic_speedup(dist, P)}`` over a grid of process counts."""
     return {P: asymptotic_speedup(dist, P, method=method) for P in Ps}
 
 
 def min_procs_exceeding(dist: Distribution, bound: float = 2.0,
                         pmax: int = 1 << 20) -> int:
-    """Smallest P with asymptotic speedup > bound (paper: P=4 for exp)."""
+    """Smallest process count P whose asymptotic speedup exceeds ``bound``.
+
+    Parameters
+    ----------
+    dist:
+        Per-step time distribution (any time unit).
+    bound:
+        Speedup threshold to cross; default 2.0, the folk-theorem bound
+        (the paper's headline: P = 4 for exponential waits).
+    pmax:
+        Search cutoff.  P is scanned densely up to 16, then geometrically
+        (heavy-tailed families may need very large P).
+
+    Returns the crossover P, or -1 if the speedup never exceeds ``bound``
+    up to ``pmax`` (e.g. uniform waits: 2P/(P+1) < 2 for all P).
+    """
     P = 2
     while P <= pmax:
         if asymptotic_speedup(dist, P) > bound:

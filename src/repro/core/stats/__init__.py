@@ -1,4 +1,12 @@
-"""Statistical identification of the noise distribution (paper §4)."""
+"""Statistical identification of the noise distribution (paper §4).
+
+Usage::
+
+    >>> from repro.core.stats import fit_report
+    >>> rep = fit_report(run_times_seconds, name="PIPECG")
+    >>> rep.verdicts()          # {"uniform": True (=reject), ...}
+    >>> rep.summary["lambda"]   # 1/mean, the paper's Table-1 column
+"""
 from repro.core.stats.cramer_von_mises import (  # noqa: F401
     TestResult,
     cramer_von_mises,

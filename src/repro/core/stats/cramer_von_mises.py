@@ -27,6 +27,11 @@ CRITICAL_05 = {"known": 0.461, "exponential": 0.224, "normal": 0.126}
 
 
 def cvm_statistic(samples, cdf: Callable) -> float:
+    """Cramér-von Mises statistic T (Eq. 9) of ``samples`` against ``cdf``.
+
+    ``cdf`` is any vectorized F(x) (e.g. a fitted ``Distribution.cdf``);
+    the statistic is unitless.
+    """
     x = np.sort(np.asarray(samples, np.float64))
     n = x.shape[0]
     F = np.asarray(cdf(x), np.float64)
@@ -47,6 +52,16 @@ def _stephens_modified(t: float, n: int, case: str) -> float:
 
 @dataclasses.dataclass
 class TestResult:
+    """Outcome of one goodness-of-fit test.
+
+    ``statistic`` is the raw T; ``modified_statistic`` applies Stephens'
+    small-sample correction (equal to ``statistic`` when none applies);
+    ``reject`` compares the modified statistic against
+    ``critical_value`` at level ``alpha``; ``method`` records how the
+    critical value was obtained (table / bootstrap / mc); ``fitted`` is
+    the plug-in distribution when parameters were estimated.
+    """
+
     statistic: float
     modified_statistic: float
     critical_value: float
@@ -61,9 +76,24 @@ def cramer_von_mises(samples, family: str, alpha: float = 0.05,
     """Composite CvM test: fit ``family`` by the paper's estimators, compute
     T (Eq. 9), compare against the alpha=0.05 critical value.
 
-    ``bootstrap > 0`` replaces the tabulated critical value by a parametric
-    bootstrap (recommended for the uniform case, where min/max estimation
-    has no classical table).
+    Parameters
+    ----------
+    samples:
+        1-D run/wait times (any consistent time unit).
+    family:
+        One of ``FITTERS``: "uniform", "exponential",
+        "exponential_shifted", "lognormal".
+    alpha:
+        Significance level (tabulated values are for 0.05).
+    bootstrap:
+        > 0 replaces the tabulated critical value by a parametric
+        bootstrap with that many resamples (recommended for the uniform
+        case, where min/max estimation has no classical table).
+    seed:
+        RNG seed for the bootstrap.
+
+    Returns a ``TestResult`` with the fitted distribution attached;
+    ``reject=True`` means the family is rejected at ``alpha``.
     """
     x = np.asarray(samples, np.float64)
     n = x.shape[0]

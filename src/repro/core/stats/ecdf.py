@@ -14,5 +14,6 @@ def ecdf(samples) -> Tuple[np.ndarray, np.ndarray]:
 
 
 def ecdf_at(samples, x) -> np.ndarray:
+    """Evaluate the right-continuous ECDF of ``samples`` at points ``x``."""
     s = np.sort(np.asarray(samples, dtype=np.float64))
     return np.searchsorted(s, np.asarray(x), side="right") / s.shape[0]

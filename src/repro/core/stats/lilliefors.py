@@ -42,6 +42,11 @@ def lilliefors_statistic(samples) -> float:
 
 
 def critical_value_05(n: int) -> float:
+    """alpha = 0.05 Lilliefors critical value for sample size ``n``.
+
+    Classical table (with linear interpolation) for 4 <= n <= 30;
+    asymptotic 0.886/sqrt(n) beyond; 1.0 (never reject) for n < 4.
+    """
     if n in _TABLE_05:
         return _TABLE_05[n]
     if n < 4:
@@ -59,8 +64,27 @@ def critical_value_05(n: int) -> float:
 
 def lilliefors(samples, *, log: bool = False, alpha: float = 0.05,
                mc: int = 0, seed: int = 0) -> TestResult:
-    """Lilliefors normality test.  ``log=True`` tests log-normality of the
-    raw samples (takes ln first, Eq. 10)."""
+    """Lilliefors normality test (Eqs. 10-11).
+
+    Parameters
+    ----------
+    samples:
+        1-D run/wait times (any time unit — the statistic standardizes).
+    log:
+        True tests LOG-normality of the raw samples (takes ln first,
+        Eq. 10, the paper's §4.2 usage); samples must then be positive.
+    alpha:
+        Significance level; tabulated critical values exist for 0.05.
+    mc:
+        > 0 replaces the table by a Monte-Carlo critical value from
+        ``mc`` standard-normal resamples of the same size (exact for the
+        estimated-parameter null).
+    seed:
+        RNG seed for the Monte-Carlo option.
+
+    Returns a ``TestResult``; ``reject=True`` means (log-)normality is
+    rejected at ``alpha``.
+    """
     x = np.asarray(samples, np.float64)
     if log:
         x = np.log(x)

@@ -20,11 +20,21 @@ from repro.core.perfmodel.distributions import (
 
 
 def fit_uniform(x) -> Uniform:
+    """Uniform(a, b) by the paper's plug-in: a = X_min, b = X_max.
+
+    ``x``: 1-D sample of run/wait times (any consistent time unit; the
+    fitted parameters inherit it).
+    """
     x = np.asarray(x, np.float64)
     return Uniform(a=float(x.min()), b=float(x.max()))
 
 
 def fit_exponential(x) -> Exponential:
+    """One-parameter exponential MLE: lambda = n / sum(X) = 1/mean.
+
+    The paper's literal §4.1 estimator (origin at zero — see
+    ``fit_exponential_shifted`` for the physically-motivated variant).
+    """
     x = np.asarray(x, np.float64)
     return Exponential(lam=float(1.0 / x.mean()))
 
@@ -42,6 +52,11 @@ def fit_exponential_shifted(x) -> Shifted:
 
 
 def fit_lognormal(x) -> LogNormal:
+    """Log-normal MLE: mu = mean(ln X), sigma = sample std of ln X.
+
+    ``x`` must be strictly positive (times); sigma uses ddof=1 to match
+    the Lilliefors standardization of §4.2.
+    """
     lx = np.log(np.asarray(x, np.float64))
     return LogNormal(mu=float(lx.mean()), sigma=float(lx.std(ddof=1)))
 

@@ -1,0 +1,41 @@
+"""Campaign experiments: noise-injected Monte-Carlo solver runs with
+measured-vs-modeled speedup validation (DESIGN.md §Campaign-methodology).
+
+The subsystem closes the loop between the three previously separate
+layers of the reproduction:
+
+* ``core/noise``      — discrete-event iteration model + wall-clock injection
+* ``core/perfmodel``  — analytic E[max]/mu asymptotic speedups
+* ``core/stats``      — MLE fits + Lilliefors / Cramer-von Mises tests
+
+``python -m repro.experiments.campaign --preset smoke`` sweeps
+solver x engine x noise distribution x shard count, runs K repeated
+trials per cell, fits the collected samples, validates measured speedup
+ECDFs against the model, and emits ``results/figures/*.csv``,
+``BENCH_campaign.json`` and a self-contained ``results/REPORT.md``.
+"""
+from repro.experiments.spec import (  # noqa: F401
+    PRESETS,
+    SOLVER_PAIRS,
+    CampaignSpec,
+    get_preset,
+)
+from repro.experiments.noise_sources import make_distribution  # noqa: F401
+from repro.experiments.runner import (  # noqa: F401
+    measured_makespans,
+    run_engine_exec,
+    run_noisy_exec,
+)
+from repro.experiments.fitting import classify_family, fit_cell  # noqa: F401
+from repro.experiments.validation import (  # noqa: F401
+    measured_crossover,
+    modeled_speedup,
+    validate_cells,
+)
+from repro.experiments.campaign import run_campaign  # noqa: F401
+from repro.experiments.report import (  # noqa: F401
+    write_ecdf_csv,
+    write_json,
+    write_report_md,
+    write_speedup_csv,
+)

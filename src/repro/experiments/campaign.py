@@ -1,0 +1,280 @@
+"""Campaign orchestration + CLI.
+
+``run_campaign`` wires the stages together:
+
+  1. discrete-event Monte Carlo over (noise, P) cells — measured sync vs
+     pipelined makespans (pure-wait regime AND phase-model-based hw
+     variant per solver);
+  2. fitting — the recorded wait samples through core/stats, classified
+     best family vs injected family, parameter recovery;
+  3. real execution — iteration-engine timing/residual-drift runs and
+     wall-clock noise-injected shard_map repeats;
+  4. validation — measured vs ``asymptotic_speedup``, folk-theorem 2x
+     bound, exponential P=4 crossover;
+  5. reporting — figures CSVs, BENCH_campaign.json, results/REPORT.md.
+
+CLI::
+
+  python -m repro.experiments.campaign --preset smoke
+  python -m repro.experiments.campaign --preset paper --out-dir results
+
+With the default ``--out-dir results``, the JSON lands at repo-root
+``BENCH_campaign.json`` (next to BENCH_kernels.json); with a custom
+out-dir everything, JSON included, stays under that directory.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+from pathlib import Path
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.noise.simulator import SolverPhaseModel, predict_speedup
+from repro.core.noise.traces import EX23_N
+from repro.experiments.fitting import fit_cell
+from repro.experiments.noise_sources import (
+    injected_family,
+    make_distribution,
+    sample_np,
+    scale_distribution,
+)
+from repro.experiments.report import (
+    write_ecdf_csv,
+    write_json,
+    write_report_md,
+    write_runtimes_csv,
+    write_speedup_csv,
+)
+from repro.experiments.runner import (
+    effective_trials,
+    measured_makespans,
+    run_engine_exec,
+    run_noisy_exec,
+)
+from repro.experiments.spec import SOLVER_PAIRS, CampaignSpec, get_preset
+from repro.experiments.validation import modeled_speedup, validate_cells
+
+# Coarse per-solver phase constants (vector-read multiples, reduction sync
+# points) for the hw-adjusted variant: (classical partner, pipelined).
+# CG/PIPECG match core/noise/simulator.ex23_models; CR adds the w = A u
+# traffic; (P)GMRES uses restart-averaged orthogonalization traffic.
+_PHASE_CONSTANTS = {
+    "pipecg": ((6, 2), (14, 1)),
+    "pipecr": ((8, 2), (16, 1)),
+    "pgmres": ((10, 2), (12, 1)),
+}
+
+_INJECTED_PARAMS = {
+    "uniform": {"a": 0.0, "b": 1.0},
+    "exponential": {"loc": 0.0, "lambda": 1.0},
+    "lognormal": {"mu": 0.0, "sigma": 1.0},
+}
+
+
+def _phase_models(solver: str, P: int):
+    """(classical, pipelined) ``SolverPhaseModel`` pair for ``solver``."""
+    (r_s, k_s), (r_p, k_p) = _PHASE_CONSTANTS[solver]
+    mk = lambda r, k: SolverPhaseModel(n=EX23_N, nnz_per_row=3, p=P,
+                                       n_vec_reads=r, n_reductions=k)
+    return mk(r_s, k_s), mk(r_p, k_p)
+
+
+def _discrete_cells(spec: CampaignSpec, dists: Dict) -> tuple:
+    """Stage 1: Monte-Carlo makespan measurement over the full grid."""
+    cells = []
+    wait_samples: Dict[str, np.ndarray] = {}
+    for ni, (noise, dist) in enumerate(dists.items()):
+        for pi, P in enumerate(spec.shard_counts):
+            seed = spec.seed + 7919 * ni + 104729 * pi
+            mm = measured_makespans(dist, P, spec.iters, spec.trials,
+                                    seed=seed, fit_samples=spec.fit_samples)
+            if noise not in wait_samples:
+                wait_samples[noise] = mm.waits
+            modeled = modeled_speedup(dist, P)
+            measured = mm.speedup
+            sdist = scale_distribution(dist, spec.noise_scale)
+            models = {s: _phase_models(s, P) for s in spec.solvers}
+            hw_meas_all = _hw_measured(spec, sdist, models, P, seed=seed + 31)
+            for solver in spec.solvers:
+                sync_m, pipe_m = models[solver]
+                hw_pred = predict_speedup(sync_m, pipe_m, sdist, K=spec.iters)
+                cells.append({
+                    "noise": noise, "P": P, "solver": solver,
+                    "partner": SOLVER_PAIRS[solver],
+                    "measured_speedup": measured,
+                    "modeled_speedup": modeled,
+                    "rel_err": abs(measured - modeled) / modeled,
+                    "hw_measured_speedup": hw_meas_all[solver],
+                    "hw_modeled_speedup": hw_pred["speedup"],
+                    "trials": mm.trials_effective, "iters": mm.iters,
+                    "t_sync_mean": float(mm.t_sync.mean()),
+                    "t_pipe_mean": float(mm.t_pipe.mean()),
+                })
+    return cells, wait_samples
+
+
+def _hw_measured(spec: CampaignSpec, sdist, models: Dict, P: int,
+                 seed: int) -> Dict[str, float]:
+    """Discrete-event speedup with the phase model's compute bases.
+
+    Synchronized step: max_p(t_compute + W_p) + n_red * t_red (reductions
+    on the critical path).  Pipelined step per process: max(t_compute +
+    W_p, t_red) — the overlapped reduction only matters when it outlasts
+    compute + wait.  One waiting-time stream is drawn per (noise, P) and
+    every solver's statistics are accumulated from it (only the scalar
+    bases differ between solvers); trials are reduced (the hw variant is
+    a secondary, per-solver diagnostic).
+    """
+    rng = np.random.default_rng(seed)
+    trials = effective_trials(max(16, spec.trials // 4), P)
+    acc_sync = {s: np.zeros(trials) for s in models}
+    acc_proc = {s: np.zeros((trials, P)) for s in models}
+    chunk = max(1, 2_000_000 // max(trials * P, 1))
+    done = 0
+    while done < spec.iters:
+        kb = min(chunk, spec.iters - done)
+        w = sample_np(sdist, rng, (trials, kb, P))
+        for s, (sync_m, pipe_m) in models.items():
+            tr = sync_m.t_reduction()
+            acc_sync[s] += ((sync_m.t_compute() + w).max(axis=2).sum(axis=1)
+                            + kb * sync_m.n_reductions * tr)
+            acc_proc[s] += np.maximum(pipe_m.t_compute() + w,
+                                      pipe_m.n_reductions * tr).sum(axis=1)
+        done += kb
+    return {s: float(acc_sync[s].mean() / acc_proc[s].max(axis=1).mean())
+            for s in models}
+
+
+def _acceptance(spec: CampaignSpec, cells, wait_fits) -> Dict[str, bool]:
+    """The ISSUE's acceptance checks, evaluated on this campaign's data."""
+    exp_cells = [c for c in cells if c["noise"] == "exponential"]
+    uni_cells = [c for c in cells if c["noise"] == "uniform"]
+    checks: Dict[str, bool] = {}
+    if exp_cells:
+        big = [c for c in exp_cells if c["P"] >= 4]
+        checks["exponential measured speedup > 2x for all P >= 4"] = (
+            bool(big) and all(c["measured_speedup"] > 2.0 for c in big))
+    if uni_cells:
+        checks["uniform measured speedup < 2x at every P (folk bound)"] = all(
+            c["measured_speedup"] < 2.0 for c in uni_cells)
+    checks["fitted family matches injected for every closed-form noise"] = all(
+        fit["family_match"] for fit in wait_fits.values()
+        if fit["family_match"] is not None)
+    return checks
+
+
+def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
+                 skip_exec: bool = False) -> Dict:
+    """Run the full campaign; writes artifacts and returns the record.
+
+    ``out_dir`` defaults to ``results/`` (relative to the CWD).  When it
+    is the default, ``BENCH_campaign.json`` is written at the CWD root to
+    match the other BENCH_*.json artifacts; a custom out_dir keeps the
+    JSON inside it.  ``skip_exec`` skips stage 3 (real solver runs) for
+    fast interactive use; the emitted report then has empty exec tables.
+    """
+    t_start = time.time()
+    default_out = out_dir is None
+    out_dir = Path(out_dir) if out_dir is not None else Path("results")
+    if json_out is None:
+        json_out = (Path("BENCH_campaign.json") if default_out
+                    else out_dir / "BENCH_campaign.json")
+
+    dists = {name: make_distribution(name, seed=spec.seed)
+             for name in spec.noises}
+
+    # 1. discrete-event measurement grid
+    cells, wait_samples = _discrete_cells(spec, dists)
+
+    # 2. fitting round-trip on the recorded wait samples
+    wait_fits: Dict[str, Dict] = {}
+    for noise, waits in wait_samples.items():
+        fit = fit_cell(waits, name=noise)
+        inj = injected_family(noise)
+        fit["injected_family"] = inj
+        # None = recorded trace, round-trip check not applicable
+        fit["family_match"] = (fit["best_family"] == inj) if inj else None
+        fit["injected_params"] = _INJECTED_PARAMS.get(noise)
+        wait_fits[noise] = fit
+
+    # 3. real execution stages
+    engine_exec = []
+    noisy_exec: Dict[str, Dict] = {}
+    runtime_fits: Dict[str, Dict] = {}
+    if not skip_exec:
+        engine_exec = run_engine_exec(
+            spec.exec_solvers, spec.engines, spec.exec_n, spec.exec_maxiter,
+            repeats=spec.exec_repeats)
+        noisy_exec = run_noisy_exec(
+            spec.exec_solvers, dists[spec.exec_noise], spec.noise_scale,
+            spec.exec_n, spec.exec_maxiter, spec.exec_repeats,
+            seed=spec.seed)
+        for solver, cell in noisy_exec.items():
+            runtime_fits[solver] = fit_cell(cell["run_times"],
+                                            name=f"runtime:{solver}")
+
+    # 4. validation
+    validation = validate_cells(cells, dists)
+    validation["acceptance"] = _acceptance(spec, cells, wait_fits)
+
+    result = {
+        "spec": dataclasses.asdict(spec),
+        "cells": cells,
+        "wait_fits": wait_fits,
+        "engine_exec": engine_exec,
+        "noisy_exec": noisy_exec,
+        "runtime_fits": runtime_fits,
+        "validation": validation,
+        "elapsed_s": time.time() - t_start,
+    }
+
+    # 5. artifacts
+    write_speedup_csv(out_dir, cells)
+    for noise, waits in wait_samples.items():
+        write_ecdf_csv(out_dir, noise, waits)
+    if noisy_exec:
+        write_runtimes_csv(out_dir, noisy_exec)
+    write_json(json_out, result)
+    write_report_md(out_dir, result)
+    return result
+
+
+def main(argv=None) -> int:
+    """CLI entry point (``python -m repro.experiments.campaign``)."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.experiments.campaign",
+        description="Noise-injected Monte-Carlo solver campaign: measured "
+                    "vs modeled pipelined-Krylov speedups.")
+    ap.add_argument("--preset", default="smoke",
+                    help="campaign preset: smoke | paper")
+    ap.add_argument("--out-dir", default=None,
+                    help="artifact directory (default: results/)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="override the preset's base seed")
+    ap.add_argument("--skip-exec", action="store_true",
+                    help="skip the real solver execution stage")
+    args = ap.parse_args(argv)
+
+    import jax
+    jax.config.update("jax_enable_x64", True)  # solvers want fp64
+
+    spec = get_preset(args.preset)
+    if args.seed is not None:
+        spec = dataclasses.replace(spec, seed=args.seed)
+    result = run_campaign(spec, out_dir=args.out_dir,
+                          skip_exec=args.skip_exec)
+
+    acc = result["validation"]["acceptance"]
+    for check, ok in acc.items():
+        print(f"{'PASS' if ok else 'FAIL'}: {check}")
+    print(f"campaign `{spec.name}` done in {result['elapsed_s']:.1f}s; "
+          f"cells={len(result['cells'])}")
+    return 0 if all(acc.values()) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

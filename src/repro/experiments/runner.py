@@ -1,0 +1,197 @@
+"""Campaign execution stages.
+
+Three measurement paths, in increasing realism:
+
+1. ``measured_makespans`` — discrete-event Monte Carlo over per-iteration
+   waiting times: T = sum_k max_p T_p^k (synchronized, Eq. 6) versus
+   T' = max_p sum_k T_p^k (pipelined, Eq. 7), streamed over iterations so
+   Piz-Daint-scale (P=8192, K=5000) cells never materialize (trials, K, P).
+2. ``run_engine_exec`` — real single-process JAX solves per iteration
+   engine: per-iteration wall time, recurrence residual, TRUE residual
+   ``||b - A x||`` and their drift (Cools-style residual-replacement
+   diagnostics).
+3. ``run_noisy_exec`` — real shard_map solves through
+   ``distributed_solve(..., noise=NoiseHook(...))``: every iteration
+   stalls for a sampled wait, giving measured run-time samples whose
+   distribution the fitting stage must recover (the round-trip check).
+
+All times in seconds unless a field name says otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.perfmodel.distributions import Distribution
+from repro.experiments.noise_sources import sample_np
+
+# cap on the (trials * iters * P) block materialized per sampling chunk
+_CHUNK_BUDGET = 4_000_000
+
+
+@dataclasses.dataclass
+class MakespanMeasurement:
+    """One (noise, P) discrete-event cell.
+
+    ``t_sync`` / ``t_pipe``: per-trial makespans (trials,), in the
+    distribution's time unit; ``waits``: recorded per-(iteration, process)
+    wait samples for the fitting stage; ``trials_effective``: trials after
+    large-P scaling.
+    """
+
+    t_sync: np.ndarray
+    t_pipe: np.ndarray
+    waits: np.ndarray
+    iters: int
+    P: int
+    trials_effective: int
+
+    @property
+    def speedup(self) -> float:
+        """Measured pipelined speedup: mean(T) / mean(T')."""
+        return float(self.t_sync.mean() / self.t_pipe.mean())
+
+
+def effective_trials(trials: int, P: int) -> int:
+    """Scale the trial count down at very large P (memory/time bound)."""
+    return max(16, trials // max(1, P // 256))
+
+
+def measured_makespans(dist: Distribution, P: int, iters: int, trials: int,
+                       seed: int = 0, t0_sync: float = 0.0,
+                       t0_pipe: float = 0.0, fit_samples: int = 2000
+                       ) -> MakespanMeasurement:
+    """Monte-Carlo measure both makespans under iid per-step waits.
+
+    Per trial: iteration times are ``t0 + W`` with ``W ~ dist`` iid over
+    (iteration, process).  ``t0_sync`` / ``t0_pipe`` add a deterministic
+    per-iteration compute base (0 = the paper's pure-waiting-time regime in
+    which the asymptotic model E[max]/mu is exact as K -> inf).
+
+    Streams over iterations in chunks so memory stays bounded at any
+    (trials, iters, P).
+    """
+    trials = effective_trials(trials, P)
+    rng = np.random.default_rng(seed)
+    chunk = max(1, _CHUNK_BUDGET // max(trials * P, 1))
+    acc_sync = np.zeros(trials)
+    acc_proc = np.zeros((trials, P))
+    waits: Optional[np.ndarray] = None
+    done = 0
+    while done < iters:
+        kb = min(chunk, iters - done)
+        w = sample_np(dist, rng, (trials, kb, P))
+        if waits is None:
+            waits = w[0].reshape(-1)[:fit_samples].copy()
+        acc_sync += (t0_sync + w).max(axis=2).sum(axis=1)
+        acc_proc += (t0_pipe + w).sum(axis=1)
+        done += kb
+    return MakespanMeasurement(t_sync=acc_sync, t_pipe=acc_proc.max(axis=1),
+                               waits=waits, iters=iters, P=P,
+                               trials_effective=trials)
+
+
+# ---------------------------------------------------------------------------
+# Real solver execution
+# ---------------------------------------------------------------------------
+
+def _solver_fn(name: str):
+    from repro.core.krylov import cg, cr, gmres, pgmres, pipecg, pipecr
+    return {"cg": cg, "cr": cr, "pipecg": pipecg, "pipecr": pipecr,
+            "gmres": gmres, "pgmres": pgmres}[name]
+
+
+def _true_residual(A, b, x) -> float:
+    import jax.numpy as jnp
+    r = b - A.matvec(x)
+    return float(jnp.sqrt(jnp.sum(r * r)))
+
+
+def run_engine_exec(solvers: Tuple[str, ...], engines: Tuple[str, ...],
+                    n: int, maxiter: int, repeats: int = 3) -> List[Dict]:
+    """Time real solves per (solver, engine) and report residual drift.
+
+    Returns one dict per cell with ``per_iter_us`` (wall microseconds per
+    iteration), ``res_recurrence`` (the solver's recurrence residual),
+    ``res_true`` (recomputed ``||b - A x||``) and ``drift_rel``
+    (|true - recurrence| / ||b||) — the Cools-style true-residual gap that
+    pipelined rearrangements are known to widen.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.krylov import tridiagonal_laplacian
+
+    A = tridiagonal_laplacian(n)
+    b = jnp.ones((n,), A.bands.dtype)
+    bnorm = float(jnp.sqrt(jnp.sum(b * b)))
+    cells = []
+    for solver in solvers:
+        fn = _solver_fn(solver)
+        for engine in engines:
+            solve = jax.jit(lambda bb, fn=fn, engine=engine: fn(
+                A, bb, maxiter=maxiter, engine=engine))
+            out = solve(b)
+            jax.block_until_ready(out.x)  # compile
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                out = solve(b)
+            jax.block_until_ready(out.x)
+            per_iter = (time.perf_counter() - t0) / repeats / maxiter
+            res_rec = float(out.res_norm)
+            res_true = _true_residual(A, b, out.x)
+            cells.append({
+                "solver": solver, "engine": engine, "n": n,
+                "maxiter": maxiter,
+                "per_iter_us": per_iter * 1e6,
+                "res_recurrence": res_rec,
+                "res_true": res_true,
+                "drift_rel": abs(res_true - res_rec) / bnorm,
+            })
+    return cells
+
+
+def run_noisy_exec(solvers: Tuple[str, ...], dist: Distribution,
+                   noise_scale: float, n: int, maxiter: int, repeats: int,
+                   seed: int = 0) -> Dict[str, Dict]:
+    """Repeated real shard_map solves with wall-clock noise injection.
+
+    Each run goes through ``distributed_solve`` with a fresh-per-call
+    sleeping ``NoiseHook``; the returned dict maps solver name to
+    ``run_times`` (seconds, one per repeat), the recorded injected waits,
+    and the final residuals.  This is the campaign's rendering of the
+    paper's n=12/n=20 Piz Daint repeat sets.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core.krylov import distributed_solve, tridiagonal_laplacian
+    from repro.core.noise.injection import NoiseHook
+
+    A = tridiagonal_laplacian(n)
+    b = jnp.ones((n,), A.bands.dtype)
+    mesh = Mesh(np.asarray(jax.devices()), ("shards",))
+    out_cells: Dict[str, Dict] = {}
+    for si, solver in enumerate(solvers):
+        fn = _solver_fn(solver)
+        hook = NoiseHook(dist, scale=noise_scale, seed=seed + 977 * si)
+        solve = jax.jit(lambda bb, fn=fn: distributed_solve(
+            fn, A, bb, mesh, noise=hook, maxiter=maxiter))
+        out = solve(b)
+        jax.block_until_ready(out.x)  # compile outside the timed runs
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            out = solve(b)
+            jax.block_until_ready(out.x)
+            times.append(time.perf_counter() - t0)
+        out_cells[solver] = {
+            "run_times": np.asarray(times),
+            "injected_waits": hook.waits(),
+            "res_norm": float(out.res_norm),
+            "res_true": _true_residual(A, b, out.x),
+            "n": n, "maxiter": maxiter,
+        }
+    return out_cells

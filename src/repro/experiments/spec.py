@@ -1,0 +1,106 @@
+"""Campaign specification + presets.
+
+A ``CampaignSpec`` fixes the full experimental grid: which pipelined
+solvers (each measured against its classical partner), which iteration
+engines, which waiting-time distributions (closed-form families of the
+paper's §3 plus recorded traces), which shard counts P, and how many
+repeated trials / iterations each cell runs.
+
+Units: all times are seconds; ``noise_scale`` converts dimensionless
+distribution draws into seconds for the wall-clock injection runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+# pipelined solver -> the classical partner its speedup is measured against
+SOLVER_PAIRS: Dict[str, str] = {"pipecg": "cg", "pipecr": "cr",
+                                "pgmres": "gmres"}
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignSpec:
+    """Full experimental grid for one campaign run.
+
+    Attributes
+    ----------
+    name:
+        Preset name (appears in every emitted artifact).
+    solvers:
+        Pipelined solvers to sweep; each is validated against
+        ``SOLVER_PAIRS[solver]``.
+    engines:
+        Iteration engines for the single-process execution stage
+        (``core/krylov/engine.py`` registry names).
+    noises:
+        Waiting-time distribution names understood by
+        ``noise_sources.make_distribution`` — closed-form families
+        (``uniform`` / ``exponential`` / ``lognormal``) or recorded traces
+        (``trace:PIPECG`` etc., resolved via ``core/noise/traces.py``).
+    shard_counts:
+        Process counts P for the discrete-event stage.
+    trials:
+        Repeated Monte-Carlo trials per (noise, P) cell.  At very large P
+        the runner scales this down (memory/time) and records the
+        effective count.
+    iters:
+        Krylov iterations per trial (the paper forces 5000).
+    fit_samples:
+        Number of recorded wait samples kept per noise for the fitting
+        stage.
+    exec_solvers:
+        Solvers for the real (wall-clock, shard_map) execution stage.
+    exec_n / exec_maxiter / exec_repeats:
+        Problem size, iteration count and repeat count of the execution
+        stage.
+    exec_noise:
+        Which of ``noises`` is wall-clock-injected in the execution stage.
+    noise_scale:
+        Seconds per unit draw for the wall-clock injection (1.5e-3 makes a
+        unit-mean exponential inject ~1.5 ms of stall per iteration).
+    seed:
+        Base seed; every stage derives its own stream from it.
+    """
+
+    name: str
+    solvers: Tuple[str, ...] = ("pipecg", "pipecr", "pgmres")
+    engines: Tuple[str, ...] = ("naive", "fused")
+    noises: Tuple[str, ...] = ("uniform", "exponential", "lognormal",
+                               "trace:PIPECG")
+    shard_counts: Tuple[int, ...] = (2, 4, 8)
+    trials: int = 96
+    iters: int = 2000
+    fit_samples: int = 2000
+    exec_solvers: Tuple[str, ...] = ("cg", "pipecg")
+    exec_n: int = 2048
+    exec_maxiter: int = 25
+    exec_repeats: int = 6
+    exec_noise: str = "exponential"
+    noise_scale: float = 1.5e-3
+    seed: int = 0
+
+
+PRESETS: Dict[str, CampaignSpec] = {
+    # CPU-friendly: completes in well under a minute, deterministic seed.
+    "smoke": CampaignSpec(name="smoke"),
+    # The paper's scales: P up to Piz Daint's 8192, 5000 forced iterates,
+    # ex23-sized execution runs.  Minutes on one CPU.
+    "paper": CampaignSpec(
+        name="paper",
+        shard_counts=(2, 4, 16, 64, 256, 1024, 8192),
+        trials=96,
+        iters=5000,
+        fit_samples=4000,
+        exec_n=65536,
+        exec_maxiter=60,
+        exec_repeats=12,
+    ),
+}
+
+
+def get_preset(name: str) -> CampaignSpec:
+    """Look up a preset by name (raises with the known names otherwise)."""
+    if name not in PRESETS:
+        raise KeyError(f"unknown preset {name!r}; known: {sorted(PRESETS)}")
+    return PRESETS[name]

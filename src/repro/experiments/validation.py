@@ -1,0 +1,58 @@
+"""Campaign validation stage: measured speedups against the §3 model.
+
+Checks, per noise distribution:
+  * measured mean(T)/mean(T') vs ``asymptotic_speedup`` (E[max_P]/mu);
+  * the deterministic folk-theorem 2x bound — uniform noise must stay
+    below it at every P (closed form 2P/(P+1) < 2), exponential must
+    cross it at P = 4 (H_4 = 25/12 > 2, the paper's headline);
+  * the measured crossover P vs ``min_procs_exceeding``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+from repro.core.perfmodel import asymptotic_speedup, min_procs_exceeding
+from repro.core.perfmodel.distributions import Distribution
+
+
+def modeled_speedup(dist: Distribution, P: int) -> float:
+    """Asymptotic model prediction E[max of P draws] / mean (paper Eq. 8)."""
+    return asymptotic_speedup(dist, P, method="auto")
+
+
+def measured_crossover(cells: Sequence[Dict], noise: str,
+                       bound: float = 2.0) -> int:
+    """Smallest P whose MEASURED speedup exceeds ``bound`` (-1 if none)."""
+    ps = sorted(c["P"] for c in cells
+                if c["noise"] == noise and c["measured_speedup"] > bound)
+    return ps[0] if ps else -1
+
+
+def validate_cells(cells: Sequence[Dict],
+                   dists: Dict[str, Distribution]) -> Dict:
+    """Cross-cell validation summary for the report.
+
+    ``cells`` are discrete-event cell dicts with at least ``noise``,
+    ``P``, ``measured_speedup`` and ``modeled_speedup`` keys.
+    """
+    out: Dict = {"per_noise": {}, "folk_2x": {}}
+    for noise, dist in dists.items():
+        mine = [c for c in cells if c["noise"] == noise]
+        if not mine:
+            continue
+        rel_errs = [abs(c["measured_speedup"] - c["modeled_speedup"])
+                    / c["modeled_speedup"] for c in mine]
+        measured_x = measured_crossover(cells, noise)
+        modeled_x = min_procs_exceeding(dist, bound=2.0, pmax=1 << 14)
+        out["per_noise"][noise] = {
+            "max_rel_err": max(rel_errs),
+            "mean_rel_err": sum(rel_errs) / len(rel_errs),
+            "measured_crossover_P": measured_x,
+            "modeled_crossover_P": modeled_x,
+            "ever_exceeds_2x_measured": measured_x != -1,
+        }
+        out["folk_2x"][noise] = {
+            "max_measured": max(c["measured_speedup"] for c in mine),
+            "max_modeled": max(c["modeled_speedup"] for c in mine),
+        }
+    return out

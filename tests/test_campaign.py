@@ -1,0 +1,145 @@
+"""Campaign pipeline tests: deterministic-seed smoke campaign (tiny K, n,
+P on CPU) asserting (a) the fitted distribution parameters recover the
+injected ones, (b) the measured-vs-modeled speedup criteria (exponential
+crosses 2x at P>=4, uniform never does), and (c) REPORT.md / CSV / JSON
+outputs are schema-stable."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.experiments import (
+    CampaignSpec,
+    get_preset,
+    make_distribution,
+    measured_makespans,
+    run_campaign,
+)
+from repro.experiments.report import (
+    ECDF_CSV_HEADER,
+    REPORT_SECTIONS,
+    RUNTIME_CSV_HEADER,
+    SPEEDUP_CSV_HEADER,
+)
+
+TINY = CampaignSpec(
+    name="tiny",
+    solvers=("pipecg", "pgmres"),
+    engines=("naive", "fused"),
+    noises=("uniform", "exponential", "lognormal", "trace:PIPECG"),
+    shard_counts=(2, 4),
+    trials=32,
+    iters=2000,
+    fit_samples=1500,
+    exec_solvers=("cg", "pipecg"),
+    exec_n=512,
+    exec_maxiter=10,
+    exec_repeats=4,
+    noise_scale=1e-3,
+    seed=1234,
+)
+
+
+@pytest.fixture(scope="module")
+def campaign(tmp_path_factory):
+    out = tmp_path_factory.mktemp("campaign")
+    result = run_campaign(TINY, out_dir=out)
+    return out, result
+
+
+def test_artifacts_exist_and_schema_stable(campaign):
+    out, result = campaign
+    report = (out / "REPORT.md").read_text()
+    for section in REPORT_SECTIONS:
+        assert section in report, section
+    # default json placement for custom out_dir: inside it
+    rec = json.loads((out / "BENCH_campaign.json").read_text())
+    for key in ("spec", "cells", "wait_fits", "validation", "engine_exec",
+                "runtime_fits"):
+        assert key in rec, key
+    assert rec["spec"]["name"] == "tiny"
+
+    speedup_csv = (out / "figures" / "campaign_speedup.csv").read_text()
+    assert speedup_csv.splitlines()[0] == SPEEDUP_CSV_HEADER
+    n_cells = len(TINY.noises) * len(TINY.shard_counts) * len(TINY.solvers)
+    assert len(speedup_csv.splitlines()) == 1 + n_cells
+
+    for noise in ("uniform", "exponential", "lognormal", "trace_pipecg"):
+        ecdf = (out / "figures" / f"campaign_ecdf_{noise}.csv").read_text()
+        assert ecdf.splitlines()[0] == ECDF_CSV_HEADER
+
+    runtimes = (out / "figures" / "campaign_runtimes.csv").read_text()
+    assert runtimes.splitlines()[0] == RUNTIME_CSV_HEADER
+    assert len(runtimes.splitlines()) == 1 + 2 * TINY.exec_repeats
+
+
+def test_fitted_family_and_params_recover_injected(campaign):
+    _, result = campaign
+    fits = result["wait_fits"]
+    for noise in ("uniform", "exponential", "lognormal"):
+        assert fits[noise]["best_family"] == noise, fits[noise]
+        assert fits[noise]["family_match"] is True
+    # recorded trace: round-trip check not applicable
+    assert fits["trace:PIPECG"]["family_match"] is None
+
+    p = fits["uniform"]["params"]["uniform"]
+    assert abs(p["a"] - 0.0) < 0.05 and abs(p["b"] - 1.0) < 0.05
+    p = fits["exponential"]["params"]["exponential"]
+    assert p["lambda"] == pytest.approx(1.0, rel=0.15)
+    assert abs(p["loc"]) < 0.05
+    p = fits["lognormal"]["params"]["lognormal"]
+    assert p["mu"] == pytest.approx(0.0, abs=0.15)
+    assert p["sigma"] == pytest.approx(1.0, rel=0.15)
+
+
+def test_measured_speedup_matches_model_and_folk_bound(campaign):
+    _, result = campaign
+    cells = result["cells"]
+    for c in cells:
+        assert c["rel_err"] < 0.10, c  # measured tracks the asymptote
+    exp4 = [c for c in cells if c["noise"] == "exponential" and c["P"] >= 4]
+    assert exp4 and all(c["measured_speedup"] > 2.0 for c in exp4)
+    uni = [c for c in cells if c["noise"] == "uniform"]
+    assert uni and all(c["measured_speedup"] < 2.0 for c in uni)
+    assert all(result["validation"]["acceptance"].values())
+    # modeled crossover for exponential is the paper's P = 4
+    v = result["validation"]["per_noise"]["exponential"]
+    assert v["modeled_crossover_P"] == 4
+
+
+def test_noisy_exec_injected_and_recorded(campaign):
+    _, result = campaign
+    for solver in TINY.exec_solvers:
+        cell = result["noisy_exec"][solver]
+        waits = np.asarray(cell["injected_waits"])
+        # at least one wait per iteration of the first (compile) run
+        assert waits.shape[0] >= TINY.exec_maxiter
+        assert (waits >= 0).all()
+        # run times are bounded below by the injected stalls of that run
+        assert np.asarray(cell["run_times"]).min() > 0.0
+        assert np.isfinite(cell["res_true"])
+
+
+def test_engine_exec_reports_drift(campaign):
+    _, result = campaign
+    cells = result["engine_exec"]
+    assert {(c["solver"], c["engine"]) for c in cells} == {
+        (s, e) for s in TINY.exec_solvers for e in TINY.engines}
+    for c in cells:
+        assert c["per_iter_us"] > 0
+        assert 0.0 <= c["drift_rel"] < 1e-3
+
+
+def test_measured_makespans_deterministic_and_near_closed():
+    d = make_distribution("uniform")
+    a = measured_makespans(d, P=4, iters=1500, trials=64, seed=7)
+    b = measured_makespans(d, P=4, iters=1500, trials=64, seed=7)
+    assert a.speedup == b.speedup  # deterministic under the same seed
+    assert a.speedup == pytest.approx(1.6, rel=0.05)  # 2P/(P+1)
+
+
+def test_preset_registry():
+    assert get_preset("smoke").name == "smoke"
+    assert get_preset("paper").iters == 5000
+    with pytest.raises(KeyError):
+        get_preset("nope")
