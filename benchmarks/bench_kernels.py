@@ -22,14 +22,24 @@ nb = number of bands; Jacobi-preconditioned DIA operator):
     + bands + diag^-1 resident              = (nb+1) n / k
                                      total  = (8 + (nb+1)/k) n -> 12 n
                                               tridiag at k=1, 8.5 n at k=8
+  pipecg_spmv_halo (sharded single sweep, per shard of n_l rows):
+      same (8 + nb + 1) n_l kernel traffic
+    + halo operands u,p (2h x 2 sides x 2)  =  8 h          (ppermute wire)
+    + psum payload                          =  5 k  words   (all-reduce)
+                                     total  -> 12 n_l + O(h) << 14 n_l
 
 Emits BENCH_kernels.json next to the repo root so the perf trajectory is
-tracked PR over PR.
+tracked PR over PR.  Autotuner choices are persisted to
+``results/autotune_cache.json`` (or ``--out-dir``) and loaded BEFORE any
+tuning, so repeated campaign/bench runs skip the search.
 """
 from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -41,8 +51,45 @@ from repro.kernels import ops, ref
 
 HW = Hardware()
 
-JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_kernels.json")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+
+# the split-phase HLO check needs real collectives, i.e. >1 device — run
+# it in a subprocess with forced host devices (the parent keeps 1)
+_OVERLAP_SCRIPT = textwrap.dedent("""
+    import os, json, functools
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import jax.numpy as jnp, numpy as np
+    from repro.core.krylov import tridiagonal_laplacian, pipecg, distributed_solve
+    from repro.launch.hlo_analysis import split_phase_overlap
+    n = 1024
+    A = tridiagonal_laplacian(n, dtype=jnp.float32)
+    b = jnp.ones((n,), jnp.float32)
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()), ("shards",))
+    txt = jax.jit(functools.partial(distributed_solve, pipecg, A, mesh=mesh,
+                                    engine="sharded_fused",
+                                    maxiter=5)).lower(b).compile().as_text()
+    print(json.dumps(split_phase_overlap(txt)))
+""")
+
+
+def _hlo_overlap_flag():
+    """{'overlap_ok': bool, ...} from the 8-device subprocess (or an
+    'error' record if the probe fails — the bench row then says so)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO_ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env.pop("XLA_FLAGS", None)
+    try:
+        out = subprocess.run([sys.executable, "-c", _OVERLAP_SCRIPT],
+                             env=env, capture_output=True, text=True,
+                             timeout=600)
+        if out.returncode != 0:
+            return {"overlap_ok": False, "error": out.stderr[-400:]}
+        return json.loads(out.stdout.strip().splitlines()[-1])
+    except Exception as e:  # pragma: no cover
+        return {"overlap_ok": False, "error": f"{type(e).__name__}: {e}"}
 
 
 def _words_naive_iter(n, nb):
@@ -61,9 +108,23 @@ def _modeled_us(words, dtype_bytes=4):
     return words * dtype_bytes / HW.hbm_bw * 1e6
 
 
+def _words_sharded_iter(n_local, nb, halo, k=1):
+    """Per-shard words of one sharded single-sweep iteration: the kernel
+    sweep + the ppermute'd halo operands + the psum payload."""
+    return ((8 + (nb + 1) / k) * n_local   # kernel sweep (per RHS)
+            + 8 * halo                     # u/p halos, 2h x 2 sides x 2 vecs
+            + 5)                           # partial-reduction row (psum)
+
+
 def run(out_dir=None):
+    from repro.kernels import autotune
+
     json_path = (JSON_PATH if out_dir is None
                  else os.path.join(out_dir, "BENCH_kernels.json"))
+    cache_path = os.path.join(out_dir or os.path.join(REPO_ROOT, "results"),
+                              "autotune_cache.json")
+    # load-before-tune: repeated runs reuse persisted block choices
+    cache_hits = autotune.load_cache(cache_path)
     rows = []
     record = {"hw": {"hbm_bw_Bps": HW.hbm_bw}, "kernels": {}}
     rng = np.random.default_rng(0)
@@ -139,8 +200,61 @@ def run(out_dir=None):
             "modeled_us_v5e": us,
         }
 
-    # block-size autotuner: choice + cache behavior
-    from repro.kernels import autotune
+    # pipecg_sharded_fused (halo-aware single sweep + split-phase psum):
+    # correctness of the per-shard halo kernel against the full-vector
+    # sweep (hand-built neighbor halos), per-shard traffic, and the
+    # HLO-verified overlap flag from an 8-device subprocess
+    S = 4
+    n_local = n // S
+    halo = 1
+    invd_ones = jnp.ones((n,), jnp.float32)
+    xs = [jnp.asarray(rng.standard_normal((1, n)), jnp.float32)
+          for _ in range(4)]
+    al = jnp.asarray(rng.standard_normal(1), jnp.float32)
+    be = jnp.asarray(rng.standard_normal(1), jnp.float32)
+    want = ops.pipecg_spmv_fused_step(offsets, bands_f, invd_ones, *xs, al, be)
+    bands_g = jnp.pad(bands_f, ((0, 0), (halo, halo)))
+    invd_g = jnp.pad(invd_ones, (halo, halo))
+    u_g = jnp.pad(xs[2], ((0, 0), (2 * halo, 2 * halo)))
+    p_g = jnp.pad(xs[3], ((0, 0), (2 * halo, 2 * halo)))
+    pieces, red_sum = [], 0.0
+    for s in range(S):
+        lo = s * n_local
+        piece = ops.pipecg_spmv_halo_step(
+            offsets, bands_g[:, lo:lo + n_local + 2 * halo],
+            invd_g[lo:lo + n_local + 2 * halo],
+            *(v[:, lo:lo + n_local] for v in xs),
+            u_g[:, lo:lo + 2 * halo],
+            u_g[:, lo + n_local + 2 * halo:lo + n_local + 4 * halo],
+            p_g[:, lo:lo + 2 * halo],
+            p_g[:, lo + n_local + 2 * halo:lo + n_local + 4 * halo],
+            al, be, n_shards=S)
+        pieces.append(piece[:4])
+        red_sum = red_sum + piece[4]
+    got_cat = [jnp.concatenate([p_[i] for p_ in pieces], axis=-1)
+               for i in range(4)] + [red_sum]
+    err = max(float(jnp.max(jnp.abs(a.astype(jnp.float64)
+                                    - b.astype(jnp.float64))))
+              for a, b in zip(got_cat, want))
+    overlap = _hlo_overlap_flag()
+    w_naive = _words_naive_iter(n_local, nb)
+    w_shard = _words_sharded_iter(n_local, nb, halo)
+    us = _modeled_us(w_shard)
+    rows.append((f"kernel/pipecg_sharded_fused/S{S}", us,
+                 f"err={err:.1e} words_per_iter_per_shard={w_shard/n_local:.2f}n "
+                 f"naive={w_naive/n_local:.0f}n "
+                 f"hlo_overlap={bool(overlap.get('overlap_ok'))}"))
+    record["kernels"]["pipecg_sharded_fused"] = {
+        "n_local": n_local, "n_shards": S, "err": err,
+        "words_per_iter_over_n": w_shard / n_local,
+        "naive_words_over_n": w_naive / n_local,
+        "modeled_speedup_vs_naive": w_naive / w_shard,
+        "modeled_us_v5e": us,
+        "hlo_split_phase_overlap": bool(overlap.get("overlap_ok")),
+        "hlo_bodies": overlap.get("bodies", {}),
+    }
+
+    # block-size autotuner: choice + cache behavior (+ on-disk persistence)
     blk = autotune.best_block("pipecg_spmv", n, jnp.float32,
                               words_per_row=6.0, resident_words=6.0 * n,
                               min_block=2)
@@ -148,9 +262,16 @@ def run(out_dir=None):
     autotune.best_block("pipecg_spmv", n, jnp.float32,
                         words_per_row=6.0, resident_words=6.0 * n, min_block=2)
     cached_us = (time.perf_counter() - t0) * 1e6
+    autotune.save_cache(cache_path)
     rows.append(("kernel/autotune/pipecg_spmv", cached_us,
-                 f"block={blk} backend={jax.default_backend()}"))
-    record["autotune"] = {"block": blk, "backend": jax.default_backend()}
+                 f"block={blk} backend={jax.default_backend()} "
+                 f"cache_preloaded={cache_hits} "
+                 f"persisted={os.path.basename(cache_path)}"))
+    record["autotune"] = {"block": blk, "backend": jax.default_backend(),
+                          # basename only: the committed record must not
+                          # churn with each machine's absolute paths
+                          "cache_file": os.path.basename(cache_path),
+                          "cache_entries_preloaded": cache_hits}
 
     os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
     with open(json_path, "w") as f:

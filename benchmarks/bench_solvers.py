@@ -7,9 +7,14 @@ the paper's effect (1 device = no reduction latency to hide); the numbers
 recorded here are (a) correctness/throughput baselines and (b) the MODEL's
 predictions at P = 256..8192 — which is what the paper's own methodology
 prescribes when the machine at hand cannot expose the latency.
+Like the other file-writing benches, ``run(out_dir=...)`` honors the
+harness ``--out-dir``: the per-row record is emitted as
+``BENCH_solvers.json`` (repo root by default).
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -89,8 +94,29 @@ def _engine_rows(rows):
                  f"res_max={float(jnp.max(out.res_norm)):.3e} "
                  f"words_per_iter_per_rhs={w/n:.1f}n"))
 
+    # sharded fused engine end-to-end (whatever mesh this host exposes —
+    # 1 device here; the multi-shard path is exercised by the
+    # distributed-smoke CI job and tests/test_engine_equivalence.py)
+    from benchmarks.bench_kernels import _words_sharded_iter
+    from repro.core.krylov import distributed_solve
 
-def run():
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()), ("shards",))
+    S = int(mesh.devices.size)
+    sec, out = _time(
+        jax.jit(lambda bb: distributed_solve(
+            pipecg, A, bb, mesh, engine="sharded_fused", maxiter=iters)), b)
+    n_local = n // S
+    w = _words_sharded_iter(n_local, nb, 1)
+    rows.append((f"solver/pipecg_engine_sharded_fused/S{S}/n{n}",
+                 sec / iters * 1e6,
+                 f"res={float(out.res_norm):.3e} "
+                 f"words_per_iter_per_shard={w/n_local:.2f}n"))
+    drift = (float(jnp.max(jnp.abs(res["naive"].x - out.x)))
+             / (float(jnp.max(jnp.abs(res["naive"].x))) + 1e-30))
+    assert drift < 1e-2, drift
+
+
+def run(out_dir=None):
     rows = []
     # reduced-N real runs (full N=2,097,152 also feasible; reduced keeps the
     # bench under a minute on 1 CPU core)
@@ -118,6 +144,20 @@ def run():
         rows.append((f"solver/predicted_speedup/P{p}", float("nan"),
                      f"{pred['speedup']:.3f}x  t_spmv={pred['t_spmv']*1e6:.2f}us "
                      f"t_red={pred['t_reduction']*1e6:.2f}us"))
+
+    # --out-dir contract: persist the row record like the other benches
+    json_path = os.path.join(
+        out_dir if out_dir is not None
+        else os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_solvers.json")
+    os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+    with open(json_path, "w") as f:
+        json.dump({"rows": [{"name": nm,
+                             "us_per_call": (None if us != us else us),
+                             "derived": dv}
+                            for nm, us, dv in rows]}, f, indent=2)
+    rows.append(("solver/json", float("nan"),
+                 f"wrote {os.path.basename(json_path)}"))
     return rows
 
 

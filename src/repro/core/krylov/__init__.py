@@ -2,12 +2,17 @@
 from repro.core.krylov.base import SolveResult, local_dot, make_psum_dot  # noqa: F401
 from repro.core.krylov.bicgstab import bicgstab  # noqa: F401
 from repro.core.krylov.cg import cg, cr, pipecg, pipecg_multi, pipecr  # noqa: F401
-from repro.core.krylov.distributed import distributed_solve  # noqa: F401
+from repro.core.krylov.distributed import (  # noqa: F401
+    distributed_solve,
+    halo_exchange_cols,
+    sharded_pipecg_solve,
+)
 from repro.core.krylov.engine import (  # noqa: F401
     ENGINES,
     Engine,
     FusedEngine,
     NaiveEngine,
+    ShardedFusedEngine,
     get_engine,
     register_engine,
 )

@@ -12,6 +12,18 @@ the end of iteration i is consumed only after the next SpMV, which is what
 lets XLA's latency-hiding scheduler overlap the collective (split-phase
 semantics, cf. DESIGN.md §Hardware-adaptation).
 
+``distributed_solve(..., engine="sharded_fused")`` replaces the naive
+per-op iteration with the sharded single-sweep engine
+(:class:`~repro.core.krylov.engine.ShardedFusedEngine`): each shard runs
+one halo-aware Pallas sweep per iteration (kernels/pipecg_spmv_fused.py)
+that emits PARTIAL reduction rows, and the finishing ``psum`` is carried
+across the scan boundary so its result is consumed only by the next
+iteration's scalar recurrence — never by that iteration's halo
+``ppermute`` or kernel operands.  In the compiled HLO the all-reduce and
+the collective-permutes of a loop body are therefore mutually
+independent (asserted by ``launch/hlo_analysis.py::split_phase_overlap``)
+— the paper's MPI_Iallreduce/MPI_Wait window, rendered in XLA.
+
 ``distributed_solve(..., noise=...)`` splices a host-side NoiseHook
 (core/noise/injection.py) into the per-shard SpMV so every Krylov
 iteration stalls for a freshly sampled waiting time — the campaign
@@ -21,7 +33,7 @@ runner's in-silico rendering of the paper's noisy Piz Daint runs
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,13 +50,24 @@ AXIS = "shards"
 def _axis_size(axis_name) -> int:
     """Static size of a mapped axis (or product over a tuple of axes).
 
-    ``jax.lax.axis_size`` only exists in newer JAX; fall back to the axis
-    env, which shard_map populates on this version (0.4.x).
+    ``jax.lax.axis_size`` only exists in newer JAX; older 0.4.x releases
+    expose the information through the (private) axis env, which shard_map
+    populates.  The private fallback is import-guarded so a JAX that has
+    removed the internal fails with an actionable message instead of an
+    AttributeError from deep inside tracing.
     """
     if hasattr(jax.lax, "axis_size"):
         return jax.lax.axis_size(axis_name)
-    from jax._src import core as _core
-    env = _core.get_axis_env()
+    try:
+        from jax._src.core import get_axis_env
+    except (ImportError, AttributeError) as e:
+        raise RuntimeError(
+            "cannot determine the mapped axis size: this JAX version has "
+            "neither jax.lax.axis_size (added in newer releases) nor the "
+            "legacy jax._src.core.get_axis_env internal it superseded; "
+            "upgrade JAX (or pin a 0.4.x release that still ships the "
+            "axis env)") from e
+    env = get_axis_env()
     names = axis_name if isinstance(axis_name, tuple) else (axis_name,)
     size = 1
     for nm in names:
@@ -52,19 +75,28 @@ def _axis_size(axis_name) -> int:
     return size
 
 
-def halo_exchange(x_local: jnp.ndarray, halo: int, axis_name: str = AXIS):
-    """Return (left_halo, right_halo) of width ``halo`` from the ring
-    neighbors; chain-boundary devices receive zeros (matches the zero
-    padding of DIA bands at the matrix boundary)."""
+def halo_exchange_cols(x: jnp.ndarray, halo: int, axis_name: str = AXIS):
+    """(left, right) halos of width ``halo`` along the LAST axis.
+
+    Works for any leading batch shape — vectors (n,), RHS batches (k, n)
+    and band stacks (n_bands, n) all exchange their edge columns with the
+    ring neighbors; chain-boundary devices receive zeros (matches the
+    zero padding of DIA bands at the matrix boundary).
+    """
     n_dev = _axis_size(axis_name)
     if n_dev == 1 or halo == 0:
-        z = jnp.zeros((halo,) + x_local.shape[1:], x_local.dtype)
+        z = jnp.zeros(x.shape[:-1] + (halo,), x.dtype)
         return z, z
     right_send = [(i, i + 1) for i in range(n_dev - 1)]   # i -> i+1
     left_send = [(i + 1, i) for i in range(n_dev - 1)]    # i -> i-1
-    left_halo = jax.lax.ppermute(x_local[-halo:], axis_name, right_send)
-    right_halo = jax.lax.ppermute(x_local[:halo], axis_name, left_send)
-    return left_halo, right_halo
+    left = jax.lax.ppermute(x[..., -halo:], axis_name, right_send)
+    right = jax.lax.ppermute(x[..., :halo], axis_name, left_send)
+    return left, right
+
+
+def halo_exchange(x_local: jnp.ndarray, halo: int, axis_name: str = AXIS):
+    """1-D vector variant of :func:`halo_exchange_cols` (same semantics)."""
+    return halo_exchange_cols(x_local, halo, axis_name)
 
 
 def dia_matvec_local(offsets, bands_local, x_local, axis_name: str = AXIS,
@@ -87,10 +119,210 @@ def dia_matvec_local(offsets, bands_local, x_local, axis_name: str = AXIS,
     return y
 
 
+# ---------------------------------------------------------------------------
+# Sharded fused engine: halo-aware single-sweep kernel + split-phase psum
+# ---------------------------------------------------------------------------
+
+def _local_partials(r, u, w):
+    """This shard's (k, 5) reduction row [<r,u>, <w,u>, <r,r>, <r,w>, <w,w>].
+
+    One fused pass per operand via the multi-dot kernel
+    (kernels/fused_dots.py) — the same reduction tail the kernel sweep
+    accumulates in steady state.
+    """
+    from repro.kernels import ops as kops
+
+    def one(rj, uj, wj):
+        rw = jnp.stack([rj, wj])
+        d_u = kops.fused_dots(rw, uj)          # <r,u>, <w,u>
+        d_r = kops.fused_dots(rw, rj)          # <r,r>, <w,r> = <r,w>
+        d_w = kops.fused_dots(wj[None], wj)    # <w,w>
+        return jnp.concatenate([d_u, d_r, d_w])
+
+    return jax.vmap(one)(r, u, w)
+
+
+def sharded_pipecg_solve(offsets: Tuple[int, ...], bands_local, b_local, *,
+                         axis_name: str, ip: str = "id", M=None,
+                         maxiter: int = 100, tol: float = 0.0,
+                         block: Optional[int] = None, n_shards: int = 1,
+                         noise: Optional[NoiseHook] = None) -> SolveResult:
+    """Per-shard PIPECG/PIPECR body of the ShardedFusedEngine.
+
+    Runs INSIDE shard_map.  Each iteration is one halo-aware Pallas sweep
+    (kernels/pipecg_spmv_fused.py::pipecg_spmv_halo) plus one scalar psum
+    — and the psum is *split-phase*: the kernel of iteration i emits a
+    partial (k, 5) reduction row that is carried unreduced across the
+    scan boundary; iteration i+1 first issues its halo ppermutes (which
+    depend only on the carried vectors), then finishes the reduction with
+    ``psum`` and feeds the result to the scalar alpha/beta recurrence
+    gating the kernel launch.  Inside one loop body the all-reduce and
+    the collective-permutes therefore have no data dependence on each
+    other, which is what lets XLA overlap them (the HLO assertion lives
+    in launch/hlo_analysis.py::split_phase_overlap).
+
+    Because the reduction consumed at iteration i is the one INITIATED at
+    iteration i-1, the residual history comes out shifted by one; a final
+    psum after the scan supplies ``||r_maxiter||`` and the history is
+    rolled back into the naive solvers' alignment (hist[i] = ||r_{i+1}||).
+
+    ``M`` may be None (identity) or ``"jacobi"`` — in-kernel
+    preconditioning only; opaque callables are rejected.  ``noise`` (a
+    NoiseHook) adds an io_callback stall to the partial-reduction row so
+    the sampled wait sits on the iteration's critical path.
+    """
+    from repro.kernels import ops as kops
+
+    halo = max(abs(o) for o in offsets)
+    batched = b_local.ndim == 2
+    B = b_local if batched else b_local[None]
+    k_rhs, n_local = B.shape
+    dt = B.dtype
+    if n_local < 2 * halo:
+        raise ValueError(
+            f"sharded_fused engine: local shard of {n_local} rows is "
+            f"narrower than the 2*halo={2 * halo} stencil reach")
+    if M is None:
+        invd = jnp.ones((n_local,), dt)
+    elif M == "jacobi":
+        invd = (1.0 / bands_local[offsets.index(0)]).astype(dt)
+    else:
+        raise ValueError(
+            "sharded_fused engine preconditions in-kernel: M must be None "
+            f"or 'jacobi', got {M!r}")
+
+    # loop-invariant operator extension: one ppermute per solve, hoisted
+    # out of the iteration scan by construction
+    bl, br = halo_exchange_cols(bands_local, halo, axis_name)
+    bands_ext = jnp.concatenate([bl, bands_local, br], axis=-1)
+    il, ir = halo_exchange_cols(invd, halo, axis_name)
+    invd_ext = jnp.concatenate([il, invd, ir], axis=-1)
+
+    def mv(v):  # (k, n_local) halo matvec — init only; the scan uses the kernel
+        lv, rv = halo_exchange_cols(v, halo, axis_name)
+        v_ext = jnp.concatenate([lv, v, rv], axis=-1)
+        y = jnp.zeros_like(v)
+        for kb, off in enumerate(offsets):
+            y = y + bands_local[kb] * jax.lax.dynamic_slice_in_dim(
+                v_ext, halo + off, n_local, axis=-1)
+        return y
+
+    x = jnp.zeros_like(B)
+    r = B                      # r0 = b - A*0
+    u = invd * r
+    w = mv(u)
+    red0 = _local_partials(r, u, w)
+    one = jnp.ones((k_rhs,), dt)
+    state0 = dict(x=x, r=r, u=u, p=jnp.zeros_like(B), red=red0,
+                  gamma_prev=one, alpha_prev=one,
+                  first=jnp.asarray(True),
+                  done=jnp.zeros((k_rhs,), bool),
+                  iters=jnp.zeros((k_rhs,), jnp.int32))
+    bb = jax.lax.psum(jnp.sum(B * B, axis=-1), axis_name)
+    tol2 = jnp.asarray(tol, dt) ** 2 * bb
+
+    def step(st, _):
+        # ---- halo exchange for THIS iteration's sweep: depends only on
+        # the carried vectors, NOT on the pending reduction ----
+        ul, ur = halo_exchange_cols(st["u"], 2 * halo, axis_name)
+        pl_, pr = halo_exchange_cols(st["p"], 2 * halo, axis_name)
+        # ---- split-phase: finish the reduction initiated LAST iteration;
+        # its only consumers are the scalar recurrences below ----
+        red = jax.lax.psum(st["red"], axis_name)
+        gamma, delta = ((red[:, 0], red[:, 1]) if ip == "id"
+                        else (red[:, 3], red[:, 4]))
+        rr = red[:, 2]
+        beta = jnp.where(st["first"], jnp.zeros_like(gamma),
+                         gamma / st["gamma_prev"])
+        alpha = jnp.where(st["first"], gamma / delta,
+                          gamma / (delta - beta * gamma / st["alpha_prev"]))
+        x, r, u, p, red_new = kops.pipecg_spmv_halo_step(
+            offsets, bands_ext, invd_ext, st["x"], st["r"], st["u"], st["p"],
+            ul, ur, pl_, pr, alpha, beta, block=block, n_shards=n_shards)
+        if noise is not None:
+            from jax.experimental import io_callback
+            # effectful: XLA may not elide/hoist it; the zero tick rides
+            # the partial-reduction row so the stall gates the next psum
+            tick = io_callback(noise, jax.ShapeDtypeStruct((), jnp.float32),
+                               ordered=False)
+            red_new = red_new + tick.astype(dt)
+
+        done = st["done"] | (rr <= tol2)
+        mask = st["done"]
+
+        def frz(nv, ov):  # freeze converged systems (masked update)
+            m = (mask.reshape(mask.shape + (1,) * (nv.ndim - mask.ndim))
+                 if nv.ndim > mask.ndim else mask)
+            return jnp.where(m, ov, nv)
+
+        new = dict(x=frz(x, st["x"]), r=frz(r, st["r"]), u=frz(u, st["u"]),
+                   p=frz(p, st["p"]), red=frz(red_new, st["red"]),
+                   gamma_prev=frz(gamma, st["gamma_prev"]),
+                   alpha_prev=frz(alpha, st["alpha_prev"]),
+                   first=jnp.asarray(False), done=done,
+                   iters=st["iters"] + (~done).astype(jnp.int32))
+        return new, jnp.sqrt(jnp.maximum(rr, 0.0))
+
+    st, hist = jax.lax.scan(step, state0, None, length=maxiter)
+    red_fin = jax.lax.psum(st["red"], axis_name)
+    res = jnp.sqrt(jnp.maximum(red_fin[:, 2], 0.0))
+    # roll the shifted history into the naive alignment hist[i] = ||r_{i+1}||
+    hist = jnp.concatenate([hist[1:], res[None]], axis=0)  # (maxiter, k)
+    if batched:
+        return SolveResult(x=st["x"], iters=st["iters"], res_norm=res,
+                           res_history=hist.T)
+    return SolveResult(x=st["x"][0], iters=st["iters"][0], res_norm=res[0],
+                       res_history=hist[:, 0])
+
+
+# pipelined solvers the sharded engine can express, by function name
+_SHARDED_IP = {"pipecg": "id", "pipecg_multi": "id", "pipecr": "A"}
+
+
+def _distributed_engine_solve(solver, A: DiaMatrix, b, mesh: Mesh, eng, *,
+                              noise=None, block=None, **solver_kw
+                              ) -> SolveResult:
+    """shard_map entry for the ShardedFusedEngine path."""
+    axes = mesh.axis_names
+    if len(axes) != 1:
+        raise ValueError(
+            "engine='sharded_fused' needs a single (flattened) mesh axis; "
+            f"got axes {axes!r}")
+    axis = axes[0]
+    name = getattr(solver, "__name__", str(solver))
+    ip = _SHARDED_IP.get(name)
+    if ip is None:
+        raise ValueError(
+            "engine='sharded_fused' supports pipecg / pipecg_multi / "
+            f"pipecr; got solver {name!r}")
+    if not isinstance(A, DiaMatrix):
+        raise ValueError("engine='sharded_fused' needs a DiaMatrix operator")
+    M = solver_kw.pop("M", None)
+    maxiter = solver_kw.pop("maxiter", 100)
+    tol = solver_kw.pop("tol", 0.0)
+    if solver_kw:
+        raise TypeError(
+            f"unsupported kwargs for the sharded_fused path: {sorted(solver_kw)}")
+    n_shards = int(mesh.devices.size)
+    batched = b.ndim == 2
+    spec_v = P(None, axis) if batched else P(axis)
+
+    def run(bands_local, b_local):
+        return eng.solve(A.offsets, bands_local, b_local, axis_name=axis,
+                         ip=ip, M=M, maxiter=maxiter, tol=tol, block=block,
+                         n_shards=n_shards, noise=noise)
+
+    out_specs = SolveResult(x=spec_v, iters=P(), res_norm=P(), res_history=P())
+    fn = shard_map(run, mesh=mesh, in_specs=(P(None, axis), spec_v),
+                   out_specs=out_specs, check_rep=False)
+    return fn(A.bands, b)
+
+
 def distributed_solve(solver: Callable, A: DiaMatrix, b: jnp.ndarray,
                       mesh: Mesh, *, use_kernel: bool = False,
-                      noise: Optional[NoiseHook] = None, **solver_kw
-                      ) -> SolveResult:
+                      noise: Optional[NoiseHook] = None,
+                      engine=None, block: Optional[int] = None,
+                      **solver_kw) -> SolveResult:
     """Run ``solver`` (cg / pipecg / cr / pipecr / gmres / pgmres) with the
     vector sharded over every device of ``mesh`` (flattened).
 
@@ -98,7 +330,30 @@ def distributed_solve(solver: Callable, A: DiaMatrix, b: jnp.ndarray,
     followed by a host callback that sleeps a sampled waiting time; the
     callback's zero result is added to the SpMV output so the stall sits on
     the data-dependent critical path (cannot be hoisted or elided).
+
+    ``engine``: None keeps the historical per-op iteration (any solver);
+    ``"sharded_fused"`` (or a ShardedFusedEngine instance) runs pipecg /
+    pipecg_multi / pipecr as one halo-aware Pallas sweep per shard per
+    iteration with a split-phase psum (see sharded_pipecg_solve).
+    ``block`` overrides the sharded kernel's autotuned tile size.
     """
+    from repro.core.krylov.engine import ShardedFusedEngine, get_engine
+
+    eng = get_engine(engine)
+    if isinstance(eng, ShardedFusedEngine):
+        return _distributed_engine_solve(solver, A, b, mesh, eng,
+                                         noise=noise, block=block,
+                                         **solver_kw)
+    if eng is not None:
+        raise ValueError(
+            "distributed_solve supports engine=None (historical inline "
+            "path) or 'sharded_fused'; single-device engines compute "
+            f"local reductions and cannot shard (got {eng.name!r})")
+    if block is not None:
+        raise ValueError(
+            "block= only applies to the engine='sharded_fused' kernel "
+            "path; the historical inline path has no tile-size override")
+
     axes = mesh.axis_names
     spec_v = P(axes)       # vectors sharded over all axes (flattened)
     spec_b = P(None, axes)  # bands: (n_bands, N) sharded on N

@@ -13,6 +13,11 @@ decides how the memory-bound inner loop hits the hardware:
   with explicit operator / preconditioner applications.  GMRES-family
   orthogonalization coefficients go through the one-pass multi-dot kernel
   (kernels/fused_dots.py).
+* ``ShardedFusedEngine`` — the distributed counterpart: selected via
+  ``distributed_solve(..., engine="sharded_fused")``, it runs the same
+  single-sweep kernel per shard inside shard_map with ppermute'd halo
+  operands and finishes the kernel's partial reductions with a
+  split-phase psum (core/krylov/distributed.py::sharded_pipecg_solve).
 
 Engines are selected per solve via ``engine="naive" | "fused"`` (or an
 Engine instance) on ``cg`` / ``pipecg`` / ``pipecr`` / ``gmres`` /
@@ -232,3 +237,42 @@ class FusedEngine(Engine):
         n_ = self.spmv(A, m)
         return (dict(x=x, r=r, u=u, w=w, m=m, n=n_, z=z, q=q, s=s, p=p),
                 gamma, delta, red[2])
+
+
+@register_engine
+class ShardedFusedEngine(Engine):
+    """Distributed single-sweep engine (halo-aware kernel + split-phase psum).
+
+    Unlike the single-device engines, this one does not plug into the
+    local solver scan — its reductions are PARTIAL per shard and need the
+    mesh to finish them, so it runs only under
+    ``distributed_solve(..., engine="sharded_fused")``, which calls
+    :meth:`solve` inside shard_map.  Requesting it on a local solver
+    raises with a pointer to the right entry point.
+    """
+
+    name = "sharded_fused"
+
+    def _reject(self):
+        raise ValueError(
+            "engine='sharded_fused' computes per-shard partial reductions "
+            "and must run inside a mesh: use "
+            "distributed_solve(pipecg | pipecg_multi | pipecr, A, b, mesh, "
+            "engine='sharded_fused') instead of the local solver entry")
+
+    def _spmv(self, A, v):
+        self._reject()
+
+    def dots(self, V, z):
+        self._reject()
+
+    def pipecg_init(self, A, b, x0, M, ip):
+        self._reject()
+
+    def pipecg_iter(self, A, M, ip, vecs, alpha, beta):
+        self._reject()
+
+    def solve(self, offsets, bands_local, b_local, **kw):
+        """Per-shard solve body; see distributed.sharded_pipecg_solve."""
+        from repro.core.krylov.distributed import sharded_pipecg_solve
+        return sharded_pipecg_solve(offsets, bands_local, b_local, **kw)

@@ -149,6 +149,43 @@ def _hw_measured(spec: CampaignSpec, sdist, models: Dict, P: int,
             for s in models}
 
 
+def _sharded_exec_summary(spec: CampaignSpec, engine_exec, dists) -> list:
+    """Measured sharded-fused speedup vs the §3 asymptotic model.
+
+    For every ``engine="sharded_fused"`` execution cell, the measured
+    speedup is the naive-engine per-iteration wall time of the same
+    solver divided by the sharded one; the modeled column is
+    ``perfmodel.asymptotic_speedup`` of the campaign's execution noise at
+    P = the local shard count (1.0 on a single-device host — the model's
+    E[max of 1]/mu).  This is the hook every future scaling PR reports
+    through: a sharded-engine change claims a speedup only if this table
+    says so.
+    """
+    from repro.core.perfmodel import asymptotic_speedup
+
+    naive = {c["solver"]: c for c in engine_exec if c["engine"] == "naive"}
+    dist = dists.get(spec.exec_noise)
+    out = []
+    for c in engine_exec:
+        if c["engine"] != "sharded_fused":
+            continue
+        base = naive.get(c["solver"])
+        if base is None:
+            continue
+        P = int(c.get("n_shards", 1))
+        modeled = (asymptotic_speedup(dist, P, method="auto")
+                   if (dist is not None and P > 1) else 1.0)
+        out.append({
+            "solver": c["solver"], "n": c["n"], "n_shards": P,
+            "per_iter_us": c["per_iter_us"],
+            "naive_per_iter_us": base["per_iter_us"],
+            "measured_speedup": base["per_iter_us"] / c["per_iter_us"],
+            "modeled_asymptotic_speedup": float(modeled),
+            "noise": spec.exec_noise,
+        })
+    return out
+
+
 def _acceptance(spec: CampaignSpec, cells, wait_fits) -> Dict[str, bool]:
     """The ISSUE's acceptance checks, evaluated on this campaign's data."""
     exp_cells = [c for c in cells if c["noise"] == "exponential"]
@@ -203,12 +240,14 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
 
     # 3. real execution stages
     engine_exec = []
+    sharded_exec: list = []
     noisy_exec: Dict[str, Dict] = {}
     runtime_fits: Dict[str, Dict] = {}
     if not skip_exec:
         engine_exec = run_engine_exec(
             spec.exec_solvers, spec.engines, spec.exec_n, spec.exec_maxiter,
             repeats=spec.exec_repeats)
+        sharded_exec = _sharded_exec_summary(spec, engine_exec, dists)
         noisy_exec = run_noisy_exec(
             spec.exec_solvers, dists[spec.exec_noise], spec.noise_scale,
             spec.exec_n, spec.exec_maxiter, spec.exec_repeats,
@@ -226,6 +265,7 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
         "cells": cells,
         "wait_fits": wait_fits,
         "engine_exec": engine_exec,
+        "sharded_exec": sharded_exec,
         "noisy_exec": noisy_exec,
         "runtime_fits": runtime_fits,
         "validation": validation,

@@ -110,6 +110,10 @@ def _true_residual(A, b, x) -> float:
     return float(jnp.sqrt(jnp.sum(r * r)))
 
 
+# solvers the sharded_fused engine can express (distributed_solve dispatch)
+_SHARDED_SOLVERS = ("pipecg", "pipecr")
+
+
 def run_engine_exec(solvers: Tuple[str, ...], engines: Tuple[str, ...],
                     n: int, maxiter: int, repeats: int = 3) -> List[Dict]:
     """Time real solves per (solver, engine) and report residual drift.
@@ -119,20 +123,36 @@ def run_engine_exec(solvers: Tuple[str, ...], engines: Tuple[str, ...],
     ``res_true`` (recomputed ``||b - A x||``) and ``drift_rel``
     (|true - recurrence| / ||b||) — the Cools-style true-residual gap that
     pipelined rearrangements are known to widen.
+
+    ``engine="sharded_fused"`` cells run through ``distributed_solve``
+    over every local device (halo-aware single-sweep kernel +
+    split-phase psum) and carry an extra ``n_shards`` key; solver/engine
+    combinations an engine cannot express are skipped.
     """
     import jax
     import jax.numpy as jnp
-    from repro.core.krylov import tridiagonal_laplacian
+    import numpy as _np
+    from jax.sharding import Mesh
+    from repro.core.krylov import distributed_solve, tridiagonal_laplacian
 
     A = tridiagonal_laplacian(n)
     b = jnp.ones((n,), A.bands.dtype)
     bnorm = float(jnp.sqrt(jnp.sum(b * b)))
+    mesh = Mesh(_np.asarray(jax.devices()), ("shards",))
+    n_shards = int(mesh.devices.size)
     cells = []
     for solver in solvers:
         fn = _solver_fn(solver)
         for engine in engines:
-            solve = jax.jit(lambda bb, fn=fn, engine=engine: fn(
-                A, bb, maxiter=maxiter, engine=engine))
+            if engine == "sharded_fused":
+                if solver not in _SHARDED_SOLVERS or n % n_shards:
+                    continue
+                solve = jax.jit(lambda bb, fn=fn: distributed_solve(
+                    fn, A, bb, mesh, engine="sharded_fused",
+                    maxiter=maxiter))
+            else:
+                solve = jax.jit(lambda bb, fn=fn, engine=engine: fn(
+                    A, bb, maxiter=maxiter, engine=engine))
             out = solve(b)
             jax.block_until_ready(out.x)  # compile
             t0 = time.perf_counter()
@@ -142,14 +162,17 @@ def run_engine_exec(solvers: Tuple[str, ...], engines: Tuple[str, ...],
             per_iter = (time.perf_counter() - t0) / repeats / maxiter
             res_rec = float(out.res_norm)
             res_true = _true_residual(A, b, out.x)
-            cells.append({
+            cell = {
                 "solver": solver, "engine": engine, "n": n,
                 "maxiter": maxiter,
                 "per_iter_us": per_iter * 1e6,
                 "res_recurrence": res_rec,
                 "res_true": res_true,
                 "drift_rel": abs(res_true - res_rec) / bnorm,
-            })
+            }
+            if engine == "sharded_fused":
+                cell["n_shards"] = n_shards
+            cells.append(cell)
     return cells
 
 

@@ -31,8 +31,12 @@ class CampaignSpec:
         Pipelined solvers to sweep; each is validated against
         ``SOLVER_PAIRS[solver]``.
     engines:
-        Iteration engines for the single-process execution stage
-        (``core/krylov/engine.py`` registry names).
+        Iteration engines for the execution stage
+        (``core/krylov/engine.py`` registry names).  ``"sharded_fused"``
+        routes the solve through ``distributed_solve`` over every local
+        device (halo-aware single-sweep kernel + split-phase psum); the
+        runner skips solver/engine combinations an engine cannot express
+        (the sharded engine covers pipecg / pipecg_multi / pipecr).
     noises:
         Waiting-time distribution names understood by
         ``noise_sources.make_distribution`` — closed-form families
@@ -65,7 +69,7 @@ class CampaignSpec:
 
     name: str
     solvers: Tuple[str, ...] = ("pipecg", "pipecr", "pgmres")
-    engines: Tuple[str, ...] = ("naive", "fused")
+    engines: Tuple[str, ...] = ("naive", "fused", "sharded_fused")
     noises: Tuple[str, ...] = ("uniform", "exponential", "lognormal",
                                "trace:PIPECG")
     shard_counts: Tuple[int, ...] = (2, 4, 8)

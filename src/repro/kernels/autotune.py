@@ -9,14 +9,20 @@ Two regimes, mirroring how the rest of the repo treats the CPU container:
 * TPU: candidates are compiled and timed (median of ``reps`` runs) via a
   caller-supplied ``probe(block) -> jittable thunk``.
 
-Choices are cached per (kind, n, dtype, backend) for the process lifetime;
-``clear_cache`` exists for tests.
+Choices are cached per (kind, n, dtype, backend, min_block, n_shards,
+k_rhs) for the process lifetime — the sharding degree and RHS batch
+change both the local row count and how the resident operand reads
+amortize, so they are part of the key.  ``save_cache`` / ``load_cache``
+persist the table as JSON (``results/autotune_cache.json`` by default)
+so repeated campaign/benchmark runs skip re-tuning; ``clear_cache``
+exists for tests.
 """
 from __future__ import annotations
 
-import functools
+import json
+import os
 import time
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -26,11 +32,54 @@ DEFAULT_CANDIDATES = (256, 512, 1024, 2048, 4096, 8192)
 # HBM traffic (DMA issue + kernel dispatch); only a tie-breaker.
 STEP_OVERHEAD_WORDS = 512
 
-_CACHE: Dict[Tuple, int] = {}
+# default on-disk location, relative to the CWD (benchmarks/run.py passes
+# an explicit path derived from --out-dir)
+DEFAULT_CACHE_PATH = os.path.join("results", "autotune_cache.json")
+
+_CACHE: Dict[str, int] = {}
 
 
 def clear_cache() -> None:
+    """Drop every cached block choice (tests)."""
     _CACHE.clear()
+
+
+def _key(kind: str, n: int, dtype, backend: str, min_block: int,
+         n_shards: int, k_rhs: int) -> str:
+    """JSON-stable cache key: backend + full shape signature."""
+    return "|".join(str(v) for v in (kind, n, jnp.dtype(dtype).name,
+                                     backend, min_block, n_shards, k_rhs))
+
+
+def load_cache(path: str = DEFAULT_CACHE_PATH) -> int:
+    """Merge a persisted cache file into the in-memory table.
+
+    Returns the number of entries loaded (0 if the file is missing or
+    unreadable — tuning then proceeds from scratch).
+    """
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return 0
+    blocks = data.get("blocks", {})
+    loaded = 0
+    for key, blk in blocks.items():
+        if isinstance(blk, int) and blk > 0:
+            _CACHE.setdefault(key, blk)
+            loaded += 1
+    return loaded
+
+
+def save_cache(path: str = DEFAULT_CACHE_PATH) -> str:
+    """Write the in-memory table to ``path`` (creating parent dirs)."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"version": 1, "blocks": _CACHE}, f, indent=2,
+                  sort_keys=True)
+    return path
 
 
 def modeled_words(n: int, block: int, *, words_per_row: float,
@@ -59,7 +108,8 @@ def best_block(kind: str, n: int, dtype, *,
                min_block: int = 1,
                candidates: Sequence[int] = DEFAULT_CANDIDATES,
                probe: Optional[Callable[[int], Callable[[], jax.Array]]] = None,
-               backend: Optional[str] = None) -> int:
+               backend: Optional[str] = None,
+               n_shards: int = 1, k_rhs: int = 1) -> int:
     """Pick a block size for a tiled kernel sweep.
 
     kind            — cache namespace (e.g. "pipecg_spmv", "spmv_dia")
@@ -67,11 +117,15 @@ def best_block(kind: str, n: int, dtype, *,
     resident_words  — words fetched once per sweep regardless of block
     min_block       — hard floor (e.g. 2*halo for stencil kernels)
     probe           — block -> thunk; required for measured (TPU) tuning
+    n_shards, k_rhs — sharding degree / RHS batch of the caller; part of
+                      the cache key (they change n_local and how resident
+                      reads amortize) so a distributed caller never reuses
+                      a single-device choice
     """
     backend = backend or jax.default_backend()
     # min_block is part of the key: the same (kind, n) tuned for a narrow
     # band must not hand its block to a caller with a wider halo floor
-    key = (kind, n, jnp.dtype(dtype).name, backend, min_block)
+    key = _key(kind, n, dtype, backend, min_block, n_shards, k_rhs)
     if key in _CACHE:
         return _CACHE[key]
 

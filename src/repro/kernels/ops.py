@@ -122,6 +122,42 @@ def pipecg_spmv_fused_step(offsets: Tuple[int, ...], bands, inv_diag,
     return outs
 
 
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("block", "n_shards"))
+def pipecg_spmv_halo_step(offsets: Tuple[int, ...], bands_ext, invd_ext,
+                          x, r, u, p, u_left, u_right, p_left, p_right,
+                          alpha, beta, block: int = None, n_shards: int = 1):
+    """Per-shard single-sweep PIPECG iteration with neighbor halos.
+
+    Vectors are (k, n_local); ``u_left``/``u_right``/``p_left``/``p_right``
+    are the (k, 2*halo) ppermute payloads; ``bands_ext`` / ``invd_ext``
+    the once-per-solve halo-extended operator.  Returns (x', r', u', p',
+    red) where ``red`` (k, 5) is this shard's PARTIAL reduction row (the
+    caller psums it).  The default block is autotuned on
+    (backend, n_local, n_shards, k_rhs) — repeated campaign runs reuse the
+    on-disk cache (kernels/autotune.py).
+    """
+    from repro.kernels import autotune
+
+    k_rhs, n = x.shape
+    halo = max(abs(o) for o in offsets)
+    if n < 2 * halo:
+        raise ValueError(
+            f"local shard of {n} rows is narrower than the 2*halo={2*halo} "
+            "stencil reach; use fewer shards or a wider local block")
+    if block is None:
+        block = autotune.best_block(
+            "pipecg_spmv_halo", n, x.dtype,
+            words_per_row=6.0,
+            resident_words=(2 + bands_ext.shape[0] + 1) * n,
+            min_block=2 * halo, n_shards=n_shards, k_rhs=k_rhs)
+    block = max(min(block, n), 2 * halo)
+    return _ps.pipecg_spmv_halo(offsets, bands_ext, invd_ext, x, r, u, p,
+                                (u_left, u_right), (p_left, p_right),
+                                alpha, beta, block=block,
+                                interpret=_interpret())
+
+
 @jax.jit
 def pipecg_fused_step(x, r, u, w, m, n_, z, q, s, p, alpha, beta):
     block = min(_pf.DEFAULT_BLOCK, x.shape[0])

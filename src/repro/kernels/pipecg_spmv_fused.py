@@ -41,6 +41,19 @@ for a constant-factor win the interpret-mode benchmarks cannot observe.
 
 The reduction partials feed BOTH inner-product modes: CG-style (ip='id':
 gamma=<r,u>, delta=<w,u>) and CR-style (ip='A': gamma=<r,w>, delta=<w,w>).
+
+``pipecg_spmv_halo`` is the sharded rendering of the same sweep: instead
+of zero halo extensions, the caller passes the 2h left/right rows of u/p
+received from its ring neighbors (``lax.ppermute`` inside shard_map) and
+an operator (bands, diag^-1) pre-extended by h with the neighbors' rows —
+loop-invariant, exchanged once per solve.  The kernel body is identical;
+only the provenance of the extension rows differs, so one local iteration
+(updates + Jacobi + DIA SpMV + partial dots) still costs one HBM pass per
+shard, and the emitted reduction row is a PARTIAL sum the distributed
+driver finishes with a deferred psum (split-phase, see
+core/krylov/distributed.py).  When the local row count is padded to the
+block size, halo rows leak real (neighbor) values into the pad region, so
+the kernel masks rows >= n_valid out of the reduction partials.
 """
 from __future__ import annotations
 
@@ -57,7 +70,7 @@ NRED = 5  # <r,u>, <w,u>, <r,r>, <r,w>, <w,w>
 
 def _kernel(ab_ref, bands_ref, invd_ref, u_ref, p_ref, x_ref, r_ref,
             xo, ro, uo, po, red_o, *, offsets: Sequence[int], halo: int,
-            block: int):
+            block: int, n_valid: int = None):
     j = pl.program_id(0)          # RHS index (batch)
     i = pl.program_id(1)          # tile index
     base = i * block
@@ -108,7 +121,12 @@ def _kernel(ab_ref, bands_ref, invd_ref, u_ref, p_ref, x_ref, r_ref,
     def _init():
         red_o[...] = jnp.zeros_like(red_o)
 
-    # next iteration's fused reduction partials
+    # next iteration's fused reduction partials; rows >= n_valid are pad
+    # rows whose values may carry halo (neighbor) data — mask them out
+    if n_valid is not None:
+        rows = base + jax.lax.broadcasted_iota(jnp.int32, (block,), 0)
+        keep = rows < n_valid
+        r2, u2, w2 = (jnp.where(keep, v, 0) for v in (r2, u2, w2))
     red_o[0, 0] += jnp.sum(r2 * u2)
     red_o[0, 1] += jnp.sum(w2 * u2)
     red_o[0, 2] += jnp.sum(r2 * r2)
@@ -116,37 +134,30 @@ def _kernel(ab_ref, bands_ref, invd_ref, u_ref, p_ref, x_ref, r_ref,
     red_o[0, 4] += jnp.sum(w2 * w2)
 
 
-def pipecg_spmv_fused(offsets: Sequence[int], bands: jnp.ndarray,
-                      inv_diag: jnp.ndarray, x, r, u, p, alpha, beta, *,
-                      block: int = DEFAULT_BLOCK, interpret: bool = False
-                      ) -> Tuple[jnp.ndarray, ...]:
-    """One full preconditioned PIPECG iteration, single HBM sweep.
+def _ab(alpha, beta, k_rhs, dt):
+    """Stack per-RHS scalars into the kernel's (k, 2) operand."""
+    ab = jnp.stack([jnp.asarray(alpha, dt), jnp.asarray(beta, dt)], axis=-1)
+    return ab.reshape(k_rhs, 2)
 
-    All vectors are (k, n) — k right-hand sides batched over the leading
-    grid dimension; ``alpha`` / ``beta`` are (k,).  ``bands`` is
-    (n_bands, n), ``inv_diag`` (n,); both are shared across the batch.
-    n must be a multiple of ``block`` (the ops.py wrapper pads).
 
-    Returns (x', r', u', p', red) with red (k, 5) =
-    (<r',u'>, <w',u'>, <r',r'>, <r',w'>, <w',w'>) per RHS.
+def _sweep(offsets, bands_e, invd_e, u_e, p_e, x, r, ab, *, halo: int,
+           block: int, n_valid: int = None, interpret: bool = False
+           ) -> Tuple[jnp.ndarray, ...]:
+    """The shared pallas_call: one grid sweep over pre-extended operands.
+
+    ``bands_e`` / ``invd_e`` are extended by ``halo`` rows each side and
+    ``u_e`` / ``p_e`` by ``2*halo`` — with zeros (single-device path) or
+    neighbor rows (sharded path).  ``n_valid`` (static) masks pad rows out
+    of the reduction partials; None means every row is valid.
     """
     k_rhs, n = x.shape
-    halo = max(abs(o) for o in offsets)
     assert n % block == 0, (n, block)
     assert block >= 2 * halo, (block, halo)
     grid = (k_rhs, n // block)
     dt = x.dtype
 
-    ab = jnp.stack([jnp.asarray(alpha, dt), jnp.asarray(beta, dt)], axis=-1)
-    ab = ab.reshape(k_rhs, 2)
-    # zero halo extensions (resident operands; fetched once, revisited)
-    bands_e = jnp.pad(bands, ((0, 0), (halo, halo)))
-    invd_e = jnp.pad(inv_diag, (halo, halo))
-    u_e = jnp.pad(u, ((0, 0), (2 * halo, 2 * halo)))
-    p_e = jnp.pad(p, ((0, 0), (2 * halo, 2 * halo)))
-
     kern = functools.partial(_kernel, offsets=tuple(offsets), halo=halo,
-                             block=block)
+                             block=block, n_valid=n_valid)
     vec_spec = pl.BlockSpec((1, block), lambda j, i: (j, i))
     resident = lambda shape: pl.BlockSpec(shape, lambda j, i: (0,) * len(shape))
     outs = pl.pallas_call(
@@ -167,3 +178,77 @@ def pipecg_spmv_fused(offsets: Sequence[int], bands: jnp.ndarray,
         interpret=interpret,
     )(ab, bands_e, invd_e, u_e, p_e, x, r)
     return tuple(outs)
+
+
+def pipecg_spmv_fused(offsets: Sequence[int], bands: jnp.ndarray,
+                      inv_diag: jnp.ndarray, x, r, u, p, alpha, beta, *,
+                      block: int = DEFAULT_BLOCK, interpret: bool = False
+                      ) -> Tuple[jnp.ndarray, ...]:
+    """One full preconditioned PIPECG iteration, single HBM sweep.
+
+    All vectors are (k, n) — k right-hand sides batched over the leading
+    grid dimension; ``alpha`` / ``beta`` are (k,).  ``bands`` is
+    (n_bands, n), ``inv_diag`` (n,); both are shared across the batch.
+    n must be a multiple of ``block`` (the ops.py wrapper pads).
+
+    Returns (x', r', u', p', red) with red (k, 5) =
+    (<r',u'>, <w',u'>, <r',r'>, <r',w'>, <w',w'>) per RHS.
+    """
+    k_rhs, n = x.shape
+    halo = max(abs(o) for o in offsets)
+    # zero halo extensions (resident operands; fetched once, revisited)
+    bands_e = jnp.pad(bands, ((0, 0), (halo, halo)))
+    invd_e = jnp.pad(inv_diag, (halo, halo))
+    u_e = jnp.pad(u, ((0, 0), (2 * halo, 2 * halo)))
+    p_e = jnp.pad(p, ((0, 0), (2 * halo, 2 * halo)))
+    return _sweep(offsets, bands_e, invd_e, u_e, p_e, x, r,
+                  _ab(alpha, beta, k_rhs, x.dtype), halo=halo, block=block,
+                  interpret=interpret)
+
+
+def pipecg_spmv_halo(offsets: Sequence[int], bands_ext: jnp.ndarray,
+                     invd_ext: jnp.ndarray, x, r, u, p,
+                     u_lr: Tuple[jnp.ndarray, jnp.ndarray],
+                     p_lr: Tuple[jnp.ndarray, jnp.ndarray], alpha, beta, *,
+                     block: int = DEFAULT_BLOCK, interpret: bool = False
+                     ) -> Tuple[jnp.ndarray, ...]:
+    """Sharded single-sweep PIPECG iteration with neighbor-supplied halos.
+
+    Same sweep as :func:`pipecg_spmv_fused`, but the extension rows are
+    real neighbor data instead of zeros:
+
+    * ``u_lr`` / ``p_lr``: ``(left, right)`` halo rows of width ``2*halo``
+      per side, shaped (k, 2*halo) — the ``lax.ppermute`` payload of this
+      iteration (chain-boundary shards pass zeros, matching the global
+      zero extension of the DIA bands).
+    * ``bands_ext`` (n_bands, n + 2*halo) / ``invd_ext`` (n + 2*halo,):
+      operator rows pre-extended by ``halo`` per side with the neighbors'
+      values — loop-invariant, exchanged once per solve.
+
+    Pads the row dimension to ``block`` internally; pad rows are masked
+    out of the reduction partials (they see halo data, not zeros).  The
+    returned ``red`` (k, 5) holds this shard's PARTIAL sums — the caller
+    must finish them with a ``psum`` over the mesh axis.
+    """
+    k_rhs, n = x.shape
+    halo = max(abs(o) for o in offsets)
+    pad = (-n) % block
+    u_l, u_r = u_lr
+    p_l, p_r = p_lr
+    assert u_l.shape == (k_rhs, 2 * halo), (u_l.shape, k_rhs, halo)
+    zpad = jnp.zeros((k_rhs, pad), x.dtype)
+    # extension layout: [left halo | local rows | right halo | zero pad] —
+    # the pad must come AFTER the right halo so row n-1's stencil still
+    # reads the neighbor rows at n..n+2h-1
+    u_e = jnp.concatenate([u_l, u, u_r, zpad], axis=-1)
+    p_e = jnp.concatenate([p_l, p, p_r, zpad], axis=-1)
+    bands_p = jnp.pad(bands_ext, ((0, 0), (0, pad)))
+    invd_p = jnp.pad(invd_ext, (0, pad))
+    x_p = jnp.pad(x, ((0, 0), (0, pad)))
+    r_p = jnp.pad(r, ((0, 0), (0, pad)))
+    outs = _sweep(offsets, bands_p, invd_p, u_e, p_e, x_p, r_p,
+                  _ab(alpha, beta, k_rhs, x.dtype), halo=halo, block=block,
+                  n_valid=(n if pad else None), interpret=interpret)
+    if pad:
+        outs = tuple(o[:, :n] for o in outs[:4]) + (outs[4],)
+    return outs

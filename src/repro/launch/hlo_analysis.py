@@ -297,6 +297,69 @@ def full_cost(hlo: str) -> Dict[str, float]:
             "max_trip": float(max(trip.values())) if trip else 1.0}
 
 
+def split_phase_overlap(hlo: str) -> Dict:
+    """Verify the split-phase reduction property on optimized HLO text.
+
+    A pipelined distributed solve is genuinely split-phase when, inside
+    each while-loop body, the inner-product ``all-reduce`` and the halo
+    ``collective-permute``s are mutually independent in the dataflow
+    graph: the all-reduce of iteration i is finished only by the scalar
+    recurrence of iteration i+1, never by i+1's halo exchange or kernel
+    operands — so XLA's latency-hiding scheduler may run the reduction
+    concurrently with the next iteration's ppermute + SpMV launch
+    (MPI_Iallreduce/MPI_Wait, rendered in XLA).
+
+    Returns ``{"bodies": {body_name: {...}}, "overlap_ok": bool}`` where
+    ``overlap_ok`` is True iff at least one while body contains both op
+    kinds and in no body does a collective-permute (transitively) consume
+    an all-reduce result.
+    """
+    comps = _split_computations(hlo)
+    bodies = set()
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        for ln in lines:
+            wm = _WHILE_RE.search(ln)
+            if wm:
+                bodies.add(wm.group(2))
+
+    report: Dict[str, Dict] = {}
+    for body in sorted(bodies & set(comps)):
+        defs: Dict[str, Tuple[str, List[str]]] = {}
+        for ln in comps[body]:
+            dm = _DEF_RE.match(ln)
+            if not dm:
+                continue
+            name_, _, opcode = dm.group(1), dm.group(2), dm.group(3)
+            om = re.search(re.escape(opcode) + r"\(([^)]*)\)", ln)
+            operands = re.findall(r"%([\w.\-]+)", om.group(1)) if om else []
+            defs[name_] = (opcode, operands)
+        reduces = {nm for nm, (op, _) in defs.items()
+                   if op.startswith("all-reduce")}
+        permutes = {nm for nm, (op, _) in defs.items()
+                    if op.startswith("collective-permute")}
+        if not reduces or not permutes:
+            continue
+        tainted = set(reduces)   # transitive consumers of any all-reduce
+        changed = True
+        while changed:
+            changed = False
+            for nm, (_, operands) in defs.items():
+                if nm not in tainted and any(o in tainted for o in operands):
+                    tainted.add(nm)
+                    changed = True
+        report[body] = {
+            "all_reduce": len(reduces),
+            "collective_permute": len(permutes),
+            "permute_depends_on_reduce": bool(permutes & tainted),
+        }
+
+    ok = bool(report) and not any(v["permute_depends_on_reduce"]
+                                  for v in report.values())
+    return {"bodies": report, "overlap_ok": ok}
+
+
 def scan_aware_cost(compiled, hlo: str) -> Dict[str, float]:
     """cost_analysis() FLOPs/bytes corrected for while-loop trip counts.
 

@@ -6,7 +6,20 @@ Ghysels-Vanroose recurrences in exact arithmetic; in fp64 the histories
 agree far below the fp32-tolerance gate of the acceptance criteria, until
 the residual hits the roundoff floor (where the derived-vector variant is
 the MORE stable of the two — it stagnates flat instead of wandering).
+
+The sharded sections cover the ShardedFusedEngine two ways: the halo
+kernel chunk-by-chunk against the full-vector sweep in-process (no mesh
+needed — halos are built by hand), and the whole
+``distributed_solve(..., engine="sharded_fused")`` path against the
+naive engine on 1/2/4/8 forced host devices in a subprocess, including
+the split-phase HLO assertion.
 """
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -24,6 +37,8 @@ from repro.core.krylov import (
     glen_law_band,
     tridiagonal_laplacian,
 )
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 RTOL = 1e-4  # the acceptance gate; fp64 actually achieves ~1e-8
 
@@ -156,6 +171,177 @@ def test_pgmres_engine_fused_dots(tri_system):
     assert abs(float(p0.res_norm) - float(pF.res_norm)) < 1e-8
     np.testing.assert_allclose(np.asarray(p0.x), np.asarray(pF.x),
                                rtol=1e-6, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# ShardedFusedEngine
+# ---------------------------------------------------------------------------
+
+def test_sharded_engine_registered_and_rejects_local_use(tri_system):
+    """The registry knows it; local solvers refuse it with a pointer to
+    distributed_solve (its reductions are per-shard partials)."""
+    assert "sharded_fused" in ENGINES
+    A, b = tri_system
+    with pytest.raises(ValueError, match="distributed_solve"):
+        pipecg(A, b, maxiter=5, engine="sharded_fused")
+
+
+def _manual_sharded_step(A, invd, x, r, u, p, alpha, beta, shards,
+                         block=None):
+    """Chunk the global state, hand-build the neighbor halos, run the halo
+    kernel per chunk, reassemble — exactly what shard_map does, without a
+    mesh."""
+    from repro.kernels import ops as kops
+
+    offsets = A.offsets
+    h = A.halo
+    k, n = x.shape
+    nl = n // shards
+    bands_g = jnp.pad(A.bands, ((0, 0), (h, h)))
+    invd_g = jnp.pad(invd, (h, h))
+    u_g = jnp.pad(u, ((0, 0), (2 * h, 2 * h)))
+    p_g = jnp.pad(p, ((0, 0), (2 * h, 2 * h)))
+    outs, red = [], 0.0
+    for s in range(shards):
+        lo = s * nl
+        piece = kops.pipecg_spmv_halo_step(
+            offsets, bands_g[:, lo:lo + nl + 2 * h],
+            invd_g[lo:lo + nl + 2 * h],
+            x[:, lo:lo + nl], r[:, lo:lo + nl], u[:, lo:lo + nl],
+            p[:, lo:lo + nl],
+            u_g[:, lo:lo + 2 * h], u_g[:, lo + nl + 2 * h:lo + nl + 4 * h],
+            p_g[:, lo:lo + 2 * h], p_g[:, lo + nl + 2 * h:lo + nl + 4 * h],
+            alpha, beta, block=block, n_shards=shards)
+        outs.append(piece[:4])
+        red = red + piece[4]
+    return tuple(jnp.concatenate([o[i] for o in outs], axis=-1)
+                 for i in range(4)) + (red,)
+
+
+@pytest.mark.parametrize("n,k,shards,block,mk", [
+    (512, 1, 4, None, tridiagonal_laplacian),
+    (512, 3, 8, None, tridiagonal_laplacian),
+    # 65 rows/shard with block=32: pads to 96, exercising the n_valid
+    # reduction mask (halo rows leak real data into the pad region)
+    (520, 2, 8, 32, tridiagonal_laplacian),
+    (480, 1, 4, None, lambda n: glen_law_band(n, bandwidth=10)),
+])
+def test_sharded_halo_kernel_chunks_match_full_sweep(n, k, shards, block, mk):
+    """Per-chunk halo kernel == full-vector single-sweep kernel: the halo
+    operands substitute exactly for the zero extension, and the summed
+    partial reductions equal the global ones."""
+    A = mk(n)
+    rng = np.random.default_rng(7)
+    x, r, u, p = (jnp.asarray(rng.standard_normal((k, n))) for _ in range(4))
+    alpha = jnp.asarray(rng.standard_normal(k))
+    beta = jnp.asarray(rng.standard_normal(k))
+    invd = jnp.ones((n,), x.dtype)
+    from repro.kernels import ops as kops
+    want = kops.pipecg_spmv_fused_step(A.offsets, A.bands, invd, x, r, u, p,
+                                       alpha, beta)
+    got = _manual_sharded_step(A, invd, x, r, u, p, alpha, beta, shards,
+                               block=block)
+    for g, w in zip(got, want):
+        scale = float(jnp.max(jnp.abs(w))) + 1e-30
+        assert float(jnp.max(jnp.abs(g - w))) / scale < 1e-12
+
+
+SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import functools
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp, numpy as np
+    from repro.core.krylov import (tridiagonal_laplacian, pipecg, pipecr,
+                                   pipecg_multi, distributed_solve)
+    from repro.launch.hlo_analysis import split_phase_overlap
+
+    RTOL = 1e-5  # the acceptance gate; fp64 lands around 1e-12
+
+    def rel(a, b):
+        a, b = np.asarray(a), np.asarray(b)
+        return float(np.max(np.abs(a - b) / np.maximum(np.abs(a), 1e-30)))
+
+    n = 512
+    A = tridiagonal_laplacian(n)
+    b = jnp.asarray(np.random.default_rng(0).standard_normal(n))
+    loc = pipecg(A, b, maxiter=40, engine="naive")
+    for shards in (1, 2, 4, 8):
+        mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:shards]),
+                                 ("shards",))
+        dist = distributed_solve(pipecg, A, b, mesh, engine="sharded_fused",
+                                 maxiter=40)
+        assert rel(loc.res_history, dist.res_history) < RTOL, shards
+        xs = float(jnp.max(jnp.abs(loc.x))) + 1e-30
+        assert float(jnp.max(jnp.abs(loc.x - dist.x))) / xs < RTOL, shards
+        print("pipecg shards", shards, "ok")
+
+    mesh4 = jax.sharding.Mesh(np.asarray(jax.devices()[:4]), ("shards",))
+    locr = pipecr(A, b, maxiter=30, engine="naive")
+    distr = distributed_solve(pipecr, A, b, mesh4, engine="sharded_fused",
+                              maxiter=30)
+    assert rel(locr.res_history, distr.res_history) < RTOL
+    print("pipecr ok")
+
+    B = jnp.stack([b, 2.0 * b + 1.0])
+    locm = pipecg_multi(A, B, maxiter=30, engine="naive")
+    distm = distributed_solve(pipecg_multi, A, B, mesh4,
+                              engine="sharded_fused", maxiter=30)
+    assert distm.x.shape == B.shape
+    assert rel(locm.res_history, distm.res_history) < RTOL
+    print("pipecg_multi ok")
+
+    # non-divisible n_local (520 / 8 = 65 rows/shard) + forced small block
+    # (pad path + reduction mask) + in-kernel Jacobi
+    n2 = 520
+    A2 = tridiagonal_laplacian(n2)
+    b2 = jnp.asarray(np.random.default_rng(1).standard_normal(n2))
+    mesh8 = jax.sharding.Mesh(np.asarray(jax.devices()), ("shards",))
+    loc2 = pipecg(A2, b2, maxiter=30, M="jacobi", engine="naive")
+    dist2 = distributed_solve(pipecg, A2, b2, mesh8, engine="sharded_fused",
+                              M="jacobi", maxiter=30, block=32)
+    assert rel(loc2.res_history, dist2.res_history) < RTOL
+    print("nondivisible ok")
+
+    # tol freezing: converges and freezes well before maxiter (the split-
+    # phase reduction is consumed one body late, so detection lags the
+    # single-device engines by exactly one iteration)
+    n3 = 200  # 25 rows/shard
+    A3 = tridiagonal_laplacian(n3)
+    b3 = jnp.asarray(np.random.default_rng(2).standard_normal(n3))
+    dtol = distributed_solve(pipecg, A3, b3, mesh8, engine="sharded_fused",
+                             maxiter=300, tol=1e-6)
+    assert int(dtol.iters) <= 201, int(dtol.iters)
+    assert float(dtol.res_norm) <= 1e-6 * float(jnp.linalg.norm(b3)) * 1.01
+    print("tol ok")
+
+    # split-phase: in the compiled while body the all-reduce and the halo
+    # permutes are mutually independent (the overlap window exists)
+    txt = jax.jit(functools.partial(
+        distributed_solve, pipecg, A, mesh=mesh8, engine="sharded_fused",
+        maxiter=5)).lower(b).compile().as_text()
+    ov = split_phase_overlap(txt)
+    assert ov["overlap_ok"], ov
+    assert "collective-permute" in txt and "all-reduce" in txt
+    print("overlap ok")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_engine_distributed_equivalence():
+    """naive vs ShardedFusedEngine across 1/2/4/8 shards (subprocess with 8
+    forced host devices): pipecg / pipecg_multi / pipecr, non-divisible
+    n, tol freezing, and the split-phase HLO assertion."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SHARDED_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    for tag in ("pipecg shards 8 ok", "pipecr ok", "pipecg_multi ok",
+                "nondivisible ok", "tol ok", "overlap ok"):
+        assert tag in out.stdout, out.stdout
 
 
 def test_fused_engine_callable_M_fallback(tri_system):

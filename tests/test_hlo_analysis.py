@@ -6,6 +6,7 @@ import pytest
 from repro.launch.hlo_analysis import (
     analyze_collectives,
     shape_bytes,
+    split_phase_overlap,
     _split_computations,
 )
 
@@ -46,6 +47,65 @@ def test_split_computations():
     comps = _split_computations(FAKE_HLO)
     assert any("cond" in c for c in comps)
     assert "__entry__" in comps
+
+
+SPLIT_PHASE_HLO = """
+HloModule jit_solve
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%cond.1 (p: (s32[], f32[64], f32[5])) -> pred[] {
+  %c = s32[] constant(10)
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body.split (p: (s32[], f32[64], f32[5])) -> (s32[], f32[64], f32[5]) {
+  %u = f32[64]{0} get-tuple-element(%p), index=1
+  %red = f32[5]{0} get-tuple-element(%p), index=2
+  %halo = f32[2]{0} collective-permute(%u), source_target_pairs={{0,1}}
+  %ar = f32[5]{0} all-reduce(%red), to_apply=%add
+  %alpha = f32[] slice(%ar), slice={[0:1]}
+  %kern = f32[64]{0} fusion(%u, %halo, %alpha), kind=kLoop, calls=%add
+  ROOT %t = (s32[], f32[64], f32[5]) tuple(%i2, %kern, %ar)
+}
+
+ENTRY %main (a: f32[64]) -> f32[64] {
+  %w = (s32[], f32[64], f32[5]) while(%init), condition=%cond.1, body=%body.split
+  ROOT %out = f32[64]{0} get-tuple-element(%w), index=1
+}
+"""
+
+# same loop, but the halo permute CONSUMES the all-reduce result — the
+# reduction gates the exchange, so there is no overlap window
+BLOCKING_HLO = SPLIT_PHASE_HLO.replace(
+    "%halo = f32[2]{0} collective-permute(%u)",
+    "%halo = f32[2]{0} collective-permute(%scaled)").replace(
+    "%ar = f32[5]{0} all-reduce(%red), to_apply=%add",
+    "%ar = f32[5]{0} all-reduce(%red), to_apply=%add\n"
+    "  %scaled = f32[64]{0} multiply(%u, %ar)")
+
+
+def test_split_phase_overlap_detects_independence():
+    out = split_phase_overlap(SPLIT_PHASE_HLO)
+    assert out["overlap_ok"] is True
+    body = out["bodies"]["body.split"]
+    assert body["all_reduce"] == 1
+    assert body["collective_permute"] == 1
+    assert body["permute_depends_on_reduce"] is False
+
+
+def test_split_phase_overlap_flags_blocking_reduction():
+    out = split_phase_overlap(BLOCKING_HLO)
+    assert out["overlap_ok"] is False
+    assert out["bodies"]["body.split"]["permute_depends_on_reduce"] is True
+
+
+def test_split_phase_overlap_no_loop_bodies():
+    """No while body with both collectives -> not verified (False)."""
+    assert split_phase_overlap(FAKE_HLO)["overlap_ok"] is False
 
 
 def test_trip_count_scaling():
