@@ -254,6 +254,67 @@ def run(out_dir=None):
         "hlo_bodies": overlap.get("bodies", {}),
     }
 
+    # ghost_chain (depth-l blocks): chain + Gram vs the jnp oracle, and
+    # the per-iteration traffic of the depth-l path (2l+1 chain writes +
+    # p,r + bands resident reads per l iterations, plus the (2l+7)n
+    # block-end reconstruction)
+    from repro.core.krylov import pipecg_l, tridiagonal_laplacian
+
+    theta = 4.0
+    p_v = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    r_v = jnp.asarray(rng.standard_normal(n), jnp.float32)
+
+    def _oracle_chain(v0, depth):
+        links = [v0]
+        for _ in range(depth):
+            y = jnp.zeros_like(v0)
+            xe = jnp.pad(links[-1], (1, 1))
+            for k, off in enumerate(offsets):
+                y = y + bands_f[k] * jax.lax.dynamic_slice_in_dim(
+                    xe, 1 + off, n)
+            links.append(y / theta)
+        return links
+
+    for l_depth in (2, 4):
+        chain, gram = ops.ghost_chain_step(offsets, bands_f, p_v, r_v,
+                                           theta, l_depth)
+        want_c = jnp.stack(_oracle_chain(p_v, l_depth)
+                           + _oracle_chain(r_v, l_depth - 1))
+        err = float(jnp.max(jnp.abs(chain.astype(jnp.float64)
+                                    - want_c.astype(jnp.float64))))
+        err_g = float(jnp.max(jnp.abs(
+            gram.astype(jnp.float64)
+            - (want_c @ want_c.T).astype(jnp.float64))))
+        # per-iteration words: kernel sweep + block-end reconstruction
+        w_sweep = (2 * l_depth + 3 + nb) * n
+        w_recon = (2 * l_depth + 7) * n
+        w_iter = (w_sweep + w_recon) / l_depth
+        w_d1 = _words_single_sweep_iter(n, nb)
+        us = _modeled_us(w_iter)
+        rows.append((f"kernel/ghost_chain/l{l_depth}", us,
+                     f"err={err:.1e} err_gram={err_g:.1e} "
+                     f"words_per_iter={w_iter/n:.1f}n "
+                     f"depth1={w_d1/n:.1f}n "
+                     f"reductions_per_iter=1/{l_depth}"))
+        record["kernels"][f"ghost_chain_l{l_depth}"] = {
+            "n": n, "l": l_depth, "err": err, "err_gram": err_g,
+            "words_per_iter_over_n": w_iter / n,
+            "depth1_words_over_n": w_d1 / n,
+            "naive_words_over_n": _words_naive_iter(n, nb) / n,
+            "modeled_speedup_vs_depth1": w_d1 / w_iter,
+            "reductions_per_iter": 1.0 / l_depth,
+            "modeled_us_v5e": us,
+        }
+
+    # depth-l solver sanity inside the bench: l=2 tracks the depth-1
+    # trajectory on the ex23 operator (fp32 gate; tests pin fp64)
+    A23 = tridiagonal_laplacian(1024, dtype=jnp.float32)
+    b23 = jnp.ones((1024,), jnp.float32)
+    h1 = pipecg_l(A23, b23, l=1, maxiter=30).res_history
+    h2 = pipecg_l(A23, b23, l=2, maxiter=30).res_history
+    depth_dev = float(jnp.max(jnp.abs(h1 - h2) / jnp.maximum(h1, 1e-6)))
+    record["kernels"]["pipecg_l_depth2_vs_depth1_rel_dev"] = depth_dev
+
     # block-size autotuner: choice + cache behavior (+ on-disk persistence)
     blk = autotune.best_block("pipecg_spmv", n, jnp.float32,
                               words_per_row=6.0, resident_words=6.0 * n,

@@ -1,0 +1,119 @@
+"""CI benchmark-regression gate: BENCH_kernels.json vs committed baseline.
+
+Fails (exit 1) when any tracked kernel metric regresses more than
+``--tolerance`` (default 10%) against
+``benchmarks/baselines/BENCH_kernels.baseline.json``:
+
+* ``words_per_iter_over_n``   — lower is better (HBM traffic / iteration)
+* ``modeled_speedup_vs_naive`` / ``modeled_speedup_vs_depth1``
+                              — higher is better (measured speedup model)
+* ``traffic_vs_naive`` / ``traffic_vs_mgs``
+                              — higher is better (fusion win)
+* ``reductions_per_iter``     — lower is better (depth-l amortization)
+* ``hlo_split_phase_overlap`` — must stay True (the overlap window)
+
+Kernels present only in the current record (new this PR) pass with a
+note; kernels present only in the baseline fail (a bench row silently
+disappearing is itself a regression).  Refresh the baseline INTENTIONALLY
+by copying the new record over
+``benchmarks/baselines/BENCH_kernels.baseline.json`` in the same PR that
+explains the change.
+
+Usage::
+
+    python benchmarks/check_regression.py \
+        [--current BENCH_kernels.json] [--baseline <path>] [--tolerance 0.10]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_CURRENT = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+DEFAULT_BASELINE = os.path.join(REPO_ROOT, "benchmarks", "baselines",
+                                "BENCH_kernels.baseline.json")
+
+# metric -> direction ("lower" = regression when it grows, "higher" =
+# regression when it shrinks)
+TRACKED = {
+    "words_per_iter_over_n": "lower",
+    "reductions_per_iter": "lower",
+    "modeled_speedup_vs_naive": "higher",
+    "modeled_speedup_vs_depth1": "higher",
+    "traffic_vs_naive": "higher",
+    "traffic_vs_mgs": "higher",
+}
+FLAGS_MUST_HOLD = ("hlo_split_phase_overlap",)
+
+
+def compare(current: dict, baseline: dict, tolerance: float) -> list:
+    """Return a list of human-readable failure strings (empty = pass)."""
+    failures = []
+    cur_k = current.get("kernels", {})
+    base_k = baseline.get("kernels", {})
+    for name, base_cell in base_k.items():
+        if not isinstance(base_cell, dict):
+            continue
+        cell = cur_k.get(name)
+        if cell is None:
+            failures.append(f"{name}: bench row disappeared from the record")
+            continue
+        for metric, direction in TRACKED.items():
+            if metric not in base_cell:
+                continue
+            base_v = float(base_cell[metric])
+            cur_v = float(cell.get(metric, float("nan")))
+            if cur_v != cur_v:  # NaN: metric dropped
+                failures.append(f"{name}.{metric}: missing in current record")
+                continue
+            if direction == "lower":
+                bad = cur_v > base_v * (1.0 + tolerance)
+            else:
+                bad = cur_v < base_v * (1.0 - tolerance)
+            if bad:
+                failures.append(
+                    f"{name}.{metric}: {cur_v:.4f} vs baseline "
+                    f"{base_v:.4f} ({direction} is better, "
+                    f"tolerance {tolerance:.0%})")
+        for flag in FLAGS_MUST_HOLD:
+            if base_cell.get(flag) is True and cell.get(flag) is not True:
+                failures.append(f"{name}.{flag}: was True, now "
+                                f"{cell.get(flag)!r}")
+    return failures
+
+
+def main(argv=None) -> int:
+    """CLI entry point; exit 0 on pass, 1 on regression."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", default=DEFAULT_CURRENT)
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--tolerance", type=float, default=0.10)
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures = compare(current, baseline, args.tolerance)
+    new = sorted(set(current.get("kernels", {}))
+                 - set(baseline.get("kernels", {})))
+    if new:
+        print(f"note: new kernels not yet in the baseline: {', '.join(new)}")
+    if failures:
+        print(f"REGRESSION vs {os.path.relpath(args.baseline, REPO_ROOT)}:")
+        for f_ in failures:
+            print(f"  FAIL {f_}")
+        return 1
+    n = sum(1 for c in baseline.get("kernels", {}).values()
+            if isinstance(c, dict))
+    print(f"benchmark regression gate: {n} baseline kernels ok "
+          f"(tolerance {args.tolerance:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

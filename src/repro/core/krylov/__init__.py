@@ -5,6 +5,7 @@ from repro.core.krylov.cg import cg, cr, pipecg, pipecg_multi, pipecr  # noqa: F
 from repro.core.krylov.distributed import (  # noqa: F401
     distributed_solve,
     halo_exchange_cols,
+    sharded_pipecg_depth_solve,
     sharded_pipecg_solve,
 )
 from repro.core.krylov.engine import (  # noqa: F401
@@ -26,3 +27,9 @@ from repro.core.krylov.operators import (  # noqa: F401
     tridiagonal_laplacian,
 )
 from repro.core.krylov.pgmres import pgmres  # noqa: F401
+from repro.core.krylov.pipeline import (  # noqa: F401
+    dia_inf_norm,
+    pgmres_l,
+    pipecg_l,
+    symmetrized_jacobi,
+)

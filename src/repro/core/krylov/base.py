@@ -15,6 +15,8 @@ import jax.numpy as jnp
 
 
 class SolveResult(NamedTuple):
+    """Solver output: solution, iteration count, residual norm + history."""
+
     x: jnp.ndarray
     iters: jnp.ndarray            # number of iterations performed
     res_norm: jnp.ndarray         # final ||b - A x||_2
@@ -22,16 +24,19 @@ class SolveResult(NamedTuple):
 
 
 def local_dot(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Single-device inner product (the paper's "local computation")."""
     return jnp.sum(a * b)
 
 
 def make_psum_dot(axis_name: str) -> Callable:
+    """Distributed inner product: local dot + psum over ``axis_name``."""
     def pdot(a, b):
         return jax.lax.psum(jnp.sum(a * b), axis_name)
     return pdot
 
 
 def as_matvec(A) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Normalize an operator (callable or ``.matvec`` object) to a callable."""
     if callable(A):
         return A
     return A.matvec

@@ -17,6 +17,7 @@ from repro.core.krylov.base import SolveResult, as_matvec, local_dot
 
 def bicgstab(A, b, x0=None, *, maxiter=100, tol=0.0, M=None, dot=local_dot
              ) -> SolveResult:
+    """Preconditioned BiCGStab (fixed-trip-count scan, masked freeze)."""
     mv = as_matvec(A)
     M = M if M is not None else (lambda z: z)
     x = jnp.zeros_like(b) if x0 is None else x0

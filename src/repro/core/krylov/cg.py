@@ -100,6 +100,7 @@ def cg(A, b, x0=None, *, maxiter=100, tol=0.0, M=None, dot=local_dot,
 
 
 def cr(A, b, x0=None, **kw) -> SolveResult:
+    """Conjugate Residuals: CG in the A-inner product (ip='A')."""
     kw.pop("ip", None)
     return cg(A, b, x0, ip="A", **kw)
 
@@ -189,6 +190,7 @@ def pipecg(A, b, x0=None, *, maxiter=100, tol=0.0, M=None, dot=local_dot,
 
 
 def pipecr(A, b, x0=None, **kw) -> SolveResult:
+    """Pipelined CR: the PIPECG rearrangement in the A-inner product."""
     kw.pop("ip", None)
     return pipecg(A, b, x0, ip="A", **kw)
 

@@ -275,8 +275,126 @@ def sharded_pipecg_solve(offsets: Tuple[int, ...], bands_local, b_local, *,
                        res_history=hist[:, 0])
 
 
+# ---------------------------------------------------------------------------
+# Depth-l sharded solve: one Gram psum + one l*halo ppermute per l iterations
+# ---------------------------------------------------------------------------
+
+def sharded_pipecg_depth_solve(offsets: Tuple[int, ...], bands_local,
+                               b_local, *, axis_name: str, l: int,
+                               M=None, maxiter: int = 100, tol: float = 0.0,
+                               block: Optional[int] = None,
+                               n_shards: int = 1,
+                               noise: Optional[NoiseHook] = None
+                               ) -> SolveResult:
+    """Per-shard depth-l pipelined CG body (ghost-basis blocks).
+
+    Runs INSIDE shard_map.  Each block of ``l`` iterations is ONE
+    halo-aware ghost-chain sweep
+    (kernels/pipecg_spmv_fused.py::ghost_chain_halo) preceded by ONE
+    ``lax.ppermute`` pair of l*halo-wide edge strips of p and r, and
+    followed by ONE ``lax.psum`` of the (2l+1, 2l+1) partial Gram — the
+    l-deep fused reduction that replaces the depth-1 engine's l
+    per-iteration (k, 5) rows.  Depth therefore amortizes BOTH the
+    collective count (1/l reductions per iteration) and the message
+    count (one big halo strip instead of l small ones); the permutes of
+    a block have no data dependence on the block's all-reduce
+    (``launch/hlo_analysis.py::split_phase_overlap`` still certifies the
+    overlap window, and its ``depth`` mode additionally asserts the
+    one-reduction-per-body amortized structure).
+
+    Semantics match ``core/krylov/pipeline.py::pipecg_l`` with
+    ``rr=0`` (the sharded path reconstructs r from the chain so the
+    block body stays free of post-reduction halo exchanges).  ``M`` may
+    be None or ``"jacobi"`` (symmetrized in, locally, with one halo
+    exchange of the scaling vector per solve); residual norms are then
+    preconditioned norms.
+    """
+    from repro.core.krylov.pipeline import _block_cg_steps, _shift_matrix
+    from repro.kernels import ops as kops
+
+    if b_local.ndim != 1:
+        raise ValueError(
+            "the depth-l sharded path is single-RHS; use l=1 for the "
+            "batched pipecg_multi engine")
+    halo = max(abs(o) for o in offsets)
+    H = l * halo
+    n_local = b_local.shape[0]
+    dt = b_local.dtype
+    if n_local < 2 * H:
+        raise ValueError(
+            f"sharded depth-l engine: local shard of {n_local} rows is "
+            f"narrower than the 2*l*halo={2 * H} chain reach")
+    if M == "jacobi":
+        ds = 1.0 / jnp.sqrt(bands_local[offsets.index(0)].astype(dt))
+        dl, dr = halo_exchange_cols(ds, halo, axis_name)
+        ds_ext = jnp.concatenate([dl, ds, dr])
+        rows = [bands_local[k] * ds * jax.lax.dynamic_slice_in_dim(
+                    ds_ext, halo + off, n_local)
+                for k, off in enumerate(offsets)]
+        bands_local = jnp.stack(rows)
+        b_local = b_local * ds
+        unscale = ds
+    elif M is None:
+        unscale = None
+    else:
+        raise ValueError(
+            "sharded depth-l engine preconditions via the symmetrized "
+            f"operator: M must be None or 'jacobi', got {M!r}")
+    theta = jax.lax.pmax(jnp.max(jnp.sum(jnp.abs(bands_local), axis=0)),
+                         axis_name)
+
+    # loop-invariant operator extension (+l*halo), one exchange per solve
+    bl, br = halo_exchange_cols(bands_local, H, axis_name)
+    bands_ext = jnp.concatenate([bl, bands_local, br], axis=-1)
+
+    x = jnp.zeros_like(b_local)
+    r = b_local
+    p = r
+    Tm = _shift_matrix(l, dt)
+    nblocks = -(-maxiter // l)
+    tol2 = (jnp.asarray(tol, dt) ** 2
+            * jax.lax.psum(jnp.sum(b_local * b_local), axis_name))
+
+    def body(st, _):
+        # ONE halo exchange per block: l*halo-wide strips of p and r,
+        # independent of this block's (and any pending) reduction
+        pl_, pr_ = halo_exchange_cols(st["p"], H, axis_name)
+        rl_, rr_ = halo_exchange_cols(st["r"], H, axis_name)
+        C, gram = kops.ghost_chain_halo_step(
+            offsets, bands_ext, st["p"], st["r"], pl_, pr_, rl_, rr_,
+            theta, l, block=block, n_shards=n_shards)
+        if noise is not None:
+            from jax.experimental import io_callback
+            tick = io_callback(noise, jax.ShapeDtypeStruct((), jnp.float32),
+                               ordered=False)
+            gram = gram + tick.astype(dt)
+        # the block's single fused reduction: one psum per l iterations
+        G = jax.lax.psum(gram, axis_name)
+        xc, rc, pc, hist = _block_cg_steps(G, Tm, l, theta, st["done"])
+        x_new = jnp.where(st["done"], st["x"], st["x"] + C.T @ xc)
+        r_new = jnp.where(st["done"], st["r"], C.T @ rc)
+        p_new = jnp.where(st["done"], st["p"], C.T @ pc)
+        rr2 = jnp.maximum(rc @ G @ rc, 0.0)   # already global (G is)
+        done = st["done"] | (rr2 <= tol2)
+        hist = jnp.where(st["done"], jnp.sqrt(rr2), hist)
+        iters = st["iters"] + jnp.where(st["done"], 0, l).astype(jnp.int32)
+        return (dict(x=x_new, r=r_new, p=p_new, done=done, iters=iters),
+                hist)
+
+    state0 = dict(x=x, r=r, p=p, done=jnp.asarray(False),
+                  iters=jnp.asarray(0, jnp.int32))
+    st, hist = jax.lax.scan(body, state0, None, length=nblocks)
+    hist = hist.reshape(-1)[:maxiter]
+    res = jnp.sqrt(jnp.maximum(
+        jax.lax.psum(jnp.sum(st["r"] * st["r"]), axis_name), 0.0))
+    x_out = st["x"] if unscale is None else st["x"] * unscale
+    return SolveResult(x=x_out, iters=jnp.minimum(st["iters"], maxiter),
+                       res_norm=res, res_history=hist)
+
+
 # pipelined solvers the sharded engine can express, by function name
-_SHARDED_IP = {"pipecg": "id", "pipecg_multi": "id", "pipecr": "A"}
+_SHARDED_IP = {"pipecg": "id", "pipecg_multi": "id", "pipecr": "A",
+               "pipecg_l": "id"}
 
 
 def _distributed_engine_solve(solver, A: DiaMatrix, b, mesh: Mesh, eng, *,
@@ -300,14 +418,23 @@ def _distributed_engine_solve(solver, A: DiaMatrix, b, mesh: Mesh, eng, *,
     M = solver_kw.pop("M", None)
     maxiter = solver_kw.pop("maxiter", 100)
     tol = solver_kw.pop("tol", 0.0)
+    depth = int(solver_kw.pop("l", 1))
     if solver_kw:
         raise TypeError(
             f"unsupported kwargs for the sharded_fused path: {sorted(solver_kw)}")
+    if depth > 1 and name != "pipecg_l":
+        raise ValueError(
+            f"pipeline depth l={depth} needs solver pipecg_l, got {name!r}")
     n_shards = int(mesh.devices.size)
     batched = b.ndim == 2
     spec_v = P(None, axis) if batched else P(axis)
 
     def run(bands_local, b_local):
+        if depth > 1:
+            return eng.solve_depth(A.offsets, bands_local, b_local,
+                                   axis_name=axis, l=depth, M=M,
+                                   maxiter=maxiter, tol=tol, block=block,
+                                   n_shards=n_shards, noise=noise)
         return eng.solve(A.offsets, bands_local, b_local, axis_name=axis,
                          ip=ip, M=M, maxiter=maxiter, tol=tol, block=block,
                          n_shards=n_shards, noise=noise)
@@ -334,7 +461,10 @@ def distributed_solve(solver: Callable, A: DiaMatrix, b: jnp.ndarray,
     ``engine``: None keeps the historical per-op iteration (any solver);
     ``"sharded_fused"`` (or a ShardedFusedEngine instance) runs pipecg /
     pipecg_multi / pipecr as one halo-aware Pallas sweep per shard per
-    iteration with a split-phase psum (see sharded_pipecg_solve).
+    iteration with a split-phase psum (see sharded_pipecg_solve), and
+    pipecg_l with ``l >= 2`` as depth-l ghost-basis blocks — one Gram
+    psum and one l*halo-wide ppermute strip per l iterations
+    (see sharded_pipecg_depth_solve).
     ``block`` overrides the sharded kernel's autotuned tile size.
     """
     from repro.core.krylov.engine import ShardedFusedEngine, get_engine
@@ -349,6 +479,12 @@ def distributed_solve(solver: Callable, A: DiaMatrix, b: jnp.ndarray,
             "distributed_solve supports engine=None (historical inline "
             "path) or 'sharded_fused'; single-device engines compute "
             f"local reductions and cannot shard (got {eng.name!r})")
+    if getattr(solver, "__name__", "") == "pipecg_l":
+        raise ValueError(
+            "pipecg_l's ghost-basis blocks need the depth-aware sharded "
+            "path: use distributed_solve(pipecg_l, A, b, mesh, "
+            "engine='sharded_fused', l=...); the historical inline path "
+            "(engine=None) cannot express its fused Gram reduction")
     if block is not None:
         raise ValueError(
             "block= only applies to the engine='sharded_fused' kernel "

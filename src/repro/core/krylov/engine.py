@@ -18,6 +18,9 @@ decides how the memory-bound inner loop hits the hardware:
   single-sweep kernel per shard inside shard_map with ppermute'd halo
   operands and finishes the kernel's partial reductions with a
   split-phase psum (core/krylov/distributed.py::sharded_pipecg_solve).
+  With ``pipecg_l`` and ``l >= 2`` it switches to depth-l ghost-basis
+  blocks — one Gram psum and one l*halo ppermute per l iterations
+  (sharded_pipecg_depth_solve; DESIGN.md §Depth-l-data-flow).
 
 Engines are selected per solve via ``engine="naive" | "fused"`` (or an
 Engine instance) on ``cg`` / ``pipecg`` / ``pipecr`` / ``gmres`` /
@@ -46,6 +49,7 @@ def register_engine(cls):
 
 
 def get_engine(engine: Union[str, "Engine", None]) -> Optional["Engine"]:
+    """Resolve an engine selector (name / instance / None) to an Engine."""
     if engine is None or isinstance(engine, Engine):
         return engine
     try:
@@ -276,3 +280,10 @@ class ShardedFusedEngine(Engine):
         """Per-shard solve body; see distributed.sharded_pipecg_solve."""
         from repro.core.krylov.distributed import sharded_pipecg_solve
         return sharded_pipecg_solve(offsets, bands_local, b_local, **kw)
+
+    def solve_depth(self, offsets, bands_local, b_local, **kw):
+        """Depth-l per-shard body: one Gram psum + one l*halo ppermute
+        per l iterations; see distributed.sharded_pipecg_depth_solve."""
+        from repro.core.krylov.distributed import sharded_pipecg_depth_solve
+        return sharded_pipecg_depth_solve(offsets, bands_local, b_local,
+                                          **kw)

@@ -130,9 +130,11 @@ class MatFreeOperator:
 # --- preconditioners --------------------------------------------------------
 
 def jacobi_preconditioner(A: DiaMatrix) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Diagonal (Jacobi) preconditioner: r -> diag(A)^-1 r."""
     inv_d = 1.0 / A.diagonal()
     return lambda r: inv_d * r
 
 
 def identity_preconditioner(_A=None) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """No-op preconditioner (the M=None convention, as a callable)."""
     return lambda r: r

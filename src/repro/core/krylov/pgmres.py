@@ -23,10 +23,25 @@ from repro.core.krylov.gmres import _lstsq_hessenberg
 
 
 def pgmres(A, b, x0=None, *, restart: int = 30, tol: float = 0.0,
-           M=None, dot=local_dot, engine=None) -> SolveResult:
+           M=None, dot=local_dot, engine=None, depth: int = 1) -> SolveResult:
     """``engine`` routes the fused h_{j,i} batch (line 18) and the SpMV
     through an iteration engine (one-pass multi-dot kernel); None keeps
-    the inline path used by the distributed mode."""
+    the inline path used by the distributed mode.
+
+    ``depth`` is the pipeline depth: 1 (default) is Algorithm 2 as
+    printed — one reduction per iteration, overlapped with one SpMV;
+    ``depth >= 2`` routes to the ghost-basis deep-pipelined variant
+    (core/krylov/pipeline.py::pgmres_l), where ONE fused Gram reduction
+    serves ``depth`` iterations.
+    """
+    if depth != 1:
+        from repro.core.krylov.pipeline import pgmres_l
+        if dot is not local_dot:
+            raise ValueError(
+                "depth-l pgmres computes its reductions as fused Gram "
+                "blocks and cannot honor a custom dot; use depth=1 there")
+        return pgmres_l(A, b, x0, restart=restart, l=depth, tol=tol, M=M,
+                        engine=engine)
     eng = get_engine(engine)
     if eng is not None:
         if dot is not local_dot:

@@ -1,0 +1,396 @@
+"""Depth-l pipelined Krylov solvers: ``pipecg_l`` and ``pgmres_l``.
+
+Depth-1 pipelining (PIPECG / p(1)-GMRES) overlaps ONE global reduction
+with one SpMV of work.  The stochastic model (PAPER.md Eqs. 6/7) predicts
+the attainable speedup grows when the reduction is given *more* than one
+SpMV to hide behind — which is exactly what depth-l pipelining provides
+(Sanan et al., "Pipelined, Flexible Krylov Subspace Methods"; Cornelis,
+Cools & Vanroose's deep pipelines; Cools' accuracy analysis bounds how
+far l can be pushed).
+
+This module renders depth l >= 2 in the *ghost-basis* (communication-
+avoiding) formulation: each block builds the theta-scaled ghost basis
+
+    C = [p, Ãp, ..., Ã^l p, r, Ãr, ..., Ã^{l-1} r],    Ã = A / theta,
+
+takes ONE fused Gram reduction G = C C^T (the (2l+1)^2 payload that
+replaces l per-iteration (gamma, delta, ||r||^2) rows), and runs l exact
+CG steps in (2l+1)-dimensional coefficient space — no further reductions
+until the next block.  In exact arithmetic the iterates equal CG's
+(equivalently PIPECG's); in floating point the monomial ghost basis
+conditions like kappa(A)^l, which is the Cools-style accuracy bound on
+the pipeline depth: l in {2, 4} tracks the depth-1 history to ~1e-10 on
+the paper's Table-1 operators, l = 8 visibly stagnates (asserted in
+tests/test_pipeline_depth.py).  The optional residual-replacement knob
+``rr`` (a block period, per Cools) recomputes r = b - A x synchronously
+to bound true-residual drift at large l.
+
+At l = 1 ``pipecg_l`` IS :func:`repro.core.krylov.cg.pipecg` — it
+delegates to the Ghysels-Vanroose recurrence unchanged, so the histories
+agree to machine precision.
+
+The per-block chain + Gram is one Pallas sweep for DIA operators
+(``kernels/pipecg_spmv_fused.py::ghost_chain_fused``); the sharded
+rendering (one psum and ONE l*halo-wide ppermute per l iterations) lives
+in ``core/krylov/distributed.py::sharded_pipecg_depth_solve``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.krylov.base import SolveResult
+from repro.core.krylov.engine import FusedEngine, get_engine
+from repro.core.krylov.operators import DiaMatrix
+
+
+def dia_inf_norm(A: DiaMatrix) -> jnp.ndarray:
+    """||A||_inf of a DIA operator: max row sum of absolute band values.
+
+    Local (reduction-free) and exact for DIA — every shard can compute it
+    from its own band rows and take the max with its neighbors' (the
+    distributed path psums it once per solve).  Used as the ghost-basis
+    scale theta so the chain Ã^j v = (A/theta)^j v stays O(||v||).
+    """
+    return jnp.max(jnp.sum(jnp.abs(A.bands), axis=0))
+
+
+def symmetrized_jacobi(A: DiaMatrix, b: jnp.ndarray
+                       ) -> Tuple[DiaMatrix, jnp.ndarray, jnp.ndarray]:
+    """Split-preconditioned (symmetrized) Jacobi system.
+
+    Returns ``(A_hat, b_hat, ds)`` with ``A_hat = D^-1/2 A D^-1/2``,
+    ``b_hat = D^-1/2 b`` and ``ds = diag(A)^-1/2``; the solution maps
+    back as ``x = ds * x_hat``.  Exact for SPD A, and keeps the operator
+    in DIA form so the ghost-chain kernel applies unchanged.  The solver
+    then reports *preconditioned* residual norms (PETSc's
+    KSP_NORM_PRECONDITIONED convention).
+    """
+    ds = 1.0 / jnp.sqrt(A.diagonal())
+    n = A.n
+    bands = []
+    for k, off in enumerate(A.offsets):
+        # A_hat[i, i+off] = ds[i] * A[i, i+off] * ds[i+off]
+        ds_off = jax.lax.dynamic_slice_in_dim(
+            jnp.pad(ds, (A.halo, A.halo)), A.halo + off, n)
+        bands.append(A.bands[k] * ds * ds_off)
+    return (DiaMatrix(offsets=A.offsets, bands=jnp.stack(bands)),
+            b * ds, ds)
+
+
+def _resolve_depth_system(A, b, M, theta):
+    """(A, b, unscale, theta) for the depth-l solvers.
+
+    ``M`` may be None or ``"jacobi"`` (symmetrized in); opaque callables
+    cannot ride the ghost chain and are rejected with a pointer to the
+    depth-1 solvers.
+    """
+    if M is None:
+        unscale = None
+    elif M == "jacobi":
+        if not isinstance(A, DiaMatrix):
+            raise ValueError("depth-l M='jacobi' needs a DiaMatrix operator")
+        A, b, unscale = symmetrized_jacobi(A, b)
+    else:
+        raise ValueError(
+            "depth-l solvers precondition via the symmetrized operator: M "
+            f"must be None or 'jacobi', got {M!r}; use the depth-1 solvers "
+            "(pipecg / pgmres) for an opaque callable M")
+    if theta is None:
+        if not isinstance(A, DiaMatrix):
+            raise ValueError(
+                "depth-l solvers need theta= (a ||A||_inf-scale estimate) "
+                "for non-DIA operators; DIA operators derive it locally")
+        theta = dia_inf_norm(A)
+    return A, b, unscale, jnp.asarray(theta, b.dtype)
+
+
+def _shift_matrix(l: int, dtype) -> jnp.ndarray:
+    """Coefficient-space rendering of theta * Ã on the ghost basis.
+
+    Basis columns 0..l are Ã^j p, columns l+1..2l are Ã^j r; multiplying
+    by A shifts each chain one slot deeper (the top-degree columns are
+    never multiplied again within a block — that is what bounds the block
+    length at l steps).
+    """
+    m = 2 * l + 1
+    T = jnp.zeros((m, m), dtype)
+    for j in range(l):
+        T = T.at[j + 1, j].set(1.0)
+    for j in range(l - 1):
+        T = T.at[l + 2 + j, l + 1 + j].set(1.0)
+    return T
+
+
+def _block_cg_steps(G, Tm, l: int, theta, done):
+    """l exact CG steps in ghost-basis coefficient space.
+
+    ``G`` is the block's Gram matrix (the single fused reduction), ``Tm``
+    the shift matrix of :func:`_shift_matrix` (times theta it represents
+    A).  Returns (xc, rc, pc, hist) where hist (l,) holds the post-step
+    residual norms sqrt(rc G rc); ``done`` freezes the recurrence (the
+    masked-update convention of the other solvers).
+    """
+    m = G.shape[0]
+    dt = G.dtype
+    pc = jnp.zeros((m,), dt).at[0].set(1.0)
+    rc = jnp.zeros((m,), dt).at[(m + 1) // 2].set(1.0)
+    xc = jnp.zeros((m,), dt)
+    hist = []
+    frozen = done
+    for _ in range(l):
+        w = theta * (Tm @ pc)             # coords of A p
+        rho = jnp.maximum(rc @ G @ rc, 0.0)
+        den = pc @ G @ w
+        alpha = jnp.where((rho > 0) & (den != 0),
+                          rho / jnp.where(den != 0, den, 1.0), 0.0)
+        alpha = jnp.where(frozen, 0.0, alpha)
+        xc = xc + alpha * pc
+        rc_new = rc - alpha * w
+        rho_new = jnp.maximum(rc_new @ G @ rc_new, 0.0)
+        beta = jnp.where(rho > 0, rho_new / jnp.where(rho > 0, rho, 1.0), 0.0)
+        rc = jnp.where(frozen, rc, rc_new)
+        pc = jnp.where(frozen, pc, rc_new + beta * pc)
+        hist.append(jnp.sqrt(jnp.maximum(rc @ G @ rc, 0.0)))
+    return xc, rc, pc, jnp.stack(hist)
+
+
+def _ghost_chain(A: DiaMatrix, p, r, theta, l: int, eng) -> Tuple:
+    """(chain (2l+1, n), gram (2l+1, 2l+1)) for one depth-l block.
+
+    The FusedEngine routes through the single-sweep chain kernel; other
+    engines build the chain with plain matvecs and one fused matmul for
+    the Gram (still a single reduction in the distributed sense).
+    """
+    if isinstance(eng, FusedEngine) and isinstance(A, DiaMatrix):
+        from repro.kernels import ops as kops
+        return kops.ghost_chain_step(A.offsets, A.bands, p, r, theta, l)
+    mv = A.matvec if isinstance(A, DiaMatrix) else A
+    rows = [p]
+    for _ in range(l):
+        rows.append(mv(rows[-1]) / theta)
+    rrows = [r]
+    for _ in range(l - 1):
+        rrows.append(mv(rrows[-1]) / theta)
+    C = jnp.stack(rows + rrows)
+    return C, C @ C.T
+
+
+def pipecg_l(A, b, x0=None, *, l: int = 1, maxiter: int = 100,
+             tol: float = 0.0, M=None, engine=None, rr: int = 0,
+             theta: Optional[float] = None) -> SolveResult:
+    """Depth-l pipelined CG.
+
+    ``l = 1`` delegates to the Ghysels-Vanroose PIPECG recurrence
+    unchanged (histories agree to machine precision); ``l >= 2`` runs the
+    ghost-basis blocks described in the module docstring: one fused Gram
+    reduction per l iterations, 2l - 1 SpMVs per block.
+
+    Parameters beyond the shared solver surface:
+
+    l:
+        Pipeline depth (reduction-to-consumption distance, iterations).
+    rr:
+        Residual-replacement period in *blocks* (0 = off): every ``rr``
+        blocks the residual is recomputed as ``b - A x`` (one extra SpMV)
+        to bound the Cools-style true-residual drift at large l.
+    theta:
+        Ghost-basis scale (a ||A||_inf estimate).  Derived locally for
+        DIA operators; required for matrix-free ones.
+
+    ``M`` may be None or ``"jacobi"`` (symmetrized split preconditioning;
+    residual norms are then the preconditioned ones).  ``engine`` selects
+    who builds the chain: ``"fused"`` uses the single-sweep ghost-chain
+    kernel, None / ``"naive"`` plain matvecs.
+    """
+    if l < 1:
+        raise ValueError(f"pipeline depth l must be >= 1, got {l}")
+    if l == 1:
+        from repro.core.krylov.cg import pipecg
+        return pipecg(A, b, x0, maxiter=maxiter, tol=tol, M=M, engine=engine)
+    eng = get_engine(engine)
+    from repro.core.krylov.engine import ShardedFusedEngine
+    if isinstance(eng, ShardedFusedEngine):
+        raise ValueError(
+            "engine='sharded_fused' must run inside a mesh: use "
+            "distributed_solve(pipecg_l, A, b, mesh, "
+            "engine='sharded_fused', l=...) instead of the local entry")
+    A_h, b_h, unscale, theta = _resolve_depth_system(A, b, M, theta)
+    x0_h = None
+    if x0 is not None:
+        x0_h = x0 if unscale is None else x0 / unscale
+    x = jnp.zeros_like(b_h) if x0_h is None else x0_h
+    mv = A_h.matvec if isinstance(A_h, DiaMatrix) else A_h
+    r = b_h - mv(x)
+    p = r
+    dt = b_h.dtype
+    Tm = _shift_matrix(l, dt)
+    nblocks = -(-maxiter // l)
+    tol2 = jnp.asarray(tol, dt) ** 2 * jnp.sum(b_h * b_h)
+    rr_period = int(rr)
+
+    def block(st, bi):
+        x, r, p = st["x"], st["r"], st["p"]
+        C, G = _ghost_chain(A_h, p, r, theta, l, eng)
+        xc, rc, pc, hist = _block_cg_steps(G, Tm, l, theta, st["done"])
+        x_new = x + C.T @ xc
+        p_new = jnp.where(st["done"], p, C.T @ pc)
+        r_new = C.T @ rc
+        if rr_period:
+            do_rr = (bi + 1) % rr_period == 0
+            r_new = jnp.where(do_rr, b_h - mv(x_new), r_new)
+        x_new = jnp.where(st["done"], x, x_new)
+        r_new = jnp.where(st["done"], r, r_new)
+        rr2 = jnp.sum(r_new * r_new)
+        done = st["done"] | (rr2 <= tol2)
+        iters = st["iters"] + jnp.where(st["done"], 0, l).astype(jnp.int32)
+        hist = jnp.where(st["done"], jnp.sqrt(jnp.maximum(rr2, 0.0)), hist)
+        return (dict(x=x_new, r=r_new, p=p_new, done=done, iters=iters),
+                hist)
+
+    state0 = dict(x=x, r=r, p=p, done=jnp.asarray(False),
+                  iters=jnp.asarray(0, jnp.int32))
+    st, hist = jax.lax.scan(block, state0, jnp.arange(nblocks))
+    hist = hist.reshape(-1)[:maxiter]
+    res = jnp.sqrt(jnp.maximum(jnp.sum(st["r"] * st["r"]), 0.0))
+    x_out = st["x"] if unscale is None else st["x"] * unscale
+    return SolveResult(x=x_out, iters=jnp.minimum(st["iters"], maxiter),
+                       res_norm=res, res_history=hist)
+
+
+# ---------------------------------------------------------------------------
+# Depth-l pipelined GMRES
+# ---------------------------------------------------------------------------
+
+def _gram_solve(G, B, rhs, eps: float = 1e-12):
+    """min_t || rhs - B t ||_G via an eigenvalue-clipped Gram factor.
+
+    ``G`` is a (possibly numerically singular) Gram matrix; eigenvalues
+    below ``eps * max`` are clipped, which handles happy breakdown /
+    degenerate Krylov spaces the way a rank-revealing LS would.
+    Returns ``(t, res_norm)``.
+    """
+    evals, evecs = jnp.linalg.eigh(G)
+    emax = jnp.maximum(evals[-1], 0.0)
+    good = evals > eps * jnp.where(emax > 0, emax, 1.0)
+    root = jnp.where(good, jnp.sqrt(jnp.maximum(evals, 0.0)), 0.0)
+    L = evecs * root                    # G ~= L L^T on the kept spectrum
+    t, *_ = jnp.linalg.lstsq(L.T @ B, L.T @ rhs, rcond=None)
+    resid = rhs - B @ t
+    return t, jnp.sqrt(jnp.maximum(resid @ G @ resid, 0.0))
+
+
+def _clipped_solve(G, rhs, eps: float = 1e-12):
+    """Solve ``G t = rhs`` with eigenvalue clipping (pseudo-inverse).
+
+    The coefficient-space CGS projection: clipped directions contribute
+    nothing (they correspond to numerically dependent basis columns).
+    """
+    evals, evecs = jnp.linalg.eigh(G)
+    emax = jnp.maximum(evals[-1], 0.0)
+    good = evals > eps * jnp.where(emax > 0, emax, 1.0)
+    inv = jnp.where(good, 1.0 / jnp.where(good, evals, 1.0), 0.0)
+    return evecs @ (inv * (evecs.T @ rhs))
+
+
+def pgmres_l(A, b, x0=None, *, restart: int = 30, l: int = 2,
+             tol: float = 0.0, M=None, theta: Optional[float] = None,
+             engine=None) -> SolveResult:
+    """Depth-l pipelined GMRES (ghost-basis blocks, Gram-space LS).
+
+    Per block of l iterations: orthogonalize the newest basis vector in
+    *coefficient space* (using the incrementally built Gram matrix — no
+    reduction), extend the basis with l theta-scaled operator powers
+    (l SpMVs), and take ONE fused reduction for the new Gram rows.  The
+    minimal-residual solution is recovered at the end from the generator
+    relation ``A (Z Y) = theta * Z E`` by a Gram-metric least squares —
+    no Hessenberg bookkeeping, exact in exact arithmetic.
+
+    ``M`` may be None or ``"jacobi"`` (row scaling D^-1 A — GMRES does
+    not need symmetry, so plain left Jacobi); residual norms are then
+    preconditioned norms.  ``restart`` rounds up to a multiple of ``l``.
+    ``engine`` routes the chain SpMVs (``"fused"`` = DIA kernel sweeps).
+    ``tol`` is accepted for interface parity with the depth-1 solver:
+    like ``pgmres``, one restart cycle runs to completion (the outer
+    ``gmres_restarted`` driver is where tolerances stop cycles).
+    """
+    if l < 1:
+        raise ValueError(f"pipeline depth l must be >= 1, got {l}")
+    if M == "jacobi":
+        if not isinstance(A, DiaMatrix):
+            raise ValueError("depth-l M='jacobi' needs a DiaMatrix operator")
+        invd = 1.0 / A.diagonal()
+        bands = jnp.stack([A.bands[k] * invd
+                           for k in range(len(A.offsets))])
+        A, b = DiaMatrix(offsets=A.offsets, bands=bands), b * invd
+    elif M is not None:
+        raise ValueError(
+            "depth-l pgmres preconditions by operator scaling: M must be "
+            f"None or 'jacobi', got {M!r}; use pgmres (depth 1) for an "
+            "opaque callable M")
+    if theta is None:
+        if not isinstance(A, DiaMatrix):
+            raise ValueError(
+                "depth-l solvers need theta= for non-DIA operators")
+        theta = dia_inf_norm(A)
+    eng = get_engine(engine)
+    if eng is not None and isinstance(A, DiaMatrix):
+        mv = lambda v: eng.spmv(A, v)
+    else:
+        mv = A.matvec if isinstance(A, DiaMatrix) else A
+    theta = jnp.asarray(theta, b.dtype)
+
+    x = jnp.zeros_like(b) if x0 is None else x0
+    r0 = b - mv(x)
+    beta = jnp.sqrt(jnp.maximum(jnp.sum(r0 * r0), 1e-300))
+    n = b.shape[0]
+    dt = b.dtype
+    nblk = -(-restart // l)
+    mtot = 1 + nblk * l
+
+    Z = jnp.zeros((mtot, n), dt).at[0].set(r0 / beta)
+    G = jnp.zeros((mtot, mtot), dt).at[0, 0].set(1.0)
+    # generator bookkeeping: theta * Z[k+1] = A @ (Z^T Y[:, k])
+    Y = jnp.zeros((mtot, nblk * l), dt)
+    E = jnp.zeros((mtot, nblk * l), dt)
+    hist = []
+    for blk in range(nblk):
+        mcur = 1 + blk * l
+        # coefficient-space CGS of the newest column against the previous
+        e = jnp.zeros((mtot,), dt).at[mcur - 1].set(1.0)
+        if mcur > 1:
+            coef = _clipped_solve(G[:mcur - 1, :mcur - 1],
+                                  G[:mcur - 1, mcur - 1])
+            e = e.at[:mcur - 1].add(-coef)
+        nrm = jnp.sqrt(jnp.maximum(e @ G @ e, 1e-300))
+        q_coef = e / nrm
+        g = Z.T @ q_coef
+        # l theta-scaled powers; generators recorded for the final LS
+        for k in range(l):
+            idx = mcur + k
+            g = mv(g) / theta
+            Y = Y.at[:, idx - 1].set(q_coef if k == 0
+                                     else jnp.zeros((mtot,), dt)
+                                     .at[idx - 1].set(1.0))
+            E = E.at[idx, idx - 1].set(theta)
+            Z = Z.at[idx].set(g)
+        # ONE fused reduction: Gram rows of the l new columns
+        dots = Z[: mcur + l] @ Z[mcur: mcur + l].T   # (mcur+l, l)
+        G = G.at[: mcur + l, mcur: mcur + l].set(dots)
+        G = G.at[mcur: mcur + l, : mcur + l].set(dots.T)
+        # block-end residual from the Gram-metric LS (small matrices)
+        mnow = mcur + l
+        c0 = jnp.zeros((mnow,), dt).at[0].set(beta)
+        _, res = _gram_solve(G[:mnow, :mnow], E[:mnow, : blk * l + l],
+                             c0)
+        hist.append(res)
+
+    c0 = jnp.zeros((mtot,), dt).at[0].set(beta)
+    t, res = _gram_solve(G, E, c0)
+    # row scaling (left Jacobi) leaves the solution variables unchanged
+    x_final = x + Z.T @ (Y @ t)
+    hist = jnp.repeat(jnp.stack(hist), l)[: nblk * l]
+    return SolveResult(x=x_final, iters=jnp.asarray(nblk * l, jnp.int32),
+                       res_norm=res, res_history=hist)

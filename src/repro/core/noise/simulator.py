@@ -65,11 +65,17 @@ class SolverPhaseModel:
 
 
 def predict_speedup(model_sync: SolverPhaseModel, model_pipe: SolverPhaseModel,
-                    noise: Distribution, K: int) -> Dict[str, float]:
+                    noise: Distribution, K: int,
+                    depth: int = 1) -> Dict[str, float]:
     """E[T]/E[T'] with per-step noise ~ ``noise`` added to each process.
 
     Synchronized: every step costs max_p(t_c + w_p) + n_red * t_red.
     Pipelined:    reductions overlap compute; per-process accumulation.
+
+    ``depth`` is the pipeline depth l: the overlapped reduction has l
+    iterations of compute to hide behind, so its per-iteration floor
+    shrinks to ``n_red * t_red / l`` (cf. core/perfmodel/depth.py for
+    the waiting-time side of the depth term).
     """
     p = model_sync.p
     tc_s = model_sync.t_compute()
@@ -79,9 +85,10 @@ def predict_speedup(model_sync: SolverPhaseModel, model_pipe: SolverPhaseModel,
     shifted = Shifted(base=noise, loc=tc_s)
     e_max = expected_max(shifted, p)
     e_t_sync = K * (e_max + model_sync.n_reductions * tr)
-    # pipelined: one overlapped reduction; steady state per-process mean
+    # pipelined: one overlapped reduction per depth-l window; steady
+    # state per-process mean
     e_t_pipe = K * max(tc_p + float(noise.mean),
-                       model_pipe.n_reductions * tr)
+                       model_pipe.n_reductions * tr / max(depth, 1))
     return {
         "t_sync": e_t_sync,
         "t_pipe": e_t_pipe,

@@ -17,6 +17,13 @@ from repro.core.perfmodel.distributions import (  # noqa: F401
     Shifted,
     Uniform,
 )
+from repro.core.perfmodel.depth import (  # noqa: F401
+    block_expected_max,
+    crossover_depth,
+    depth_speedup_ceiling,
+    depth_speedup_table,
+    modeled_depth_speedup,
+)
 from repro.core.perfmodel.expected_max import (  # noqa: F401
     expected_max,
     expected_max_closed,

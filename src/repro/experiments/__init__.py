@@ -22,7 +22,9 @@ from repro.experiments.spec import (  # noqa: F401
 )
 from repro.experiments.noise_sources import make_distribution  # noqa: F401
 from repro.experiments.runner import (  # noqa: F401
+    measured_depth_makespans,
     measured_makespans,
+    run_depth_exec,
     run_engine_exec,
     run_noisy_exec,
 )
@@ -31,6 +33,7 @@ from repro.experiments.validation import (  # noqa: F401
     measured_crossover,
     modeled_speedup,
     validate_cells,
+    validate_depth_cells,
 )
 from repro.experiments.campaign import run_campaign  # noqa: F401
 from repro.experiments.report import (  # noqa: F401

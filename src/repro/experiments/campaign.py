@@ -43,6 +43,7 @@ from repro.experiments.noise_sources import (
     scale_distribution,
 )
 from repro.experiments.report import (
+    write_depth_csv,
     write_ecdf_csv,
     write_json,
     write_report_md,
@@ -51,12 +52,18 @@ from repro.experiments.report import (
 )
 from repro.experiments.runner import (
     effective_trials,
+    measured_depth_makespans,
     measured_makespans,
+    run_depth_exec,
     run_engine_exec,
     run_noisy_exec,
 )
 from repro.experiments.spec import SOLVER_PAIRS, CampaignSpec, get_preset
-from repro.experiments.validation import modeled_speedup, validate_cells
+from repro.experiments.validation import (
+    modeled_speedup,
+    validate_cells,
+    validate_depth_cells,
+)
 
 # Coarse per-solver phase constants (vector-read multiples, reduction sync
 # points) for the hw-adjusted variant: (classical partner, pipelined).
@@ -115,6 +122,41 @@ def _discrete_cells(spec: CampaignSpec, dists: Dict) -> tuple:
                     "t_pipe_mean": float(mm.t_pipe.mean()),
                 })
     return cells, wait_samples
+
+
+def _depth_cells(spec: CampaignSpec, dists: Dict) -> list:
+    """Depth-sweep stage: lag-l measured vs block-resync modeled speedups.
+
+    One cell per (noise, P, l) over ``spec.depths`` x
+    ``spec.depth_shard_counts``, with the reduction latency
+    ``spec.depth_red_latency`` (wait-mean units) on the synchronized
+    critical path — the latency-dominated regime where the paper's
+    Eq. 6/7 depth term is live.  ``ceiling_speedup`` is the l -> inf
+    Eq. 8 asymptote each column converges to.
+    """
+    from repro.core.perfmodel import (depth_speedup_ceiling,
+                                      modeled_depth_speedup)
+
+    R = spec.depth_red_latency
+    cells = []
+    for ni, (noise, dist) in enumerate(dists.items()):
+        for pi, P in enumerate(spec.depth_shard_counts):
+            seed = spec.seed + 15013 * ni + 27967 * pi
+            ceiling = depth_speedup_ceiling(dist, P, red_latency=R)
+            for l in spec.depths:
+                mm = measured_depth_makespans(
+                    dist, P, spec.iters, spec.trials, l, R, seed=seed)
+                cells.append({
+                    "noise": noise, "P": P, "l": l,
+                    "measured_speedup": mm.speedup,
+                    "modeled_speedup": modeled_depth_speedup(
+                        dist, P, l, red_latency=R, seed=seed + l),
+                    "ceiling_speedup": float(ceiling),
+                    "red_latency": R,
+                    "trials": mm.trials_effective, "iters": mm.iters,
+                    "t_sync_mean": mm.t_sync, "t_pipe_mean": mm.t_pipe,
+                })
+    return cells
 
 
 def _hw_measured(spec: CampaignSpec, sdist, models: Dict, P: int,
@@ -186,7 +228,8 @@ def _sharded_exec_summary(spec: CampaignSpec, engine_exec, dists) -> list:
     return out
 
 
-def _acceptance(spec: CampaignSpec, cells, wait_fits) -> Dict[str, bool]:
+def _acceptance(spec: CampaignSpec, cells, wait_fits,
+                depth_validation=None) -> Dict[str, bool]:
     """The ISSUE's acceptance checks, evaluated on this campaign's data."""
     exp_cells = [c for c in cells if c["noise"] == "exponential"]
     uni_cells = [c for c in cells if c["noise"] == "uniform"]
@@ -201,6 +244,18 @@ def _acceptance(spec: CampaignSpec, cells, wait_fits) -> Dict[str, bool]:
     checks["fitted family matches injected for every closed-form noise"] = all(
         fit["family_match"] for fit in wait_fits.values()
         if fit["family_match"] is not None)
+    if depth_validation:
+        checks["depth sweep: measured speedup monotone in l"] = all(
+            row["measured_monotone"] for row in depth_validation.values())
+        # the l>1 crossover: wherever the sweep reaches the Eq. 8 ceiling
+        # fraction, it does so at a depth strictly greater than 1 (-1 =
+        # even the deepest swept l is still latency-bound — recorded too)
+        checks["depth sweep: ceiling fraction reached only at l > 1"] = all(
+            row["crossover_l_measured"] != 1
+            for row in depth_validation.values())
+        checks["depth sweep: block-resync model lower-bounds measured"] = all(
+            row["model_is_lower_bound"]
+            for row in depth_validation.values())
     return checks
 
 
@@ -224,8 +279,9 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
     dists = {name: make_distribution(name, seed=spec.seed)
              for name in spec.noises}
 
-    # 1. discrete-event measurement grid
+    # 1. discrete-event measurement grid (+ the depth-l sweep)
     cells, wait_samples = _discrete_cells(spec, dists)
+    depth_cells = _depth_cells(spec, dists)
 
     # 2. fitting round-trip on the recorded wait samples
     wait_fits: Dict[str, Dict] = {}
@@ -241,6 +297,7 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
     # 3. real execution stages
     engine_exec = []
     sharded_exec: list = []
+    depth_exec: list = []
     noisy_exec: Dict[str, Dict] = {}
     runtime_fits: Dict[str, Dict] = {}
     if not skip_exec:
@@ -248,6 +305,9 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
             spec.exec_solvers, spec.engines, spec.exec_n, spec.exec_maxiter,
             repeats=spec.exec_repeats)
         sharded_exec = _sharded_exec_summary(spec, engine_exec, dists)
+        depth_exec = run_depth_exec(
+            spec.depths, spec.exec_n, spec.depth_exec_maxiter,
+            repeats=max(2, spec.exec_repeats // 2))
         noisy_exec = run_noisy_exec(
             spec.exec_solvers, dists[spec.exec_noise], spec.noise_scale,
             spec.exec_n, spec.exec_maxiter, spec.exec_repeats,
@@ -258,14 +318,18 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
 
     # 4. validation
     validation = validate_cells(cells, dists)
-    validation["acceptance"] = _acceptance(spec, cells, wait_fits)
+    validation["depth"] = validate_depth_cells(depth_cells)
+    validation["acceptance"] = _acceptance(spec, cells, wait_fits,
+                                           validation["depth"])
 
     result = {
         "spec": dataclasses.asdict(spec),
         "cells": cells,
+        "depth_cells": depth_cells,
         "wait_fits": wait_fits,
         "engine_exec": engine_exec,
         "sharded_exec": sharded_exec,
+        "depth_exec": depth_exec,
         "noisy_exec": noisy_exec,
         "runtime_fits": runtime_fits,
         "validation": validation,
@@ -274,6 +338,7 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
 
     # 5. artifacts
     write_speedup_csv(out_dir, cells)
+    write_depth_csv(out_dir, depth_cells)
     for noise, waits in wait_samples.items():
         write_ecdf_csv(out_dir, noise, waits)
     if noisy_exec:

@@ -24,6 +24,7 @@ from repro.core.stats import ecdf_with_fits
 SPEEDUP_CSV_HEADER = "noise,P,solver,measured,modeled,rel_err,hw_measured,hw_modeled"
 ECDF_CSV_HEADER = "x,ecdf,uniform,exponential,exponential_shifted,lognormal"
 RUNTIME_CSV_HEADER = "solver,run_index,seconds"
+DEPTH_CSV_HEADER = "noise,P,l,measured,modeled,ceiling,red_latency"
 
 REPORT_SECTIONS = (
     "## 1. Setup",
@@ -32,6 +33,7 @@ REPORT_SECTIONS = (
     "## 4. Noisy solver runs (Table 1 analogue)",
     "## 5. Residual drift (engine execution)",
     "## 6. Folk-theorem and crossover validation",
+    "## 7. Depth-l pipelining sweep",
 )
 
 
@@ -84,6 +86,20 @@ def write_ecdf_csv(out_dir: Path, noise: str, samples,
         for i in range(len(x)):
             f.write(f"{x[i]:.6f},{F[i]:.6f},"
                     + ",".join(f"{fits[k][i]:.6f}" for k in fits) + "\n")
+    return path
+
+
+def write_depth_csv(out_dir: Path, depth_cells: Sequence[Dict]) -> Path:
+    """Write the depth-l sweep grid CSV; returns the path."""
+    fig_dir = Path(out_dir) / "figures"
+    fig_dir.mkdir(parents=True, exist_ok=True)
+    path = fig_dir / "campaign_depth.csv"
+    with open(path, "w") as f:
+        f.write(DEPTH_CSV_HEADER + "\n")
+        for c in depth_cells:
+            f.write(f"{c['noise']},{c['P']},{c['l']},"
+                    f"{c['measured_speedup']:.6f},{c['modeled_speedup']:.6f},"
+                    f"{c['ceiling_speedup']:.6f},{c['red_latency']:.6f}\n")
     return path
 
 
@@ -218,6 +234,38 @@ def write_report_md(out_dir: Path, result: Dict) -> Path:
           f"{row['modeled_crossover_P']}; max |measured-modeled|/modeled = "
           f"{_fmt(row['max_rel_err'])}")
     w("")
+    w(REPORT_SECTIONS[6])
+    w("")
+    w("Lag-l synchronization makespans (reduction latency "
+      f"R = {spec['depth_red_latency']} wait-means on the synchronized")
+    w("critical path) vs the block-resync model; `ceiling` is the")
+    w("l -> inf Eq. 8 asymptote.  `crossover l` is the smallest swept")
+    w("depth reaching 65% of the ceiling (-1 = still latency-bound at")
+    w("the deepest swept l).")
+    w("")
+    w("| noise | P | l | measured | modeled | ceiling |")
+    w("|---|---:|---:|---:|---:|---:|")
+    for c in result["depth_cells"]:
+        w(f"| {c['noise']} | {c['P']} | {c['l']} | "
+          f"{_fmt(c['measured_speedup'])} | {_fmt(c['modeled_speedup'])} | "
+          f"{_fmt(c['ceiling_speedup'])} |")
+    w("")
+    for key, row in v.get("depth", {}).items():
+        w(f"- `{key}`: crossover l measured = {row['crossover_l_measured']}, "
+          f"modeled = {row['crossover_l_modeled']} "
+          f"(ceiling {_fmt(row['ceiling_speedup'])})")
+    w("")
+    if result.get("depth_exec"):
+        w("Real depth-l solves (`pipecg_l`, ghost-basis blocks): the")
+        w("accuracy cost of pushing the pipeline deeper.")
+        w("")
+        w("| l | engine | per-iter (us) | recurrence res | true res | drift |")
+        w("|---:|---|---:|---:|---:|---:|")
+        for c in result["depth_exec"]:
+            w(f"| {c['l']} | {c['engine']} | {_fmt(c['per_iter_us'], 1)} | "
+              f"{c['res_recurrence']:.3e} | {c['res_true']:.3e} | "
+              f"{c['drift_rel']:.3e} |")
+        w("")
     for check, ok in v["acceptance"].items():
         w(f"- {'PASS' if ok else 'FAIL'}: {check}")
     w("")

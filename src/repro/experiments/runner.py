@@ -94,14 +94,79 @@ def measured_makespans(dist: Distribution, P: int, iters: int, trials: int,
                                trials_effective=trials)
 
 
+@dataclasses.dataclass
+class DepthMeasurement:
+    """One (noise, P, l) lag-l discrete-event cell.
+
+    ``t_sync`` / ``t_pipe``: mean synchronized / lag-l makespans (the
+    distribution's time unit + ``red_latency`` per step on the sync
+    side); ``speedup`` their ratio.
+    """
+
+    t_sync: float
+    t_pipe: float
+    iters: int
+    P: int
+    l: int
+    red_latency: float
+    trials_effective: int
+
+    @property
+    def speedup(self) -> float:
+        """Measured depth-l speedup mean(T) / mean(T_l)."""
+        return self.t_sync / self.t_pipe
+
+
+def measured_depth_makespans(dist: Distribution, P: int, iters: int,
+                             trials: int, l: int, red_latency: float,
+                             seed: int = 0) -> DepthMeasurement:
+    """Simulate the lag-l synchronization makespan (perfmodel/depth.py).
+
+    Synchronized baseline: ``T = sum_k [max_p W_p^k + R]`` (Eq. 6 with
+    the reduction latency R on every step's critical path).  Depth-l:
+    the lag-l recursion ``T_p(k) = max(T_p(k-1), S(k-l) + R) + W_p^k``
+    with ``S(j) = max_p T_p(j)`` — a process runs at most l steps ahead
+    of the reduction pipeline; l -> inf recovers Eq. 7.  Streams the
+    waiting-time draws in chunks like :func:`measured_makespans`.
+    """
+    trials = effective_trials(trials, P)
+    rng = np.random.default_rng(seed)
+    chunk = max(1, _CHUNK_BUDGET // max(trials * P, 1))
+    T = np.zeros((trials, P))
+    Sbuf = np.zeros((trials, l))   # ring buffer: S(k-1) ... S(k-l)
+    t_sync = np.zeros(trials)
+    k = 0
+    done = 0
+    while done < iters:
+        kb = min(chunk, iters - done)
+        w = sample_np(dist, rng, (trials, kb, P))
+        t_sync += w.max(axis=2).sum(axis=1) + kb * red_latency
+        for j in range(kb):
+            if k >= l:   # slot k % l holds S(k-l), about to be overwritten
+                gate = Sbuf[:, k % l] + red_latency
+                T = np.maximum(T, gate[:, None]) + w[:, j, :]
+            else:
+                T = T + w[:, j, :]
+            Sbuf[:, k % l] = T.max(axis=1)
+            k += 1
+        done += kb
+    return DepthMeasurement(t_sync=float(t_sync.mean()),
+                            t_pipe=float(T.max(axis=1).mean()),
+                            iters=iters, P=P, l=l,
+                            red_latency=red_latency,
+                            trials_effective=trials)
+
+
 # ---------------------------------------------------------------------------
 # Real solver execution
 # ---------------------------------------------------------------------------
 
 def _solver_fn(name: str):
-    from repro.core.krylov import cg, cr, gmres, pgmres, pipecg, pipecr
+    from repro.core.krylov import (cg, cr, gmres, pgmres, pgmres_l, pipecg,
+                                   pipecg_l, pipecr)
     return {"cg": cg, "cr": cr, "pipecg": pipecg, "pipecr": pipecr,
-            "gmres": gmres, "pgmres": pgmres}[name]
+            "gmres": gmres, "pgmres": pgmres, "pipecg_l": pipecg_l,
+            "pgmres_l": pgmres_l}[name]
 
 
 def _true_residual(A, b, x) -> float:
@@ -173,6 +238,49 @@ def run_engine_exec(solvers: Tuple[str, ...], engines: Tuple[str, ...],
             if engine == "sharded_fused":
                 cell["n_shards"] = n_shards
             cells.append(cell)
+    return cells
+
+
+def run_depth_exec(depths: Tuple[int, ...], n: int, maxiter: int,
+                   repeats: int = 3, engines: Tuple[str, ...] = ("fused",)
+                   ) -> List[Dict]:
+    """Time real depth-l solves (``pipecg_l``) and report residual drift.
+
+    One cell per (l, engine): per-iteration wall time, recurrence vs
+    TRUE residual, and ``drift_rel`` — the Cools-style accuracy cost of
+    pushing the pipeline deeper (the ghost basis conditions like
+    kappa^l, so drift growing with l is the expected, bounded behavior
+    the depth tests pin down).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.krylov import pipecg_l, tridiagonal_laplacian
+
+    A = tridiagonal_laplacian(n)
+    b = jnp.ones((n,), A.bands.dtype)
+    bnorm = float(jnp.sqrt(jnp.sum(b * b)))
+    cells = []
+    for l in depths:
+        for engine in engines:
+            solve = jax.jit(lambda bb, l=l, engine=engine: pipecg_l(
+                A, bb, l=l, maxiter=maxiter, engine=engine))
+            out = solve(b)
+            jax.block_until_ready(out.x)  # compile
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                out = solve(b)
+            jax.block_until_ready(out.x)
+            per_iter = (time.perf_counter() - t0) / repeats / maxiter
+            res_rec = float(out.res_norm)
+            res_true = _true_residual(A, b, out.x)
+            cells.append({
+                "solver": "pipecg_l", "l": l, "engine": engine, "n": n,
+                "maxiter": maxiter,
+                "per_iter_us": per_iter * 1e6,
+                "res_recurrence": res_rec,
+                "res_true": res_true,
+                "drift_rel": abs(res_true - res_rec) / bnorm,
+            })
     return cells
 
 

@@ -63,6 +63,18 @@ class CampaignSpec:
     noise_scale:
         Seconds per unit draw for the wall-clock injection (1.5e-3 makes a
         unit-mean exponential inject ~1.5 ms of stall per iteration).
+    depths:
+        Pipeline depths l for the depth sweep (lag-l makespans, depth-l
+        real solves); the ISSUE-4 acceptance grid is (1, 2, 4).
+    depth_shard_counts:
+        Process counts for the depth sweep (a subset of the main grid —
+        each lag-l cell is a sequential discrete-event recursion).
+    depth_red_latency:
+        Reduction latency R for the depth sweep, in units of the
+        waiting-time mean — the latency-dominated regime where depth
+        matters (the paper's ex23: "most time in dot products").
+    depth_exec_maxiter:
+        Iteration count of the real ``pipecg_l`` execution cells.
     seed:
         Base seed; every stage derives its own stream from it.
     """
@@ -82,6 +94,10 @@ class CampaignSpec:
     exec_repeats: int = 6
     exec_noise: str = "exponential"
     noise_scale: float = 1.5e-3
+    depths: Tuple[int, ...] = (1, 2, 4)
+    depth_shard_counts: Tuple[int, ...] = (4, 8)
+    depth_red_latency: float = 2.0
+    depth_exec_maxiter: int = 40
     seed: int = 0
 
 
@@ -95,10 +111,16 @@ PRESETS: Dict[str, CampaignSpec] = {
         shard_counts=(2, 4, 16, 64, 256, 1024, 8192),
         trials=96,
         iters=5000,
-        fit_samples=4000,
+        # 2000 like smoke: the composite-GoF critical values (CvM /
+        # Lilliefors with estimated parameters) are asymptotic
+        # approximations whose alpha=0.05 calibration drifts by n=4000 —
+        # the round-trip check then false-rejects on ~1-in-20 streams
+        fit_samples=2000,
         exec_n=65536,
         exec_maxiter=60,
         exec_repeats=12,
+        depth_shard_counts=(4, 64, 1024),
+        depth_exec_maxiter=60,
     ),
 }
 

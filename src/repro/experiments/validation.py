@@ -28,6 +28,44 @@ def measured_crossover(cells: Sequence[Dict], noise: str,
     return ps[0] if ps else -1
 
 
+def validate_depth_cells(depth_cells: Sequence[Dict],
+                         frac: float = 0.65) -> Dict:
+    """Depth-sweep validation: crossover depths + monotonicity.
+
+    For every (noise, P) of the depth grid: the measured and modeled
+    crossover depth (smallest swept l whose speedup reaches
+    ``frac * ceiling``, the l -> inf Eq. 8 asymptote), whether the
+    measured speedup is monotone non-decreasing in l, and whether the
+    block-resync model stays a lower bound on the measured lag-l
+    speedup (5% slack for Monte-Carlo noise).
+    """
+    from repro.core.perfmodel import crossover_depth
+
+    out: Dict = {}
+    keys = sorted({(c["noise"], c["P"]) for c in depth_cells})
+    for noise, P in keys:
+        mine = sorted((c for c in depth_cells
+                       if c["noise"] == noise and c["P"] == P),
+                      key=lambda c: c["l"])
+        measured = {c["l"]: c["measured_speedup"] for c in mine}
+        modeled = {c["l"]: c["modeled_speedup"] for c in mine}
+        ceiling = mine[0]["ceiling_speedup"]
+        seq = [measured[l] for l in sorted(measured)]
+        out[f"{noise}/P{P}"] = {
+            "crossover_l_measured": crossover_depth(measured, ceiling,
+                                                    frac=frac),
+            "crossover_l_modeled": crossover_depth(modeled, ceiling,
+                                                   frac=frac),
+            "ceiling_speedup": ceiling,
+            "measured_monotone": all(b >= a * 0.98
+                                     for a, b in zip(seq, seq[1:])),
+            "model_is_lower_bound": all(
+                c["modeled_speedup"] <= c["measured_speedup"] * 1.05
+                for c in mine),
+        }
+    return out
+
+
 def validate_cells(cells: Sequence[Dict],
                    dists: Dict[str, Distribution]) -> Dict:
     """Cross-cell validation summary for the report.

@@ -69,6 +69,7 @@ def flash_mha(q, k, v, causal: bool = True):
 
 @jax.jit
 def fused_dots(V, z):
+    """One-pass multi-dot V @ z (kernel-backed, padded to the block)."""
     block = min(_fd.DEFAULT_BLOCK, V.shape[1])
     if V.shape[1] % block:
         Vp, n = _pad_to(V, block, axis=1)
@@ -158,8 +159,78 @@ def pipecg_spmv_halo_step(offsets: Tuple[int, ...], bands_ext, invd_ext,
                                 interpret=_interpret())
 
 
+@functools.partial(jax.jit, static_argnums=(0, 5), static_argnames=("block",))
+def ghost_chain_step(offsets: Tuple[int, ...], bands, p, r, theta, l: int,
+                     block: int = None):
+    """Depth-l ghost basis + Gram in one sweep (kernel-backed, padded).
+
+    Returns ``(chain, gram)``: the (2l+1, n) theta-scaled basis
+    [p, Ãp, .., Ã^l p, r, .., Ã^{l-1} r] and its (2l+1, 2l+1) Gram matrix
+    — the single fused-reduction payload of one depth-l block
+    (see kernels/pipecg_spmv_fused.py and core/krylov/pipeline.py).
+    """
+    from repro.kernels import autotune
+
+    n = p.shape[-1]
+    halo = max(abs(o) for o in offsets)
+    H = l * halo
+    if block is None:
+        block = autotune.best_block(
+            "ghost_chain", n, p.dtype,
+            # tiled words/row: 2l+1 chain writes (p/r resident)
+            words_per_row=float(2 * l + 1),
+            resident_words=(2 + bands.shape[0]) * n,
+            min_block=2 * H, k_rhs=l)
+    block = max(min(block, n), 2 * H)
+    pad = (-n) % block
+    if pad:
+        bands_p, _ = _pad_to(bands, block, axis=1)
+        chain, gram = _ps.ghost_chain_fused(
+            offsets, bands_p, jnp.pad(p, (0, pad)), jnp.pad(r, (0, pad)),
+            theta, l, block=block, interpret=_interpret())
+        # zero-padded rows contribute zeros to the Gram: no mask needed
+        return chain[:, :n], gram
+    return _ps.ghost_chain_fused(offsets, bands, p, r, theta, l, block=block,
+                                 interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnums=(0, 9),
+                   static_argnames=("block", "n_shards"))
+def ghost_chain_halo_step(offsets: Tuple[int, ...], bands_ext, p, r,
+                          p_left, p_right, r_left, r_right, theta, l: int,
+                          block: int = None, n_shards: int = 1):
+    """Per-shard depth-l ghost-chain sweep with neighbor halos.
+
+    ``p_left``/``p_right``/``r_left``/``r_right`` are the (l*halo,)
+    ppermute payloads — ONE exchange per depth-l block; ``bands_ext`` the
+    once-per-solve l*halo-extended operator.  The returned ``gram`` is
+    this shard's PARTIAL (2l+1, 2l+1) Gram (the caller psums it: one
+    collective per l iterations).
+    """
+    from repro.kernels import autotune
+
+    n = p.shape[-1]
+    halo = max(abs(o) for o in offsets)
+    H = l * halo
+    if n < 2 * H:
+        raise ValueError(
+            f"local shard of {n} rows is narrower than the 2*l*halo={2 * H} "
+            "chain reach; use fewer shards or a smaller depth")
+    if block is None:
+        block = autotune.best_block(
+            "ghost_chain_halo", n, p.dtype,
+            words_per_row=float(2 * l + 1),
+            resident_words=(2 + bands_ext.shape[0]) * n,
+            min_block=2 * H, n_shards=n_shards, k_rhs=l)
+    block = max(min(block, n), 2 * H)
+    return _ps.ghost_chain_halo(offsets, bands_ext, p, r, (p_left, p_right),
+                                (r_left, r_right), theta, l, block=block,
+                                interpret=_interpret())
+
+
 @jax.jit
 def pipecg_fused_step(x, r, u, w, m, n_, z, q, s, p, alpha, beta):
+    """Fused PIPECG updates + dots (update-kernel path, padded)."""
     block = min(_pf.DEFAULT_BLOCK, x.shape[0])
     if x.shape[0] % block:
         vecs = [x, r, u, w, m, n_, z, q, s, p]

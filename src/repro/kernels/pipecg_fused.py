@@ -63,6 +63,12 @@ def _pipecg_kernel(ab_ref, x_ref, r_ref, u_ref, w_ref, m_ref, n_ref,
 def pipecg_fused(x, r, u, w, m, n_, z, q, s, p, alpha, beta, *,
                  block: int = DEFAULT_BLOCK, interpret: bool = False
                  ) -> Tuple[jnp.ndarray, ...]:
+    """Fused PIPECG updates + dots: 8 AXPYs and 3 dots in one HBM pass.
+
+    Returns (x', r', u', w', z', q', s', p', red) with ``red`` (3,) =
+    (<r',u'>, <w',u'>, <r',r'>); the M-apply and SpMV sweeps stay with
+    the caller (the update-kernel fallback path of the FusedEngine).
+    """
     n = x.shape[0]
     assert n % block == 0, (n, block)
     grid = (n // block,)

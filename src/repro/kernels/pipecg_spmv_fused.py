@@ -252,3 +252,159 @@ def pipecg_spmv_halo(offsets: Sequence[int], bands_ext: jnp.ndarray,
     if pad:
         outs = tuple(o[:, :n] for o in outs[:4]) + (outs[4],)
     return outs
+
+
+# ---------------------------------------------------------------------------
+# Depth-l ghost-chain sweep (the l-deep pipelined solvers, pipecg_l)
+# ---------------------------------------------------------------------------
+#
+# Depth-l pipelining (core/krylov/pipeline.py) trades the per-iteration
+# fused reduction for ONE Gram reduction per l iterations: each block
+# builds the theta-scaled ghost basis
+#
+#     C = [p, Ãp, ..., Ã^l p, r, Ãr, ..., Ã^{l-1} r],   Ã = A / theta,
+#
+# and the single (2l+1, 2l+1) Gram matrix G = C C^T carries ALL the
+# reduction rows the l coefficient-space CG steps consume — one psum in
+# flight per depth-l block where the depth-1 solver keeps one per
+# iteration.  The kernel below produces the whole chain AND the Gram
+# partials in one HBM sweep: each tile loads p and r once with an
+# l*halo extension and re-derives every chain link in-register (the same
+# halo-recompute trick as the single-sweep iteration kernel, reaching
+# l*halo instead of 2*halo), so per block the kernel moves
+#
+#     reads:  p, r (resident, +l*h)  + bands (resident, +l*h)
+#     writes: the 2l+1 chain rows
+#   ==  (2l + 3 + n_bands) n words per l iterations
+#   ==  (2 + (3 + n_bands)/l) n words per iteration  ->  5n at l=2,
+#       3.5n at l=4 for the tridiagonal ex23 operator (vs 12n for the
+#       depth-1 single sweep; the block-end reconstruction x/r/p += C^T c
+#       adds (2l+7)n per block, so end-to-end ~9.5n (l=2) / ~6.8n (l=4)).
+#
+# ``ghost_chain_halo`` is the sharded rendering: the caller ppermutes ONE
+# l*halo-wide edge strip of p and r per block (depth-l amortizes message
+# count as well as reduction count) and passes the operator rows
+# pre-extended by l*halo once per solve; pad rows are masked out of the
+# Gram partials exactly like the single-sweep kernel's n_valid mask.
+
+def _chain_kernel(th_ref, bands_ref, p_ref, r_ref, chain_o, gram_o, *,
+                  offsets: Sequence[int], halo: int, block: int, l: int,
+                  n_valid: int = None):
+    """One tile of the ghost-chain sweep: all 2l+1 links + Gram partials."""
+    i = pl.program_id(0)
+    base = i * block
+    H = l * halo                  # extension reach consumed by the chain
+    th_inv = th_ref[0]            # 1/theta (runtime scalar)
+
+    def links(ref, depth):
+        # a_j[q] = (Ã^j v)[base - (H - j*h) + q]; refs are +H extended so
+        # index 0 == global row -H and global row g sits at index g + H
+        a = pl.load(ref, (pl.dslice(base, block + 2 * H),))
+        out = [jax.lax.dynamic_slice_in_dim(a, H, block)]
+        for j in range(1, depth + 1):
+            nxt = jnp.zeros((block + 2 * (H - j * halo),), a.dtype)
+            bk_rows = pl.dslice(base + j * halo, block + 2 * (H - j * halo))
+            for k, off in enumerate(offsets):
+                bk = pl.load(bands_ref, (pl.dslice(k, 1), bk_rows))[0]
+                nxt = nxt + bk * jax.lax.dynamic_slice_in_dim(
+                    a, halo + off, block + 2 * (H - j * halo))
+            a = nxt * th_inv
+            out.append(jax.lax.dynamic_slice_in_dim(a, H - j * halo, block))
+        return out
+
+    rows = links(p_ref, l) + links(r_ref, l - 1)   # 2l+1 tile rows
+    C = jnp.stack(rows)                            # (2l+1, block)
+    chain_o[:, :] = C
+
+    @pl.when(i == 0)
+    def _init():
+        gram_o[...] = jnp.zeros_like(gram_o)
+
+    if n_valid is not None:   # mask pad rows out of the Gram partials
+        gr = base + jax.lax.broadcasted_iota(jnp.int32, (block,), 0)
+        C = jnp.where(gr < n_valid, C, 0)
+    gram_o[:, :] += C @ C.T
+
+
+def _chain_sweep(offsets, bands_e, p_e, r_e, theta, *, halo: int, block: int,
+                 l: int, n: int, n_valid: int = None,
+                 interpret: bool = False):
+    """Shared pallas_call for the ghost-chain sweep over +l*halo operands."""
+    assert n % block == 0, (n, block)
+    H = l * halo
+    assert block >= 2 * H, (block, H)
+    m = 2 * l + 1
+    dt = p_e.dtype
+    kern = functools.partial(_chain_kernel, offsets=tuple(offsets), halo=halo,
+                             block=block, l=l, n_valid=n_valid)
+    resident = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    chain, gram = pl.pallas_call(
+        kern,
+        grid=(n // block,),
+        in_specs=[
+            resident((1,)),                 # 1/theta
+            resident(bands_e.shape),        # bands (+l*h)
+            resident(p_e.shape),            # p (+l*h)
+            resident(r_e.shape),            # r (+l*h)
+        ],
+        out_specs=[pl.BlockSpec((m, block), lambda i: (0, i)),
+                   resident((m, m))],
+        out_shape=[jax.ShapeDtypeStruct((m, n), dt),
+                   jax.ShapeDtypeStruct((m, m), dt)],
+        interpret=interpret,
+    )(jnp.reshape(1.0 / jnp.asarray(theta, dt), (1,)), bands_e, p_e, r_e)
+    return chain, gram
+
+
+def ghost_chain_fused(offsets: Sequence[int], bands: jnp.ndarray, p, r,
+                      theta, l: int, *, block: int = DEFAULT_BLOCK,
+                      interpret: bool = False):
+    """Depth-l ghost basis + Gram partials in one sweep (zero extensions).
+
+    ``p`` / ``r`` are (n,); returns ``(chain, gram)`` with ``chain``
+    (2l+1, n) = [p, Ãp, .., Ã^l p, r, Ãr, .., Ã^{l-1} r] for the
+    theta-scaled operator Ã = A/theta, and ``gram`` (2l+1, 2l+1) the full
+    Gram matrix C C^T — the block's single fused reduction payload.
+    """
+    n = p.shape[-1]
+    halo = max(abs(o) for o in offsets)
+    H = l * halo
+    bands_e = jnp.pad(bands, ((0, 0), (H, H)))
+    p_e = jnp.pad(p, (H, H))
+    r_e = jnp.pad(r, (H, H))
+    return _chain_sweep(offsets, bands_e, p_e, r_e, theta, halo=halo,
+                        block=block, l=l, n=n, interpret=interpret)
+
+
+def ghost_chain_halo(offsets: Sequence[int], bands_ext: jnp.ndarray, p, r,
+                     p_lr: Tuple[jnp.ndarray, jnp.ndarray],
+                     r_lr: Tuple[jnp.ndarray, jnp.ndarray], theta, l: int, *,
+                     block: int = DEFAULT_BLOCK, interpret: bool = False):
+    """Sharded ghost-chain sweep with neighbor-supplied l*halo extensions.
+
+    ``p_lr`` / ``r_lr`` are ``(left, right)`` strips of width ``l*halo``
+    (the ONE ppermute payload of the whole depth-l block); ``bands_ext``
+    is (n_bands, n + 2*l*halo), pre-extended once per solve.  Pad rows are
+    masked out of the Gram partials; the returned ``gram`` holds this
+    shard's PARTIAL sums (the caller psums them — one collective per l
+    iterations).
+    """
+    n = p.shape[-1]
+    halo = max(abs(o) for o in offsets)
+    H = l * halo
+    pad = (-n) % block
+    p_l, p_r = p_lr
+    r_l, r_r = r_lr
+    assert p_l.shape == (H,), (p_l.shape, H)
+    zpad = jnp.zeros((pad,), p.dtype)
+    # pad AFTER the right halo, as in pipecg_spmv_halo
+    p_e = jnp.concatenate([p_l, p, p_r, zpad])
+    r_e = jnp.concatenate([r_l, r, r_r, zpad])
+    bands_p = jnp.pad(bands_ext, ((0, 0), (0, pad)))
+    chain, gram = _chain_sweep(offsets, bands_p, p_e, r_e, theta, halo=halo,
+                               block=block, l=l, n=n + pad,
+                               n_valid=(n if pad else None),
+                               interpret=interpret)
+    if pad:
+        chain = chain[:, :n]
+    return chain, gram

@@ -297,7 +297,7 @@ def full_cost(hlo: str) -> Dict[str, float]:
             "max_trip": float(max(trip.values())) if trip else 1.0}
 
 
-def split_phase_overlap(hlo: str) -> Dict:
+def split_phase_overlap(hlo: str, depth: int = 1) -> Dict:
     """Verify the split-phase reduction property on optimized HLO text.
 
     A pipelined distributed solve is genuinely split-phase when, inside
@@ -313,6 +313,16 @@ def split_phase_overlap(hlo: str) -> Dict:
     ``overlap_ok`` is True iff at least one while body contains both op
     kinds and in no body does a collective-permute (transitively) consume
     an all-reduce result.
+
+    ``depth`` > 1 additionally certifies the depth-l amortized structure
+    of ``sharded_pipecg_depth_solve``: one loop body = one ghost-basis
+    block of ``depth`` iterations, whose l-deep reduction rows travel in
+    a SINGLE fused Gram all-reduce (the l independent in-flight rows of
+    the MPI rendering, fused into one payload because XLA collectives
+    cannot span while-loop iterations).  The report then gains
+    ``depth_ok`` — True iff every mixed body contains exactly ONE
+    all-reduce (so the per-iteration reduction count is 1/depth) with
+    the permutes still independent of it.
     """
     comps = _split_computations(hlo)
     bodies = set()
@@ -357,7 +367,12 @@ def split_phase_overlap(hlo: str) -> Dict:
 
     ok = bool(report) and not any(v["permute_depends_on_reduce"]
                                   for v in report.values())
-    return {"bodies": report, "overlap_ok": ok}
+    out = {"bodies": report, "overlap_ok": ok}
+    if depth > 1:
+        out["depth"] = depth
+        out["depth_ok"] = ok and all(v["all_reduce"] == 1
+                                     for v in report.values())
+    return out
 
 
 def scan_aware_cost(compiled, hlo: str) -> Dict[str, float]:

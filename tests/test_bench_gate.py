@@ -1,0 +1,74 @@
+"""The CI benchmark-regression gate: compare() semantics + committed
+baseline consistency (benchmarks/check_regression.py)."""
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))
+
+from benchmarks.check_regression import (  # noqa: E402
+    DEFAULT_BASELINE,
+    TRACKED,
+    compare,
+)
+
+
+def _rec(**kernels):
+    return {"kernels": kernels}
+
+
+def test_pass_when_equal_and_when_improved():
+    base = _rec(k={"words_per_iter_over_n": 12.0,
+                   "modeled_speedup_vs_naive": 3.0})
+    assert compare(base, base, 0.10) == []
+    better = _rec(k={"words_per_iter_over_n": 10.0,
+                     "modeled_speedup_vs_naive": 4.0})
+    assert compare(better, base, 0.10) == []
+
+
+def test_fail_on_regression_beyond_tolerance():
+    base = _rec(k={"words_per_iter_over_n": 12.0,
+                   "modeled_speedup_vs_naive": 3.0})
+    worse_words = _rec(k={"words_per_iter_over_n": 13.6,
+                          "modeled_speedup_vs_naive": 3.0})
+    assert any("words_per_iter_over_n" in f
+               for f in compare(worse_words, base, 0.10))
+    # within tolerance passes
+    ok = _rec(k={"words_per_iter_over_n": 13.0,
+                 "modeled_speedup_vs_naive": 3.0})
+    assert compare(ok, base, 0.10) == []
+    worse_spd = _rec(k={"words_per_iter_over_n": 12.0,
+                        "modeled_speedup_vs_naive": 2.5})
+    assert any("modeled_speedup_vs_naive" in f
+               for f in compare(worse_spd, base, 0.10))
+
+
+def test_fail_on_disappeared_row_and_lost_flag():
+    base = _rec(k={"words_per_iter_over_n": 12.0,
+                   "hlo_split_phase_overlap": True})
+    assert any("disappeared" in f for f in compare(_rec(), base, 0.10))
+    lost = _rec(k={"words_per_iter_over_n": 12.0,
+                   "hlo_split_phase_overlap": False})
+    assert any("hlo_split_phase_overlap" in f
+               for f in compare(lost, base, 0.10))
+
+
+def test_new_kernels_do_not_fail():
+    base = _rec(k={"words_per_iter_over_n": 12.0})
+    cur = _rec(k={"words_per_iter_over_n": 12.0},
+               shiny={"words_per_iter_over_n": 1.0})
+    assert compare(cur, base, 0.10) == []
+
+
+def test_committed_baseline_tracks_known_metrics():
+    """The baseline file exists, parses, and carries at least one tracked
+    metric per kernel row — so the CI gate is never vacuously green."""
+    with open(DEFAULT_BASELINE) as f:
+        baseline = json.load(f)
+    kernels = {k: v for k, v in baseline.get("kernels", {}).items()
+               if isinstance(v, dict)}
+    assert len(kernels) >= 6
+    assert any(set(cell) & set(TRACKED) for cell in kernels.values())
+    assert "ghost_chain_l2" in kernels and "ghost_chain_l4" in kernels
+    assert kernels["pipecg_sharded_fused"]["hlo_split_phase_overlap"] is True

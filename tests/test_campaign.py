@@ -16,6 +16,7 @@ from repro.experiments import (
     run_campaign,
 )
 from repro.experiments.report import (
+    DEPTH_CSV_HEADER,
     ECDF_CSV_HEADER,
     REPORT_SECTIONS,
     RUNTIME_CSV_HEADER,
@@ -36,6 +37,9 @@ TINY = CampaignSpec(
     exec_maxiter=10,
     exec_repeats=4,
     noise_scale=1e-3,
+    depths=(1, 2, 4),
+    depth_shard_counts=(4,),
+    depth_exec_maxiter=20,
     seed=1234,
 )
 
@@ -71,6 +75,45 @@ def test_artifacts_exist_and_schema_stable(campaign):
     runtimes = (out / "figures" / "campaign_runtimes.csv").read_text()
     assert runtimes.splitlines()[0] == RUNTIME_CSV_HEADER
     assert len(runtimes.splitlines()) == 1 + 2 * TINY.exec_repeats
+
+
+def test_depth_stage_schema_and_criteria(campaign):
+    """Depth sweep: grid coverage, crossover recording, monotonicity,
+    CSV schema, and the depth acceptance checks."""
+    out, result = campaign
+    cells = result["depth_cells"]
+    grid = {(c["noise"], c["P"], c["l"]) for c in cells}
+    assert grid == {(n, P, l) for n in TINY.noises
+                    for P in TINY.depth_shard_counts for l in TINY.depths}
+    for c in cells:
+        assert c["measured_speedup"] > 0 and c["modeled_speedup"] > 0
+        assert c["ceiling_speedup"] >= c["modeled_speedup"] * 0.98
+    # measured speedup grows with depth in the latency regime
+    for noise in TINY.noises:
+        seq = [c["measured_speedup"] for c in
+               sorted((c for c in cells if c["noise"] == noise
+                       and c["P"] == 4), key=lambda c: c["l"])]
+        assert seq[0] == pytest.approx(1.0, abs=0.1)  # lag-1 ~ synchronized
+        assert seq[-1] > seq[0] * 1.5
+
+    v = result["validation"]["depth"]
+    for key, row in v.items():
+        assert row["crossover_l_measured"] != 1  # l>1 crossover (or -1)
+        assert row["measured_monotone"]
+    acc = result["validation"]["acceptance"]
+    assert acc["depth sweep: measured speedup monotone in l"]
+    assert acc["depth sweep: ceiling fraction reached only at l > 1"]
+
+    csv = (out / "figures" / "campaign_depth.csv").read_text()
+    assert csv.splitlines()[0] == DEPTH_CSV_HEADER
+    assert len(csv.splitlines()) == 1 + len(cells)
+
+    # real depth-l execution cells report bounded drift
+    dex = result["depth_exec"]
+    assert {c["l"] for c in dex} == set(TINY.depths)
+    for c in dex:
+        assert c["per_iter_us"] > 0
+        assert c["drift_rel"] < 1e-6
 
 
 def test_fitted_family_and_params_recover_injected(campaign):

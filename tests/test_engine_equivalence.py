@@ -332,13 +332,15 @@ SHARDED_SCRIPT = textwrap.dedent("""
 def test_sharded_engine_distributed_equivalence():
     """naive vs ShardedFusedEngine across 1/2/4/8 shards (subprocess with 8
     forced host devices): pipecg / pipecg_multi / pipecr, non-divisible
-    n, tol freezing, and the split-phase HLO assertion."""
+    n, tol freezing, and the split-phase HLO assertion.  Runs through the
+    shared timeout + one-retry helper (conftest) so a cold-compile stall
+    under CI load flakes at most once instead of hanging the lane."""
+    from conftest import run_subprocess_with_retry
+
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
     env.pop("XLA_FLAGS", None)
-    out = subprocess.run([sys.executable, "-c", SHARDED_SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=900)
-    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    out = run_subprocess_with_retry(SHARDED_SCRIPT, env=env)
     for tag in ("pipecg shards 8 ok", "pipecr ok", "pipecg_multi ok",
                 "nondivisible ok", "tol ok", "overlap ok"):
         assert tag in out.stdout, out.stdout

@@ -108,6 +108,23 @@ def test_split_phase_overlap_no_loop_bodies():
     assert split_phase_overlap(FAKE_HLO)["overlap_ok"] is False
 
 
+def test_split_phase_overlap_depth_mode():
+    """depth > 1: certifies ONE all-reduce per body (the fused l-deep
+    Gram) on top of the permute-independence check."""
+    out = split_phase_overlap(SPLIT_PHASE_HLO, depth=2)
+    assert out["depth"] == 2
+    assert out["depth_ok"] is True
+    # a second all-reduce in the body breaks the amortized structure
+    two_ar = SPLIT_PHASE_HLO.replace(
+        "%ar = f32[5]{0} all-reduce(%red), to_apply=%add",
+        "%ar = f32[5]{0} all-reduce(%red), to_apply=%add\n"
+        "  %ar2 = f32[5]{0} all-reduce(%red), to_apply=%add")
+    out2 = split_phase_overlap(two_ar, depth=2)
+    assert out2["overlap_ok"] is True and out2["depth_ok"] is False
+    # blocking permute fails depth mode through overlap_ok too
+    assert split_phase_overlap(BLOCKING_HLO, depth=2)["depth_ok"] is False
+
+
 def test_trip_count_scaling():
     out = analyze_collectives(FAKE_HLO)
     assert out["while_trip_counts"] == {"body.2": 28}
