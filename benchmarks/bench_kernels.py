@@ -61,35 +61,43 @@ _OVERLAP_SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax
     import jax.numpy as jnp, numpy as np
-    from repro.core.krylov import tridiagonal_laplacian, pipecg, distributed_solve
+    from repro.core.krylov import (tridiagonal_laplacian, pipecg,
+                                   pipebicgstab, distributed_solve)
     from repro.launch.hlo_analysis import split_phase_overlap
     n = 1024
     A = tridiagonal_laplacian(n, dtype=jnp.float32)
     b = jnp.ones((n,), jnp.float32)
     mesh = jax.sharding.Mesh(np.asarray(jax.devices()), ("shards",))
-    txt = jax.jit(functools.partial(distributed_solve, pipecg, A, mesh=mesh,
-                                    engine="sharded_fused",
-                                    maxiter=5)).lower(b).compile().as_text()
-    print(json.dumps(split_phase_overlap(txt)))
+    out = {}
+    for name, solver in (("pipecg", pipecg), ("pipebicgstab", pipebicgstab)):
+        txt = jax.jit(functools.partial(
+            distributed_solve, solver, A, mesh=mesh, engine="sharded_fused",
+            maxiter=5)).lower(b).compile().as_text()
+        out[name] = split_phase_overlap(txt)
+    print(json.dumps(out))
 """)
 
 
-def _hlo_overlap_flag():
-    """{'overlap_ok': bool, ...} from the 8-device subprocess (or an
-    'error' record if the probe fails — the bench row then says so)."""
+def _hlo_overlap_flags():
+    """{solver: {'overlap_ok': bool, ...}} from the 8-device subprocess
+    (or an 'error' record if the probe fails — the bench rows then say
+    so)."""
     env = dict(os.environ)
     env["PYTHONPATH"] = (os.path.join(REPO_ROOT, "src")
                          + os.pathsep + env.get("PYTHONPATH", ""))
     env.pop("XLA_FLAGS", None)
+    fail = {"overlap_ok": False}
     try:
         out = subprocess.run([sys.executable, "-c", _OVERLAP_SCRIPT],
                              env=env, capture_output=True, text=True,
                              timeout=600)
         if out.returncode != 0:
-            return {"overlap_ok": False, "error": out.stderr[-400:]}
+            fail["error"] = out.stderr[-400:]
+            return {"pipecg": fail, "pipebicgstab": fail}
         return json.loads(out.stdout.strip().splitlines()[-1])
     except Exception as e:  # pragma: no cover
-        return {"overlap_ok": False, "error": f"{type(e).__name__}: {e}"}
+        fail["error"] = f"{type(e).__name__}: {e}"
+        return {"pipecg": fail, "pipebicgstab": fail}
 
 
 def _words_naive_iter(n, nb):
@@ -114,6 +122,26 @@ def _words_sharded_iter(n_local, nb, halo, k=1):
     return ((8 + (nb + 1) / k) * n_local   # kernel sweep (per RHS)
             + 8 * halo                     # u/p halos, 2h x 2 sides x 2 vecs
             + 5)                           # partial-reduction row (psum)
+
+
+def _words_bicgstab_naive_iter(n, nb):
+    """Classical BiCGStab as separate XLA ops (words/iteration):
+    2 SpMVs (nb+2 each) + 4 vector updates (p:4, s:3, x:4, r:3)
+    + 5 dots x 2."""
+    return (2 * (nb + 2) + 14 + 10) * n
+
+
+def _words_pipebicgstab_iter(n, nb):
+    """Fused p-BiCGStab sweep: x,r,pa,a,r_hat tiled reads + 7 writes
+    + w,t,c + bands resident (kernels/pipebicgstab_fused.py)."""
+    return (15 + nb) * n
+
+
+def _words_pipebicgstab_sharded_iter(n_local, nb, halo):
+    """Per-shard fused p-BiCGStab sweep + w/t/c halos + Gram psum."""
+    return ((15 + nb) * n_local
+            + 12 * halo                    # w/t/c halos, 2h x 2 sides x 3
+            + 36)                          # (6, 6) partial Gram (psum)
 
 
 def run(out_dir=None):
@@ -236,7 +264,8 @@ def run(out_dir=None):
     err = max(float(jnp.max(jnp.abs(a.astype(jnp.float64)
                                     - b.astype(jnp.float64))))
               for a, b in zip(got_cat, want))
-    overlap = _hlo_overlap_flag()
+    overlaps = _hlo_overlap_flags()
+    overlap = overlaps.get("pipecg", {})
     w_naive = _words_naive_iter(n_local, nb)
     w_shard = _words_sharded_iter(n_local, nb, halo)
     us = _modeled_us(w_shard)
@@ -252,6 +281,89 @@ def run(out_dir=None):
         "modeled_us_v5e": us,
         "hlo_split_phase_overlap": bool(overlap.get("overlap_ok")),
         "hlo_bodies": overlap.get("bodies", {}),
+    }
+
+    # pipebicgstab_fused (single sweep: whole pipelined BiCGStab iteration
+    # = 9 updates + both SpMVs + the (6, 6) Gram partials in one pass)
+    bvecs = [jnp.asarray(rng.standard_normal(n), jnp.float32)
+             for _ in range(8)]
+    al_b, be_b, om_b = 0.37, 0.21, -0.45
+    got = ops.pipebicgstab_fused_step(offsets, bands_f, *bvecs,
+                                      al_b, be_b, om_b)
+    want = ref.pipebicgstab_fused_ref(offsets, bands_f, *bvecs,
+                                      al_b, be_b, om_b)
+    err = max(float(jnp.max(jnp.abs(a.astype(jnp.float64)
+                                    - b.astype(jnp.float64))))
+              for a, b in zip(got, want))
+    w_naive_b = _words_bicgstab_naive_iter(n, nb)
+    w_fused_b = _words_pipebicgstab_iter(n, nb)
+    us = _modeled_us(w_fused_b)
+    rows.append(("kernel/pipebicgstab_fused", us,
+                 f"err={err:.1e} words_per_iter={w_fused_b/n:.1f}n "
+                 f"naive={w_naive_b/n:.0f}n "
+                 f"modeled_speedup={w_naive_b/w_fused_b:.2f}x"))
+    record["kernels"]["pipebicgstab_fused"] = {
+        "n": n, "err": err,
+        "words_per_iter_over_n": w_fused_b / n,
+        "naive_words_over_n": w_naive_b / n,
+        "modeled_speedup_vs_naive": w_naive_b / w_fused_b,
+        "modeled_us_v5e": us,
+    }
+
+    # pipebicgstab_sharded_fused: per-chunk halo kernel vs the full-vector
+    # sweep (hand-built neighbor halos) + the HLO overlap flag (ONE Gram
+    # all-reduce per while body hiding all four classical sync points)
+    x_b, r_b, w_b, t_b, pa_b, a_b, c_b, rh_b = bvecs
+    want = ops.pipebicgstab_fused_step(offsets, bands_f, *bvecs,
+                                       al_b, be_b, om_b)
+    w_g = jnp.pad(w_b, (2 * halo, 2 * halo))
+    t_g = jnp.pad(t_b, (2 * halo, 2 * halo))
+    c_g = jnp.pad(c_b, (2 * halo, 2 * halo))
+    pieces, gram_sum = [], 0.0
+    for s in range(S):
+        lo = s * n_local
+        piece = ops.pipebicgstab_halo_step(
+            offsets, bands_g[:, lo:lo + n_local + 2 * halo],
+            *(v[lo:lo + n_local] for v in (x_b, r_b, w_b, t_b, pa_b, a_b,
+                                           c_b, rh_b)),
+            w_g[lo:lo + 2 * halo],
+            w_g[lo + n_local + 2 * halo:lo + n_local + 4 * halo],
+            t_g[lo:lo + 2 * halo],
+            t_g[lo + n_local + 2 * halo:lo + n_local + 4 * halo],
+            c_g[lo:lo + 2 * halo],
+            c_g[lo + n_local + 2 * halo:lo + n_local + 4 * halo],
+            al_b, be_b, om_b, n_shards=S)
+        pieces.append(piece[:7])
+        gram_sum = gram_sum + piece[7]
+    got_cat = [jnp.concatenate([p_[i] for p_ in pieces])
+               for i in range(7)] + [gram_sum]
+    err = max(float(jnp.max(jnp.abs(a.astype(jnp.float64)
+                                    - b.astype(jnp.float64))))
+              for a, b in zip(got_cat, want))
+    overlap_b = overlaps.get("pipebicgstab", {})
+    w_naive_b = _words_bicgstab_naive_iter(n_local, nb)
+    w_shard_b = _words_pipebicgstab_sharded_iter(n_local, nb, halo)
+    us = _modeled_us(w_shard_b)
+    rows.append((f"kernel/pipebicgstab_sharded_fused/S{S}", us,
+                 f"err={err:.1e} "
+                 f"words_per_iter_per_shard={w_shard_b/n_local:.2f}n "
+                 f"naive={w_naive_b/n_local:.0f}n "
+                 f"hlo_overlap={bool(overlap_b.get('overlap_ok'))}"))
+    bodies_b = overlap_b.get("bodies", {})
+    record["kernels"]["pipebicgstab_sharded_fused"] = {
+        "n_local": n_local, "n_shards": S, "err": err,
+        "words_per_iter_over_n": w_shard_b / n_local,
+        "naive_words_over_n": w_naive_b / n_local,
+        "modeled_speedup_vs_naive": w_naive_b / w_shard_b,
+        "modeled_us_v5e": us,
+        "hlo_split_phase_overlap": bool(overlap_b.get("overlap_ok")),
+        # the four classical sync points travel as ONE fused Gram psum
+        "reductions_per_iter": 1.0,
+        "classical_syncs_per_iter": 4.0,
+        "hlo_all_reduce_per_body": (
+            max(v.get("all_reduce", 0) for v in bodies_b.values())
+            if bodies_b else None),
+        "hlo_bodies": bodies_b,
     }
 
     # ghost_chain (depth-l blocks): chain + Gram vs the jnp oracle, and

@@ -12,17 +12,27 @@ Fails (exit 1) when any tracked kernel metric regresses more than
 * ``reductions_per_iter``     — lower is better (depth-l amortization)
 * ``hlo_split_phase_overlap`` — must stay True (the overlap window)
 
-Kernels present only in the current record (new this PR) pass with a
-note; kernels present only in the baseline fail (a bench row silently
-disappearing is itself a regression).  Refresh the baseline INTENTIONALLY
-by copying the new record over
+Row-set semantics (audited — the three ways a row set can drift):
+
+* rows present only in the BASELINE fail (a bench row silently
+  disappearing is itself a regression);
+* rows present only in the CURRENT record (new this PR) pass with a
+  note by default — so adding a kernel never churns the gate — and fail
+  under ``--strict-new``, which CI uses so a new kernel must land with
+  its baseline row IN THE SAME PR (once it is in both, it is compared
+  like any other row: no churn, no silent escape);
+* rows whose TYPE changed (a dict cell replaced by a bare scalar or
+  vice versa) fail with a message instead of crashing the gate.
+
+Refresh the baseline INTENTIONALLY by copying the new record over
 ``benchmarks/baselines/BENCH_kernels.baseline.json`` in the same PR that
 explains the change.
 
 Usage::
 
     python benchmarks/check_regression.py \
-        [--current BENCH_kernels.json] [--baseline <path>] [--tolerance 0.10]
+        [--current BENCH_kernels.json] [--baseline <path>] \
+        [--tolerance 0.10] [--strict-new]
 """
 from __future__ import annotations
 
@@ -49,17 +59,40 @@ TRACKED = {
 FLAGS_MUST_HOLD = ("hlo_split_phase_overlap",)
 
 
-def compare(current: dict, baseline: dict, tolerance: float) -> list:
-    """Return a list of human-readable failure strings (empty = pass)."""
+def new_rows(current: dict, baseline: dict) -> list:
+    """Kernel rows present in the current record but not in the baseline."""
+    return sorted(set(current.get("kernels", {}))
+                  - set(baseline.get("kernels", {})))
+
+
+def compare(current: dict, baseline: dict, tolerance: float,
+            strict_new: bool = False) -> list:
+    """Return a list of human-readable failure strings (empty = pass).
+
+    ``strict_new`` turns rows that appeared without a baseline entry into
+    failures (the CI mode: a new kernel must update the committed
+    baseline in the same PR); the default keeps them passing with a note
+    so local bench runs never churn.
+    """
     failures = []
     cur_k = current.get("kernels", {})
     base_k = baseline.get("kernels", {})
+    if strict_new:
+        for name in new_rows(current, baseline):
+            failures.append(
+                f"{name}: new bench row has no baseline entry — add it to "
+                "the committed baseline in this PR (--strict-new)")
     for name, base_cell in base_k.items():
         if not isinstance(base_cell, dict):
             continue
         cell = cur_k.get(name)
         if cell is None:
             failures.append(f"{name}: bench row disappeared from the record")
+            continue
+        if not isinstance(cell, dict):
+            failures.append(
+                f"{name}: bench row changed type (baseline tracks a metric "
+                f"dict, current record holds {type(cell).__name__!r})")
             continue
         for metric, direction in TRACKED.items():
             if metric not in base_cell:
@@ -91,6 +124,10 @@ def main(argv=None) -> int:
     ap.add_argument("--current", default=DEFAULT_CURRENT)
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
     ap.add_argument("--tolerance", type=float, default=0.10)
+    ap.add_argument("--strict-new", action="store_true",
+                    help="fail on bench rows that have no baseline entry "
+                    "(CI mode: new kernels must update the baseline in "
+                    "the same PR)")
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
@@ -98,10 +135,10 @@ def main(argv=None) -> int:
     with open(args.baseline) as f:
         baseline = json.load(f)
 
-    failures = compare(current, baseline, args.tolerance)
-    new = sorted(set(current.get("kernels", {}))
-                 - set(baseline.get("kernels", {})))
-    if new:
+    failures = compare(current, baseline, args.tolerance,
+                       strict_new=args.strict_new)
+    new = new_rows(current, baseline)
+    if new and not args.strict_new:
         print(f"note: new kernels not yet in the baseline: {', '.join(new)}")
     if failures:
         print(f"REGRESSION vs {os.path.relpath(args.baseline, REPO_ROOT)}:")

@@ -1,10 +1,11 @@
 """The paper's solvers: classical + pipelined Krylov methods."""
 from repro.core.krylov.base import SolveResult, local_dot, make_psum_dot  # noqa: F401
-from repro.core.krylov.bicgstab import bicgstab  # noqa: F401
+from repro.core.krylov.bicgstab import bicgstab, pipebicgstab  # noqa: F401
 from repro.core.krylov.cg import cg, cr, pipecg, pipecg_multi, pipecr  # noqa: F401
 from repro.core.krylov.distributed import (  # noqa: F401
     distributed_solve,
     halo_exchange_cols,
+    sharded_pipebicgstab_solve,
     sharded_pipecg_depth_solve,
     sharded_pipecg_solve,
 )
@@ -21,6 +22,7 @@ from repro.core.krylov.gmres import gmres, gmres_restarted  # noqa: F401
 from repro.core.krylov.operators import (  # noqa: F401
     DiaMatrix,
     MatFreeOperator,
+    convection_diffusion,
     glen_law_band,
     jacobi_preconditioner,
     laplacian_2d,

@@ -276,6 +276,151 @@ def sharded_pipecg_solve(offsets: Tuple[int, ...], bands_local, b_local, *,
 
 
 # ---------------------------------------------------------------------------
+# Sharded pipelined BiCGStab: 3 halo pairs + ONE (6, 6) Gram psum per body
+# ---------------------------------------------------------------------------
+
+def sharded_pipebicgstab_solve(offsets: Tuple[int, ...], bands_local,
+                               b_local, *, axis_name: str, M=None,
+                               maxiter: int = 100, tol: float = 0.0,
+                               block: Optional[int] = None,
+                               n_shards: int = 1,
+                               noise: Optional[NoiseHook] = None
+                               ) -> SolveResult:
+    """Per-shard pipelined BiCGStab body of the ShardedFusedEngine.
+
+    Runs INSIDE shard_map.  Each iteration is one halo-aware Pallas sweep
+    (kernels/pipebicgstab_fused.py::pipebicgstab_halo) plus one scalar
+    psum of the (6, 6) partial Gram — and the psum is *split-phase*: the
+    kernel of iteration i emits the partial Gram that is carried
+    unreduced across the scan boundary; iteration i+1 first issues its
+    halo ppermutes of w/t/c (which depend only on the carried vectors),
+    then finishes the reduction and unwinds ALL FOUR classical BiCGStab
+    inner products from it (core/krylov/bicgstab.py::pbicgstab_scalars)
+    before gating the kernel launch.  Inside one loop body the single
+    all-reduce and the collective-permutes are therefore mutually
+    independent — four hidden synchronizations per iteration where the
+    PIPECG body hides two (launch/hlo_analysis.py::split_phase_overlap
+    certifies the window, with exactly one all-reduce per body).
+
+    Single-RHS (``b_local`` (n_local,)).  ``M`` may be None or
+    ``"jacobi"`` — right preconditioning folded into the local bands with
+    one invd halo exchange per solve; residuals are TRUE residuals of
+    ``A x = b`` and ``x`` is unscaled locally at the end.  The residual
+    history is rolled into the classical alignment exactly like
+    ``sharded_pipecg_solve``.
+    """
+    from repro.core.krylov.bicgstab import pbicgstab_scalars
+    from repro.kernels import ops as kops
+
+    halo = max(abs(o) for o in offsets)
+    if b_local.ndim != 1:
+        raise ValueError(
+            "the sharded pipebicgstab path is single-RHS; batch over "
+            "solves instead of RHS columns")
+    n_local = b_local.shape[0]
+    dt = b_local.dtype
+    if n_local < 2 * halo:
+        raise ValueError(
+            f"sharded_fused engine: local shard of {n_local} rows is "
+            f"narrower than the 2*halo={2 * halo} stencil reach")
+    if M == "jacobi":
+        invd = (1.0 / bands_local[offsets.index(0)]).astype(dt)
+        il, ir = halo_exchange_cols(invd, halo, axis_name)
+        invd_ext = jnp.concatenate([il, invd, ir])
+        # A_hat[i, i+off] = A[i, i+off] * invd[i+off]  (column scaling,
+        # consistent across shard boundaries via the exchanged invd rows)
+        rows = [bands_local[k] * jax.lax.dynamic_slice_in_dim(
+                    invd_ext, halo + off, n_local)
+                for k, off in enumerate(offsets)]
+        bands_local = jnp.stack(rows)
+        unscale = invd
+    elif M is None:
+        unscale = None
+    else:
+        raise ValueError(
+            "sharded pipebicgstab preconditions by folding Jacobi into "
+            f"the bands: M must be None or 'jacobi', got {M!r}")
+
+    # loop-invariant operator extension: one ppermute per solve
+    bl, br = halo_exchange_cols(bands_local, halo, axis_name)
+    bands_ext = jnp.concatenate([bl, bands_local, br], axis=-1)
+
+    def mv(v):  # halo matvec — init only; the scan uses the kernel
+        lv, rv = halo_exchange_cols(v, halo, axis_name)
+        v_ext = jnp.concatenate([lv, v, rv])
+        y = jnp.zeros_like(v)
+        for kb, off in enumerate(offsets):
+            y = y + bands_local[kb] * jax.lax.dynamic_slice_in_dim(
+                v_ext, halo + off, n_local)
+        return y
+
+    x = jnp.zeros_like(b_local)
+    r = b_local                 # r0 = b - A_hat * 0
+    r_hat = r
+    w = mv(r)
+    t = mv(w)
+    zero = jnp.zeros_like(b_local)
+    V0 = jnp.stack([r, w, t, zero, zero, r_hat])
+    G0 = V0 @ V0.T              # this shard's PARTIAL initial Gram
+    one = jnp.ones((), dt)
+    eps = jnp.asarray(1e-300 if dt == jnp.float64 else 1e-30, dt)
+    state0 = dict(x=x, r=r, w=w, t=t, pa=zero, a=zero, c=zero, G=G0,
+                  rho_prev=one, alpha_prev=one, omega_prev=one,
+                  first=jnp.asarray(True),
+                  done=jnp.asarray(False), iters=jnp.asarray(0, jnp.int32))
+    bb = jax.lax.psum(jnp.sum(b_local * b_local), axis_name)
+    tol2 = jnp.asarray(tol, dt) ** 2 * bb
+
+    def step(st, _):
+        # ---- halo exchange for THIS iteration's sweep: depends only on
+        # the carried vectors, NOT on the pending reduction ----
+        wl, wr = halo_exchange_cols(st["w"], 2 * halo, axis_name)
+        tl, tr = halo_exchange_cols(st["t"], 2 * halo, axis_name)
+        cl, cr = halo_exchange_cols(st["c"], 2 * halo, axis_name)
+        # ---- split-phase: finish the reduction initiated LAST iteration;
+        # its only consumers are the scalar recurrences below ----
+        G = jax.lax.psum(st["G"], axis_name)
+        rr2, rho, alpha, beta, omega = pbicgstab_scalars(
+            G, st["rho_prev"], st["alpha_prev"], st["omega_prev"],
+            st["first"], eps)
+        x, r, w, t, pa, a, c, G_new = kops.pipebicgstab_halo_step(
+            offsets, bands_ext, st["x"], st["r"], st["w"], st["t"],
+            st["pa"], st["a"], st["c"], r_hat, wl, wr, tl, tr, cl, cr,
+            alpha, beta, omega, block=block, n_shards=n_shards)
+        if noise is not None:
+            from jax.experimental import io_callback
+            # effectful: the zero tick rides the partial Gram so the
+            # sampled stall gates the next psum (critical path)
+            tick = io_callback(noise, jax.ShapeDtypeStruct((), jnp.float32),
+                               ordered=False)
+            G_new = G_new + tick.astype(dt)
+
+        done = st["done"] | (rr2 <= tol2)
+        # freeze AT the iterate whose residual met the tolerance (the
+        # non-monotone-BiCGStab convention of the local pipebicgstab)
+        frz = lambda nv, ov: jnp.where(done, ov, nv)
+        new = dict(x=frz(x, st["x"]), r=frz(r, st["r"]), w=frz(w, st["w"]),
+                   t=frz(t, st["t"]), pa=frz(pa, st["pa"]),
+                   a=frz(a, st["a"]), c=frz(c, st["c"]),
+                   G=frz(G_new, st["G"]),
+                   rho_prev=frz(rho, st["rho_prev"]),
+                   alpha_prev=frz(alpha, st["alpha_prev"]),
+                   omega_prev=frz(omega, st["omega_prev"]),
+                   first=jnp.asarray(False), done=done,
+                   iters=st["iters"] + (~done).astype(jnp.int32))
+        return new, jnp.sqrt(jnp.maximum(rr2, 0.0))
+
+    st, hist = jax.lax.scan(step, state0, None, length=maxiter)
+    G_fin = jax.lax.psum(st["G"], axis_name)
+    res = jnp.sqrt(jnp.maximum(G_fin[0, 0], 0.0))
+    # roll the shifted history into the classical alignment
+    hist = jnp.concatenate([hist[1:], res[None]])
+    x_out = st["x"] if unscale is None else st["x"] * unscale
+    return SolveResult(x=x_out, iters=st["iters"], res_norm=res,
+                       res_history=hist)
+
+
+# ---------------------------------------------------------------------------
 # Depth-l sharded solve: one Gram psum + one l*halo ppermute per l iterations
 # ---------------------------------------------------------------------------
 
@@ -395,6 +540,9 @@ def sharded_pipecg_depth_solve(offsets: Tuple[int, ...], bands_local,
 # pipelined solvers the sharded engine can express, by function name
 _SHARDED_IP = {"pipecg": "id", "pipecg_multi": "id", "pipecr": "A",
                "pipecg_l": "id"}
+# solvers routed through the dedicated Gram-reduction body instead of the
+# (gamma, delta) ip dispatch above
+_SHARDED_GRAM = ("pipebicgstab",)
 
 
 def _distributed_engine_solve(solver, A: DiaMatrix, b, mesh: Mesh, eng, *,
@@ -409,10 +557,10 @@ def _distributed_engine_solve(solver, A: DiaMatrix, b, mesh: Mesh, eng, *,
     axis = axes[0]
     name = getattr(solver, "__name__", str(solver))
     ip = _SHARDED_IP.get(name)
-    if ip is None:
+    if ip is None and name not in _SHARDED_GRAM:
         raise ValueError(
             "engine='sharded_fused' supports pipecg / pipecg_multi / "
-            f"pipecr; got solver {name!r}")
+            f"pipecr / pipecg_l / pipebicgstab; got solver {name!r}")
     if not isinstance(A, DiaMatrix):
         raise ValueError("engine='sharded_fused' needs a DiaMatrix operator")
     M = solver_kw.pop("M", None)
@@ -430,6 +578,11 @@ def _distributed_engine_solve(solver, A: DiaMatrix, b, mesh: Mesh, eng, *,
     spec_v = P(None, axis) if batched else P(axis)
 
     def run(bands_local, b_local):
+        if name in _SHARDED_GRAM:
+            return eng.solve_bicgstab(A.offsets, bands_local, b_local,
+                                      axis_name=axis, M=M, maxiter=maxiter,
+                                      tol=tol, block=block,
+                                      n_shards=n_shards, noise=noise)
         if depth > 1:
             return eng.solve_depth(A.offsets, bands_local, b_local,
                                    axis_name=axis, l=depth, M=M,
@@ -498,9 +651,17 @@ def distributed_solve(solver: Callable, A: DiaMatrix, b: jnp.ndarray,
     offsets = A.offsets
 
     def run(bands_local, b_local):
+        axis = axes if len(axes) > 1 else axes[0]
         mv0 = functools.partial(dia_matvec_local, offsets, bands_local,
-                                axis_name=axes if len(axes) > 1 else axes[0],
+                                axis_name=axis,
                                 use_kernel=use_kernel)
+        extra_kw = {}
+        if getattr(solver, "__name__", "") == "pipebicgstab":
+            # keep the one-reduction-per-iteration structure even on the
+            # historical inline path: finish the locally computed (6, 6)
+            # Gram with a single psum instead of 21 per-entry dots
+            extra_kw["gram_reduce"] = (
+                lambda G, _ax=axis: jax.lax.psum(G, _ax))
         if noise is None:
             mv = mv0
         else:
@@ -515,7 +676,7 @@ def distributed_solve(solver: Callable, A: DiaMatrix, b: jnp.ndarray,
                                    jax.ShapeDtypeStruct((), jnp.float32),
                                    ordered=False)
                 return y + tick.astype(y.dtype)
-        return solver(mv, b_local, dot=dot, **solver_kw)
+        return solver(mv, b_local, dot=dot, **extra_kw, **solver_kw)
 
     out_specs = SolveResult(x=spec_v, iters=P(), res_norm=P(), res_history=P())
     fn = shard_map(run, mesh=mesh, in_specs=(spec_b, spec_v),

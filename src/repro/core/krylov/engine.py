@@ -287,3 +287,11 @@ class ShardedFusedEngine(Engine):
         from repro.core.krylov.distributed import sharded_pipecg_depth_solve
         return sharded_pipecg_depth_solve(offsets, bands_local, b_local,
                                           **kw)
+
+    def solve_bicgstab(self, offsets, bands_local, b_local, **kw):
+        """Pipelined BiCGStab per-shard body: one (6, 6) Gram psum hides
+        the FOUR classical synchronizations per iteration; see
+        distributed.sharded_pipebicgstab_solve."""
+        from repro.core.krylov.distributed import sharded_pipebicgstab_solve
+        return sharded_pipebicgstab_solve(offsets, bands_local, b_local,
+                                          **kw)

@@ -116,6 +116,24 @@ def glen_law_band(n: int, bandwidth: int = 10, seed: int = 0,
                      bands=jnp.stack([bands[o] for o in offs_sorted]))
 
 
+def convection_diffusion(n: int, c: float = 0.4, shift: float = 0.2,
+                         dtype=jnp.float64) -> DiaMatrix:
+    """1-D convection-diffusion operator: tridiag(-(1+c), 2+shift, -(1-c)).
+
+    NONSYMMETRIC for ``c != 0`` (the upwind-weighted convection term skews
+    the off-diagonals) — the Table-1-class test operator for the BiCGStab
+    family, which the CG-family solvers cannot handle.  ``shift > 0``
+    keeps the operator strictly diagonally dominant so BiCGStab converges
+    in O(10) iterations, which is what makes trajectory-level equivalence
+    testing meaningful (BiCGStab amplifies fp perturbations exponentially
+    with the iteration count on slowly converging systems).
+    """
+    main = jnp.full((n,), 2.0 + shift, dtype)
+    lo = jnp.full((n,), -(1.0 + c), dtype).at[0].set(0.0)      # offset -1
+    hi = jnp.full((n,), -(1.0 - c), dtype).at[n - 1].set(0.0)  # offset +1
+    return DiaMatrix(offsets=(-1, 0, 1), bands=jnp.stack([lo, main, hi]))
+
+
 @dataclasses.dataclass(frozen=True)
 class MatFreeOperator:
     """Matrix-free operator (e.g. Hessian-vector products)."""

@@ -11,6 +11,14 @@ PIPECG:         1 fused reduction, overlapped with SpMV      (paper Alg. 4)
   -> t_step_sync  = t_compute + t_red
      t_step_pipe  = max(t_compute, t_red) (+ pipeline-fill amortized away)
 
+``n_reductions`` generalizes the model to s-sync solvers (classical
+BiCGStab exposes FOUR sync points per iteration; p-BiCGStab fuses them
+into one): the synchronized step pays ``n_red * t_red`` serialized
+latencies, the pipelined step at most one overlapped ``t_red`` — so in
+the latency-dominated regime ``predict_speedup`` reports a ceiling of
+``n_red_sync / n_red_pipe`` (> 2x for the four-sync family; the
+waiting-time-only rendering is core/perfmodel/sync.py).
+
 Combined with a waiting-time distribution this reproduces (i) the
 deterministic folk-theorem bound and (ii) the stochastic >2x regime.
 """
@@ -109,4 +117,12 @@ def ex23_models(p: int, hw: Hardware = Hardware()) -> Dict[str, SolverPhaseModel
         # PIPECG: more AXPY state (z,q,s,p + x,r,u,w) -> ~2x vector traffic
         "pipecg": SolverPhaseModel(n=EX23_N, nnz_per_row=3, p=p, hw=hw,
                                    n_vec_reads=14, n_reductions=1),
+        # classical BiCGStab: 2 SpMVs + 4 exposed reductions per iteration
+        "bicgstab": SolverPhaseModel(n=EX23_N, nnz_per_row=3, p=p, hw=hw,
+                                     n_vec_reads=10, n_reductions=4),
+        # p-BiCGStab: the carried w/t/pa/a/c chains roughly double the
+        # AXPY traffic; all four reductions fused into ONE overlapped Gram
+        "pipebicgstab": SolverPhaseModel(n=EX23_N, nnz_per_row=3, p=p,
+                                         hw=hw, n_vec_reads=18,
+                                         n_reductions=1),
     }

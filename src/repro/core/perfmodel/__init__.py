@@ -44,6 +44,12 @@ from repro.core.perfmodel.makespan import (  # noqa: F401
     simulate,
     single_delay_makespans,
 )
+from repro.core.perfmodel.sync import (  # noqa: F401
+    SOLVER_SYNC_COUNTS,
+    s_sync_ceiling,
+    s_sync_speedup,
+    s_sync_table,
+)
 from repro.core.perfmodel.speedup import (  # noqa: F401
     asymptotic_speedup,
     exponential_speedup,

@@ -24,6 +24,7 @@ from repro.experiments.noise_sources import make_distribution  # noqa: F401
 from repro.experiments.runner import (  # noqa: F401
     measured_depth_makespans,
     measured_makespans,
+    measured_s_sync_makespans,
     run_depth_exec,
     run_engine_exec,
     run_noisy_exec,
@@ -34,6 +35,7 @@ from repro.experiments.validation import (  # noqa: F401
     modeled_speedup,
     validate_cells,
     validate_depth_cells,
+    validate_s_sync_cells,
 )
 from repro.experiments.campaign import run_campaign  # noqa: F401
 from repro.experiments.report import (  # noqa: F401

@@ -49,11 +49,13 @@ from repro.experiments.report import (
     write_report_md,
     write_runtimes_csv,
     write_speedup_csv,
+    write_sync_csv,
 )
 from repro.experiments.runner import (
     effective_trials,
     measured_depth_makespans,
     measured_makespans,
+    measured_s_sync_makespans,
     run_depth_exec,
     run_engine_exec,
     run_noisy_exec,
@@ -63,6 +65,7 @@ from repro.experiments.validation import (
     modeled_speedup,
     validate_cells,
     validate_depth_cells,
+    validate_s_sync_cells,
 )
 
 # Coarse per-solver phase constants (vector-read multiples, reduction sync
@@ -73,6 +76,10 @@ _PHASE_CONSTANTS = {
     "pipecg": ((6, 2), (14, 1)),
     "pipecr": ((8, 2), (16, 1)),
     "pgmres": ((10, 2), (12, 1)),
+    # classical BiCGStab exposes FOUR reductions per iteration; the
+    # pipelined variant fuses them into one overlapped Gram (and carries
+    # ~2x the AXPY state) — the >2x s-sync ceiling family
+    "pipebicgstab": ((10, 4), (18, 1)),
 }
 
 _INJECTED_PARAMS = {
@@ -159,6 +166,40 @@ def _depth_cells(spec: CampaignSpec, dists: Dict) -> list:
     return cells
 
 
+def _s_sync_cells(spec: CampaignSpec, dists: Dict) -> list:
+    """s-sync sweep stage: measured vs modeled sync-count speedups.
+
+    One cell per (noise, P, s) over ``spec.sync_counts`` x
+    ``spec.sync_shard_counts`` with the reduction latency
+    ``spec.sync_red_latency`` on every synchronized sync point — the
+    regime where the sync count of the classical solver (2 for CG, 4 for
+    BiCGStab) bounds the pipelined speedup at s instead of the folk 2x
+    (``core/perfmodel/sync.py``; the four-sync measured cells are the
+    campaign's rendering of the p-BiCGStab opportunity).
+    """
+    from repro.core.perfmodel import s_sync_ceiling, s_sync_speedup
+
+    R = spec.sync_red_latency
+    cells = []
+    for ni, (noise, dist) in enumerate(dists.items()):
+        for pi, P in enumerate(spec.sync_shard_counts):
+            seed = spec.seed + 31013 * ni + 52583 * pi
+            for s in spec.sync_counts:
+                mm = measured_s_sync_makespans(
+                    dist, P, spec.iters, spec.trials, s, R, seed=seed)
+                cells.append({
+                    "noise": noise, "P": P, "s": s,
+                    "measured_speedup": mm.speedup,
+                    "modeled_speedup": s_sync_speedup(
+                        dist, P, s, red_latency=R, seed=seed + s),
+                    "ceiling_speedup": s_sync_ceiling(s),
+                    "red_latency": R,
+                    "trials": mm.trials_effective, "iters": mm.iters,
+                    "t_sync_mean": mm.t_sync, "t_pipe_mean": mm.t_pipe,
+                })
+    return cells
+
+
 def _hw_measured(spec: CampaignSpec, sdist, models: Dict, P: int,
                  seed: int) -> Dict[str, float]:
     """Discrete-event speedup with the phase model's compute bases.
@@ -228,8 +269,33 @@ def _sharded_exec_summary(spec: CampaignSpec, engine_exec, dists) -> list:
     return out
 
 
+def _s_sync_predict_record(spec: CampaignSpec) -> Dict:
+    """``predict_speedup`` in the latency-dominated phase-model regime.
+
+    Evaluated at the paper's Piz Daint scale (P = 8192, where the
+    reduction tree latency dwarfs the per-chip compute) with vanishing
+    noise: the four-sync BiCGStab pair must report a modeled ceiling
+    above the folk-theorem 2x — the headline the pipebicgstab work
+    banks on.  Deterministic (no Monte-Carlo term survives the tiny
+    noise scale).
+    """
+    from repro.core.noise.simulator import ex23_models
+
+    P = 8192
+    models = ex23_models(p=P)
+    tiny = scale_distribution(make_distribution("exponential",
+                                                seed=spec.seed), 1e-12)
+    four = predict_speedup(models["bicgstab"], models["pipebicgstab"],
+                           tiny, K=spec.iters)
+    two = predict_speedup(models["cg"], models["pipecg"], tiny,
+                          K=spec.iters)
+    return {"P": P, "bicgstab": four["speedup"], "cg": two["speedup"],
+            "t_reduction": four["t_reduction"]}
+
+
 def _acceptance(spec: CampaignSpec, cells, wait_fits,
-                depth_validation=None) -> Dict[str, bool]:
+                depth_validation=None, sync_validation=None
+                ) -> Dict[str, bool]:
     """The ISSUE's acceptance checks, evaluated on this campaign's data."""
     exp_cells = [c for c in cells if c["noise"] == "exponential"]
     uni_cells = [c for c in cells if c["noise"] == "uniform"]
@@ -256,6 +322,19 @@ def _acceptance(spec: CampaignSpec, cells, wait_fits,
         checks["depth sweep: block-resync model lower-bounds measured"] = all(
             row["model_is_lower_bound"]
             for row in depth_validation.values())
+    if sync_validation:
+        rows = [row for key, row in sync_validation.items()
+                if key != "predict_speedup_latency_regime"]
+        checks["s-sync sweep: four-sync speedup > 2x measured AND "
+               "modeled (beyond the folk bound)"] = all(
+            row["four_sync_measured_gt_2x"]
+            and row["four_sync_modeled_gt_2x"] for row in rows)
+        checks["s-sync sweep: measured speedup monotone in sync count"] = (
+            all(row["measured_monotone_in_s"] for row in rows))
+        pred = sync_validation.get("predict_speedup_latency_regime")
+        if pred:
+            checks["predict_speedup: four-sync phase model > 2x in the "
+                   "latency regime"] = pred["bicgstab"] > 2.0
     return checks
 
 
@@ -279,9 +358,10 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
     dists = {name: make_distribution(name, seed=spec.seed)
              for name in spec.noises}
 
-    # 1. discrete-event measurement grid (+ the depth-l sweep)
+    # 1. discrete-event measurement grid (+ the depth-l and s-sync sweeps)
     cells, wait_samples = _discrete_cells(spec, dists)
     depth_cells = _depth_cells(spec, dists)
+    sync_cells = _s_sync_cells(spec, dists)
 
     # 2. fitting round-trip on the recorded wait samples
     wait_fits: Dict[str, Dict] = {}
@@ -319,13 +399,18 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
     # 4. validation
     validation = validate_cells(cells, dists)
     validation["depth"] = validate_depth_cells(depth_cells)
+    validation["s_sync"] = validate_s_sync_cells(sync_cells)
+    validation["s_sync"]["predict_speedup_latency_regime"] = (
+        _s_sync_predict_record(spec))
     validation["acceptance"] = _acceptance(spec, cells, wait_fits,
-                                           validation["depth"])
+                                           validation["depth"],
+                                           validation["s_sync"])
 
     result = {
         "spec": dataclasses.asdict(spec),
         "cells": cells,
         "depth_cells": depth_cells,
+        "sync_cells": sync_cells,
         "wait_fits": wait_fits,
         "engine_exec": engine_exec,
         "sharded_exec": sharded_exec,
@@ -339,6 +424,7 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
     # 5. artifacts
     write_speedup_csv(out_dir, cells)
     write_depth_csv(out_dir, depth_cells)
+    write_sync_csv(out_dir, sync_cells)
     for noise, waits in wait_samples.items():
         write_ecdf_csv(out_dir, noise, waits)
     if noisy_exec:

@@ -95,6 +95,62 @@ def measured_makespans(dist: Distribution, P: int, iters: int, trials: int,
 
 
 @dataclasses.dataclass
+class SyncMeasurement:
+    """One (noise, P, s) s-sync discrete-event cell.
+
+    ``t_sync`` / ``t_pipe``: mean s-sync synchronized / fused-overlapped
+    makespans (the distribution's time unit, with ``red_latency`` per
+    sync point on the synchronized side); ``speedup`` their ratio.
+    """
+
+    t_sync: float
+    t_pipe: float
+    iters: int
+    P: int
+    s: int
+    red_latency: float
+    trials_effective: int
+
+    @property
+    def speedup(self) -> float:
+        """Measured s-sync speedup mean(T) / mean(T')."""
+        return self.t_sync / self.t_pipe
+
+
+def measured_s_sync_makespans(dist: Distribution, P: int, iters: int,
+                              trials: int, s: int, red_latency: float,
+                              seed: int = 0) -> SyncMeasurement:
+    """Simulate the s-sync makespans of ``core/perfmodel/sync.py``.
+
+    Synchronized: the iteration splits into ``s`` segments, each ending
+    in a blocking reduction — ``T = sum_k sum_j [max_p W_p^{k,j} + R]``
+    with per-segment waits ``W/s`` (so the total per-iteration wait mass
+    matches the one-sync grid).  Pipelined: the s reductions are fused
+    into ONE overlapped collective, so each process pays
+    ``max(sum_j W^{k,j}, R)`` per iteration and the makespan is the max
+    over processes of the per-process sums.  Streams the waiting-time
+    draws in chunks like :func:`measured_makespans`.
+    """
+    trials = effective_trials(trials, P)
+    rng = np.random.default_rng(seed)
+    chunk = max(1, _CHUNK_BUDGET // max(trials * P * s, 1))
+    acc_sync = np.zeros(trials)
+    acc_proc = np.zeros((trials, P))
+    done = 0
+    while done < iters:
+        kb = min(chunk, iters - done)
+        w = sample_np(dist, rng, (trials, kb, s, P)) / s
+        acc_sync += w.max(axis=3).sum(axis=(1, 2)) + kb * s * red_latency
+        acc_proc += np.maximum(w.sum(axis=2), red_latency).sum(axis=1)
+        done += kb
+    return SyncMeasurement(t_sync=float(acc_sync.mean()),
+                           t_pipe=float(acc_proc.max(axis=1).mean()),
+                           iters=iters, P=P, s=s,
+                           red_latency=red_latency,
+                           trials_effective=trials)
+
+
+@dataclasses.dataclass
 class DepthMeasurement:
     """One (noise, P, l) lag-l discrete-event cell.
 
@@ -162,11 +218,13 @@ def measured_depth_makespans(dist: Distribution, P: int, iters: int,
 # ---------------------------------------------------------------------------
 
 def _solver_fn(name: str):
-    from repro.core.krylov import (cg, cr, gmres, pgmres, pgmres_l, pipecg,
+    from repro.core.krylov import (bicgstab, cg, cr, gmres, pgmres,
+                                   pgmres_l, pipebicgstab, pipecg,
                                    pipecg_l, pipecr)
     return {"cg": cg, "cr": cr, "pipecg": pipecg, "pipecr": pipecr,
             "gmres": gmres, "pgmres": pgmres, "pipecg_l": pipecg_l,
-            "pgmres_l": pgmres_l}[name]
+            "pgmres_l": pgmres_l, "bicgstab": bicgstab,
+            "pipebicgstab": pipebicgstab}[name]
 
 
 def _true_residual(A, b, x) -> float:
@@ -176,7 +234,7 @@ def _true_residual(A, b, x) -> float:
 
 
 # solvers the sharded_fused engine can express (distributed_solve dispatch)
-_SHARDED_SOLVERS = ("pipecg", "pipecr")
+_SHARDED_SOLVERS = ("pipecg", "pipecr", "pipebicgstab")
 
 
 def run_engine_exec(solvers: Tuple[str, ...], engines: Tuple[str, ...],

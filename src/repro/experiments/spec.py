@@ -16,7 +16,8 @@ from typing import Dict, Tuple
 
 # pipelined solver -> the classical partner its speedup is measured against
 SOLVER_PAIRS: Dict[str, str] = {"pipecg": "cg", "pipecr": "cr",
-                                "pgmres": "gmres"}
+                                "pgmres": "gmres",
+                                "pipebicgstab": "bicgstab"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,12 +76,23 @@ class CampaignSpec:
         matters (the paper's ex23: "most time in dot products").
     depth_exec_maxiter:
         Iteration count of the real ``pipecg_l`` execution cells.
+    sync_counts:
+        Synchronization counts s for the s-sync sweep (CG exposes 2 per
+        iteration, classical BiCGStab 4 — the >2x ceiling family;
+        core/perfmodel/sync.py).
+    sync_shard_counts:
+        Process counts for the s-sync sweep.
+    sync_red_latency:
+        Reduction latency R for the s-sync sweep, in units of the
+        waiting-time mean (the latency-dominated regime where the sync
+        count matters).
     seed:
         Base seed; every stage derives its own stream from it.
     """
 
     name: str
-    solvers: Tuple[str, ...] = ("pipecg", "pipecr", "pgmres")
+    solvers: Tuple[str, ...] = ("pipecg", "pipecr", "pgmres",
+                                "pipebicgstab")
     engines: Tuple[str, ...] = ("naive", "fused", "sharded_fused")
     noises: Tuple[str, ...] = ("uniform", "exponential", "lognormal",
                                "trace:PIPECG")
@@ -88,7 +100,8 @@ class CampaignSpec:
     trials: int = 96
     iters: int = 2000
     fit_samples: int = 2000
-    exec_solvers: Tuple[str, ...] = ("cg", "pipecg")
+    exec_solvers: Tuple[str, ...] = ("cg", "pipecg", "bicgstab",
+                                     "pipebicgstab")
     exec_n: int = 2048
     exec_maxiter: int = 25
     exec_repeats: int = 6
@@ -98,6 +111,9 @@ class CampaignSpec:
     depth_shard_counts: Tuple[int, ...] = (4, 8)
     depth_red_latency: float = 2.0
     depth_exec_maxiter: int = 40
+    sync_counts: Tuple[int, ...] = (2, 4)
+    sync_shard_counts: Tuple[int, ...] = (4, 8)
+    sync_red_latency: float = 2.0
     seed: int = 0
 
 

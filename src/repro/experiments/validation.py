@@ -66,6 +66,37 @@ def validate_depth_cells(depth_cells: Sequence[Dict],
     return out
 
 
+def validate_s_sync_cells(sync_cells: Sequence[Dict]) -> Dict:
+    """s-sync sweep validation: the four-sync ceiling beyond the folk 2x.
+
+    For every (noise, P) of the sync grid: whether the measured speedup
+    is monotone non-decreasing in the sync count s (more serialized
+    reductions -> more to hide), whether the four-sync cell exceeds the
+    folk-theorem 2x both measured and modeled, and the worst
+    measured-vs-modeled relative error.
+    """
+    out: Dict = {}
+    keys = sorted({(c["noise"], c["P"]) for c in sync_cells})
+    for noise, P in keys:
+        mine = sorted((c for c in sync_cells
+                       if c["noise"] == noise and c["P"] == P),
+                      key=lambda c: c["s"])
+        seq = [c["measured_speedup"] for c in mine]
+        four = [c for c in mine if c["s"] == 4]
+        rel_errs = [abs(c["measured_speedup"] - c["modeled_speedup"])
+                    / c["modeled_speedup"] for c in mine]
+        out[f"{noise}/P{P}"] = {
+            "measured_monotone_in_s": all(b >= a * 0.98
+                                          for a, b in zip(seq, seq[1:])),
+            "four_sync_measured_gt_2x": bool(four) and all(
+                c["measured_speedup"] > 2.0 for c in four),
+            "four_sync_modeled_gt_2x": bool(four) and all(
+                c["modeled_speedup"] > 2.0 for c in four),
+            "max_rel_err": max(rel_errs),
+        }
+    return out
+
+
 def validate_cells(cells: Sequence[Dict],
                    dists: Dict[str, Distribution]) -> Dict:
     """Cross-cell validation summary for the report.

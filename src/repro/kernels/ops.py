@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import fused_dots as _fd
+from repro.kernels import pipebicgstab_fused as _pb
 from repro.kernels import pipecg_fused as _pf
 from repro.kernels import pipecg_spmv_fused as _ps
 from repro.kernels import spmv_dia as _sd
@@ -226,6 +227,82 @@ def ghost_chain_halo_step(offsets: Tuple[int, ...], bands_ext, p, r,
     return _ps.ghost_chain_halo(offsets, bands_ext, p, r, (p_left, p_right),
                                 (r_left, r_right), theta, l, block=block,
                                 interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("block",))
+def pipebicgstab_fused_step(offsets: Tuple[int, ...], bands, x, r, w, t,
+                            pa, a, c, r_hat, alpha, beta, omega,
+                            block: int = None):
+    """Single-sweep pipelined BiCGStab iteration (updates + 2 SpMVs + Gram).
+
+    All vectors (n,) with scalar alpha/beta/omega; ``bands`` carries the
+    (Jacobi-folded) operator.  Pads the row dimension to the block size
+    (zero-padded rows contribute zeros to the Gram — no mask needed); the
+    default block comes from the autotuner under the
+    ``"pipebicgstab_spmv"`` key.  Returns (x', r', w', t', pa', a', c',
+    gram (6, 6)).
+    """
+    from repro.kernels import autotune
+
+    n = x.shape[0]
+    halo = max(abs(o) for o in offsets)
+    if block is None:
+        block = autotune.best_block(
+            "pipebicgstab_spmv", n, x.dtype,
+            # tiled words/row: x,r,pa,a,r_hat reads + 7 writes
+            words_per_row=12.0,
+            # once-per-sweep: w,t,c (+2h) + bands (+h)
+            resident_words=(3 + bands.shape[0]) * n,
+            min_block=2 * halo)
+    block = max(min(block, n), 2 * halo)
+    pad = (-n) % block
+    if pad:
+        bands_p, _ = _pad_to(bands, block, axis=1)
+        vecs = [jnp.pad(v, (0, pad))
+                for v in (x, r, w, t, pa, a, c, r_hat)]
+        outs = _pb.pipebicgstab_fused(offsets, bands_p, *vecs,
+                                      alpha, beta, omega, block=block,
+                                      interpret=_interpret())
+        return tuple(o[:n] for o in outs[:7]) + (outs[7],)
+    return _pb.pipebicgstab_fused(offsets, bands, x, r, w, t, pa, a, c,
+                                  r_hat, alpha, beta, omega, block=block,
+                                  interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("block", "n_shards"))
+def pipebicgstab_halo_step(offsets: Tuple[int, ...], bands_ext, x, r, w, t,
+                           pa, a, c, r_hat, w_left, w_right, t_left,
+                           t_right, c_left, c_right, alpha, beta, omega,
+                           block: int = None, n_shards: int = 1):
+    """Per-shard single-sweep p-BiCGStab iteration with neighbor halos.
+
+    Vectors are (n_local,); ``*_left`` / ``*_right`` are the (2*halo,)
+    ppermute payloads of w/t/c; ``bands_ext`` the once-per-solve
+    halo-extended operator.  Returns (x', r', w', t', pa', a', c', gram)
+    where ``gram`` (6, 6) is this shard's PARTIAL Gram (the caller psums
+    it).  The default block is autotuned on (backend, n_local, n_shards).
+    """
+    from repro.kernels import autotune
+
+    n = x.shape[0]
+    halo = max(abs(o) for o in offsets)
+    if n < 2 * halo:
+        raise ValueError(
+            f"local shard of {n} rows is narrower than the 2*halo={2*halo} "
+            "stencil reach; use fewer shards or a wider local block")
+    if block is None:
+        block = autotune.best_block(
+            "pipebicgstab_halo", n, x.dtype,
+            words_per_row=12.0,
+            resident_words=(3 + bands_ext.shape[0]) * n,
+            min_block=2 * halo, n_shards=n_shards)
+    block = max(min(block, n), 2 * halo)
+    return _pb.pipebicgstab_halo(offsets, bands_ext, x, r, w, t, pa, a, c,
+                                 r_hat, (w_left, w_right),
+                                 (t_left, t_right), (c_left, c_right),
+                                 alpha, beta, omega, block=block,
+                                 interpret=_interpret())
 
 
 @jax.jit

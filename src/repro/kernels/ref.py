@@ -105,3 +105,32 @@ def pipecg_fused_ref(x, r, u, w, m, n_, z, q, s, p, alpha, beta
     delta = jnp.sum(w2 * u2)
     rr = jnp.sum(r2 * r2)
     return x2, r2, u2, w2, z2, q2, s2, p2, jnp.stack([gamma, delta, rr])
+
+
+def pipebicgstab_fused_ref(offsets, bands, x, r, w, t, pa, a, c, r_hat,
+                           alpha, beta, omega) -> Tuple[jnp.ndarray, ...]:
+    """Whole-iteration oracle for the single-sweep p-BiCGStab kernel.
+
+    All vectors (n,), scalars alpha/beta/omega.  Implements the carried-
+    combo recurrences of core/krylov/bicgstab.py::pipebicgstab verbatim;
+    returns (x', r', w', t', pa', a', c', gram (6, 6)) with gram the Gram
+    matrix of [r', w', t', a', c', r_hat].
+    """
+    halo = max(abs(o) for o in offsets)
+    mv = lambda v: spmv_dia_ref(offsets, bands, jnp.pad(v, (halo, halo)),
+                                halo)
+    p = r + beta * pa
+    s = w + beta * a
+    z = t + beta * c
+    v = mv(z)
+    q = r - alpha * s
+    y = w - alpha * z
+    x2 = x + alpha * p + omega * q
+    r2 = q - omega * y
+    w2 = y - omega * (t - alpha * v)
+    t2 = mv(w2)
+    pa2 = p - omega * s
+    a2 = s - omega * z
+    c2 = z - omega * v
+    C = jnp.stack([r2, w2, t2, a2, c2, r_hat])
+    return x2, r2, w2, t2, pa2, a2, c2, C @ C.T

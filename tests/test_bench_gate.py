@@ -11,6 +11,7 @@ from benchmarks.check_regression import (  # noqa: E402
     DEFAULT_BASELINE,
     TRACKED,
     compare,
+    new_rows,
 )
 
 
@@ -59,6 +60,36 @@ def test_new_kernels_do_not_fail():
     cur = _rec(k={"words_per_iter_over_n": 12.0},
                shiny={"words_per_iter_over_n": 1.0})
     assert compare(cur, base, 0.10) == []
+    assert new_rows(cur, base) == ["shiny"]
+
+
+def test_strict_new_fails_unbaselined_rows_only():
+    """--strict-new (the CI mode): a row that appeared without a baseline
+    entry fails with an actionable message; once the baseline is updated
+    in the same PR the row is compared like any other (no churn)."""
+    base = _rec(k={"words_per_iter_over_n": 12.0})
+    cur = _rec(k={"words_per_iter_over_n": 12.0},
+               shiny={"words_per_iter_over_n": 1.0})
+    fails = compare(cur, base, 0.10, strict_new=True)
+    assert len(fails) == 1 and "shiny" in fails[0] and "baseline" in fails[0]
+    # baseline updated in the same PR: strict mode passes AND the row is
+    # now genuinely tracked (a regression on it fails)
+    base_updated = _rec(k={"words_per_iter_over_n": 12.0},
+                        shiny={"words_per_iter_over_n": 1.0})
+    assert compare(cur, base_updated, 0.10, strict_new=True) == []
+    worse = _rec(k={"words_per_iter_over_n": 12.0},
+                 shiny={"words_per_iter_over_n": 2.0})
+    assert any("shiny" in f for f in compare(worse, base_updated, 0.10,
+                                             strict_new=True))
+
+
+def test_type_changed_row_fails_cleanly():
+    """A baseline dict row whose current cell degraded to a bare scalar
+    must fail with a message, not crash the gate with AttributeError."""
+    base = _rec(k={"words_per_iter_over_n": 12.0})
+    cur = _rec(k=12.0)
+    fails = compare(cur, base, 0.10)
+    assert len(fails) == 1 and "changed type" in fails[0]
 
 
 def test_committed_baseline_tracks_known_metrics():
@@ -72,3 +103,10 @@ def test_committed_baseline_tracks_known_metrics():
     assert any(set(cell) & set(TRACKED) for cell in kernels.values())
     assert "ghost_chain_l2" in kernels and "ghost_chain_l4" in kernels
     assert kernels["pipecg_sharded_fused"]["hlo_split_phase_overlap"] is True
+    # the p-BiCGStab rows landed with their baseline entries (the
+    # --strict-new contract): tracked metrics + the overlap flag
+    assert "pipebicgstab_fused" in kernels
+    bi = kernels["pipebicgstab_sharded_fused"]
+    assert bi["hlo_split_phase_overlap"] is True
+    assert bi["words_per_iter_over_n"] <= 20.0
+    assert kernels["pipebicgstab_fused"]["modeled_speedup_vs_naive"] > 1.5
