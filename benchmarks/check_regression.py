@@ -1,8 +1,11 @@
-"""CI benchmark-regression gate: BENCH_kernels.json vs committed baseline.
+"""CI benchmark-regression gate: BENCH_*.json vs committed baselines.
 
-Fails (exit 1) when any tracked kernel metric regresses more than
-``--tolerance`` (default 10%) against
-``benchmarks/baselines/BENCH_kernels.baseline.json``:
+Fails (exit 1) when any tracked metric regresses more than
+``--tolerance`` (default 10%) against the committed baseline of the
+selected ``--key``:
+
+``--key kernels`` (default) compares the ``kernels`` rows of
+``BENCH_kernels.json``:
 
 * ``words_per_iter_over_n``   — lower is better (HBM traffic / iteration)
 * ``modeled_speedup_vs_naive`` / ``modeled_speedup_vs_depth1``
@@ -11,6 +14,14 @@ Fails (exit 1) when any tracked kernel metric regresses more than
                               — higher is better (fusion win)
 * ``reductions_per_iter``     — lower is better (depth-l amortization)
 * ``hlo_split_phase_overlap`` — must stay True (the overlap window)
+
+``--key recovery`` compares the fault-stage ``recovery`` rows of
+``BENCH_campaign.json`` (one per injected kind x rate x shard count):
+
+* ``overhead_ratio``          — lower is better (measured recovery
+                                overhead / resync-model lower bound)
+* ``recovered`` / ``converged`` — must stay True (the elastic controller
+                                keeps detecting and surviving each fault)
 
 Row-set semantics (audited — the three ways a row set can drift):
 
@@ -31,8 +42,8 @@ explains the change.
 Usage::
 
     python benchmarks/check_regression.py \
-        [--current BENCH_kernels.json] [--baseline <path>] \
-        [--tolerance 0.10] [--strict-new]
+        [--key kernels|recovery] [--current <BENCH json>] \
+        [--baseline <path>] [--tolerance 0.10] [--strict-new]
 """
 from __future__ import annotations
 
@@ -58,27 +69,43 @@ TRACKED = {
 }
 FLAGS_MUST_HOLD = ("hlo_split_phase_overlap",)
 
+# the fault-stage rows of BENCH_campaign.json ("recovery" top-level key):
+# the ratio of measured recovery overhead to the resync-model lower bound
+# must not creep up, and every injected fault must keep being survived
+RECOVERY_TRACKED = {"overhead_ratio": "lower"}
+RECOVERY_FLAGS = ("recovered", "converged")
 
-def new_rows(current: dict, baseline: dict) -> list:
-    """Kernel rows present in the current record but not in the baseline."""
-    return sorted(set(current.get("kernels", {}))
-                  - set(baseline.get("kernels", {})))
+# gate key -> (top-level container key, tracked metrics, must-hold flags,
+# default current record, default committed baseline)
+KEYS = {
+    "kernels": ("kernels", TRACKED, FLAGS_MUST_HOLD),
+    "recovery": ("recovery", RECOVERY_TRACKED, RECOVERY_FLAGS),
+}
+
+
+def new_rows(current: dict, baseline: dict, key: str = "kernels") -> list:
+    """Rows present in the current record but not in the baseline."""
+    container = KEYS[key][0]
+    return sorted(set(current.get(container, {}))
+                  - set(baseline.get(container, {})))
 
 
 def compare(current: dict, baseline: dict, tolerance: float,
-            strict_new: bool = False) -> list:
+            strict_new: bool = False, key: str = "kernels") -> list:
     """Return a list of human-readable failure strings (empty = pass).
 
     ``strict_new`` turns rows that appeared without a baseline entry into
     failures (the CI mode: a new kernel must update the committed
     baseline in the same PR); the default keeps them passing with a note
-    so local bench runs never churn.
+    so local bench runs never churn.  ``key`` selects which gate
+    (container + tracked metrics + flags) is applied — see ``KEYS``.
     """
+    container, tracked, flags_must_hold = KEYS[key]
     failures = []
-    cur_k = current.get("kernels", {})
-    base_k = baseline.get("kernels", {})
+    cur_k = current.get(container, {})
+    base_k = baseline.get(container, {})
     if strict_new:
-        for name in new_rows(current, baseline):
+        for name in new_rows(current, baseline, key=key):
             failures.append(
                 f"{name}: new bench row has no baseline entry — add it to "
                 "the committed baseline in this PR (--strict-new)")
@@ -94,7 +121,7 @@ def compare(current: dict, baseline: dict, tolerance: float,
                 f"{name}: bench row changed type (baseline tracks a metric "
                 f"dict, current record holds {type(cell).__name__!r})")
             continue
-        for metric, direction in TRACKED.items():
+        for metric, direction in tracked.items():
             if metric not in base_cell:
                 continue
             base_v = float(base_cell[metric])
@@ -111,7 +138,7 @@ def compare(current: dict, baseline: dict, tolerance: float,
                     f"{name}.{metric}: {cur_v:.4f} vs baseline "
                     f"{base_v:.4f} ({direction} is better, "
                     f"tolerance {tolerance:.0%})")
-        for flag in FLAGS_MUST_HOLD:
+        for flag in flags_must_hold:
             if base_cell.get(flag) is True and cell.get(flag) is not True:
                 failures.append(f"{name}.{flag}: was True, now "
                                 f"{cell.get(flag)!r}")
@@ -121,14 +148,26 @@ def compare(current: dict, baseline: dict, tolerance: float,
 def main(argv=None) -> int:
     """CLI entry point; exit 0 on pass, 1 on regression."""
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--current", default=DEFAULT_CURRENT)
-    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--key", default="kernels", choices=sorted(KEYS),
+                    help="which gate to run: kernels (BENCH_kernels.json) "
+                    "or recovery (BENCH_campaign.json fault stage)")
+    ap.add_argument("--current", default=None,
+                    help="current record (default depends on --key)")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline (default depends on --key)")
     ap.add_argument("--tolerance", type=float, default=0.10)
     ap.add_argument("--strict-new", action="store_true",
                     help="fail on bench rows that have no baseline entry "
                     "(CI mode: new kernels must update the baseline in "
                     "the same PR)")
     args = ap.parse_args(argv)
+    if args.current is None:
+        args.current = (DEFAULT_CURRENT if args.key == "kernels" else
+                        os.path.join(REPO_ROOT, "BENCH_campaign.json"))
+    if args.baseline is None:
+        args.baseline = (DEFAULT_BASELINE if args.key == "kernels" else
+                         os.path.join(REPO_ROOT, "benchmarks", "baselines",
+                                      "BENCH_campaign.baseline.json"))
 
     with open(args.current) as f:
         current = json.load(f)
@@ -136,18 +175,20 @@ def main(argv=None) -> int:
         baseline = json.load(f)
 
     failures = compare(current, baseline, args.tolerance,
-                       strict_new=args.strict_new)
-    new = new_rows(current, baseline)
+                       strict_new=args.strict_new, key=args.key)
+    new = new_rows(current, baseline, key=args.key)
     if new and not args.strict_new:
-        print(f"note: new kernels not yet in the baseline: {', '.join(new)}")
+        print(f"note: new {args.key} rows not yet in the baseline: "
+              + ", ".join(new))
     if failures:
         print(f"REGRESSION vs {os.path.relpath(args.baseline, REPO_ROOT)}:")
         for f_ in failures:
             print(f"  FAIL {f_}")
         return 1
-    n = sum(1 for c in baseline.get("kernels", {}).values()
+    container = KEYS[args.key][0]
+    n = sum(1 for c in baseline.get(container, {}).values()
             if isinstance(c, dict))
-    print(f"benchmark regression gate: {n} baseline kernels ok "
+    print(f"benchmark regression gate [{args.key}]: {n} baseline rows ok "
           f"(tolerance {args.tolerance:.0%})")
     return 0
 

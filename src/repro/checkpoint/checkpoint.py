@@ -72,6 +72,9 @@ class CheckpointManager:
     # -- public api ---------------------------------------------------------
 
     def save(self, step: int, state, extra: Optional[Dict[str, Any]] = None):
+        # a failed background _write must not be silent: surface it on the
+        # NEXT save rather than dropping checkpoints forever
+        self._raise_pending()
         flat = _flatten(state)  # gather to host NOW (device buffers freed)
         if self.async_write:
             self._q.put((step, flat, extra or {}))
@@ -81,8 +84,7 @@ class CheckpointManager:
     def wait(self):
         if self.async_write:
             self._q.join()
-        if self._err:
-            raise self._err
+        self._raise_pending()
 
     def latest_step(self) -> Optional[int]:
         f = self.dir / "LATEST"
@@ -111,12 +113,18 @@ class CheckpointManager:
 
     # -- internals ------------------------------------------------------------
 
+    def _raise_pending(self):
+        """Re-raise (once) an exception captured by the async writer."""
+        err, self._err = self._err, None
+        if err is not None:
+            raise err
+
     def _worker(self):
         while True:
             step, flat, extra = self._q.get()
             try:
                 self._write(step, flat, extra)
-            except BaseException as e:  # surfaced on wait()
+            except BaseException as e:  # surfaced on the next save()/wait()
                 self._err = e
             finally:
                 self._q.task_done()

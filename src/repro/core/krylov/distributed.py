@@ -47,6 +47,24 @@ from repro.core.noise.injection import NoiseHook
 AXIS = "shards"
 
 
+def _noise_tick(noise: NoiseHook, axis_name, dtype):
+    """One per-shard host-callback stall; returns the (zero) tick.
+
+    Passes the mesh ``axis_index`` as an operand so the hook draws from
+    that shard's deterministic RNG substream (and so fault injectors —
+    core/noise/faults.py — know WHICH shard is calling: a kill/stall/
+    corrupt fault is keyed to a logical shard id).  Effectful io_callback:
+    XLA may not elide, cache or hoist it; the caller adds the tick to a
+    live value so the stall stays on the data-dependent critical path.
+    """
+    from jax.experimental import io_callback
+
+    idx = jax.lax.axis_index(axis_name)
+    tick = io_callback(noise, jax.ShapeDtypeStruct((), jnp.float32), idx,
+                       ordered=False)
+    return tick.astype(dtype)
+
+
 def _axis_size(axis_name) -> int:
     """Static size of a mapped axis (or product over a tuple of axes).
 
@@ -146,7 +164,9 @@ def sharded_pipecg_solve(offsets: Tuple[int, ...], bands_local, b_local, *,
                          axis_name: str, ip: str = "id", M=None,
                          maxiter: int = 100, tol: float = 0.0,
                          block: Optional[int] = None, n_shards: int = 1,
-                         noise: Optional[NoiseHook] = None) -> SolveResult:
+                         noise: Optional[NoiseHook] = None,
+                         x0=None, carried=None,
+                         with_state: bool = False):
     """Per-shard PIPECG/PIPECR body of the ShardedFusedEngine.
 
     Runs INSIDE shard_map.  Each iteration is one halo-aware Pallas sweep
@@ -170,6 +190,16 @@ def sharded_pipecg_solve(offsets: Tuple[int, ...], bands_local, b_local, *,
     preconditioning only; opaque callables are rejected.  ``noise`` (a
     NoiseHook) adds an io_callback stall to the partial-reduction row so
     the sampled wait sits on the iteration's critical path.
+
+    **Elastic warm start** (the fault-recovery hooks, distributed/fault.py):
+    ``with_state=True`` additionally returns the carried Krylov state as a
+    dict ``{x, r, u, p, gamma_prev, alpha_prev, done}`` in the internal
+    batched form; a later call — under ANY shard count — resumes exactly
+    from it via ``carried=`` (the mesh-dependent partial reduction is
+    recomputed from ``(r, u, A u)``, identical up to fp reassociation).
+    ``x0=`` instead RESTARTS the recurrence from an iterate with one
+    synchronous true-residual evaluation ``r = b - A x0`` — the Cools
+    residual-replacement re-glue used after a disruptive recovery.
     """
     from repro.kernels import ops as kops
 
@@ -207,16 +237,46 @@ def sharded_pipecg_solve(offsets: Tuple[int, ...], bands_local, b_local, *,
                 v_ext, halo + off, n_local, axis=-1)
         return y
 
-    x = jnp.zeros_like(B)
-    r = B                      # r0 = b - A*0
-    u = invd * r
+    one = jnp.ones((k_rhs,), dt)
+    if carried is not None and x0 is not None:
+        raise ValueError("pass either x0 (residual-replacement restart) or "
+                         "carried (exact continuation), not both")
+    if carried is not None:
+        # exact continuation of a previous segment's Krylov state
+        # (possibly saved under a DIFFERENT mesh: every entry is a global
+        # (k_rhs, .) host array that the caller's in_specs re-shard).
+        # The mesh-dependent partial `red` is NOT carried — it is
+        # recomputed from (r, u, w = A u) below, identical up to fp
+        # reassociation across shard counts.
+        x = carried["x"].astype(dt)
+        r = carried["r"].astype(dt)
+        u = carried["u"].astype(dt)
+        p = carried["p"].astype(dt)
+        gamma_prev = carried["gamma_prev"].astype(dt)
+        alpha_prev = carried["alpha_prev"].astype(dt)
+        done0 = carried["done"]
+        first = jnp.asarray(False)
+    else:
+        if x0 is None:
+            x = jnp.zeros_like(B)
+            r = B              # r0 = b - A*0
+        else:
+            x = (x0 if batched else x0[None]).astype(dt)
+            # synchronous true residual — the Cools residual-replacement
+            # re-glue that puts a recovered solve back on the attainable-
+            # accuracy floor (PAPERS.md 1804.02962)
+            r = B - mv(x)
+        u = invd * r
+        p = jnp.zeros_like(B)
+        gamma_prev = one
+        alpha_prev = one
+        done0 = jnp.zeros((k_rhs,), bool)
+        first = jnp.asarray(True)
     w = mv(u)
     red0 = _local_partials(r, u, w)
-    one = jnp.ones((k_rhs,), dt)
-    state0 = dict(x=x, r=r, u=u, p=jnp.zeros_like(B), red=red0,
-                  gamma_prev=one, alpha_prev=one,
-                  first=jnp.asarray(True),
-                  done=jnp.zeros((k_rhs,), bool),
+    state0 = dict(x=x, r=r, u=u, p=p, red=red0,
+                  gamma_prev=gamma_prev, alpha_prev=alpha_prev,
+                  first=first, done=done0,
                   iters=jnp.zeros((k_rhs,), jnp.int32))
     bb = jax.lax.psum(jnp.sum(B * B, axis=-1), axis_name)
     tol2 = jnp.asarray(tol, dt) ** 2 * bb
@@ -240,12 +300,9 @@ def sharded_pipecg_solve(offsets: Tuple[int, ...], bands_local, b_local, *,
             offsets, bands_ext, invd_ext, st["x"], st["r"], st["u"], st["p"],
             ul, ur, pl_, pr, alpha, beta, block=block, n_shards=n_shards)
         if noise is not None:
-            from jax.experimental import io_callback
-            # effectful: XLA may not elide/hoist it; the zero tick rides
-            # the partial-reduction row so the stall gates the next psum
-            tick = io_callback(noise, jax.ShapeDtypeStruct((), jnp.float32),
-                               ordered=False)
-            red_new = red_new + tick.astype(dt)
+            # the tick rides the partial-reduction row so the stall gates
+            # the next psum — and a fault injector's NaN tick poisons it
+            red_new = red_new + _noise_tick(noise, axis_name, dt)
 
         done = st["done"] | (rr <= tol2)
         mask = st["done"]
@@ -269,10 +326,19 @@ def sharded_pipecg_solve(offsets: Tuple[int, ...], bands_local, b_local, *,
     # roll the shifted history into the naive alignment hist[i] = ||r_{i+1}||
     hist = jnp.concatenate([hist[1:], res[None]], axis=0)  # (maxiter, k)
     if batched:
-        return SolveResult(x=st["x"], iters=st["iters"], res_norm=res,
-                           res_history=hist.T)
-    return SolveResult(x=st["x"][0], iters=st["iters"][0], res_norm=res[0],
-                       res_history=hist[:, 0])
+        result = SolveResult(x=st["x"], iters=st["iters"], res_norm=res,
+                             res_history=hist.T)
+    else:
+        result = SolveResult(x=st["x"][0], iters=st["iters"][0],
+                             res_norm=res[0], res_history=hist[:, 0])
+    if not with_state:
+        return result
+    # the internal (k_rhs, .) batched form, always — so a later segment
+    # (under ANY mesh) can feed it straight back as ``carried=``
+    carried_out = dict(x=st["x"], r=st["r"], u=st["u"], p=st["p"],
+                       gamma_prev=st["gamma_prev"],
+                       alpha_prev=st["alpha_prev"], done=st["done"])
+    return result, carried_out
 
 
 # ---------------------------------------------------------------------------
@@ -388,12 +454,9 @@ def sharded_pipebicgstab_solve(offsets: Tuple[int, ...], bands_local,
             st["pa"], st["a"], st["c"], r_hat, wl, wr, tl, tr, cl, cr,
             alpha, beta, omega, block=block, n_shards=n_shards)
         if noise is not None:
-            from jax.experimental import io_callback
-            # effectful: the zero tick rides the partial Gram so the
-            # sampled stall gates the next psum (critical path)
-            tick = io_callback(noise, jax.ShapeDtypeStruct((), jnp.float32),
-                               ordered=False)
-            G_new = G_new + tick.astype(dt)
+            # the tick rides the partial Gram so the sampled stall gates
+            # the next psum (critical path)
+            G_new = G_new + _noise_tick(noise, axis_name, dt)
 
         done = st["done"] | (rr2 <= tol2)
         # freeze AT the iterate whose residual met the tolerance (the
@@ -509,10 +572,7 @@ def sharded_pipecg_depth_solve(offsets: Tuple[int, ...], bands_local,
             offsets, bands_ext, st["p"], st["r"], pl_, pr_, rl_, rr_,
             theta, l, block=block, n_shards=n_shards)
         if noise is not None:
-            from jax.experimental import io_callback
-            tick = io_callback(noise, jax.ShapeDtypeStruct((), jnp.float32),
-                               ordered=False)
-            gram = gram + tick.astype(dt)
+            gram = gram + _noise_tick(noise, axis_name, dt)
         # the block's single fused reduction: one psum per l iterations
         G = jax.lax.psum(gram, axis_name)
         xc, rc, pc, hist = _block_cg_steps(G, Tm, l, theta, st["done"])
@@ -567,17 +627,42 @@ def _distributed_engine_solve(solver, A: DiaMatrix, b, mesh: Mesh, eng, *,
     maxiter = solver_kw.pop("maxiter", 100)
     tol = solver_kw.pop("tol", 0.0)
     depth = int(solver_kw.pop("l", 1))
+    x0 = solver_kw.pop("x0", None)
+    carried = solver_kw.pop("carried", None)
+    with_state = bool(solver_kw.pop("with_state", False))
     if solver_kw:
         raise TypeError(
             f"unsupported kwargs for the sharded_fused path: {sorted(solver_kw)}")
     if depth > 1 and name != "pipecg_l":
         raise ValueError(
             f"pipeline depth l={depth} needs solver pipecg_l, got {name!r}")
+    warm = x0 is not None or carried is not None or with_state
+    if warm and (name in _SHARDED_GRAM or depth > 1):
+        raise ValueError(
+            "x0= / carried= / with_state= (elastic warm start) are "
+            "implemented for the depth-1 pipecg/pipecr bodies only; the "
+            f"{name!r} (l={depth}) path cannot resume mid-recurrence")
     n_shards = int(mesh.devices.size)
     batched = b.ndim == 2
     spec_v = P(None, axis) if batched else P(axis)
 
-    def run(bands_local, b_local):
+    # elastic warm-start operands ride into shard_map with their own
+    # specs: vectors shard the point axis, recurrence scalars replicate
+    in_specs = [P(None, axis), spec_v]
+    extra = []
+    if x0 is not None:
+        in_specs.append(spec_v)
+        extra.append(jnp.asarray(x0))
+    if carried is not None:
+        carried = {k: jnp.asarray(v) for k, v in carried.items()}
+        in_specs.append({k: (P(None, axis) if v.ndim == 2 else P())
+                         for k, v in carried.items()})
+        extra.append(carried)
+
+    def run(bands_local, b_local, *rest):
+        it = iter(rest)
+        x0_l = next(it) if x0 is not None else None
+        carried_l = next(it) if carried is not None else None
         if name in _SHARDED_GRAM:
             return eng.solve_bicgstab(A.offsets, bands_local, b_local,
                                       axis_name=axis, M=M, maxiter=maxiter,
@@ -590,12 +675,21 @@ def _distributed_engine_solve(solver, A: DiaMatrix, b, mesh: Mesh, eng, *,
                                    n_shards=n_shards, noise=noise)
         return eng.solve(A.offsets, bands_local, b_local, axis_name=axis,
                          ip=ip, M=M, maxiter=maxiter, tol=tol, block=block,
-                         n_shards=n_shards, noise=noise)
+                         n_shards=n_shards, noise=noise,
+                         x0=x0_l, carried=carried_l, with_state=with_state)
 
-    out_specs = SolveResult(x=spec_v, iters=P(), res_norm=P(), res_history=P())
-    fn = shard_map(run, mesh=mesh, in_specs=(P(None, axis), spec_v),
+    res_specs = SolveResult(x=spec_v, iters=P(), res_norm=P(),
+                            res_history=P())
+    if with_state:
+        out_specs = (res_specs,
+                     dict(x=P(None, axis), r=P(None, axis),
+                          u=P(None, axis), p=P(None, axis),
+                          gamma_prev=P(), alpha_prev=P(), done=P()))
+    else:
+        out_specs = res_specs
+    fn = shard_map(run, mesh=mesh, in_specs=tuple(in_specs),
                    out_specs=out_specs, check_rep=False)
-    return fn(A.bands, b)
+    return fn(A.bands, b, *extra)
 
 
 def distributed_solve(solver: Callable, A: DiaMatrix, b: jnp.ndarray,
@@ -642,6 +736,11 @@ def distributed_solve(solver: Callable, A: DiaMatrix, b: jnp.ndarray,
         raise ValueError(
             "block= only applies to the engine='sharded_fused' kernel "
             "path; the historical inline path has no tile-size override")
+    for kw in ("x0", "carried", "with_state"):
+        if kw in solver_kw:
+            raise ValueError(
+                f"{kw}= (elastic warm start) needs engine='sharded_fused'; "
+                "the historical inline path cannot resume carried state")
 
     axes = mesh.axis_names
     spec_v = P(axes)       # vectors sharded over all axes (flattened)
@@ -665,17 +764,11 @@ def distributed_solve(solver: Callable, A: DiaMatrix, b: jnp.ndarray,
         if noise is None:
             mv = mv0
         else:
-            from jax.experimental import io_callback
-
             def mv(v):
                 y = mv0(v)
-                # io_callback is effectful, so XLA may not elide, cache or
-                # hoist it out of the solver scan; its (zero) result is
-                # added to y so the sleep stays on the critical path.
-                tick = io_callback(noise,
-                                   jax.ShapeDtypeStruct((), jnp.float32),
-                                   ordered=False)
-                return y + tick.astype(y.dtype)
+                # the (zero) tick is added to y so the sleep stays on the
+                # critical path (io_callback: never elided or hoisted)
+                return y + _noise_tick(noise, axis, y.dtype)
         return solver(mv, b_local, dot=dot, **extra_kw, **solver_kw)
 
     out_specs = SolveResult(x=spec_v, iters=P(), res_norm=P(), res_history=P())

@@ -1,0 +1,222 @@
+"""Fault injection for distributed solves (shard loss / stragglers / bit rot).
+
+The campaign's :class:`~repro.core.noise.injection.NoiseHook` injects
+*benign* noise: every iteration stalls for a sampled waiting time.  This
+module extends that host-side callback into a **fault injector** that can
+additionally, at a scheduled iteration on a scheduled shard,
+
+* **kill**    — the shard stops participating: from ``at_iter`` on its
+  reduction contribution is poisoned (NaN tick riding the carried partial
+  Gram/reduction row), so the next ``psum`` propagates the failure to
+  every survivor within one iteration — the in-silico rendering of a dead
+  rank whose ``MPI_Iallreduce`` never completes;
+* **stall**   — the shard becomes a persistent straggler: every iteration
+  from ``at_iter`` on sleeps ``stall_s`` extra seconds on top of the
+  ambient noise (Morgan et al.'s system-level-disruption regime,
+  PAPERS.md 2103.12067);
+* **corrupt** — one-shot payload corruption: a single finite garbage tick
+  of size ``magnitude`` is added to the carried reduction row at
+  ``at_iter``, silently derailing the scalar recurrence — detectable only
+  by a Cools-style true-vs-recurrence residual drift check.
+
+Faults are configured from campaign specs the same way noise
+distributions are: by string (``"kill:1@10"`` = kill shard 1 at its 10th
+executed iteration), resolved via :func:`make_fault`.
+
+Shard identity and iteration counts are *per logical shard*: the
+injector's callback receives the mesh-local ``axis_index`` as an operand
+and maps it through the current alive-set (``set_mesh``), so a fault
+keyed to logical shard 1 stays attached to that shard across elastic
+re-shards, and per-shard RNG substreams stay deterministic under host
+thread interleaving (the same ``seed`` always yields the same injected
+stall sequence per shard — test-pinned).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.noise.injection import NoiseHook
+from repro.core.perfmodel.distributions import Distribution
+
+FAULT_KINDS = ("kill", "stall", "corrupt")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault.
+
+    ``shard`` is the LOGICAL shard id (stable across elastic re-shards);
+    ``at_iter`` counts that shard's executed iterations (callback
+    invocations), i.e. wall ordering — a re-executed segment after a
+    rollback advances it further rather than re-triggering the fault.
+    """
+
+    kind: str                 # "kill" | "stall" | "corrupt"
+    shard: int
+    at_iter: int
+    stall_s: float = 0.05     # per-iteration extra stall (kind="stall")
+    magnitude: float = 1e3    # garbage payload size (kind="corrupt")
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; known: {FAULT_KINDS}")
+        if self.shard < 0 or self.at_iter < 0:
+            raise ValueError("fault shard and at_iter must be >= 0")
+
+
+def make_fault(name: str, **overrides) -> FaultSpec:
+    """Resolve a campaign fault name ``"<kind>:<shard>@<iter>"``.
+
+    Mirrors ``noise_sources.make_distribution``: campaign specs carry
+    plain strings.  ``"kill:1@10"`` kills shard 1 at its 10th executed
+    iteration; ``"stall:0@5"`` / ``"corrupt:2@8"`` analogously.  Keyword
+    overrides (``stall_s=``, ``magnitude=``) pass through to
+    :class:`FaultSpec`.
+    """
+    try:
+        kind, rest = name.split(":", 1)
+        shard_s, iter_s = rest.split("@", 1)
+        return FaultSpec(kind=kind, shard=int(shard_s), at_iter=int(iter_s),
+                         **overrides)
+    except (ValueError, TypeError) as e:
+        if isinstance(e, ValueError) and "unknown fault kind" in str(e):
+            raise
+        raise ValueError(
+            f"cannot parse fault {name!r}: expected '<kind>:<shard>@<iter>' "
+            f"with kind in {FAULT_KINDS}, e.g. 'kill:1@10'") from e
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    """A fault the injector actually fired (for the recovery timeline)."""
+
+    kind: str
+    shard: int
+    at_iter: int              # the shard's executed-iteration count at firing
+
+
+class FaultInjector(NoiseHook):
+    """NoiseHook that additionally fires scheduled :class:`FaultSpec` s.
+
+    Per callback invocation (one per shard per solver iteration) the
+    injector advances that logical shard's iteration counter, draws the
+    ambient wait from the shard's deterministic substream (sleeping it),
+    then applies any scheduled fault:
+
+    * ``kill``    -> marks the shard dead and returns a NaN tick forever
+      after (the ambient sleep stops — a dead rank does not stall, it
+      vanishes);
+    * ``stall``   -> sleeps ``stall_s`` extra and records the combined
+      wait (so the straggler shows up in ``step_time_matrix``);
+    * ``corrupt`` -> returns ``magnitude`` ONCE as the tick value.
+
+    ``dist=None`` injects no ambient noise (pure fault injection).  The
+    host-visible state (``dead_shards``, ``events``, per-shard records)
+    is what the elastic controller polls between solve segments —
+    the in-silico heartbeat.
+    """
+
+    def __init__(self, dist: Optional[Distribution] = None,
+                 faults: Sequence[FaultSpec] = (), scale: float = 1e-3,
+                 seed: int = 0, n_shards: int = 1,
+                 record_cap: int = 100_000):
+        # NoiseHook wants a Distribution; tolerate None for pure faults
+        super().__init__(dist, scale=scale, seed=seed, record_cap=record_cap)
+        self.faults: List[FaultSpec] = list(faults)
+        for f in self.faults:
+            if f.shard >= n_shards:
+                raise ValueError(
+                    f"fault {f} targets shard {f.shard} but the mesh has "
+                    f"only {n_shards} logical shards")
+        self.n_shards = int(n_shards)
+        self.dead_shards: set = set()
+        self.events: List[FaultEvent] = []
+        self.iter_count: Dict[int, int] = {}
+        self.paused = False
+        self._alive: Tuple[int, ...] = tuple(range(n_shards))
+        self._fired: set = set()
+
+    # -- controller-facing api ---------------------------------------------
+
+    def set_mesh(self, alive: Sequence[int]):
+        """Declare the current mesh: ``alive[i]`` = logical id of rank i."""
+        with self._lock:
+            self._alive = tuple(int(a) for a in alive)
+
+    def pause(self):
+        """Make callbacks inert (no draws, no faults) — warmup/compile runs."""
+        self.paused = True
+
+    def resume(self):
+        """Re-arm callbacks after :meth:`pause`."""
+        self.paused = False
+
+    def step_time_matrix(self, start_iter: int = 0,
+                         base: float = 0.0) -> np.ndarray:
+        """(K, P) per-step wait matrix over ALIVE shards since ``start_iter``.
+
+        The elastic controller feeds this to
+        ``distributed.fault.analyze_step_times`` between segments — the
+        in-silico stand-in for per-rank step timers.  ``base`` adds a
+        constant per-step compute time; K is the shortest alive record.
+        """
+        with self._lock:
+            cols = [self.shard_record.get(s, [])[start_iter:]
+                    for s in self._alive]
+        k = min((len(c) for c in cols), default=0)
+        if k == 0:
+            return np.zeros((0, len(cols)))
+        return base + np.asarray([c[:k] for c in cols], np.float64).T
+
+    # -- callback ----------------------------------------------------------
+
+    def __call__(self, shard=None) -> np.ndarray:
+        """io_callback entry: ambient wait + scheduled faults for ``shard``.
+
+        ``shard`` is the mesh-local axis index (mapped to a logical id
+        through the alive-set); ``None`` falls back to logical shard 0
+        (single-shard / legacy call sites).
+        """
+        if self.paused:
+            return np.zeros((), np.float32)
+        with self._lock:
+            rank = 0 if shard is None else int(shard)
+            logical = self._alive[rank] if rank < len(self._alive) else rank
+            k = self.iter_count.get(logical, 0)
+            self.iter_count[logical] = k + 1
+            if logical in self.dead_shards:
+                return np.full((), np.nan, np.float32)
+            wait = 0.0 if self.dist is None else self._draw(logical)
+            tick = 0.0
+            for i, f in enumerate(self.faults):
+                if i in self._fired or f.shard != logical or k < f.at_iter:
+                    continue
+                if f.kind == "kill":
+                    self._fired.add(i)
+                    self.dead_shards.add(logical)
+                    self.events.append(FaultEvent("kill", logical, k))
+                    return np.full((), np.nan, np.float32)
+                if f.kind == "stall":
+                    # persistent: stays armed, but log the onset once
+                    if not any(e.kind == "stall" and e.shard == logical
+                               for e in self.events):
+                        self.events.append(FaultEvent("stall", logical, k))
+                    wait += f.stall_s
+                if f.kind == "corrupt":
+                    self._fired.add(i)
+                    self.events.append(FaultEvent("corrupt", logical, k))
+                    tick = f.magnitude
+            self._record(logical, wait)
+        import time as _time
+        if wait > 0.0:
+            _time.sleep(wait)
+        return np.asarray(tick, np.float32)
+
+
+def make_faults(names: Sequence[str], **overrides) -> List[FaultSpec]:
+    """Vector form of :func:`make_fault` (campaign spec convenience)."""
+    return [make_fault(n, **overrides) for n in names]

@@ -14,12 +14,21 @@ Eq. (6)/(7).
 The injector records every sample it injects, so the fitting stage can
 verify that the distribution recovered from *measured* run times matches
 the one that was injected (the campaign's round-trip check).
+
+**Determinism.** The solver callbacks now pass the shard's
+``axis_index`` as an operand, and the hook draws each shard's waits from
+its own substream seeded ``(seed, shard)``.  XLA runs the per-shard
+callbacks on racing host threads, so a single shared stream would make
+the per-shard stall *sequences* depend on thread interleaving — an
+irreproducible campaign fault cell.  With per-shard substreams the same
+``seed`` yields bit-identical injected sequences across solves
+(test-pinned in tests/test_fault.py).
 """
 from __future__ import annotations
 
 import threading
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -33,44 +42,72 @@ class NoiseHook:
     ----------
     dist:
         Waiting-time distribution (units: dimensionless draws; the hook
-        multiplies by ``scale`` to get seconds).
+        multiplies by ``scale`` to get seconds).  ``None`` disables the
+        ambient draw (used by fault-only injectors,
+        core/noise/faults.py).
     scale:
         Seconds per unit draw.  ``scale=1e-3`` with ``Exponential(1.0)``
         injects exponential waits with a 1 ms mean.
     seed:
-        Host-side numpy RNG seed (independent of any JAX PRNG).
+        Host-side numpy RNG seed (independent of any JAX PRNG).  Shard
+        ``s`` draws from the substream seeded ``(seed, s)``.
 
-    The hook is *stateful on the host*: each call advances the RNG and
-    appends the injected wait (in seconds) to ``record``.  On a
-    multi-device mesh XLA runs the per-shard callbacks on separate host
-    threads, so draw + record are guarded by a lock (the sleep itself is
-    outside it — stalls must overlap across shards, not serialize).
+    The hook is *stateful on the host*: each call advances the calling
+    shard's RNG substream and appends the injected wait (in seconds) to
+    ``record`` and to ``shard_record[shard]``.  On a multi-device mesh
+    XLA runs the per-shard callbacks on separate host threads, so draw +
+    record are guarded by a lock (the sleep itself is outside it —
+    stalls must overlap across shards, not serialize).
     """
 
-    def __init__(self, dist: Distribution, scale: float = 1e-3,
+    def __init__(self, dist: Optional[Distribution], scale: float = 1e-3,
                  seed: int = 0, record_cap: int = 100_000):
         self.dist = dist
         self.scale = float(scale)
-        self._rng = np.random.default_rng(seed)
+        self.seed = int(seed)
+        self._rngs: Dict[int, np.random.Generator] = {}
         self._lock = threading.Lock()
         self.record: List[float] = []
+        self.shard_record: Dict[int, List[float]] = {}
         self._cap = record_cap
 
-    def sample(self) -> float:
+    def _rng_for(self, shard: int) -> np.random.Generator:
+        """The deterministic substream of logical ``shard`` (lazy init)."""
+        rng = self._rngs.get(shard)
+        if rng is None:
+            rng = self._rngs[shard] = np.random.default_rng(
+                (self.seed, shard))
+        return rng
+
+    def _draw(self, shard: int) -> float:
+        """One wait draw (seconds) from ``shard``'s substream. Lock held."""
+        from repro.core.noise.sampling import sample_np
+        return float(sample_np(self.dist, self._rng_for(shard), ())
+                     ) * self.scale
+
+    def _record(self, shard: int, w: float):
+        """Append an injected wait to the global + per-shard records."""
+        if len(self.record) < self._cap:
+            self.record.append(w)
+        self.shard_record.setdefault(shard, []).append(w)
+
+    def sample(self, shard: int = 0) -> float:
         """Draw one waiting time in seconds (records it, does not sleep).
 
         Uses the native numpy samplers (core/noise/sampling.py) — no JAX
         dispatch on the measured critical path.
         """
-        from repro.core.noise.sampling import sample_np
         with self._lock:
-            w = float(sample_np(self.dist, self._rng, ())) * self.scale
-            if len(self.record) < self._cap:
-                self.record.append(w)
+            w = 0.0 if self.dist is None else self._draw(int(shard))
+            self._record(int(shard), w)
         return w
 
-    def __call__(self) -> np.ndarray:
+    def __call__(self, shard=None) -> np.ndarray:
         """io_callback entry point: sleep a sampled wait, return 0.0.
+
+        ``shard`` (an int32 operand, the caller's mesh ``axis_index``)
+        selects the deterministic substream; ``None`` falls back to
+        shard 0 for legacy no-operand call sites.
 
         Must stay routed through an *effectful* callback
         (``jax.experimental.io_callback``) — a pure_callback is legal to
@@ -79,12 +116,16 @@ class NoiseHook:
         zero scalar so the caller can add it to a live value and keep the
         delay on the data-dependent critical path.
         """
-        time.sleep(self.sample())
+        time.sleep(self.sample(0 if shard is None else int(shard)))
         return np.zeros((), np.float32)
 
     def waits(self) -> np.ndarray:
         """All injected waits so far, in seconds, as an array."""
         return np.asarray(self.record, np.float64)
+
+    def shard_waits(self, shard: int) -> np.ndarray:
+        """Injected waits of one logical shard, in call order (seconds)."""
+        return np.asarray(self.shard_record.get(int(shard), ()), np.float64)
 
 
 def make_noise_hook(dist: Optional[Distribution], scale: float = 1e-3,

@@ -24,6 +24,14 @@ from repro.core.perfmodel.depth import (  # noqa: F401
     depth_speedup_table,
     modeled_depth_speedup,
 )
+from repro.core.perfmodel.resync import (  # noqa: F401
+    FAULT_RECOVERY_KINDS,
+    detection_iters,
+    expected_fault_makespan,
+    optimal_checkpoint_period,
+    recovery_overhead_bound,
+    resync_iter_time,
+)
 from repro.core.perfmodel.expected_max import (  # noqa: F401
     expected_max,
     expected_max_closed,

@@ -1,4 +1,4 @@
-"""Fault tolerance + straggler mitigation model.
+"""Fault tolerance + straggler mitigation: detector, advisor, and ACTOR.
 
 Mechanisms (what the framework DOES):
   * checkpoint/restart      — repro.checkpoint: async, atomic, elastic
@@ -8,25 +8,53 @@ Mechanisms (what the framework DOES):
   * straggler mitigation    — (a) pipelined collectives (the paper's core:
                               T' = max-of-sums is insensitive to per-step
                               noise), (b) this module's detector/advisor
+  * shard-loss recovery     — :func:`resilient_distributed_solve`: segment
+                              the fused sharded solve at the checkpoint
+                              period, detect kill/stall/corrupt faults at
+                              segment boundaries, and continue on the
+                              survivor mesh (DESIGN.md
+                              §Fault-recovery-data-flow)
 
 Analysis (what this module COMPUTES): given observed per-step times it
 estimates the straggler penalty of synchronized execution using the paper's
 makespan model, and recommends restart/evict when a persistent straggler
 costs more than a checkpoint-restart cycle.
+
+The recovery path composes three primitives this repo already proves
+separately: the elastic CheckpointManager (mesh-independent host arrays),
+the warm-start hooks of the fused sharded PIPECG body
+(``carried=`` exact continuation / ``x0=`` residual-replacement restart,
+core/krylov/distributed.py), and the NaN-poisoned reduction of a killed
+shard (core/noise/faults.py).  Detection is boundary-synchronous — the
+in-silico rendering of a heartbeat timeout on the carried all-reduce:
+
+  kill    -> the dead shard's NaN tick poisons the psum within one
+             iteration; the segment returns a non-finite residual norm
+  corrupt -> the recurrence norm stays finite but silently diverges from
+             the TRUE residual ||b - A x|| (Cools' drift criterion)
+  stall   -> :func:`analyze_step_times` over the injector's per-shard
+             step-time matrix flags the persistent outlier
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence
+import tempfile
+import time
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.perfmodel.expected_max import expected_max_mc
-from repro.core.stats.mle import fit_exponential_shifted, summary_statistics
+from repro.core.perfmodel.expected_max import expected_max_mc  # noqa: F401
+from repro.core.stats.mle import (  # noqa: F401
+    fit_exponential_shifted,
+    summary_statistics,
+)
 
 
 @dataclasses.dataclass
 class StragglerReport:
+    """Per-fleet straggler diagnosis from a (K, P) step-time trace."""
+
     p: int
     step_mean: float
     step_p99: float
@@ -44,20 +72,36 @@ def analyze_step_times(times: np.ndarray, *, restart_cost_steps: float = 200.0
     synchronized execution pays its FULL slowdown every step (eq. 6), so
     restart is recommended when the projected loss exceeds the checkpoint
     restart cost.
+
+    Degenerate traces get a well-defined report instead of NaN/garbage:
+    an all-zero (or empty) trace has zero overhead and no outlier, a
+    single-step trace (K=1) uses that step as its own p99, and a single
+    process (P=1) has no fleet to be an outlier OF, so
+    ``persistent_outlier`` is always None there.
     """
     times = np.asarray(times, np.float64)
     K, P = times.shape
+    if K == 0 or P == 0:
+        return StragglerReport(p=P, step_mean=0.0, step_p99=0.0,
+                               sync_overhead_frac=0.0,
+                               persistent_outlier=None,
+                               recommend_restart=False)
     per_step_max = times.max(axis=1)
     mean = float(times.mean())
-    overhead = float(per_step_max.mean() / mean - 1.0)
+    # all-zero trace: no work observed, hence no synchronization overhead
+    # (the unguarded ratio is 0/0)
+    overhead = (float(per_step_max.mean() / mean - 1.0) if mean > 0.0
+                else 0.0)
 
     proc_means = times.mean(axis=0)
     p99 = float(np.quantile(times, 0.99))
     worst = int(np.argmax(proc_means))
     # persistent = consistently slower than the fleet median, not just a
-    # per-step tail event (which pipelining absorbs on its own)
-    persistent = worst if proc_means[worst] > 1.5 * float(
-        np.median(proc_means)) else None
+    # per-step tail event (which pipelining absorbs on its own); with a
+    # single process there is no fleet and no meaningful outlier
+    persistent = None
+    if P > 1 and proc_means[worst] > 1.5 * float(np.median(proc_means)):
+        persistent = worst
 
     projected_loss = overhead * K
     return StragglerReport(
@@ -75,3 +119,294 @@ def pipelining_benefit(times: np.ndarray) -> Dict[str, float]:
     t_sync = float(times.max(axis=1).sum())
     t_pipe = float(times.sum(axis=0).max())
     return {"t_sync": t_sync, "t_pipe": t_pipe, "speedup": t_sync / t_pipe}
+
+
+# ---------------------------------------------------------------------------
+# Elastic recovery actor
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RecoveryEvent:
+    """One detected fault and how the controller recovered from it.
+
+    ``detect_iters`` is the boundary-synchronous detection latency (global
+    iterations from fault onset to the segment boundary that surfaced it);
+    ``iters_lost`` is the rolled-back work re-executed afterwards (zero for
+    a stall eviction, whose carried-state continuation loses nothing).
+    """
+
+    kind: str                 # "kill" | "stall" | "corrupt"
+    shard: int                # logical shard (-1 if unattributed)
+    segment: int              # segment index at detection
+    detect_iters: int
+    iters_lost: int
+    n_shards_after: int
+    mode: str                 # "rollback_restart" | "evict_continue"
+
+
+@dataclasses.dataclass
+class ResilientReport:
+    """Outcome of a :func:`resilient_distributed_solve` run.
+
+    ``productive_iters`` counts iterations of the surviving trajectory;
+    ``executed_iters`` counts every scan iteration actually run, including
+    work discarded by rollbacks — their difference (plus convergence delay
+    vs an undisturbed solve) is the measured recovery overhead that the
+    campaign compares against the perfmodel/resync.py lower bound.
+    """
+
+    converged: bool
+    res_norm: float
+    true_res_norm: float
+    productive_iters: int
+    executed_iters: int
+    segments: int
+    n_shards_final: int
+    recoveries: List[RecoveryEvent]
+    wall_s: float
+    segment_walls: List[float]
+
+
+def _dia_matvec_np(offsets: Sequence[int], bands: np.ndarray,
+                   x: np.ndarray) -> np.ndarray:
+    """Host-side DIA matvec (row-major bands convention of DiaMatrix)."""
+    n = x.shape[-1]
+    y = np.zeros_like(x)
+    for k, off in enumerate(offsets):
+        if off >= 0:
+            y[..., :n - off] += bands[k, :n - off] * x[..., off:]
+        else:
+            y[..., -off:] += bands[k, -off:] * x[..., :n + off]
+    return y
+
+
+def _true_residual(A, b: np.ndarray, x: np.ndarray) -> float:
+    """||b - A x|| computed synchronously on the host (the rr criterion)."""
+    r = b - _dia_matvec_np(A.offsets, np.asarray(A.bands), x)
+    return float(np.linalg.norm(r))
+
+
+def resilient_distributed_solve(
+        A, b, devices, *, solver=None, tol: float = 1e-10,
+        maxiter: int = 400, checkpoint_period: int = 20,
+        ckpt_dir: Optional[str] = None, injector=None, M=None,
+        block: Optional[int] = None, drift_factor: float = 1e3,
+        jump_factor: float = 10.0, restart_cost_steps: float = 0.0,
+        max_recoveries: int = 4, min_shards: int = 1):
+    """Fused sharded PIPECG solve that survives shard faults mid-flight.
+
+    Runs ``distributed_solve(..., engine="sharded_fused")`` in segments of
+    ``checkpoint_period`` iterations.  After every segment the carried
+    Krylov state ``(x, r, u, p, gamma_prev, alpha_prev, done)`` is
+    checkpointed through the elastic :class:`CheckpointManager` (host
+    arrays — mesh-independent), and three fault detectors run:
+
+    1. **kill**: a non-finite recurrence norm — the dead shard's NaN tick
+       poisoned the carried ``psum`` (the in-silico heartbeat timeout).
+       Recover by dropping the dead shard from the alive set, restoring
+       the last checkpoint, and RESTARTING on the survivor mesh via
+       ``x0=`` — one synchronous ``r = b - A x`` evaluation, the Cools
+       residual-replacement re-glue.
+    2. **corrupt**: recurrence norm finite but either drifted
+       ``drift_factor``× from the true residual ``||b - A x||``, or the
+       segment's per-iteration residual HISTORY contains a
+       ``jump_factor``× upward jump — the corrupted reduction payload
+       passes straight through the recurrence norm for the iteration
+       that consumed it, while a healthy (near-monotone) CG iteration
+       never multiplies ``||r||`` by orders of magnitude.  Recover by
+       rollback + rr restart (the mesh keeps all shards: one-shot
+       corruption).
+    3. **stall**: :func:`analyze_step_times` on the injector's per-shard
+       step-time matrix flags a persistent straggler.  EVICT it and
+       continue exactly from the segment's own carried state (no
+       rollback — the straggler's output is numerically fine, just late).
+
+    ``devices`` must hold at least as many devices as shards; survivor
+    meshes always use the first ``len(alive)`` devices, with the
+    injector's ``set_mesh`` keeping logical shard identities stable.
+    Returns ``(SolveResult, ResilientReport)``.
+    """
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.checkpoint import CheckpointManager
+    from repro.core.krylov.cg import pipecg
+    from repro.core.krylov.distributed import distributed_solve
+
+    if solver is None:
+        solver = pipecg
+    devices = list(devices)
+    n_shards0 = len(devices)
+    if n_shards0 < 1:
+        raise ValueError("need at least one device")
+    b_np = np.asarray(b)
+    norm_b = float(np.linalg.norm(b_np))
+    alive = list(range(n_shards0))
+    if ckpt_dir is None:
+        ckpt_dir = tempfile.mkdtemp(prefix="resilient_ckpt_")
+    ckpt = CheckpointManager(ckpt_dir, keep=2, async_write=True)
+
+    # host-side shadow of the last GOOD state (restore template + fallback)
+    last_good: Optional[dict] = None     # carried tree as numpy
+    last_good_iters = 0                  # productive iters at that state
+    ckpt_steps = 0
+
+    carried = None          # exact-continuation state for the next segment
+    x_restart = None        # rr-restart iterate for the next segment
+    res_prev = norm_b       # last accepted residual norm (jump detector)
+    productive = 0
+    executed = 0
+    seg = 0
+    recoveries: List[RecoveryEvent] = []
+    segment_walls: List[float] = []
+    result = None
+    converged = False
+    t_begin = time.perf_counter()
+    seg_cap = (maxiter + checkpoint_period - 1) // checkpoint_period \
+        + max_recoveries * 2 + 4
+
+    while productive < maxiter and seg < seg_cap:
+        if len(alive) < min_shards:
+            raise RuntimeError(
+                f"only {len(alive)} shards left alive (min {min_shards})")
+        seg_len = min(checkpoint_period, maxiter - productive)
+        mesh = Mesh(np.asarray(devices[:len(alive)]), ("shards",))
+        if injector is not None:
+            injector.set_mesh(alive)
+        seg_start = executed
+        t0 = time.perf_counter()
+        res, carried_out = distributed_solve(
+            solver, A, b, mesh, engine="sharded_fused", tol=tol,
+            maxiter=seg_len, M=M, block=block, noise=injector,
+            x0=x_restart, carried=carried, with_state=True)
+        res_norm = float(res.res_norm)
+        carried_out = jax.tree.map(np.asarray, carried_out)
+        segment_walls.append(time.perf_counter() - t0)
+        executed += seg_len
+        seg += 1
+        x_restart = None
+
+        def _recoveries_guard():
+            if len(recoveries) > max_recoveries:
+                raise RuntimeError(
+                    f"gave up after {len(recoveries)} recoveries "
+                    f"(max_recoveries={max_recoveries}); events: "
+                    f"{recoveries}")
+
+        # ---- detector 1: kill (poisoned reduction -> non-finite norm) ----
+        if not np.isfinite(res_norm):
+            dead = (sorted(injector.dead_shards & set(alive))
+                    if injector is not None else [])
+            if injector is None or not dead:
+                raise RuntimeError(
+                    "solve diverged to a non-finite residual with no dead "
+                    "shard to blame — numerical breakdown, not a fault")
+            onset = min(injector.iter_count.get(s, executed) - 1
+                        for s in dead)
+            for s in dead:
+                alive.remove(s)
+            carried, x_restart, productive = None, None, 0
+            res_prev = norm_b
+            if last_good is not None:
+                ckpt.wait()
+                state, manifest = ckpt.restore(last_good)
+                x_restart = (state["x"] if b_np.ndim == 2
+                             else state["x"][0])
+                productive = int(manifest.get("productive",
+                                              last_good_iters))
+                res_prev = float(manifest.get("res_norm", norm_b))
+            for s in dead:
+                recoveries.append(RecoveryEvent(
+                    kind="kill", shard=s, segment=seg - 1,
+                    detect_iters=max(executed - onset, 1),
+                    iters_lost=seg_len, n_shards_after=len(alive),
+                    mode="rollback_restart"))
+            _recoveries_guard()
+            continue
+
+        # ---- detector 2: corrupt (true-residual drift OR a jump in the
+        # per-iteration norm history: the iteration that consumed the
+        # poisoned reduction reports ||r|| orders of magnitude up, which
+        # a healthy near-monotone CG iteration never does) ----
+        x_np = np.asarray(res.x)
+        true_res = _true_residual(A, b_np, x_np)
+        drifted = true_res > drift_factor * max(res_norm, tol * norm_b)
+        hist = np.asarray(res.res_history, np.float64)
+        hist = hist.reshape(-1, hist.shape[-1])      # (k_rhs, seg_len)
+        prev = np.concatenate(
+            [np.full((hist.shape[0], 1), res_prev), hist[:, :-1]], axis=1)
+        jumped = bool(np.any(
+            hist > jump_factor * np.maximum(prev, tol * norm_b)))
+        if drifted or jumped:
+            onset = executed - seg_len
+            ev = ([e for e in injector.events if e.kind == "corrupt"]
+                  if injector is not None else [])
+            if ev:
+                onset = ev[-1].at_iter
+            shard = ev[-1].shard if ev else -1
+            carried = None
+            productive = 0
+            res_prev = norm_b
+            if last_good is not None:
+                ckpt.wait()
+                state, manifest = ckpt.restore(last_good)
+                x_restart = (state["x"] if b_np.ndim == 2
+                             else state["x"][0])
+                productive = int(manifest.get("productive",
+                                              last_good_iters))
+                res_prev = float(manifest.get("res_norm", norm_b))
+            recoveries.append(RecoveryEvent(
+                kind="corrupt", shard=shard, segment=seg - 1,
+                detect_iters=max(executed - onset, 1),
+                iters_lost=seg_len, n_shards_after=len(alive),
+                mode="rollback_restart"))
+            _recoveries_guard()
+            continue
+
+        # ---- detector 3: stall (persistent straggler in step times) ----
+        evicted = None
+        if injector is not None and len(alive) > max(min_shards, 1):
+            steps = injector.step_time_matrix(start_iter=seg_start)
+            rep = analyze_step_times(steps,
+                                     restart_cost_steps=restart_cost_steps)
+            if rep.persistent_outlier is not None:
+                evicted = alive[rep.persistent_outlier]
+                onset = executed - seg_len
+                ev = [e for e in injector.events
+                      if e.kind == "stall" and e.shard == evicted]
+                if ev:
+                    onset = ev[-1].at_iter
+                alive.remove(evicted)
+                recoveries.append(RecoveryEvent(
+                    kind="stall", shard=evicted, segment=seg - 1,
+                    detect_iters=max(executed - onset, 1),
+                    iters_lost=0, n_shards_after=len(alive),
+                    mode="evict_continue"))
+                _recoveries_guard()
+
+        # ---- segment accepted: advance + checkpoint the carried state ----
+        result = res
+        productive += seg_len
+        carried = carried_out
+        last_good = carried_out
+        last_good_iters = productive
+        res_prev = max(res_norm, tol * norm_b, 1e-300)
+        ckpt_steps += 1
+        ckpt.save(ckpt_steps, carried_out,
+                  extra={"productive": productive, "res_norm": res_norm,
+                         "n_shards": len(alive) + (1 if evicted is not None
+                                                   else 0)})
+        if res_norm <= tol * norm_b:
+            converged = True
+            break
+
+    ckpt.wait()
+    if result is None:
+        raise RuntimeError("no segment completed cleanly")
+    report = ResilientReport(
+        converged=converged, res_norm=float(result.res_norm),
+        true_res_norm=_true_residual(A, b_np, np.asarray(result.x)),
+        productive_iters=productive, executed_iters=executed,
+        segments=seg, n_shards_final=len(alive), recoveries=recoveries,
+        wall_s=time.perf_counter() - t_begin, segment_walls=segment_walls)
+    return result, report

@@ -7,8 +7,10 @@
      variant per solver);
   2. fitting — the recorded wait samples through core/stats, classified
      best family vs injected family, parameter recovery;
-  3. real execution — iteration-engine timing/residual-drift runs and
-     wall-clock noise-injected shard_map repeats;
+  3. real execution — iteration-engine timing/residual-drift runs,
+     wall-clock noise-injected shard_map repeats, and the fault stage
+     (subprocess multi-device solves with injected kill/stall/corrupt
+     faults, recovery overhead vs the resync model's lower bound);
   4. validation — measured vs ``asymptotic_speedup``, folk-theorem 2x
      bound, exponential P=4 crossover;
   5. reporting — figures CSVs, BENCH_campaign.json, results/REPORT.md.
@@ -42,9 +44,11 @@ from repro.experiments.noise_sources import (
     sample_np,
     scale_distribution,
 )
+from repro.experiments.fault_exec import run_fault_exec
 from repro.experiments.report import (
     write_depth_csv,
     write_ecdf_csv,
+    write_fault_csv,
     write_json,
     write_report_md,
     write_runtimes_csv,
@@ -65,6 +69,7 @@ from repro.experiments.validation import (
     modeled_speedup,
     validate_cells,
     validate_depth_cells,
+    validate_fault_cells,
     validate_s_sync_cells,
 )
 
@@ -294,8 +299,8 @@ def _s_sync_predict_record(spec: CampaignSpec) -> Dict:
 
 
 def _acceptance(spec: CampaignSpec, cells, wait_fits,
-                depth_validation=None, sync_validation=None
-                ) -> Dict[str, bool]:
+                depth_validation=None, sync_validation=None,
+                fault_validation=None) -> Dict[str, bool]:
     """The ISSUE's acceptance checks, evaluated on this campaign's data."""
     exp_cells = [c for c in cells if c["noise"] == "exponential"]
     uni_cells = [c for c in cells if c["noise"] == "uniform"]
@@ -335,6 +340,15 @@ def _acceptance(spec: CampaignSpec, cells, wait_fits,
         if pred:
             checks["predict_speedup: four-sync phase model > 2x in the "
                    "latency regime"] = pred["bicgstab"] > 2.0
+    if fault_validation:
+        rows = list(fault_validation.values())
+        checks["fault stage: every injected fault detected, recovered, "
+               "and converged"] = all(
+            row["recovered"] and row["converged"] and row["accuracy_ok"]
+            for row in rows)
+        checks["fault stage: recovery overhead within 2x of the resync "
+               "lower bound"] = all(
+            row["within_bound_factor"] for row in rows)
     return checks
 
 
@@ -396,15 +410,23 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
             runtime_fits[solver] = fit_cell(cell["run_times"],
                                             name=f"runtime:{solver}")
 
+    # 3b. fault-injection stage: real shard-loss recovery in a forced
+    # multi-device subprocess, measured against the resync model's bound
+    fault_cells: list = []
+    if not skip_exec and spec.fault_kinds:
+        fault_cells = run_fault_exec(spec)["cells"]
+
     # 4. validation
     validation = validate_cells(cells, dists)
     validation["depth"] = validate_depth_cells(depth_cells)
     validation["s_sync"] = validate_s_sync_cells(sync_cells)
     validation["s_sync"]["predict_speedup_latency_regime"] = (
         _s_sync_predict_record(spec))
+    validation["fault"] = validate_fault_cells(fault_cells)
     validation["acceptance"] = _acceptance(spec, cells, wait_fits,
                                            validation["depth"],
-                                           validation["s_sync"])
+                                           validation["s_sync"],
+                                           validation["fault"])
 
     result = {
         "spec": dataclasses.asdict(spec),
@@ -417,6 +439,19 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
         "depth_exec": depth_exec,
         "noisy_exec": noisy_exec,
         "runtime_fits": runtime_fits,
+        "fault_cells": fault_cells,
+        # flat per-cell recovery metrics: the benchmarks/check_regression
+        # tracked key (BENCH_campaign.json --key recovery)
+        "recovery": {
+            f"{c['kind']}_rate{c['rate']}_P{c['n_shards']}": {
+                "overhead_iters": c["overhead_iters"],
+                "bound_iters": c["bound_iters"],
+                "overhead_ratio": c["overhead_ratio"],
+                "recovered": c["recovered"],
+                "converged": c["converged"],
+            }
+            for c in fault_cells if not c.get("skipped")
+        },
         "validation": validation,
         "elapsed_s": time.time() - t_start,
     }
@@ -425,6 +460,8 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
     write_speedup_csv(out_dir, cells)
     write_depth_csv(out_dir, depth_cells)
     write_sync_csv(out_dir, sync_cells)
+    if fault_cells:
+        write_fault_csv(out_dir, fault_cells)
     for noise, waits in wait_samples.items():
         write_ecdf_csv(out_dir, noise, waits)
     if noisy_exec:

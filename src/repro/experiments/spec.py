@@ -86,6 +86,34 @@ class CampaignSpec:
         Reduction latency R for the s-sync sweep, in units of the
         waiting-time mean (the latency-dominated regime where the sync
         count matters).
+    fault_kinds:
+        Fault kinds for the elastic-recovery stage (subset of
+        ``core/noise/faults.FAULT_KINDS``; empty tuple disables the
+        stage).  Each cell injects ONE fault of that kind into a real
+        multi-device shard_map solve (subprocess, forced host devices)
+        and measures the recovery overhead of
+        ``distributed/fault.resilient_distributed_solve`` against the
+        ``core/perfmodel/resync.py`` lower bound.
+    fault_rates:
+        Per-iteration fault probabilities lambda swept by the fault
+        stage (they parameterize the geometric onset draw).
+    fault_shard_counts:
+        Mesh sizes P for the fault stage; the subprocess forces
+        ``max(fault_shard_counts)`` host devices and smaller meshes use
+        device subsets.  Must divide ``fault_n``.
+    fault_n / fault_maxiter:
+        Problem size and iteration cap of each fault-stage solve (the
+        shifted tridiagonal Laplacian converges to ``fault_tol`` in a
+        few dozen iterations).
+    fault_checkpoint_period:
+        Segment length / checkpoint period of the elastic controller,
+        in iterations — the ``period`` of the resync overhead bound.
+    fault_tol:
+        Convergence tolerance of the fault-stage solves.
+    fault_stall_s:
+        Injected per-iteration stall of the ``stall`` fault kind, in
+        seconds (must dominate the clean per-iteration time so the
+        step-time detector sees a persistent outlier).
     seed:
         Base seed; every stage derives its own stream from it.
     """
@@ -114,6 +142,14 @@ class CampaignSpec:
     sync_counts: Tuple[int, ...] = (2, 4)
     sync_shard_counts: Tuple[int, ...] = (4, 8)
     sync_red_latency: float = 2.0
+    fault_kinds: Tuple[str, ...] = ("kill", "stall", "corrupt")
+    fault_rates: Tuple[float, ...] = (0.05,)
+    fault_shard_counts: Tuple[int, ...] = (4,)
+    fault_n: int = 240
+    fault_maxiter: int = 120
+    fault_checkpoint_period: int = 10
+    fault_tol: float = 1e-10
+    fault_stall_s: float = 0.03
     seed: int = 0
 
 
@@ -137,6 +173,8 @@ PRESETS: Dict[str, CampaignSpec] = {
         exec_repeats=12,
         depth_shard_counts=(4, 64, 1024),
         depth_exec_maxiter=60,
+        fault_rates=(0.02, 0.05, 0.1),
+        fault_shard_counts=(4, 8),
     ),
 }
 

@@ -97,6 +97,39 @@ def validate_s_sync_cells(sync_cells: Sequence[Dict]) -> Dict:
     return out
 
 
+def validate_fault_cells(fault_cells: Sequence[Dict],
+                         overhead_factor: float = 2.0) -> Dict:
+    """Fault-stage validation: recovery vs the resync overhead bound.
+
+    For every executed fault cell (kind, rate, P): whether the injected
+    fault was detected AND recovered from, whether the elastic solve
+    still converged, whether its true residual stayed within 100x of the
+    clean baseline's (the rr re-glue restores accuracy; the slack covers
+    the stall path, which converges at the clean trajectory exactly),
+    and whether the measured iteration overhead stays within
+    ``overhead_factor`` of the ``recovery_overhead_bound`` floor.
+    """
+    out: Dict = {}
+    for c in fault_cells:
+        if c.get("skipped"):
+            continue
+        key = f"{c['kind']}/rate{c['rate']}/P{c['n_shards']}"
+        accuracy_ok = (c["true_res"]
+                       <= max(c["clean_true_res"] * 100.0, 1e-9))
+        out[key] = {
+            "recovered": bool(c["recovered"]),
+            "converged": bool(c["converged"]),
+            "accuracy_ok": bool(accuracy_ok),
+            "overhead_iters": float(c["overhead_iters"]),
+            "bound_iters": float(c["bound_iters"]),
+            "overhead_ratio": float(c["overhead_ratio"]),
+            "within_bound_factor": (c["overhead_ratio"]
+                                    <= overhead_factor + 1e-12),
+            "n_shards_final": int(c["n_shards_final"]),
+        }
+    return out
+
+
 def validate_cells(cells: Sequence[Dict],
                    dists: Dict[str, Distribution]) -> Dict:
     """Cross-cell validation summary for the report.

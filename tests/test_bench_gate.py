@@ -9,6 +9,7 @@ sys.path.insert(0, str(ROOT))
 
 from benchmarks.check_regression import (  # noqa: E402
     DEFAULT_BASELINE,
+    RECOVERY_TRACKED,
     TRACKED,
     compare,
     new_rows,
@@ -90,6 +91,60 @@ def test_type_changed_row_fails_cleanly():
     cur = _rec(k=12.0)
     fails = compare(cur, base, 0.10)
     assert len(fails) == 1 and "changed type" in fails[0]
+
+
+def _rrow(**over):
+    row = {"overhead_ratio": 0.91, "overhead_iters": 10.0,
+           "bound_iters": 11.0, "recovered": True, "converged": True}
+    row.update(over)
+    return row
+
+
+def test_recovery_key_compares_fault_rows():
+    """--key recovery gates the fault-stage rows of BENCH_campaign.json:
+    the measured/bound overhead ratio must not creep up and every
+    injected fault must keep being recovered from."""
+    base = {"recovery": {"kill_rate0.05_P4": _rrow()}}
+    assert compare(base, base, 0.10, key="recovery") == []
+    better = {"recovery": {"kill_rate0.05_P4": _rrow(overhead_ratio=0.5)}}
+    assert compare(better, base, 0.10, key="recovery") == []
+    worse = {"recovery": {"kill_rate0.05_P4": _rrow(overhead_ratio=1.5)}}
+    assert any("overhead_ratio" in f
+               for f in compare(worse, base, 0.10, key="recovery"))
+    lost = {"recovery": {"kill_rate0.05_P4": _rrow(recovered=False)}}
+    assert any("recovered" in f
+               for f in compare(lost, base, 0.10, key="recovery"))
+    gone = {"recovery": {}}
+    assert any("disappeared" in f
+               for f in compare(gone, base, 0.10, key="recovery"))
+    # a new fault cell without a baseline row fails only under strict-new
+    cur = {"recovery": {"kill_rate0.05_P4": _rrow(),
+                        "stall_rate0.05_P4": _rrow(overhead_ratio=0.4)}}
+    assert new_rows(cur, base, key="recovery") == ["stall_rate0.05_P4"]
+    assert compare(cur, base, 0.10, key="recovery") == []
+    assert any("stall_rate0.05_P4" in f
+               for f in compare(cur, base, 0.10, strict_new=True,
+                                key="recovery"))
+    # the recovery gate never looks at kernels rows (and vice versa)
+    assert compare({"kernels": {}, **base}, {"kernels": {"k": {}}, **base},
+                   0.10, key="recovery") == []
+    assert set(RECOVERY_TRACKED) == {"overhead_ratio"}
+
+
+def test_committed_recovery_baseline_consistent():
+    """The committed fault-stage baseline exists, parses, and every row
+    carries the tracked ratio + the must-hold flags as True (so the
+    recovery gate is never vacuously green)."""
+    path = Path(DEFAULT_BASELINE).parent / "BENCH_campaign.baseline.json"
+    with open(path) as f:
+        baseline = json.load(f)
+    rows = baseline.get("recovery", {})
+    assert len(rows) >= 3                 # kill + stall + corrupt at least
+    kinds = {name.split("_")[0] for name in rows}
+    assert {"kill", "stall", "corrupt"} <= kinds
+    for name, row in rows.items():
+        assert row["recovered"] is True and row["converged"] is True, name
+        assert 0.0 <= row["overhead_ratio"] <= 2.0, name
 
 
 def test_committed_baseline_tracks_known_metrics():

@@ -18,10 +18,13 @@ from repro.experiments import (
 from repro.experiments.report import (
     DEPTH_CSV_HEADER,
     ECDF_CSV_HEADER,
+    FAULT_CSV_HEADER,
     REPORT_SECTIONS,
     RUNTIME_CSV_HEADER,
     SPEEDUP_CSV_HEADER,
+    write_fault_csv,
 )
+from repro.experiments.validation import validate_fault_cells
 
 TINY = CampaignSpec(
     name="tiny",
@@ -40,8 +43,27 @@ TINY = CampaignSpec(
     depths=(1, 2, 4),
     depth_shard_counts=(4,),
     depth_exec_maxiter=20,
+    # the fault stage needs a forced multi-device subprocess — covered by
+    # the slow lane (tests/test_elastic.py) and the CI smoke campaign;
+    # synthetic fault cells below exercise its validation/report plumbing
+    fault_kinds=(),
     seed=1234,
 )
+
+
+def _fault_cell(**over):
+    cell = {
+        "kind": "kill", "rate": 0.05, "n_shards": 4, "fault_shard": 1,
+        "onset_iter": 14, "recovered": True, "converged": True,
+        "res_norm": 1e-11, "true_res": 2e-10, "clean_true_res": 3e-10,
+        "executed_iters": 40, "clean_executed_iters": 30,
+        "productive_iters": 30, "n_shards_final": 3, "detect_iters": 6.0,
+        "overhead_iters": 10.0, "bound_iters": 11.0,
+        "overhead_ratio": 10.0 / 11.0, "wall_s": 1.0, "clean_wall_s": 0.9,
+        "wall_ratio": 1.0 / 0.9, "skipped": False,
+    }
+    cell.update(over)
+    return cell
 
 
 @pytest.fixture(scope="module")
@@ -171,6 +193,66 @@ def test_engine_exec_reports_drift(campaign):
     for c in cells:
         assert c["per_iter_us"] > 0
         assert 0.0 <= c["drift_rel"] < 1e-3
+
+
+def test_fault_stage_disabled_keeps_schema(campaign):
+    """With fault_kinds=() the record still carries the (empty) fault keys
+    and REPORT.md still renders section 9 — schema stability."""
+    out, result = campaign
+    assert result["fault_cells"] == []
+    assert result["recovery"] == {}
+    assert "fault" in result["validation"]
+    assert REPORT_SECTIONS[8] in (out / "REPORT.md").read_text()
+    # no fault acceptance rows are emitted for a disabled stage
+    assert not any("fault stage" in k
+                   for k in result["validation"]["acceptance"])
+
+
+def test_validate_fault_cells_criteria():
+    good = _fault_cell()
+    stall = _fault_cell(kind="stall", overhead_iters=2.0, bound_iters=5.5,
+                        overhead_ratio=2.0 / 5.5, n_shards_final=3)
+    v = validate_fault_cells([good, stall])
+    row = v["kill/rate0.05/P4"]
+    assert row["recovered"] and row["converged"] and row["accuracy_ok"]
+    assert row["within_bound_factor"]
+    assert v["stall/rate0.05/P4"]["within_bound_factor"]
+
+    # a recovery that re-executed far beyond the bound fails the 2x gate
+    slow = _fault_cell(overhead_iters=30.0, overhead_ratio=30.0 / 11.0)
+    assert not validate_fault_cells([slow])[
+        "kill/rate0.05/P4"]["within_bound_factor"]
+    # an accuracy miss (true residual off the clean baseline) is flagged
+    inaccurate = _fault_cell(true_res=1e-4)
+    assert not validate_fault_cells([inaccurate])[
+        "kill/rate0.05/P4"]["accuracy_ok"]
+    # skipped cells (not enough devices) are excluded, not failed
+    assert validate_fault_cells([_fault_cell(skipped=True)]) == {}
+
+
+def test_fault_acceptance_checks():
+    from repro.experiments.campaign import _acceptance
+
+    ok = validate_fault_cells([_fault_cell()])
+    acc = _acceptance(TINY, [], {}, fault_validation=ok)
+    assert acc["fault stage: every injected fault detected, recovered, "
+               "and converged"]
+    assert acc["fault stage: recovery overhead within 2x of the resync "
+               "lower bound"]
+    bad = validate_fault_cells([_fault_cell(recovered=False,
+                                            converged=False)])
+    acc = _acceptance(TINY, [], {}, fault_validation=bad)
+    assert not acc["fault stage: every injected fault detected, "
+                   "recovered, and converged"]
+
+
+def test_fault_csv_schema(tmp_path):
+    cells = [_fault_cell(), _fault_cell(kind="stall", skipped=True)]
+    path = write_fault_csv(tmp_path, cells)
+    lines = path.read_text().splitlines()
+    assert lines[0] == FAULT_CSV_HEADER
+    assert len(lines) == 2               # the skipped cell is not a row
+    assert lines[1].startswith("kill,0.05,4,14,1,1,")
 
 
 def test_measured_makespans_deterministic_and_near_closed():

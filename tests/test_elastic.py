@@ -1,5 +1,7 @@
 """Elastic scaling: checkpoints are mesh-independent — save under one mesh
-shape, restore (re-sharded) under another, in subprocesses."""
+shape, restore (re-sharded) under another, in subprocesses — and elastic
+solver recovery: mid-solve carried-state hand-off across mesh sizes plus
+kill-one-shard-and-recover through ``resilient_distributed_solve``."""
 import os
 import subprocess
 import sys
@@ -7,6 +9,8 @@ import textwrap
 from pathlib import Path
 
 import pytest
+
+from conftest import run_subprocess_with_retry
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
@@ -61,3 +65,121 @@ def test_elastic_restore_different_mesh(tmp_path):
                              timeout=300)
         assert out.returncode == 0, out.stdout + "\n" + out.stderr
         assert expect in out.stdout
+
+
+# shared preamble of the solver-recovery subprocess scripts: 8 forced host
+# devices, x64, and the fault-stage test operator (shifted tridiagonal
+# Laplacian, kappa ~ 5, n divisible by 8/4/3/2 for every survivor mesh)
+SOLVER_PREAMBLE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.krylov import tridiagonal_laplacian
+    from repro.core.krylov.operators import DiaMatrix
+
+    n = 240
+    A0 = tridiagonal_laplacian(n)
+    A = DiaMatrix(offsets=A0.offsets,
+                  bands=A0.bands.at[A0.offsets.index(0)].add(1.0))
+    b = jnp.asarray(np.random.default_rng(0).standard_normal(n))
+    devs = jax.devices()
+""")
+
+CARRIED_HANDOFF = SOLVER_PREAMBLE + textwrap.dedent("""
+    from jax.sharding import Mesh
+    from repro.core.krylov.cg import pipecg
+    from repro.core.krylov.distributed import distributed_solve
+
+    mesh4 = Mesh(np.array(devs[:4]), ("shards",))
+    mesh2 = Mesh(np.array(devs[:2]), ("shards",))
+
+    ref = distributed_solve(pipecg, A, b, mesh4, engine="sharded_fused",
+                            tol=0.0, maxiter=40)
+    # 10 iterations on 4 shards, carried state out ...
+    r1, carried = distributed_solve(pipecg, A, b, mesh4,
+                                    engine="sharded_fused", tol=0.0,
+                                    maxiter=10, with_state=True)
+    # ... handed off through HOST arrays (mesh-independent by design) ...
+    carried = {k: np.asarray(v) for k, v in carried.items()}
+    # ... and 30 more on 2 shards: the split solve IS the straight solve
+    r2 = distributed_solve(pipecg, A, b, mesh2, engine="sharded_fused",
+                           tol=0.0, maxiter=30, carried=carried)
+    x2, xr = np.asarray(r2.x), np.asarray(ref.x)
+    err = float(np.linalg.norm(x2 - xr) / np.linalg.norm(xr))
+    assert err < 1e-10, f"carried hand-off diverged: {err:.3e}"
+    assert abs(float(r2.res_norm) - float(ref.res_norm)) < 1e-10
+    print("carried-handoff-ok", err)
+""")
+
+KILL_RECOVER = SOLVER_PREAMBLE + textwrap.dedent("""
+    from repro.core.noise.faults import FaultInjector, make_fault
+    from repro.distributed.fault import resilient_distributed_solve
+
+    kw = dict(tol=1e-10, maxiter=120, checkpoint_period=10)
+    res0, rep0 = resilient_distributed_solve(A, b, devs[:4], **kw)
+    assert rep0.converged and not rep0.recoveries
+
+    inj = FaultInjector(faults=[make_fault("kill:1@14")], n_shards=4,
+                        seed=3)
+    res, rep = resilient_distributed_solve(A, b, devs[:4], injector=inj,
+                                           **kw)
+    assert rep.converged, rep
+    assert rep.n_shards_final == 3
+    assert [e.kind for e in rep.recoveries] == ["kill"]
+    assert rep.recoveries[0].mode == "rollback_restart"
+    # the re-glued solve matches the undisturbed accuracy
+    assert rep.true_res_norm <= 10 * max(rep0.true_res_norm, 1e-12), (
+        rep.true_res_norm, rep0.true_res_norm)
+    print("kill-recover-ok", rep.true_res_norm)
+""")
+
+DOUBLE_KILL = SOLVER_PREAMBLE + textwrap.dedent("""
+    from repro.core.noise.faults import FaultInjector, make_faults
+    from repro.distributed.fault import resilient_distributed_solve
+
+    inj = FaultInjector(faults=make_faults(["kill:1@14", "kill:3@26"]),
+                        n_shards=4, seed=5)
+    res, rep = resilient_distributed_solve(A, b, devs[:4], injector=inj,
+                                           tol=1e-10, maxiter=160,
+                                           checkpoint_period=10)
+    assert rep.converged, rep
+    assert rep.n_shards_final == 2
+    assert sorted(e.kind for e in rep.recoveries) == ["kill", "kill"]
+    assert rep.true_res_norm < 1e-8, rep.true_res_norm
+    print("double-kill-ok", rep.true_res_norm)
+""")
+
+
+@pytest.mark.slow
+def test_carried_state_handoff_matches_uninterrupted_solve():
+    """Mid-solve 4->2 shard hand-off: 10 + 30 iterations across meshes
+    reproduce the uninterrupted 40-iteration solve to ~1e-10."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = run_subprocess_with_retry(CARRIED_HANDOFF, env=env)
+    assert "carried-handoff-ok" in out.stdout
+
+
+@pytest.mark.slow
+def test_kill_one_shard_mid_solve_recovers_on_survivors():
+    """CI fault-injection smoke: kill 1 of 4 shards mid-pipecg; the
+    controller rolls back to the checkpoint, re-shards onto the 3
+    survivors, and converges at the undisturbed accuracy."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = run_subprocess_with_retry(KILL_RECOVER, env=env)
+    assert "kill-recover-ok" in out.stdout
+
+
+@pytest.mark.slow
+def test_two_sequential_kills_shrink_to_two_shards():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = run_subprocess_with_retry(DOUBLE_KILL, env=env)
+    assert "double-kill-ok" in out.stdout
