@@ -23,6 +23,15 @@ selected ``--key``:
 * ``recovered`` / ``converged`` — must stay True (the elastic controller
                                 keeps detecting and surviving each fault)
 
+``--key serve`` compares the serving rows of ``BENCH_serve.json``:
+
+* ``throughput_speedup`` / ``occupancy_mean``
+                              — higher is better (continuous-batching win)
+* ``drained`` / ``accuracy_ok`` / ``model_ok``
+                              — must stay True (queue drains, mid-flight
+                                retires match solo runs, M/G/k queueing
+                                model within its validation tolerance)
+
 Row-set semantics (audited — the three ways a row set can drift):
 
 * rows present only in the BASELINE fail (a bench row silently
@@ -42,7 +51,7 @@ explains the change.
 Usage::
 
     python benchmarks/check_regression.py \
-        [--key kernels|recovery] [--current <BENCH json>] \
+        [--key kernels|recovery|serve] [--current <BENCH json>] \
         [--baseline <path>] [--tolerance 0.10] [--strict-new]
 """
 from __future__ import annotations
@@ -75,11 +84,22 @@ FLAGS_MUST_HOLD = ("hlo_split_phase_overlap",)
 RECOVERY_TRACKED = {"overhead_ratio": "lower"}
 RECOVERY_FLAGS = ("recovered", "converged")
 
+# the serving rows of BENCH_serve.json ("serve" top-level key): the
+# batched-over-sequential throughput win and batch occupancy must not
+# shrink, both serve runs must keep draining, mid-flight-retired
+# solutions must keep matching solo runs, and the M/G/k queueing model
+# must stay within its validation tolerance (the wall-clock latency
+# quantiles themselves are recorded, not gated — container jitter)
+SERVE_TRACKED = {"throughput_speedup": "higher",
+                 "occupancy_mean": "higher"}
+SERVE_FLAGS = ("drained", "accuracy_ok", "model_ok")
+
 # gate key -> (top-level container key, tracked metrics, must-hold flags,
 # default current record, default committed baseline)
 KEYS = {
     "kernels": ("kernels", TRACKED, FLAGS_MUST_HOLD),
     "recovery": ("recovery", RECOVERY_TRACKED, RECOVERY_FLAGS),
+    "serve": ("serve", SERVE_TRACKED, SERVE_FLAGS),
 }
 
 
@@ -149,8 +169,9 @@ def main(argv=None) -> int:
     """CLI entry point; exit 0 on pass, 1 on regression."""
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--key", default="kernels", choices=sorted(KEYS),
-                    help="which gate to run: kernels (BENCH_kernels.json) "
-                    "or recovery (BENCH_campaign.json fault stage)")
+                    help="which gate to run: kernels (BENCH_kernels.json), "
+                    "recovery (BENCH_campaign.json fault stage) or serve "
+                    "(BENCH_serve.json)")
     ap.add_argument("--current", default=None,
                     help="current record (default depends on --key)")
     ap.add_argument("--baseline", default=None,
@@ -161,13 +182,15 @@ def main(argv=None) -> int:
                     "(CI mode: new kernels must update the baseline in "
                     "the same PR)")
     args = ap.parse_args(argv)
+    default_record = {"kernels": "BENCH_kernels.json",
+                      "recovery": "BENCH_campaign.json",
+                      "serve": "BENCH_serve.json"}[args.key]
     if args.current is None:
-        args.current = (DEFAULT_CURRENT if args.key == "kernels" else
-                        os.path.join(REPO_ROOT, "BENCH_campaign.json"))
+        args.current = os.path.join(REPO_ROOT, default_record)
     if args.baseline is None:
-        args.baseline = (DEFAULT_BASELINE if args.key == "kernels" else
-                         os.path.join(REPO_ROOT, "benchmarks", "baselines",
-                                      "BENCH_campaign.baseline.json"))
+        args.baseline = os.path.join(
+            REPO_ROOT, "benchmarks", "baselines",
+            default_record.replace(".json", ".baseline.json"))
 
     with open(args.current) as f:
         current = json.load(f)

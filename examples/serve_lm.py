@@ -24,8 +24,12 @@ def main():
     for arch in archs:
         cfg = smoke_config(arch)
         print(f"[serve_lm] {arch} (reduced config)")
-        serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
-              decode_steps=args.decode_steps)
+        out = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
+                    decode_steps=args.decode_steps)
+        lat = out["step_latency"]
+        print(f"[serve_lm] {arch} decode-step latency: "
+              f"p50 {lat['p50']*1e3:.2f} ms  p99 {lat['p99']*1e3:.2f} ms "
+              f"(n={lat['n']})")
 
 
 if __name__ == "__main__":

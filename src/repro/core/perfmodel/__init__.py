@@ -46,6 +46,15 @@ from repro.core.perfmodel.folk_theorem import (  # noqa: F401
     staggered_delay_trace,
     trace_makespans,
 )
+from repro.core.perfmodel.queueing import (  # noqa: F401
+    QueueModel,
+    eq6_iteration_time,
+    eq7_iteration_time,
+    erlang_c,
+    predicted_sojourn_quantiles,
+    quantile_key,
+    simulate_batch_queue,
+)
 from repro.core.perfmodel.makespan import (  # noqa: F401
     MakespanSamples,
     empirical_speedup_curve,

@@ -36,8 +36,10 @@ from repro.experiments.validation import (  # noqa: F401
     validate_cells,
     validate_depth_cells,
     validate_s_sync_cells,
+    validate_serve_cells,
 )
 from repro.experiments.campaign import run_campaign  # noqa: F401
+from repro.experiments.serve_exec import run_serve_exec  # noqa: F401
 from repro.experiments.report import (  # noqa: F401
     write_ecdf_csv,
     write_json,

@@ -52,6 +52,7 @@ from repro.experiments.report import (
     write_json,
     write_report_md,
     write_runtimes_csv,
+    write_serve_csv,
     write_speedup_csv,
     write_sync_csv,
 )
@@ -71,6 +72,7 @@ from repro.experiments.validation import (
     validate_depth_cells,
     validate_fault_cells,
     validate_s_sync_cells,
+    validate_serve_cells,
 )
 
 # Coarse per-solver phase constants (vector-read multiples, reduction sync
@@ -300,7 +302,8 @@ def _s_sync_predict_record(spec: CampaignSpec) -> Dict:
 
 def _acceptance(spec: CampaignSpec, cells, wait_fits,
                 depth_validation=None, sync_validation=None,
-                fault_validation=None) -> Dict[str, bool]:
+                fault_validation=None,
+                serve_validation=None) -> Dict[str, bool]:
     """The ISSUE's acceptance checks, evaluated on this campaign's data."""
     exp_cells = [c for c in cells if c["noise"] == "exponential"]
     uni_cells = [c for c in cells if c["noise"] == "uniform"]
@@ -349,6 +352,16 @@ def _acceptance(spec: CampaignSpec, cells, wait_fits,
         checks["fault stage: recovery overhead within 2x of the resync "
                "lower bound"] = all(
             row["within_bound_factor"] for row in rows)
+    if serve_validation:
+        checks["serve: batched throughput >= 2x sequential one-shot"] = (
+            serve_validation["throughput_ge_2x"])
+        checks["serve: queueing-model p50/p99 within the campaign "
+               "tolerance"] = serve_validation["model_within_tolerance"]
+        checks["serve: mid-flight-retired solutions match solo to "
+               "1e-10"] = serve_validation["accuracy_ok"]
+        checks["serve: queue drained with every request converged"] = (
+            serve_validation["drained"]
+            and serve_validation["all_converged"])
     return checks
 
 
@@ -416,6 +429,13 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
     if not skip_exec and spec.fault_kinds:
         fault_cells = run_fault_exec(spec)["cells"]
 
+    # 3c. serve stage: the continuous batcher under open-loop load,
+    # measured against the M/G/k queueing extension of the perfmodel
+    serve_record: Dict = {}
+    if not skip_exec and spec.serve_requests > 0:
+        from repro.experiments.serve_exec import run_serve_exec
+        serve_record = run_serve_exec(spec)
+
     # 4. validation
     validation = validate_cells(cells, dists)
     validation["depth"] = validate_depth_cells(depth_cells)
@@ -423,10 +443,12 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
     validation["s_sync"]["predict_speedup_latency_regime"] = (
         _s_sync_predict_record(spec))
     validation["fault"] = validate_fault_cells(fault_cells)
+    validation["serve"] = validate_serve_cells(serve_record)
     validation["acceptance"] = _acceptance(spec, cells, wait_fits,
                                            validation["depth"],
                                            validation["s_sync"],
-                                           validation["fault"])
+                                           validation["fault"],
+                                           validation["serve"])
 
     result = {
         "spec": dataclasses.asdict(spec),
@@ -440,6 +462,7 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
         "noisy_exec": noisy_exec,
         "runtime_fits": runtime_fits,
         "fault_cells": fault_cells,
+        "serve": serve_record,
         # flat per-cell recovery metrics: the benchmarks/check_regression
         # tracked key (BENCH_campaign.json --key recovery)
         "recovery": {
@@ -462,6 +485,8 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
     write_sync_csv(out_dir, sync_cells)
     if fault_cells:
         write_fault_csv(out_dir, fault_cells)
+    if serve_record:
+        write_serve_csv(out_dir, serve_record)
     for noise, waits in wait_samples.items():
         write_ecdf_csv(out_dir, noise, waits)
     if noisy_exec:

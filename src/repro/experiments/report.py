@@ -10,6 +10,8 @@ Emitted artifacts (all schema-stable; tests assert on the headers):
   times: the Table-1 raw data analogue.
 * ``<out_dir>/figures/campaign_fault.csv`` — fault-stage recovery
   overheads vs the resync lower bound.
+* ``<out_dir>/figures/campaign_serve.csv`` — serve-stage sojourn
+  quantiles: wall clock vs batch-queue replay vs the M/G/k model.
 * ``BENCH_campaign.json`` — the full machine-readable campaign record.
 * ``<out_dir>/REPORT.md`` — self-contained measured-vs-modeled report.
 """
@@ -30,6 +32,7 @@ DEPTH_CSV_HEADER = "noise,P,l,measured,modeled,ceiling,red_latency"
 SYNC_CSV_HEADER = "noise,P,s,measured,modeled,ceiling,red_latency"
 FAULT_CSV_HEADER = ("kind,rate,P,onset,recovered,converged,overhead_iters,"
                     "bound_iters,overhead_ratio,n_shards_final")
+SERVE_CSV_HEADER = "quantile,wall_s,sim_s,model_s,rel_err_model_vs_sim"
 
 REPORT_SECTIONS = (
     "## 1. Setup",
@@ -41,6 +44,7 @@ REPORT_SECTIONS = (
     "## 7. Depth-l pipelining sweep",
     "## 8. s-sync generalization (four-sync BiCGStab)",
     "## 9. Fault injection and elastic recovery",
+    "## 10. Solver-as-a-service (queueing model vs measured)",
 )
 
 
@@ -139,6 +143,26 @@ def write_fault_csv(out_dir: Path, fault_cells: Sequence[Dict]) -> Path:
                     f"{int(c['converged'])},{c['overhead_iters']:.1f},"
                     f"{c['bound_iters']:.1f},{c['overhead_ratio']:.4f},"
                     f"{c['n_shards_final']}\n")
+    return path
+
+
+def write_serve_csv(out_dir: Path, serve: Dict) -> Path:
+    """Write the serve-stage latency-quantile grid CSV; returns the path.
+
+    One row per quantile: real wall-clock paced serve, deterministic
+    batch-queue replay, and the analytic M/G/k model (rel err is model
+    vs replay — the gated pair; both are deterministic).
+    """
+    fig_dir = Path(out_dir) / "figures"
+    fig_dir.mkdir(parents=True, exist_ok=True)
+    path = fig_dir / "campaign_serve.csv"
+    paced = serve["paced"]
+    with open(path, "w") as f:
+        f.write(SERVE_CSV_HEADER + "\n")
+        for q in ("p50", "p99", "p999"):
+            f.write(f"{q},{paced['wall']['latency'][q]:.6f},"
+                    f"{paced['sim'][q]:.6f},{paced['predicted'][q]:.6f},"
+                    f"{paced['rel_err'][q]:.6f}\n")
     return path
 
 
@@ -369,6 +393,56 @@ def write_report_md(out_dir: Path, result: Dict) -> Path:
           f"{_fmt(row['overhead_ratio'], 2)}, within 2x = "
           f"{row['within_bound_factor']})")
     w("")
+    w(REPORT_SECTIONS[9])
+    w("")
+    serve = result.get("serve") or {}
+    if serve:
+        burst, paced = serve["burst"], serve["paced"]
+        b, s = burst["batched"], burst["sequential"]
+        w(f"Open-loop burst of {burst['n_requests']} solves "
+          f"(n = {burst['n']}, tol-frozen multi-RHS batch of "
+          f"{burst['k_slots']} slots, `{burst['engine']}` engine, warm")
+        w("executables) vs the same requests served one at a time;")
+        w("latencies in seconds.")
+        w("")
+        w("| mode | throughput (req/s) | occupancy | p50 | p99 | p999 |")
+        w("|---|---:|---:|---:|---:|---:|")
+        w(f"| batched (k={burst['k_slots']}) | "
+          f"{_fmt(b['throughput_rps'], 1)} | "
+          f"{_fmt(b['occupancy_mean'], 2)} | {_fmt(b['latency']['p50'])} | "
+          f"{_fmt(b['latency']['p99'])} | {_fmt(b['latency']['p999'])} |")
+        w(f"| sequential (k=1) | {_fmt(s['throughput_rps'], 1)} | "
+          f"{_fmt(s['occupancy_mean'], 2)} | {_fmt(s['latency']['p50'])} | "
+          f"{_fmt(s['latency']['p99'])} | {_fmt(s['latency']['p999'])} |")
+        w("")
+        w(f"Throughput speedup: **{_fmt(burst['throughput_speedup'], 2)}x**"
+          " (acceptance floor 2x).")
+        w("")
+        w(f"Paced run at rho = {paced['rho']} "
+          f"(`{paced['arrival']}` arrivals, lambda = "
+          f"{_fmt(paced['lam'], 1)} req/s): sojourn quantiles of the real")
+        w("wall-clock serve, the deterministic batch-queue replay, and")
+        w("the analytic Eq. 6/7 x M/G/k model (`core/perfmodel/")
+        w("queueing.py`); the gate compares model vs replay.")
+        w("")
+        w("| quantile | wall (s) | replay (s) | model (s) | rel err |")
+        w("|---|---:|---:|---:|---:|")
+        for q in ("p50", "p99", "p999"):
+            w(f"| {q} | {_fmt(paced['wall']['latency'][q])} | "
+              f"{_fmt(paced['sim'][q])} | {_fmt(paced['predicted'][q])} | "
+              f"{_fmt(paced['rel_err'][q])} |")
+        w("")
+        sv = v.get("serve", {})
+        if sv:
+            w(f"- accuracy: max |batched - solo| = "
+              f"{sv['accuracy_max_abs_diff']:.2e} over the sampled "
+              f"retirements (ok = {sv['accuracy_ok']})")
+            w(f"- drained = {sv['drained']}, all converged = "
+              f"{sv['all_converged']}")
+            w("")
+    else:
+        w("(serve stage disabled: `serve_requests = 0`)")
+        w("")
     for check, ok in v["acceptance"].items():
         w(f"- {'PASS' if ok else 'FAIL'}: {check}")
     w("")

@@ -114,6 +114,38 @@ class CampaignSpec:
         Injected per-iteration stall of the ``stall`` fault kind, in
         seconds (must dominate the clean per-iteration time so the
         step-time detector sees a persistent outlier).
+    serve_requests:
+        Open-loop request count of the serve stage (0 disables the
+        stage; the ISSUE-7 acceptance load is >= 64).  The stage runs
+        the ``repro.serve`` continuous batcher on a burst (throughput vs
+        a k=1 sequential server), an accuracy sample (batched vs solo
+        retired solutions), and a utilization-paced run validated
+        against the M/G/k queueing perfmodel.
+    serve_n / serve_tol / serve_maxiter:
+        Problem size, convergence tolerance and iteration cap of each
+        served solve (tridiagonal Laplacian family).
+    serve_modes:
+        ``(lo, hi)`` range of Laplacian eigenmodes per RHS — CG's
+        service demand is about the excited Krylov dimension, so this is
+        the workload's service-time distribution knob (uniform mode
+        counts give the M/G/k model a non-degenerate service law).
+    serve_k_slots / serve_step_block / serve_engine:
+        Batch-slot count, iterations per batch step, and iteration
+        engine of the continuous batcher (``naive`` wins on the CPU
+        container — the fused kernel's interpret-mode dispatch overhead
+        dominates at serve sizes).
+    serve_arrival:
+        Arrival process name (``poisson`` or any
+        ``noise_sources.make_distribution`` name incl. ``trace:<ALG>``).
+    serve_rho:
+        Target per-slot utilization of the paced run; the arrival rate
+        is ``rho * k_slots / E[service]`` with the service time measured
+        from the burst run.
+    serve_replay_requests:
+        Horizon of the steady-state discrete-event replay the M/G/k
+        model is gated against (the short wall-clock run is transient;
+        the analytic law is steady-state, so the gate needs a long
+        deterministic replay of the measured demand distribution).
     seed:
         Base seed; every stage derives its own stream from it.
     """
@@ -150,6 +182,17 @@ class CampaignSpec:
     fault_checkpoint_period: int = 10
     fault_tol: float = 1e-10
     fault_stall_s: float = 0.03
+    serve_requests: int = 64
+    serve_n: int = 256
+    serve_modes: Tuple[int, int] = (32, 256)
+    serve_tol: float = 1e-8
+    serve_maxiter: int = 600
+    serve_k_slots: int = 8
+    serve_step_block: int = 8
+    serve_engine: str = "naive"
+    serve_arrival: str = "poisson"
+    serve_rho: float = 0.7
+    serve_replay_requests: int = 16384
     seed: int = 0
 
 
@@ -175,6 +218,7 @@ PRESETS: Dict[str, CampaignSpec] = {
         depth_exec_maxiter=60,
         fault_rates=(0.02, 0.05, 0.1),
         fault_shard_counts=(4, 8),
+        serve_requests=128,
     ),
 }
 

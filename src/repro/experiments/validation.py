@@ -130,6 +130,43 @@ def validate_fault_cells(fault_cells: Sequence[Dict],
     return out
 
 
+def validate_serve_cells(serve: Dict, tolerance: float = 0.10) -> Dict:
+    """Serve-stage validation: throughput, accuracy and the M/G/k model.
+
+    ``serve`` is the record of ``serve_exec.run_serve_exec`` (empty dict
+    = stage disabled, returns ``{}``).  Checks the ISSUE-7 acceptance
+    surface: batched-vs-sequential throughput >= 2x, the queueing
+    perfmodel's predicted p50/p99 within ``tolerance`` (the same 10% the
+    speedup cells use) of the deterministic batch-queue replay, p999
+    recorded (finite-run tail atoms are coarser), mid-flight-retired
+    solutions matching solo serves to 1e-10, and both serve runs
+    draining with every request converged.
+    """
+    if not serve:
+        return {}
+    burst, paced = serve["burst"], serve["paced"]
+    b = burst["batched"]
+    rel = paced["rel_err"]
+    return {
+        "throughput_speedup": float(burst["throughput_speedup"]),
+        "throughput_ge_2x": bool(burst["throughput_speedup"] >= 2.0),
+        "occupancy_mean": float(b["occupancy_mean"]),
+        "p50_rel_err": float(rel["p50"]),
+        "p99_rel_err": float(rel["p99"]),
+        "p999_rel_err": float(rel["p999"]),
+        "model_within_tolerance": bool(rel["p50"] <= tolerance
+                                       and rel["p99"] <= tolerance),
+        "tolerance": tolerance,
+        "accuracy_max_abs_diff": max(
+            (c["max_abs_diff"] for c in serve["accuracy"]), default=0.0),
+        "accuracy_ok": all(c["match_1e10"] for c in serve["accuracy"]),
+        "drained": bool(b["drained"] and paced["wall"]["drained"]),
+        "all_converged": bool(
+            b["n_converged"] == b["n_requests"]
+            and paced["wall"]["n_converged"] == paced["wall"]["n_requests"]),
+    }
+
+
 def validate_cells(cells: Sequence[Dict],
                    dists: Dict[str, Distribution]) -> Dict:
     """Cross-cell validation summary for the report.

@@ -37,11 +37,21 @@ STEP_OVERHEAD_WORDS = 512
 DEFAULT_CACHE_PATH = os.path.join("results", "autotune_cache.json")
 
 _CACHE: Dict[str, int] = {}
+# hit/miss counters over the process lifetime — the serve layer's
+# warm-reuse tests pin "second identical-shape request = pure hits"
+_STATS: Dict[str, int] = {"hits": 0, "misses": 0}
 
 
 def clear_cache() -> None:
-    """Drop every cached block choice (tests)."""
+    """Drop every cached block choice and reset counters (tests)."""
     _CACHE.clear()
+    _STATS["hits"] = 0
+    _STATS["misses"] = 0
+
+
+def cache_stats() -> Dict[str, int]:
+    """Copy of the lifetime ``{"hits", "misses"}`` lookup counters."""
+    return dict(_STATS)
 
 
 def _key(kind: str, n: int, dtype, backend: str, min_block: int,
@@ -127,7 +137,9 @@ def best_block(kind: str, n: int, dtype, *,
     # band must not hand its block to a caller with a wider halo floor
     key = _key(kind, n, dtype, backend, min_block, n_shards, k_rhs)
     if key in _CACHE:
+        _STATS["hits"] += 1
         return _CACHE[key]
+    _STATS["misses"] += 1
 
     feasible = sorted({min(c, n) for c in candidates if min(c, n) >= min_block})
     if not feasible:

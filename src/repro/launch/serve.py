@@ -16,6 +16,7 @@ from repro.configs.registry import get_config, smoke_config
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import init_decode_state, init_params
 from repro.models.attention import AttnState
+from repro.serve.metrics import LatencyStats
 
 
 def prefill_to_decode_state(cfg: ModelConfig, prefill_state, cache_len: int):
@@ -68,18 +69,26 @@ def serve(cfg: ModelConfig, *, batch: int = 4, prompt_len: int = 16,
 
     tok = sample(logits)
     generated = [tok]
+    # per-step latencies feed the same quantile machinery the solver
+    # serving layer benches with (repro.serve.metrics) — one stats schema
+    # across both serving drivers
+    step_s = []
     t0 = time.time()
     for _ in range(decode_steps - 1):
+        ts = time.time()
         state, logits = decode_fn(params, state, tok)
         tok = sample(logits)
+        jax.block_until_ready(tok)
+        step_s.append(time.time() - ts)
         generated.append(tok)
-    jax.block_until_ready(tok)
     t_decode = time.time() - t0
     toks = jnp.stack(generated, axis=1)
+    lat = LatencyStats.from_samples(step_s or [t_decode])
     progress(f"[serve] prefill {prompt_len} toks x{batch} in {t_prefill*1e3:.1f} ms; "
              f"decode {decode_steps} steps in {t_decode*1e3:.1f} ms "
-             f"({t_decode/max(decode_steps-1,1)*1e3:.2f} ms/tok)")
-    return {"tokens": toks, "t_prefill": t_prefill, "t_decode": t_decode}
+             f"(p50 {lat.p50*1e3:.2f} / p99 {lat.p99*1e3:.2f} ms/tok)")
+    return {"tokens": toks, "t_prefill": t_prefill, "t_decode": t_decode,
+            "step_latency": lat.as_dict()}
 
 
 def main():

@@ -1,0 +1,35 @@
+"""Solver-as-a-service: continuous-batching serve layer.
+
+Multiplexes many concurrent (operator, b, tol, deadline) solve requests
+onto the repo's multi-RHS pipelined-Krylov kernels: a request queue with
+earliest-deadline-first admission, a k-slot continuous batcher that
+admits new RHS into free columns and retires converged ones mid-flight
+(reusing ``core/krylov``'s per-column tol-freeze machinery), warm
+compiled-executable + autotune caches across requests, open-loop load
+generation from the campaign's noise machinery, and chaos faults from
+``core/noise/faults``.  The matching latency model — Eq. 6/7 iteration
+time x an M/G/k wait term — lives in ``core/perfmodel/queueing.py``;
+the campaign's serve stage (``experiments/serve_exec.py``) measures one
+against the other.  See DESIGN.md §Serve-data-flow.
+"""
+from repro.serve.batcher import (  # noqa: F401
+    ContinuousBatcher,
+    clear_compile_cache,
+    get_compiled,
+)
+from repro.serve.chaos import ServeChaos  # noqa: F401
+from repro.serve.load import (  # noqa: F401
+    arrival_times,
+    laplacian_mode_rhs,
+    synthetic_requests,
+)
+from repro.serve.metrics import LatencyStats, ServeStats  # noqa: F401
+from repro.serve.queue import RequestQueue  # noqa: F401
+from repro.serve.request import (  # noqa: F401
+    ServeRecord,
+    SolveRequest,
+    content_key,
+    group_key,
+    operator_fingerprint,
+)
+from repro.serve.server import SolverServer  # noqa: F401

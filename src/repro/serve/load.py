@@ -1,0 +1,95 @@
+"""Open-loop load generation for the serving layer.
+
+Arrival processes reuse the campaign's noise machinery
+(``experiments/noise_sources.make_distribution`` + host-numpy sampling):
+``"poisson"`` draws exponential inter-arrivals, any other name is
+resolved as a waiting-time distribution — including the recorded
+``"trace:<ALG>"`` empiricals — and its draws are rescaled to the target
+mean inter-arrival ``1 / rate``.  Open loop: arrival times are fixed up
+front, independent of how fast the server drains (the p99-under-load
+regime the queueing model predicts).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.krylov.operators import DiaMatrix
+from repro.core.noise.sampling import sample_np
+from repro.experiments.noise_sources import make_distribution
+from repro.serve.request import SolveRequest
+
+
+def arrival_times(name: str, n: int, rate: float, seed: int = 0
+                  ) -> np.ndarray:
+    """``n`` open-loop arrival times (s) at mean rate ``rate`` (1/s).
+
+    ``name``: ``"poisson"`` (exponential inter-arrivals) or any
+    ``make_distribution`` name (``uniform`` / ``lognormal`` /
+    ``trace:<ALG>`` ...), mean-normalized so the long-run rate is
+    ``rate`` regardless of the family's native scale.
+    """
+    if rate <= 0.0:
+        raise ValueError("rate must be positive")
+    dist_name = "exponential" if name == "poisson" else name
+    dist = make_distribution(dist_name, seed=seed)
+    rng = np.random.default_rng(seed)
+    gaps = sample_np(dist, rng, (n,)).astype(float)
+    mean = float(dist.mean)
+    if mean <= 0.0:
+        raise ValueError(f"arrival distribution {name!r} has zero mean")
+    gaps = gaps / mean / rate
+    return np.cumsum(gaps)
+
+
+def laplacian_mode_rhs(n: int, m: int, rng: np.random.Generator
+                       ) -> np.ndarray:
+    """Unit-norm RHS spanning ``m`` random 1D-Dirichlet-Laplacian modes.
+
+    CG terminates once its residual polynomial annihilates every excited
+    eigencomponent, so a RHS built from ``m`` of the Laplacian's sine
+    modes converges in about ``m`` iterations — the knob that gives a
+    served workload a CONTROLLED service-demand distribution instead of
+    the degenerate every-request-takes-n-iterations one.
+    """
+    js = rng.choice(n, size=int(m), replace=False) + 1
+    i = np.arange(1, n + 1)
+    b = np.zeros(n)
+    for j in js:
+        b += rng.standard_normal() * np.sin(np.pi * j * i / (n + 1))
+    return b / np.linalg.norm(b)
+
+
+def synthetic_requests(A: DiaMatrix, n_requests: int, *,
+                       tol: float = 1e-8, maxiter: int = 500,
+                       deadline_s: float = math.inf,
+                       arrival: Optional[Sequence[float]] = None,
+                       modes: Optional[Tuple[int, int]] = None,
+                       M: Optional[str] = None, ip: str = "id",
+                       seed: int = 0) -> List[SolveRequest]:
+    """Randomized unit-norm RHS requests against one operator.
+
+    ``modes=(lo, hi)`` draws each RHS from :func:`laplacian_mode_rhs`
+    with a uniform mode count in ``[lo, hi]`` (service demand ~ mode
+    count); the default is a dense standard-normal RHS (demand ~ n).
+    """
+    rng = np.random.default_rng(seed)
+    arr = (np.zeros(n_requests) if arrival is None
+           else np.asarray(arrival, float))
+    if arr.shape[0] != n_requests:
+        raise ValueError("arrival vector must have one entry per request")
+    dtype = np.dtype(np.asarray(A.bands).dtype)
+    reqs = []
+    for i in range(n_requests):
+        if modes is not None:
+            m = int(rng.integers(modes[0], modes[1] + 1))
+            b = laplacian_mode_rhs(A.n, m, rng).astype(dtype)
+        else:
+            b = rng.standard_normal(A.n).astype(dtype)
+            b /= np.linalg.norm(b)
+        reqs.append(SolveRequest(rid=i, A=A, b=b, tol=tol,
+                                 deadline_s=deadline_s, maxiter=maxiter,
+                                 arrival_s=float(arr[i]), M=M, ip=ip))
+    return reqs

@@ -1,0 +1,102 @@
+"""Solve requests and their serve-side records.
+
+A :class:`SolveRequest` is one (operator, b, tol, deadline) unit of work
+submitted to the serving layer; batching COMPATIBILITY is decided by
+:func:`group_key` (same operator family/shape/dtype + preconditioner +
+inner product — what one compiled batch step can express) and by
+:func:`content_key` (group key + the operator's actual coefficients —
+what one in-flight batch can share, since every RHS column multiplies
+the SAME bands).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.krylov.operators import DiaMatrix
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    """One queued solve: ``A x = b`` to ``tol`` before ``deadline_s``.
+
+    ``arrival_s`` is the request's arrival time on the server clock
+    (seconds since serve start; the open-loop load generator stamps it,
+    interactive submission leaves 0.0 = available immediately).
+    ``deadline_s`` is RELATIVE to arrival; ``math.inf`` = best-effort.
+    """
+
+    rid: int
+    A: DiaMatrix
+    b: np.ndarray
+    tol: float = 1e-8
+    deadline_s: float = math.inf
+    maxiter: int = 500
+    arrival_s: float = 0.0
+    M: Optional[str] = None      # None (identity) | "jacobi"
+    ip: str = "id"               # "id" -> PIPECG, "A" -> PIPECR
+
+    def __post_init__(self):
+        if self.M not in (None, "jacobi"):
+            raise ValueError("serve supports M in {None, 'jacobi'} — "
+                             "callable preconditioners cannot be batched")
+        if self.ip not in ("id", "A"):
+            raise ValueError("ip must be 'id' (PIPECG) or 'A' (PIPECR)")
+
+
+def group_key(req: SolveRequest) -> Tuple:
+    """Compile-compatibility key: requests sharing it share one executable."""
+    return (tuple(req.A.offsets), int(req.A.n),
+            np.dtype(np.asarray(req.b).dtype).name, req.M, req.ip)
+
+
+def operator_fingerprint(A: DiaMatrix) -> str:
+    """Digest of the operator coefficients (batch-sharing identity)."""
+    h = hashlib.sha1()
+    h.update(repr(tuple(A.offsets)).encode())
+    h.update(np.ascontiguousarray(np.asarray(A.bands)).tobytes())
+    return h.hexdigest()[:16]
+
+
+def content_key(req: SolveRequest) -> Tuple:
+    """Batch-compatibility key: group key + operator coefficients."""
+    return group_key(req) + (operator_fingerprint(req.A),)
+
+
+@dataclasses.dataclass
+class ServeRecord:
+    """The serve-side answer to one request (solution + latency breakdown).
+
+    Block indices (``*_block``) count batch steps since serve start —
+    they are DETERMINISTIC (independent of wall-clock jitter), which is
+    what the starvation-bound property tests pin; the ``*_s`` fields are
+    the wall-clock story the latency benchmarks report.
+    """
+
+    rid: int
+    x: np.ndarray
+    iters: int
+    res_norm: float
+    converged: bool
+    arrival_s: float
+    admitted_s: float
+    finished_s: float
+    deadline_s: float = math.inf
+    restarts: int = 0
+    arrival_block: int = 0
+    admitted_block: int = 0
+    finished_block: int = 0
+
+    @property
+    def latency_s(self) -> float:
+        """End-to-end sojourn: finish - arrival."""
+        return self.finished_s - self.arrival_s
+
+    @property
+    def wait_s(self) -> float:
+        """Queueing delay: admission - arrival."""
+        return self.admitted_s - self.arrival_s

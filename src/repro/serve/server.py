@@ -1,0 +1,222 @@
+"""The solver server: queue -> continuous batcher -> records.
+
+One :class:`SolverServer` owns a request queue, a set of per-operator
+:class:`~repro.serve.batcher.ContinuousBatcher` s (sharing the
+module-level compiled-step cache), and the serve loop:
+
+1. ingest arrived requests (open-loop arrival stamps) into the queue;
+2. bind the batcher of the most urgent group (batchers switch groups
+   only when idle — a batch drains its group before yielding);
+3. admit EDF-ordered compatible requests into free columns;
+4. advance the batch one block (chaos faults apply first);
+5. retire columns that converged or hit their iteration cap, verify the
+   TRUE residual ``||b - A x||`` on the host (the Cools-style exit check
+   that catches silently corrupted recurrences), and restart the column
+   from scratch when verification or finiteness fails (bounded by
+   ``max_restarts``).
+
+Latency bookkeeping is dual: wall-clock seconds (the benchmark story)
+and block indices (deterministic — what the property tests pin).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.krylov.operators import DiaMatrix
+from repro.serve.batcher import ContinuousBatcher
+from repro.serve.chaos import ServeChaos
+from repro.serve.metrics import ServeStats, summarize
+from repro.serve.queue import RequestQueue
+from repro.serve.request import ServeRecord, SolveRequest, content_key
+
+
+def _np_dia_matvec(A: DiaMatrix, x: np.ndarray) -> np.ndarray:
+    """Host-numpy DIA matvec (mirrors ``DiaMatrix.matvec`` semantics)."""
+    bands = np.asarray(A.bands, np.float64)
+    n = x.shape[0]
+    y = np.zeros_like(x)
+    for k, off in enumerate(A.offsets):
+        if off == 0:
+            y += bands[k] * x
+        elif off > 0:
+            y[: n - off] += bands[k, : n - off] * x[off:]
+        else:
+            o = -off
+            y[o:] += bands[k, o:] * x[: n - o]
+    return y
+
+
+class SolverServer:
+    """Continuous-batching solve server over one device."""
+
+    def __init__(self, *, k_slots: int = 8, engine: str = "naive",
+                 step_block: int = 8, chaos: Optional[ServeChaos] = None,
+                 max_restarts: int = 3, poll_s: float = 0.002):
+        self.k_slots = int(k_slots)
+        self.engine = engine
+        self.step_block = int(step_block)
+        self.chaos = chaos
+        self.max_restarts = int(max_restarts)
+        self.poll_s = float(poll_s)
+        self._pending: List[SolveRequest] = []
+        self._next_rid = 0
+        self.records: List[ServeRecord] = []
+        self.batchers: Dict[Tuple, ContinuousBatcher] = {}
+        self.blocks = 0
+        self.per_block_active: List[int] = []
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, req: SolveRequest) -> int:
+        """Queue a request for the next :meth:`run`; returns its rid."""
+        if req.rid is None or req.rid < 0:
+            req.rid = self._next_rid
+        self._next_rid = max(self._next_rid, req.rid + 1)
+        self._pending.append(req)
+        return req.rid
+
+    def submit_all(self, reqs: List[SolveRequest]) -> List[int]:
+        """Vector :meth:`submit`."""
+        return [self.submit(r) for r in reqs]
+
+    def warmup(self, template: SolveRequest) -> None:
+        """Pre-compile every executable on ``template``'s batch path.
+
+        Runs one admit -> step -> take -> release round on the template's
+        batcher so XLA compilation happens HERE, not inside a measured
+        (or deadline-bearing) serve run.  The compiled-step cache is
+        module-level, so one warmup covers every same-family operator.
+        """
+        cur = self._batcher_for(template)
+        probe = dataclasses.replace(template, rid=-1)
+        cur.admit(0, probe)
+        cur.step()
+        cur.take(0)
+        cur.release(0)
+
+    # -- serve loop ---------------------------------------------------------
+
+    def _batcher_for(self, req: SolveRequest) -> ContinuousBatcher:
+        key = content_key(req)
+        if key not in self.batchers:
+            self.batchers[key] = ContinuousBatcher(
+                req.A, self.k_slots, engine=self.engine, M=req.M,
+                ip=req.ip, step_block=self.step_block)
+        return self.batchers[key]
+
+    def run(self) -> ServeStats:
+        """Drain every submitted request; returns the serving summary."""
+        t0 = time.perf_counter()
+        clock = lambda: time.perf_counter() - t0
+        pending = sorted(self._pending, key=lambda r: r.arrival_s)
+        self._pending = []
+        queue = RequestQueue()
+        run_records: List[ServeRecord] = []
+        # per-slot bookkeeping of the CURRENT batcher
+        slot_meta: Dict[int, Dict] = {}
+        cur: Optional[ContinuousBatcher] = None
+        cur_key: Optional[Tuple] = None
+
+        arrival_block: Dict[int, int] = {}
+
+        def ingest(now: float) -> None:
+            while pending and pending[0].arrival_s <= now:
+                req = pending.pop(0)
+                arrival_block[req.rid] = self.blocks
+                queue.push(req)
+
+        while pending or len(queue) or (cur is not None and cur.active):
+            ingest(clock())
+            # bind the most urgent group when idle
+            if cur is None or cur.active == 0:
+                if len(queue) == 0:
+                    if not pending:
+                        break
+                    dt = pending[0].arrival_s - clock()
+                    if dt > 0:
+                        time.sleep(min(dt, self.poll_s))
+                    continue
+                head = queue.peek()
+                cur = self._batcher_for(head)
+                cur_key = content_key(head)
+                slot_meta = {}
+            # admit EDF-compatible requests into free columns
+            for slot in cur.free_slots():
+                req = queue.pop_compatible(cur_key)
+                if req is None:
+                    break
+                cur.admit(slot, req)
+                slot_meta[slot] = {"req": req, "admitted_s": clock(),
+                                   "admitted_block": self.blocks,
+                                   "restarts": 0}
+            if cur.active == 0:
+                continue
+            # chaos faults fire before the block they disrupt
+            if self.chaos is not None:
+                extra = self.chaos.pre_step(cur, self.blocks)
+                if extra > 0.0:
+                    time.sleep(extra)
+            done, iters, rr = cur.step()
+            self.blocks += 1
+            self.per_block_active.append(cur.active)
+            now = clock()
+            ingest(now)
+            for slot, req in enumerate(cur.slots):
+                if req is None:
+                    continue
+                meta = slot_meta[slot]
+                healthy = bool(np.isfinite(rr[slot]))
+                capped = bool(iters[slot] >= req.maxiter)
+                if healthy and not (done[slot] or capped):
+                    continue
+                x = cur.take(slot) if healthy else None
+                ok, res_true = (self._verify(req, x) if healthy
+                                else (False, math.inf))
+                if not ok and meta["restarts"] < self.max_restarts \
+                        and not (healthy and capped):
+                    # restart the column from scratch (kill/corrupt path)
+                    cur.release(slot)
+                    cur.admit(slot, req)
+                    meta["restarts"] += 1
+                    continue
+                rec = ServeRecord(
+                    rid=req.rid, x=x, iters=int(iters[slot]),
+                    res_norm=res_true,
+                    converged=bool(ok),
+                    arrival_s=req.arrival_s,
+                    admitted_s=meta["admitted_s"], finished_s=now,
+                    deadline_s=req.deadline_s,
+                    restarts=meta["restarts"],
+                    arrival_block=arrival_block.get(req.rid, 0),
+                    admitted_block=meta["admitted_block"],
+                    finished_block=self.blocks)
+                run_records.append(rec)
+                cur.release(slot)
+                slot_meta.pop(slot, None)
+        wall = clock()
+        drained = (not pending and len(queue) == 0
+                   and all(b.active == 0 for b in self.batchers.values()))
+        self.records.extend(run_records)
+        return summarize(run_records, self.k_slots, self.per_block_active,
+                         wall, drained)
+
+    @staticmethod
+    def _verify(req: SolveRequest, x: np.ndarray) -> Tuple[bool, float]:
+        """Host-side true-residual exit check: ||b - A x|| <= tol ||b||.
+
+        Pure numpy (no device dispatch on the retire path) — the serve
+        loop's rendering of the Cools attainable-accuracy exit test: a
+        silently corrupted recurrence (chaos ``corrupt``) converges on
+        its OWN residual while the true one stalls, so only this check
+        catches it.
+        """
+        b = np.asarray(req.b, np.float64)
+        y = _np_dia_matvec(req.A, np.asarray(x, np.float64))
+        res = float(np.linalg.norm(b - y))
+        bn = float(np.linalg.norm(b))
+        return bool(np.isfinite(res) and res <= req.tol * bn * 1.01), res

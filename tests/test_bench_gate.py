@@ -10,6 +10,7 @@ sys.path.insert(0, str(ROOT))
 from benchmarks.check_regression import (  # noqa: E402
     DEFAULT_BASELINE,
     RECOVERY_TRACKED,
+    SERVE_TRACKED,
     TRACKED,
     compare,
     new_rows,
@@ -129,6 +130,60 @@ def test_recovery_key_compares_fault_rows():
     assert compare({"kernels": {}, **base}, {"kernels": {"k": {}}, **base},
                    0.10, key="recovery") == []
     assert set(RECOVERY_TRACKED) == {"overhead_ratio"}
+
+
+def _srow(**over):
+    row = {"throughput_speedup": 2.5, "occupancy_mean": 0.9,
+           "p50_s": 0.02, "p99_s": 0.08, "p999_s": 0.1,
+           "drained": True, "accuracy_ok": True}
+    row.update(over)
+    return row
+
+
+def test_serve_key_compares_serving_rows():
+    """--key serve gates the BENCH_serve.json rows: the continuous-batching
+    throughput/occupancy wins must not shrink and the drain/accuracy/model
+    flags must hold (wall-clock quantiles are recorded, not gated)."""
+    base = {"serve": {"burst_k8_n256": _srow()}}
+    assert compare(base, base, 0.10, key="serve") == []
+    worse = {"serve": {"burst_k8_n256": _srow(throughput_speedup=2.0)}}
+    assert any("throughput_speedup" in f
+               for f in compare(worse, base, 0.10, key="serve"))
+    # latency quantiles are untracked: a slower container never fails
+    slow = {"serve": {"burst_k8_n256": _srow(p99_s=8.0)}}
+    assert compare(slow, base, 0.10, key="serve") == []
+    undrained = {"serve": {"burst_k8_n256": _srow(drained=False)}}
+    assert any("drained" in f
+               for f in compare(undrained, base, 0.10, key="serve"))
+    inaccurate = {"serve": {"burst_k8_n256": _srow(accuracy_ok=False)}}
+    assert any("accuracy_ok" in f
+               for f in compare(inaccurate, base, 0.10, key="serve"))
+    model_base = {"serve": {"paced_rho0.7_k8": {"p99_rel_err": 0.02,
+                                                "model_ok": True}}}
+    model_off = {"serve": {"paced_rho0.7_k8": {"p99_rel_err": 0.4,
+                                               "model_ok": False}}}
+    assert any("model_ok" in f
+               for f in compare(model_off, model_base, 0.10, key="serve"))
+    assert set(SERVE_TRACKED) == {"throughput_speedup", "occupancy_mean"}
+
+
+def test_committed_serve_baseline_consistent():
+    """The committed serve baseline exists, parses, and carries a gated
+    burst row + paced row with every must-hold flag True (so the serve
+    gate is never vacuously green)."""
+    path = Path(DEFAULT_BASELINE).parent / "BENCH_serve.baseline.json"
+    with open(path) as f:
+        baseline = json.load(f)
+    rows = baseline.get("serve", {})
+    burst = [r for name, r in rows.items() if name.startswith("burst")]
+    paced = [r for name, r in rows.items() if name.startswith("paced")]
+    assert burst and paced
+    for row in burst:
+        assert row["throughput_speedup"] >= 2.0
+        assert row["drained"] is True and row["accuracy_ok"] is True
+    for row in paced:
+        assert row["model_ok"] is True
+        assert row["p50_rel_err"] <= 0.10 and row["p99_rel_err"] <= 0.10
 
 
 def test_committed_recovery_baseline_consistent():

@@ -21,10 +21,15 @@ from repro.experiments.report import (
     FAULT_CSV_HEADER,
     REPORT_SECTIONS,
     RUNTIME_CSV_HEADER,
+    SERVE_CSV_HEADER,
     SPEEDUP_CSV_HEADER,
     write_fault_csv,
+    write_serve_csv,
 )
-from repro.experiments.validation import validate_fault_cells
+from repro.experiments.validation import (
+    validate_fault_cells,
+    validate_serve_cells,
+)
 
 TINY = CampaignSpec(
     name="tiny",
@@ -47,6 +52,11 @@ TINY = CampaignSpec(
     # the slow lane (tests/test_elastic.py) and the CI smoke campaign;
     # synthetic fault cells below exercise its validation/report plumbing
     fault_kinds=(),
+    # the serve stage runs real wall-clock batched solves plus a long
+    # steady-state replay — covered by tests/test_serve.py and the CI
+    # serve-smoke job; synthetic serve records below exercise its
+    # validation/report plumbing (same pattern as the fault stage)
+    serve_requests=0,
     seed=1234,
 )
 
@@ -64,6 +74,32 @@ def _fault_cell(**over):
     }
     cell.update(over)
     return cell
+
+
+def _latency(p50=0.02, p99=0.08, p999=0.12):
+    return {"n": 16, "mean": p50, "p50": p50, "p99": p99, "p999": p999,
+            "max": p999}
+
+
+def _serve_record(**over):
+    stats = {"n_requests": 16, "n_converged": 16, "wall_s": 0.5,
+             "throughput_rps": 32.0, "occupancy_mean": 0.9,
+             "latency": _latency(), "wait": _latency(0.001, 0.01, 0.02),
+             "deadline_met_frac": 1.0, "restarts": 0, "drained": True}
+    rec = {
+        "burst": {"throughput_speedup": 2.5, "batched": dict(stats),
+                  "sequential": dict(stats, throughput_rps=12.0)},
+        "accuracy": [{"rid": 0, "max_abs_diff": 1e-13, "iters_batched": 40,
+                      "iters_solo": 40, "match_1e10": True}],
+        "paced": {"lam": 100.0, "rho": 0.7, "t_iter_s": 1e-4,
+                  "n_replay": 4096, "wall": dict(stats),
+                  "sim": {"p50": 0.020, "p99": 0.080, "p999": 0.120},
+                  "sim_occupancy": 0.9,
+                  "predicted": {"p50": 0.021, "p99": 0.082, "p999": 0.125},
+                  "rel_err": {"p50": 0.05, "p99": 0.025, "p999": 0.042}},
+    }
+    rec.update(over)
+    return rec
 
 
 @pytest.fixture(scope="module")
@@ -206,6 +242,77 @@ def test_fault_stage_disabled_keeps_schema(campaign):
     # no fault acceptance rows are emitted for a disabled stage
     assert not any("fault stage" in k
                    for k in result["validation"]["acceptance"])
+
+
+def test_serve_stage_disabled_keeps_schema(campaign):
+    """With serve_requests=0 the record still carries the (empty) serve
+    keys and REPORT.md still renders section 10 — schema stability."""
+    out, result = campaign
+    assert result["serve"] == {}
+    assert result["validation"]["serve"] == {}
+    report = (out / "REPORT.md").read_text()
+    assert REPORT_SECTIONS[9] in report
+    assert "serve stage disabled" in report
+    assert not (out / "figures" / "campaign_serve.csv").exists()
+    # no serve acceptance rows are emitted for a disabled stage
+    assert not any(k.startswith("serve:")
+                   for k in result["validation"]["acceptance"])
+
+
+def test_validate_serve_cells_criteria():
+    v = validate_serve_cells(_serve_record())
+    assert v["throughput_ge_2x"] and v["model_within_tolerance"]
+    assert v["accuracy_ok"] and v["drained"] and v["all_converged"]
+    assert v["tolerance"] == 0.10
+    assert v["accuracy_max_abs_diff"] == 1e-13
+
+    # a sub-2x batched throughput fails the throughput gate
+    slow = _serve_record()
+    slow["burst"] = dict(slow["burst"], throughput_speedup=1.4)
+    assert not validate_serve_cells(slow)["throughput_ge_2x"]
+    # a p99 miss beyond the tolerance fails the model gate (p999 is
+    # recorded but not gated — finite-run tail atoms are coarser)
+    off = _serve_record()
+    off["paced"] = dict(off["paced"],
+                        rel_err={"p50": 0.02, "p99": 0.2, "p999": 0.3})
+    assert not validate_serve_cells(off)["model_within_tolerance"]
+    tail = _serve_record()
+    tail["paced"] = dict(tail["paced"],
+                         rel_err={"p50": 0.02, "p99": 0.05, "p999": 0.4})
+    assert validate_serve_cells(tail)["model_within_tolerance"]
+    # an accuracy miss (batched vs solo drift) is flagged
+    drift = _serve_record(accuracy=[{"rid": 0, "max_abs_diff": 1e-6,
+                                     "iters_batched": 40, "iters_solo": 41,
+                                     "match_1e10": False}])
+    assert not validate_serve_cells(drift)["accuracy_ok"]
+    # disabled stage -> empty validation
+    assert validate_serve_cells({}) == {}
+
+
+def test_serve_acceptance_checks():
+    from repro.experiments.campaign import _acceptance
+
+    ok = validate_serve_cells(_serve_record())
+    acc = _acceptance(TINY, [], {}, serve_validation=ok)
+    assert acc["serve: batched throughput >= 2x sequential one-shot"]
+    assert acc["serve: queueing-model p50/p99 within the campaign "
+               "tolerance"]
+    assert acc["serve: mid-flight-retired solutions match solo to 1e-10"]
+    assert acc["serve: queue drained with every request converged"]
+
+    bad = _serve_record()
+    bad["burst"] = dict(bad["burst"], throughput_speedup=1.0)
+    acc = _acceptance(TINY, [], {},
+                      serve_validation=validate_serve_cells(bad))
+    assert not acc["serve: batched throughput >= 2x sequential one-shot"]
+
+
+def test_serve_csv_schema(tmp_path):
+    path = write_serve_csv(tmp_path, _serve_record())
+    lines = path.read_text().splitlines()
+    assert lines[0] == SERVE_CSV_HEADER
+    assert len(lines) == 4               # p50 / p99 / p999
+    assert lines[1].startswith("p50,0.020000,0.020000,0.021000,")
 
 
 def test_validate_fault_cells_criteria():

@@ -1,0 +1,314 @@
+"""Property / chaos / warm-reuse tests over the serving layer.
+
+Three properties are pinned (hypothesis drives them when installed; a
+fixed seed sweep otherwise, so the suite passes without the package):
+
+* no starvation — with EDF admission every request is admitted within
+  the block bound documented in ``repro/serve/queue.py``;
+* admission independence — admitting a new RHS into a free column never
+  perturbs the in-flight columns' recurrences, bit-exactly;
+* retire equivalence — a column retired mid-flight carries the SAME
+  solution (bitwise) a solo serve of that request produces, at the same
+  iteration count.
+
+Plus: warm-reuse pins (second identical-shape request re-traces nothing
+and re-tunes nothing), a chaos/load lane (trace-driven arrivals +
+kill/stall/corrupt faults; slow marker, subprocess), and a serve_exec
+schema smoke.
+"""
+import math
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.krylov.operators import tridiagonal_laplacian
+from repro.serve import (
+    ContinuousBatcher,
+    RequestQueue,
+    ServeChaos,
+    SolverServer,
+    arrival_times,
+    laplacian_mode_rhs,
+    synthetic_requests,
+)
+
+from conftest import run_subprocess_with_retry
+
+N = 64          # operator size of the property runs
+K = 4           # batch slots
+B = 4           # iterations per batch step
+MAXITER = 200
+
+
+def _requests(seed, n_reqs, *, deadlines=None, arrival=None):
+    A = tridiagonal_laplacian(N)
+    reqs = synthetic_requests(A, n_reqs, tol=1e-10, maxiter=MAXITER,
+                              modes=(4, 24), arrival=arrival, seed=seed)
+    if deadlines is not None:
+        for r, d in zip(reqs, deadlines):
+            r.deadline_s = float(d)
+    return reqs
+
+
+def _serve(reqs, *, k_slots=K, chaos=None):
+    srv = SolverServer(k_slots=k_slots, engine="naive", step_block=B,
+                       chaos=chaos)
+    srv.warmup(reqs[0])
+    srv.submit_all(reqs)
+    stats = srv.run()
+    return srv, stats
+
+
+def _check_no_starvation(seed):
+    rng = np.random.default_rng(seed)
+    n_reqs = 3 * K
+    deadlines = rng.uniform(0.5, 5.0, n_reqs)
+    reqs = _requests(seed, n_reqs, deadlines=deadlines)
+    srv, stats = _serve(reqs)
+    assert stats.drained and stats.n_converged == n_reqs
+    # absolute EDF order (all requests arrive at t=0)
+    order = sorted(reqs, key=lambda r: (r.arrival_s + r.deadline_s, r.rid))
+    rank = {r.rid: i for i, r in enumerate(order)}
+    blocks_per_solve = math.ceil(MAXITER / B)
+    for rec in srv.records:
+        e = rank[rec.rid]  # earlier-deadline peers ahead of this request
+        bound = math.ceil((e + K) / K) * blocks_per_solve
+        waited = rec.admitted_block - rec.arrival_block
+        assert waited <= bound, (rec.rid, waited, bound)
+
+
+def _check_admission_independence(seed):
+    A = tridiagonal_laplacian(N)
+    reqs = _requests(seed, 2)
+    solo = ContinuousBatcher(A, K, engine="naive", step_block=B)
+    both = ContinuousBatcher(A, K, engine="naive", step_block=B)
+    solo.admit(0, reqs[0])
+    both.admit(0, reqs[0])
+    solo.step()
+    both.step()
+    both.admit(1, reqs[1])  # mid-flight admission into a free column
+    for _ in range(3):
+        solo.step()
+        both.step()
+    for leaf in ("x", "r", "u", "p"):
+        a = np.asarray(solo.state["vecs"][leaf][0])
+        b = np.asarray(both.state["vecs"][leaf][0])
+        assert np.array_equal(a, b), leaf
+
+
+def _check_retire_equivalence(seed):
+    n_reqs = 2 * K
+    reqs = _requests(seed, n_reqs)
+    srv, stats = _serve(reqs)
+    assert stats.drained and stats.n_converged == n_reqs
+    batched = {r.rid: r for r in srv.records}
+    for req in reqs[:3]:
+        solo_srv, _ = _serve([_requests(seed, n_reqs)[req.rid]])
+        solo = solo_srv.records[0]
+        got = batched[req.rid]
+        assert solo.iters == got.iters, req.rid
+        assert np.array_equal(solo.x, got.x), req.rid
+
+
+if HAVE_HYPOTHESIS:
+    _prop = settings(max_examples=8, deadline=None,
+                     suppress_health_check=list(HealthCheck))
+    _seeds = given(st.integers(min_value=0, max_value=10_000))
+
+    @_prop
+    @_seeds
+    def test_no_starvation_past_deadline_bound(seed):
+        _check_no_starvation(seed)
+
+    @_prop
+    @_seeds
+    def test_admission_never_perturbs_in_flight_columns(seed):
+        _check_admission_independence(seed)
+
+    @_prop
+    @_seeds
+    def test_retired_column_matches_solo_run(seed):
+        _check_retire_equivalence(seed)
+else:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_no_starvation_past_deadline_bound(seed):
+        _check_no_starvation(seed)
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_admission_never_perturbs_in_flight_columns(seed):
+        _check_admission_independence(seed)
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_retired_column_matches_solo_run(seed):
+        _check_retire_equivalence(seed)
+
+
+def test_queue_is_edf_within_groups():
+    reqs = _requests(0, 4, deadlines=[3.0, 1.0, 2.0, 1.0])
+    q = RequestQueue()
+    for r in reqs:
+        q.push(r)
+    key = q.peek_group()
+    order = [q.pop_compatible(key).rid for _ in range(4)]
+    assert order == [1, 3, 2, 0]  # deadline, ties by arrival order
+    assert len(q) == 0
+
+
+def test_arrival_times_hit_target_rate():
+    t = arrival_times("poisson", 4000, rate=50.0, seed=0)
+    assert t.shape == (4000,)
+    assert np.all(np.diff(t) >= 0)
+    assert 4000 / t[-1] == pytest.approx(50.0, rel=0.1)
+    tr = arrival_times("trace:PIPECG", 4000, rate=50.0, seed=0)
+    assert 4000 / tr[-1] == pytest.approx(50.0, rel=0.1)
+
+
+def test_mode_limited_rhs_controls_service_demand():
+    """CG demand tracks the excited Krylov dimension: an m-mode RHS
+    converges in ~m iterations — the serve workload's service-law knob."""
+    rng = np.random.default_rng(0)
+    A = tridiagonal_laplacian(256)
+    for m in (8, 32):
+        b = laplacian_mode_rhs(256, m, rng)
+        reqs = synthetic_requests(A, 1, tol=1e-8, maxiter=600, seed=0)
+        reqs[0].b = b
+        srv, stats = _serve(reqs, k_slots=2)
+        iters = srv.records[0].iters
+        assert stats.n_converged == 1
+        assert iters <= 2 * m + B, (m, iters)
+
+
+def test_warm_reuse_no_retrace_no_retune():
+    """A second identical-shape request re-traces NO executable and
+    re-tunes NO kernel block — the warm serve path (satellite 4)."""
+    from repro.kernels import autotune
+    from repro.serve.batcher import clear_compile_cache
+
+    clear_compile_cache()
+    autotune.clear_cache()
+    n = 96  # unique shape: no other test warms this key
+    A = tridiagonal_laplacian(n)
+    reqs = synthetic_requests(A, 2, tol=1e-8, maxiter=200, modes=(4, 16),
+                              seed=3)
+    srv1, stats1 = _serve([reqs[0]], k_slots=2)
+    (batcher1,) = srv1.batchers.values()
+    cold_traces = dict(batcher1.trace_counts)
+    cold_tune = autotune.cache_stats()
+    assert cold_traces["step"] >= 1 and cold_traces["init"] >= 1
+
+    # same static config, DIFFERENT operator coefficients: bands are a
+    # runtime operand, so the second server shares every executable
+    A2 = tridiagonal_laplacian(n)
+    A2 = type(A2)(offsets=A2.offsets, bands=np.asarray(A2.bands) * 1.5)
+    reqs2 = synthetic_requests(A2, 1, tol=1e-8, maxiter=200, modes=(4, 16),
+                               seed=4)
+    srv2, stats2 = _serve(reqs2, k_slots=2)
+    (batcher2,) = srv2.batchers.values()
+    assert batcher2.compiled is batcher1.compiled
+    assert dict(batcher2.trace_counts) == cold_traces
+    warm_tune = autotune.cache_stats()
+    assert warm_tune["misses"] == cold_tune["misses"]
+    assert stats1.n_converged == 1 and stats2.n_converged == 1
+
+
+def test_autotune_cache_hit_counter():
+    from repro.kernels import autotune
+
+    autotune.clear_cache()
+    kw = dict(words_per_row=6.0, min_block=2)
+    b1 = autotune.best_block("serve_test", 4096, np.float64, **kw)
+    s = autotune.cache_stats()
+    assert s["misses"] == 1 and s["hits"] == 0
+    b2 = autotune.best_block("serve_test", 4096, np.float64, **kw)
+    s = autotune.cache_stats()
+    assert s["misses"] == 1 and s["hits"] == 1 and b1 == b2
+
+
+def test_chaos_restart_recovers_and_converges():
+    """A killed column restarts from scratch and still converges to its
+    true-residual tolerance; a corrupted one is caught by the host-side
+    exit check (never returned as converged with a bad residual)."""
+    reqs = _requests(7, K)
+    chaos = ServeChaos(["kill:0@1", "corrupt:1@2"])
+    srv, stats = _serve(reqs, chaos=chaos)
+    assert stats.drained and stats.n_converged == len(reqs)
+    assert stats.restarts >= 2  # the kill victim AND the corrupt victim
+    assert {e.kind for e in chaos.events} == {"kill", "corrupt"}
+    for rec in srv.records:
+        req = reqs[rec.rid]
+        bn = float(np.linalg.norm(np.asarray(req.b, np.float64)))
+        assert rec.res_norm <= req.tol * bn * 1.01
+
+
+@pytest.mark.slow
+def test_chaos_load_lane_drains_under_faults():
+    """Trace-driven open-loop arrivals + kill/stall faults: the queue
+    drains with EVERY accepted request converged within its tolerance
+    (satellite 2; subprocess lane like the elastic fault tests)."""
+    script = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np
+from repro.core.krylov.operators import tridiagonal_laplacian
+from repro.serve import ServeChaos, SolverServer, arrival_times, \
+    synthetic_requests
+
+A = tridiagonal_laplacian(128)
+n_reqs = 24
+arr = arrival_times("trace:PIPECG", n_reqs, rate=200.0, seed=11)
+reqs = synthetic_requests(A, n_reqs, tol=1e-9, maxiter=400, modes=(8, 64),
+                          arrival=arr, seed=11)
+chaos = ServeChaos(["kill:1@3", "stall:0@6", "kill:2@9", "corrupt:3@5"])
+srv = SolverServer(k_slots=4, engine="naive", step_block=8, chaos=chaos)
+srv.warmup(reqs[0])
+srv.submit_all(reqs)
+stats = srv.run()
+assert stats.drained, "queue did not drain"
+assert stats.n_requests == n_reqs
+assert stats.n_converged == n_reqs, (stats.n_converged, n_reqs)
+assert stats.restarts >= 2
+for rec in srv.records:
+    req = reqs[rec.rid]
+    bn = float(np.linalg.norm(np.asarray(req.b, np.float64)))
+    assert rec.res_norm <= req.tol * bn * 1.01, (rec.rid, rec.res_norm)
+print("CHAOS_LANE_OK", stats.restarts)
+"""
+    import os
+    env = dict(os.environ)
+    res = run_subprocess_with_retry(script, env=env)
+    assert "CHAOS_LANE_OK" in res.stdout
+
+
+def test_serve_exec_smoke_schema():
+    """A tiny end-to-end serve_exec run keeps the BENCH schema stable
+    (throughput/accuracy/model gates are benched at real sizes)."""
+    from repro.experiments.serve_exec import bench_record, run_serve_exec
+    from repro.experiments.spec import CampaignSpec
+    from repro.experiments.validation import validate_serve_cells
+
+    spec = CampaignSpec(name="serve-test", serve_requests=8, serve_n=96,
+                        serve_modes=(8, 48), serve_tol=1e-8,
+                        serve_maxiter=300, serve_k_slots=4,
+                        serve_step_block=8, serve_rho=0.5,
+                        serve_replay_requests=512, seed=5)
+    serve = run_serve_exec(spec)
+    for key in ("burst", "accuracy", "paced", "trace_counts",
+                "autotune_stats"):
+        assert key in serve, key
+    v = validate_serve_cells(serve)
+    assert v["drained"] and v["all_converged"] and v["accuracy_ok"]
+    rec = bench_record(serve)
+    (burst_key,) = [k for k in rec["serve"] if k.startswith("burst")]
+    row = rec["serve"][burst_key]
+    assert {"throughput_speedup", "p50_s", "p99_s", "p999_s",
+            "drained", "accuracy_ok"} <= set(row)
+    (paced_key,) = [k for k in rec["serve"] if k.startswith("paced")]
+    assert {"p50_rel_err", "p99_rel_err", "model_ok"} <= set(
+        rec["serve"][paced_key])

@@ -37,6 +37,11 @@ def test_serve_generates_tokens():
     out = serve(cfg, batch=2, prompt_len=8, decode_steps=6,
                 progress=lambda *_: None)
     assert out["tokens"].shape == (2, 6)
+    # decode-step latencies are routed through the solver-serving
+    # quantile schema (repro.serve.metrics.LatencyStats)
+    lat = out["step_latency"]
+    assert lat["n"] == 5
+    assert 0.0 < lat["p50"] <= lat["p99"] <= lat["max"]
 
 
 def test_serve_hybrid_and_codebook_archs():
