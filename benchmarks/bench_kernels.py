@@ -12,21 +12,22 @@ nb = number of bands; Jacobi-preconditioned DIA operator):
       8 AXPYs x 3 + 3 dots x 2              = 30 n   (update + dots)
     + M-apply (2 reads + 1 write)           =  3 n
     + SpMV (nb bands + x read + y write)    = (nb+2) n
-                                     total  = (35+nb) n   -> 38 n tridiag
+    + ABFT aux: ww self-dot + chk(w,c,u)    =  4 n
+                                     total  = (39+nb) n   -> 42 n tridiag
   pipecg_fused (update-kernel engine path):
       10 reads + 8 writes                   = 18 n
     + M-apply + SpMV as above               = (nb+5) n    -> 26 n tridiag
   pipecg_spmv_fused (single sweep, k RHS batched):
       x,r reads + x,r,u,p writes            =  6 n  per RHS
     + u,p resident reads                    =  2 n  per RHS
-    + bands + diag^-1 resident              = (nb+1) n / k
-                                     total  = (8 + (nb+1)/k) n -> 12 n
-                                              tridiag at k=1, 8.5 n at k=8
+    + bands + diag^-1 + c=A^T 1 resident    = (nb+2) n / k
+                                     total  = (8 + (nb+2)/k) n -> 13 n
+                                              tridiag at k=1, 8.6 n at k=8
   pipecg_spmv_halo (sharded single sweep, per shard of n_l rows):
-      same (8 + nb + 1) n_l kernel traffic
+      same (8 + nb + 2) n_l kernel traffic
     + halo operands u,p (2h x 2 sides x 2)  =  8 h          (ppermute wire)
-    + psum payload                          =  5 k  words   (all-reduce)
-                                     total  -> 12 n_l + O(h) << 14 n_l
+    + psum payload (5 dots + ABFT chk)      =  6 k  words   (all-reduce)
+                                     total  -> 13 n_l + O(h) <= 14 n_l
 
 Emits BENCH_kernels.json next to the repo root so the perf trajectory is
 tracked PR over PR.  Autotuner choices are persisted to
@@ -101,7 +102,7 @@ def _hlo_overlap_flags():
 
 
 def _words_naive_iter(n, nb):
-    return (35 + nb) * n
+    return (39 + nb) * n
 
 
 def _words_update_kernel_iter(n, nb):
@@ -109,7 +110,7 @@ def _words_update_kernel_iter(n, nb):
 
 
 def _words_single_sweep_iter(n, nb, k=1):
-    return (8 + (nb + 1) / k) * n
+    return (8 + (nb + 2) / k) * n
 
 
 def _modeled_us(words, dtype_bytes=4):
@@ -119,9 +120,9 @@ def _modeled_us(words, dtype_bytes=4):
 def _words_sharded_iter(n_local, nb, halo, k=1):
     """Per-shard words of one sharded single-sweep iteration: the kernel
     sweep + the ppermute'd halo operands + the psum payload."""
-    return ((8 + (nb + 1) / k) * n_local   # kernel sweep (per RHS)
+    return ((8 + (nb + 2) / k) * n_local   # kernel sweep (per RHS)
             + 8 * halo                     # u/p halos, 2h x 2 sides x 2 vecs
-            + 5)                           # partial-reduction row (psum)
+            + 6)                           # partial row + ABFT chk (psum)
 
 
 def _words_bicgstab_naive_iter(n, nb):
@@ -133,15 +134,16 @@ def _words_bicgstab_naive_iter(n, nb):
 
 def _words_pipebicgstab_iter(n, nb):
     """Fused p-BiCGStab sweep: x,r,pa,a,r_hat tiled reads + 7 writes
-    + w,t,c + bands resident (kernels/pipebicgstab_fused.py)."""
-    return (15 + nb) * n
+    + w,t,c + bands + ABFT column-sum vector resident
+    (kernels/pipebicgstab_fused.py)."""
+    return (16 + nb) * n
 
 
 def _words_pipebicgstab_sharded_iter(n_local, nb, halo):
     """Per-shard fused p-BiCGStab sweep + w/t/c halos + Gram psum."""
-    return ((15 + nb) * n_local
+    return ((16 + nb) * n_local
             + 12 * halo                    # w/t/c halos, 2h x 2 sides x 3
-            + 36)                          # (6, 6) partial Gram (psum)
+            + 42)                          # (7, 6) Gram + chk row (psum)
 
 
 def run(out_dir=None):
@@ -398,9 +400,12 @@ def run(out_dir=None):
             gram.astype(jnp.float64)
             - (want_c @ want_c.T).astype(jnp.float64))))
         # per-iteration words: kernel sweep + block-end reconstruction
+        # + the once-per-block ABFT state-deviation partial
+        # 1^T b - c^T x - 1^T r (csum, x, r reads — distributed.py)
         w_sweep = (2 * l_depth + 3 + nb) * n
         w_recon = (2 * l_depth + 7) * n
-        w_iter = (w_sweep + w_recon) / l_depth
+        w_dev = 3 * n
+        w_iter = (w_sweep + w_recon + w_dev) / l_depth
         w_d1 = _words_single_sweep_iter(n, nb)
         us = _modeled_us(w_iter)
         rows.append((f"kernel/ghost_chain/l{l_depth}", us,

@@ -32,6 +32,17 @@ selected ``--key``:
                                 retires match solo runs, M/G/k queueing
                                 model within its validation tolerance)
 
+``--key abft`` compares the detection rows of ``BENCH_abft.json``
+(one per solver x corruption magnitude):
+
+* ``detect_lag_iters``        — lower is better (iterations from fault
+                                onset to the in-flight detector trip)
+* ``detection_ok`` / ``detected_in_window``
+                              — must stay True (supra-threshold
+                                corruption keeps tripping within the
+                                modeled window, sub-threshold never
+                                trips, zero clean false positives)
+
 Row-set semantics (audited — the three ways a row set can drift):
 
 * rows present only in the BASELINE fail (a bench row silently
@@ -51,7 +62,7 @@ explains the change.
 Usage::
 
     python benchmarks/check_regression.py \
-        [--key kernels|recovery|serve] [--current <BENCH json>] \
+        [--key kernels|recovery|serve|abft] [--current <BENCH json>] \
         [--baseline <path>] [--tolerance 0.10] [--strict-new]
 """
 from __future__ import annotations
@@ -94,12 +105,22 @@ SERVE_TRACKED = {"throughput_speedup": "higher",
                  "occupancy_mean": "higher"}
 SERVE_FLAGS = ("drained", "accuracy_ok", "model_ok")
 
+# the ABFT detection rows of BENCH_abft.json ("abft" top-level key): the
+# in-flight detection latency must not creep up toward the boundary
+# latency it replaces, and the coverage contract (supra-threshold trips
+# in window, sub-threshold and clean runs never trip) must keep holding.
+# bench_record omits detect_lag_iters for expected-no-trip cells (a -1
+# sentinel under a relative tolerance band would flag spuriously).
+ABFT_TRACKED = {"detect_lag_iters": "lower"}
+ABFT_FLAGS = ("detection_ok",)
+
 # gate key -> (top-level container key, tracked metrics, must-hold flags,
 # default current record, default committed baseline)
 KEYS = {
     "kernels": ("kernels", TRACKED, FLAGS_MUST_HOLD),
     "recovery": ("recovery", RECOVERY_TRACKED, RECOVERY_FLAGS),
     "serve": ("serve", SERVE_TRACKED, SERVE_FLAGS),
+    "abft": ("abft", ABFT_TRACKED, ABFT_FLAGS),
 }
 
 
@@ -170,8 +191,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--key", default="kernels", choices=sorted(KEYS),
                     help="which gate to run: kernels (BENCH_kernels.json), "
-                    "recovery (BENCH_campaign.json fault stage) or serve "
-                    "(BENCH_serve.json)")
+                    "recovery (BENCH_campaign.json fault stage), serve "
+                    "(BENCH_serve.json) or abft (BENCH_abft.json)")
     ap.add_argument("--current", default=None,
                     help="current record (default depends on --key)")
     ap.add_argument("--baseline", default=None,
@@ -184,7 +205,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     default_record = {"kernels": "BENCH_kernels.json",
                       "recovery": "BENCH_campaign.json",
-                      "serve": "BENCH_serve.json"}[args.key]
+                      "serve": "BENCH_serve.json",
+                      "abft": "BENCH_abft.json"}[args.key]
     if args.current is None:
         args.current = os.path.join(REPO_ROOT, default_record)
     if args.baseline is None:

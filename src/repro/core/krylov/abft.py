@@ -1,0 +1,151 @@
+"""Online ABFT detectors + adaptive residual replacement (Cools-style).
+
+Three detector families guard the pipelined solvers against silent data
+corruption — the same stochastic adversary the paper models as latency
+noise, acting on *values* instead of *time*:
+
+1. **In-kernel checksum** (kernels/checksum.py): every fused sweep emits
+   the SpMV checksum residual ``1^T(Av) - c^T v`` (``c = A^T 1``) as an
+   extra row of its reduction payload.  Rounding-level on a faithful
+   sweep, O(corruption) otherwise — and in the sharded engines it rides
+   the single carried-unreduced psum, so detection latency is ONE
+   iteration at zero extra collectives.
+
+2. **Deviation recursion** (this module): Cools' attainable-accuracy
+   analyses of pipelined CG (arXiv:1804.02962) and pipelined BiCGStab
+   (arXiv:1809.01948) bound the gap ``f_i = b - A x_i - r_i`` between
+   the true and recurrence residuals by a per-iteration rounding
+   increment built from norms the fused reduction already carries.
+   :func:`deviation_update` renders that recursion as a scalar online
+   *estimator* of ``||f_i||`` (a practical estimate, not the rigorous
+   worst-case bound): ``dev' = dev + eps (||r|| + 2 |alpha| ||w||)``.
+   Crossing ``tau * ||r||`` triggers *adaptive* residual replacement —
+   re-gluing ``r = b - A x`` (and its operator images) exactly when the
+   estimated drift warrants it, replacing the fixed ``rr=`` period.
+
+3. **State deviation** ``delta = 1^T b - c^T x - 1^T r`` (exactly
+   ``1^T (b - A x - r)``, two cheap dots — no SpMV): catches state that
+   was corrupted *outside* the recurrence (e.g. a poisoned serve slot),
+   which the recurrence-consistent detectors above cannot see.
+
+The host true-residual recompute (core/krylov/hostops.py) is demoted to
+the slow-path confirm consulted only after a fast-path trip.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.checksum import dia_column_checksum
+
+__all__ = [
+    "dia_column_checksum", "machine_eps", "checksum_threshold",
+    "deviation_update", "deviation_update_block", "deviation_trip",
+    "first_trip", "DetectionReport", "merge_reports",
+]
+
+#: default headroom factor between the rounding floor and the trip level
+DEFAULT_TAU = 1e3
+
+
+def machine_eps(dtype) -> float:
+    """Unit roundoff of ``dtype`` (the recursion's per-step increment)."""
+    return float(jnp.finfo(dtype).eps)
+
+
+def checksum_threshold(scale, n: int, dtype, tau: float = DEFAULT_TAU):
+    """Trip level for a checksum/state-deviation residual.
+
+    ``scale`` must be an ABSOLUTE-value magnitude of the compared sums
+    (e.g. ``sum |(Av)_i| + sum |c_j v_j|``), NOT the signed sums — those
+    cancel toward zero for oscillatory vectors and would make the
+    threshold vanish.  The floor is the standard summation rounding
+    model ``eps * sqrt(n) * scale``; ``tau`` is the headroom that keeps
+    clean solves at zero false positives (validated across the Table-1
+    operator/dtype/engine grid in tests/test_abft.py).
+    """
+    return tau * machine_eps(dtype) * float(np.sqrt(max(n, 1))) * scale
+
+
+def deviation_update(dev, alpha, rr2, ww, *, eps: float):
+    """One step of the Cools-style residual-gap recursion (estimator).
+
+    ``rr2 = <r, r>`` and ``ww = <w, w>`` come from the carried fused
+    reduction (no extra dots); ``alpha`` is the step's scalar.  The
+    increment ``eps (||r|| + 2 |alpha| ||w||)`` is the dominant term of
+    the local rounding bound on ``f' - f`` with ``||w|| = ||A u||``
+    standing in for the ``||A|| ||x||``-scaled contributions.
+    """
+    return dev + eps * (jnp.sqrt(jnp.maximum(rr2, 0.0))
+                        + 2.0 * jnp.abs(alpha)
+                        * jnp.sqrt(jnp.maximum(ww, 0.0)))
+
+
+def deviation_trip(dev, rr2, tau: float):
+    """True when the estimated gap crosses ``tau * ||r||`` (replace now)."""
+    return dev > tau * jnp.sqrt(jnp.maximum(rr2, 0.0))
+
+
+def deviation_update_block(dev, l: int, theta, rr2, *, eps: float):
+    """Block-aggregated deviation increment for the depth-l solvers.
+
+    One ghost-basis block advances l iterations between reductions, so
+    the per-iteration recursion of :func:`deviation_update` collapses to
+    ``l * eps * (1 + 2 theta) * ||r||`` — ``theta`` (the ||A||_inf-scale
+    ghost-basis scale) standing in for ``|alpha| ||w|| / ||r||`` since
+    the block recurrences keep the chain columns O(||r||)-scaled.
+    """
+    return dev + l * eps * (1.0 + 2.0 * theta) * jnp.sqrt(
+        jnp.maximum(rr2, 0.0))
+
+
+def first_trip(values, threshold: float) -> int:
+    """First index where ``|values|`` exceeds ``threshold`` or is non-finite.
+
+    Host-side scan of a per-iteration detector history (e.g. the carried
+    checksum row of a finished segment).  Returns -1 when the detector
+    never tripped.  Non-finite entries trip unconditionally — a killed
+    shard's NaNs reach the checksum row through the same psum.
+    """
+    v = np.asarray(values, np.float64)
+    bad = ~np.isfinite(v) | (np.abs(v) > threshold)
+    idx = np.nonzero(bad)[0]
+    return int(idx[0]) if idx.size else -1
+
+
+@dataclasses.dataclass
+class DetectionReport:
+    """Provenance record of one detector verdict on one solve (segment).
+
+    ``detector`` names the fast path that produced the verdict
+    ("checksum", "deviation", "state_deviation", "history_jump") or the
+    slow path ("true_residual"); ``confirmed`` records the slow-path
+    confirm outcome when one ran (None = not consulted — the common,
+    cheap case).
+    """
+
+    solver: str
+    detector: str
+    tripped: bool
+    trip_iter: int = -1            # -1 = never tripped
+    value: float = 0.0             # detector value at the trip (or max)
+    threshold: float = 0.0
+    tau: float = DEFAULT_TAU
+    action: str = "none"           # none | replace | rollback | quarantine
+    confirmed: Optional[bool] = None
+
+
+def merge_reports(reports: List[DetectionReport]) -> dict:
+    """Campaign-facing summary of a report list (counts + first trip)."""
+    tripped = [r for r in reports if r.tripped]
+    return {
+        "n_reports": len(reports),
+        "n_tripped": len(tripped),
+        "first_trip_iter": min((r.trip_iter for r in tripped
+                                if r.trip_iter >= 0), default=-1),
+        "detectors": sorted({r.detector for r in tripped}),
+        "confirmed": any(r.confirmed for r in tripped),
+    }

@@ -15,12 +15,21 @@ import jax.numpy as jnp
 
 
 class SolveResult(NamedTuple):
-    """Solver output: solution, iteration count, residual norm + history."""
+    """Solver output: solution, iteration count, residual norm + history.
+
+    ``detect_history`` (optional) carries the per-iteration ABFT detector
+    values of the solve — the in-kernel SpMV checksum residual for the
+    fused/sharded engines, the psum'd state deviation for the depth-l
+    path (core/krylov/abft.py).  ``None`` (the default, an empty pytree
+    subtree) for solver paths that carry no detector, so existing
+    4-field constructions and shard_map out_specs stay valid.
+    """
 
     x: jnp.ndarray
     iters: jnp.ndarray            # number of iterations performed
     res_norm: jnp.ndarray         # final ||b - A x||_2
     res_history: jnp.ndarray      # per-iteration residual norms (maxiter,)
+    detect_history: Optional[jnp.ndarray] = None  # ABFT detector values
 
 
 def local_dot(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:

@@ -47,6 +47,7 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.krylov import abft
 from repro.core.krylov.base import SolveResult, as_matvec, local_dot
 from repro.core.krylov.engine import get_engine
 from repro.core.krylov.operators import DiaMatrix
@@ -224,6 +225,7 @@ def _right_preconditioned(A, M, b, x0):
 
 def pipebicgstab(A, b, x0=None, *, maxiter=100, tol=0.0, M=None,
                  dot=local_dot, engine=None, rr: int = 0,
+                 rr_tau: float = 0.0,
                  gram_reduce: Optional[Callable] = None) -> SolveResult:
     """Pipelined BiCGStab: one fused Gram reduction per iteration.
 
@@ -242,6 +244,18 @@ def pipebicgstab(A, b, x0=None, *, maxiter=100, tol=0.0, M=None,
         and a second reduction.  Combining ``rr`` with the distributed
         inline path therefore trades the single-reduction structure for
         stability; the sharded_fused engine does not take ``rr`` at all.
+    rr_tau:
+        ADAPTIVE residual replacement (0 = off): a Cools-style deviation
+        recursion (core/krylov/abft.py) built from Gram entries the
+        carried reduction already holds (``<r, r>``, ``<w, w>``) and the
+        step's ``alpha`` estimates the true-vs-recurrence residual gap
+        and triggers the same ``_replace`` branch exactly when the
+        estimate crosses ``rr_tau * ||r||``-scaled roundoff — no period
+        tuning.  Composes with ``rr`` (replacement fires on either
+        trigger).  Local ``lax.cond`` path only (the trigger is
+        data-dependent, so the both-branches distributed fallback would
+        pay the SpMVs every iteration): custom ``dot`` / ``gram_reduce``
+        raise.
     engine:
         ``None`` / ``"naive"`` keep the inline jnp recurrence (None also
         honors a custom ``dot``, e.g. the distributed psum dot);
@@ -289,6 +303,14 @@ def pipebicgstab(A, b, x0=None, *, maxiter=100, tol=0.0, M=None,
         # one stacked local matmul + ONE finishing collective
         gram = lambda vs: gram_reduce(jnp.stack(vs) @ jnp.stack(vs).T)
 
+    adaptive = float(rr_tau) > 0.0
+    if adaptive and not (dot is local_dot and gram_reduce is None):
+        raise ValueError(
+            "rr_tau= (adaptive residual replacement) triggers on a "
+            "data-dependent lax.cond and needs the local reduction path; "
+            "the distributed inline path (custom dot / gram_reduce) would "
+            "pay the replacement SpMVs every iteration — use rr= there")
+
     y = jnp.zeros_like(b) if y0 is None else y0
     r0 = b - mv(y)
     r_hat = r0
@@ -298,13 +320,28 @@ def pipebicgstab(A, b, x0=None, *, maxiter=100, tol=0.0, M=None,
     dt = b.dtype
     eps = jnp.asarray(1e-300 if dt == jnp.float64 else 1e-30, dt)
     one = jnp.ones((), dt)
+    if use_kernel:
+        # the fused kernel emits a 7th Gram row whose [0] entry is the
+        # ABFT checksum residual 1^T t' - c^T w' (kernels/checksum.py);
+        # match its (7, 6) shape for the carried G, seeding row 6 with
+        # the init basis' own checksum so iteration 0 is covered too
+        from repro.kernels.checksum import dia_column_checksum
+        csum = dia_column_checksum(A_hat.offsets, A_hat.bands).astype(dt)
+        base_gram = gram
+
+        def gram(vs):
+            chk = jnp.sum(vs[2]) - jnp.sum(csum * vs[1])  # 1^T t - c^T w
+            row = jnp.zeros((1, 6), dt).at[0, 0].set(chk)
+            return jnp.concatenate([base_gram(vs), row], axis=0)
     G0 = gram((r0, w0, t0, zero, zero, r_hat))
     state0 = dict(x=y, r=r0, w=w0, t=t0, pa=zero, a=zero, c=zero, G=G0,
                   rho_prev=one, alpha_prev=one, omega_prev=one,
+                  dev=jnp.zeros((), dt),
                   first=jnp.asarray(True),
                   done=jnp.asarray(False), iters=jnp.asarray(0, jnp.int32))
     tol2 = jnp.asarray(tol, dt) ** 2 * dot(b, b)
     rr_period = int(rr)
+    eps_u = abft.machine_eps(dt)
 
     def step(st, k):
         # ---- consume the reduction initiated LAST iteration: its only
@@ -334,8 +371,17 @@ def pipebicgstab(A, b, x0=None, *, maxiter=100, tol=0.0, M=None,
             c = z - omega * v
             # ---- initiate the NEXT iteration's fused reduction ----
             G = gram((r, w, t, a, c, r_hat))
-        if rr_period:
-            do_rr = (k + 1) % rr_period == 0
+        dev = st["dev"]
+        if adaptive:
+            # deviation recursion over carried Gram entries (no new dots)
+            dev = abft.deviation_update(dev, alpha, rr2,
+                                        st["G"][GRAM_W, GRAM_W], eps=eps_u)
+        if rr_period or adaptive:
+            do_rr = jnp.asarray(False)
+            if rr_period:
+                do_rr = (k + 1) % rr_period == 0
+            if adaptive:
+                do_rr = do_rr | abft.deviation_trip(dev, rr2, rr_tau)
 
             def _replace(op):
                 # the 3 extra SpMVs + Gram run ONLY on replacement
@@ -361,6 +407,7 @@ def pipebicgstab(A, b, x0=None, *, maxiter=100, tol=0.0, M=None,
                 w = jnp.where(do_rr, w2, w)
                 t = jnp.where(do_rr, t2, t)
                 G = jnp.where(do_rr, G2, G)
+            dev = jnp.where(do_rr, jnp.zeros_like(dev), dev)
         done = st["done"] | (rr2 <= tol2)
         # freeze AT the iterate whose (carried) residual met the
         # tolerance: BiCGStab is non-monotone, so committing one more
@@ -372,19 +419,27 @@ def pipebicgstab(A, b, x0=None, *, maxiter=100, tol=0.0, M=None,
                    rho_prev=frz(rho, st["rho_prev"]),
                    alpha_prev=frz(alpha, st["alpha_prev"]),
                    omega_prev=frz(omega, st["omega_prev"]),
+                   dev=frz(dev, st["dev"]),
                    first=jnp.asarray(False), done=done,
                    iters=st["iters"] + (~done).astype(jnp.int32))
         # rr2 comes from the CARRIED Gram — once frozen it is the frozen
         # iterate's own residual, so the emitted tail is constant
-        return new, jnp.sqrt(jnp.maximum(rr2, 0.0))
+        out = jnp.sqrt(jnp.maximum(rr2, 0.0))
+        if use_kernel:
+            # checksum row of the SAME carried Gram (consumed this body)
+            return new, (out, st["G"][6, 0])
+        return new, out
 
-    st, hist = jax.lax.scan(step, state0, jnp.arange(maxiter))
+    st, ys = jax.lax.scan(step, state0, jnp.arange(maxiter))
+    hist, chk_hist = ys if use_kernel else (ys, None)
     # final residual from the CARRIED Gram (bit-identical to the frozen
     # history tail; a recomputed dot would differ in the low bits)
     res = jnp.sqrt(jnp.maximum(st["G"][GRAM_R, GRAM_R], 0.0))
     # the emitted history is ||r_i|| at body i: roll one slot so
     # hist[i] = ||r_{i+1}||, the classical solvers' alignment
     hist = jnp.concatenate([hist[1:], res[None]])
+    if chk_hist is not None:
+        chk_hist = jnp.concatenate([chk_hist[1:], st["G"][6, 0][None]])
     x_out = st["x"] if unscale is None else unscale(st["x"])
     return SolveResult(x=x_out, iters=st["iters"], res_norm=res,
-                       res_history=hist)
+                       res_history=hist, detect_history=chk_hist)

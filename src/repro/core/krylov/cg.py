@@ -22,6 +22,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.krylov import abft
 from repro.core.krylov.base import SolveResult, as_matvec, local_dot
 from repro.core.krylov.engine import get_engine
 
@@ -110,7 +111,7 @@ def cr(A, b, x0=None, **kw) -> SolveResult:
 # ---------------------------------------------------------------------------
 
 def pipecg(A, b, x0=None, *, maxiter=100, tol=0.0, M=None, dot=local_dot,
-           ip: str = "id", engine=None) -> SolveResult:
+           ip: str = "id", engine=None, rr_tau: float = 0.0) -> SolveResult:
     """Ghysels-Vanroose pipelined CG (Alg. 4 there; PIPECR via ip='A').
 
     Per iteration: ONE fused reduction (gamma, delta, ||r||^2) whose result
@@ -123,6 +124,12 @@ def pipecg(A, b, x0=None, *, maxiter=100, tol=0.0, M=None, dot=local_dot,
     ``engine="fused"`` with a DIA operator and identity/Jacobi M runs each
     iteration as ONE Pallas HBM sweep.  ``engine=None`` keeps the
     historical inline path (used by the distributed shard_map mode).
+
+    ``rr_tau > 0`` enables ADAPTIVE residual replacement (engine paths
+    only): a Cools-style deviation recursion (core/krylov/abft.py)
+    estimates the gap ``||b - A x - r||`` from the carried reduction and
+    re-glues ``r = b - A x`` exactly when the estimate crosses
+    ``rr_tau * machine_eps``-scaled ``||r||`` — no fixed period needed.
     """
     if engine is not None:
         if dot is not local_dot:
@@ -130,7 +137,12 @@ def pipecg(A, b, x0=None, *, maxiter=100, tol=0.0, M=None, dot=local_dot,
                 "engine= computes local reductions and cannot honor a custom "
                 "dot (e.g. the distributed psum dot); use engine=None there")
         return _pipecg_engine(A, b, x0, maxiter=maxiter, tol=tol, M=M,
-                              ip=ip, engine=engine)
+                              ip=ip, engine=engine, rr_tau=rr_tau)
+    if rr_tau:
+        raise ValueError(
+            "rr_tau= (adaptive residual replacement) needs the deviation "
+            "recursion carried by an engine path; pass engine='naive' or "
+            "'fused' (the inline engine=None path has no detector channel)")
     mv = as_matvec(A)
     M = M if M is not None else (lambda z: z)
     x = jnp.zeros_like(b) if x0 is None else x0
@@ -210,27 +222,77 @@ def _pipecg_scalars(st, ip_unused=None):
 
 
 def _pipecg_engine(A, b, x0=None, *, maxiter=100, tol=0.0, M=None,
-                   ip: str = "id", engine="naive") -> SolveResult:
+                   ip: str = "id", engine="naive",
+                   rr_tau: float = 0.0) -> SolveResult:
     """PIPECG with the vector work delegated to an iteration engine.
 
     Same scalar recurrences and masked-freeze semantics as the inline
-    ``pipecg``; only WHO performs the AXPYs/dots/SpMV differs.
+    ``pipecg``; only WHO performs the AXPYs/dots/SpMV differs.  The
+    engine's ``aux`` side-channel (checksum residual + ``<w, w>``) is
+    recorded per iteration as ``SolveResult.detect_history`` and — when
+    ``rr_tau > 0`` — drives adaptive residual replacement: a
+    ``lax.cond``-guarded re-glue ``r = b - A x`` (plus operator images
+    for 10-vector states) that costs its SpMVs only on iterations where
+    the deviation estimate actually trips (cf. the fixed-period ``rr=``
+    of ``pipecg_l``).
     """
+    from repro.core.krylov.engine import _rdot
     eng = get_engine(engine)
     vecs, gamma, delta = eng.pipecg_init(A, b, x0, M, ip)
     one = jnp.ones_like(gamma)
     state0 = dict(vecs=vecs, gamma=gamma, delta=delta,
                   gamma_prev=one, alpha_prev=one,
+                  dev=jnp.zeros_like(gamma),
                   first=jnp.asarray(True),
                   done=jnp.zeros(gamma.shape, bool),
                   iters=jnp.zeros(gamma.shape, jnp.int32))
     bb = jnp.sum(b * b, axis=-1)
     tol2 = jnp.asarray(tol, b.dtype) ** 2 * bb
+    eps = abft.machine_eps(b.dtype)
+
+    def _reglue(vecs_in):
+        """Recompute r = b - A x, u = M r (+ images for 10-vector state)."""
+        r2 = b - eng.spmv(A, vecs_in["x"])
+        u2 = eng.precond(A, M, r2)
+        w2 = eng.spmv(A, u2)
+        rep = dict(vecs_in, r=r2, u=u2)
+        if "w" in vecs_in:   # 10-vector states carry operator images too
+            m2 = eng.precond(A, M, w2)
+            s2 = eng.spmv(A, vecs_in["p"])
+            q2 = eng.precond(A, M, s2)
+            rep.update(w=w2, m=m2, n=eng.spmv(A, m2),
+                       s=s2, q=q2, z=eng.spmv(A, q2))
+        g2 = _rdot(r2, u2) if ip == "id" else _rdot(r2, w2)
+        d2 = _rdot(w2, u2) if ip == "id" else _rdot(w2, w2)
+        return rep, g2, d2, _rdot(r2, r2)
 
     def step(st, _):
         alpha, beta = _pipecg_scalars(st)
-        vecs, gamma_new, delta_new, rr = eng.pipecg_iter(
+        vecs, gamma_new, delta_new, rr, aux = eng.pipecg_iter(
             A, M, ip, st["vecs"], alpha, beta)
+        dev = st["dev"]
+        if rr_tau > 0.0:
+            dev = abft.deviation_update(dev, alpha, rr, aux["ww"], eps=eps)
+            trip = abft.deviation_trip(dev, rr, rr_tau) & ~st["done"]
+
+            def _sel(t, nv, ov):
+                tm = (t.reshape(t.shape + (1,) * (nv.ndim - t.ndim))
+                      if nv.ndim > t.ndim else t)
+                return jnp.where(tm, nv, ov)
+
+            def _replace(op):
+                vs, g, d, rr_in, dv = op
+                rep, g2, d2, rr2 = _reglue(vs)
+                return (jax.tree.map(lambda nv, ov: _sel(trip, nv, ov),
+                                     rep, vs),
+                        _sel(trip, g2, g), _sel(trip, d2, d),
+                        _sel(trip, rr2, rr_in),
+                        jnp.where(trip, jnp.zeros_like(dv), dv))
+
+            # pay the re-glue SpMVs only when some system actually trips
+            vecs, gamma_new, delta_new, rr, dev = jax.lax.cond(
+                jnp.any(trip), _replace, lambda op: op,
+                (vecs, gamma_new, delta_new, rr, dev))
         done = st["done"] | (rr <= tol2)
         mask = st["done"]
 
@@ -244,21 +306,24 @@ def _pipecg_engine(A, b, x0=None, *, maxiter=100, tol=0.0, M=None,
                    delta=frz(delta_new, st["delta"]),
                    gamma_prev=frz(st["gamma"], st["gamma_prev"]),
                    alpha_prev=frz(alpha, st["alpha_prev"]),
+                   dev=frz(dev, st["dev"]),
                    first=jnp.asarray(False), done=done,
                    iters=st["iters"] + (~done).astype(jnp.int32))
-        return new, jnp.sqrt(jnp.maximum(rr, 0.0))
+        return new, (jnp.sqrt(jnp.maximum(rr, 0.0)), aux["chk"])
 
-    st, hist = jax.lax.scan(step, state0, None, length=maxiter)
+    st, (hist, chk_hist) = jax.lax.scan(step, state0, None, length=maxiter)
     r = st["vecs"]["r"]
     res = jnp.sqrt(jnp.maximum(jnp.sum(r * r, axis=-1), 0.0))
     if hist.ndim == 2:  # batched: (maxiter, k) -> (k, maxiter)
         hist = hist.T
+        chk_hist = chk_hist.T
     return SolveResult(x=st["vecs"]["x"], iters=st["iters"], res_norm=res,
-                       res_history=hist)
+                       res_history=hist, detect_history=chk_hist)
 
 
 def pipecg_multi(A, B, X0=None, *, maxiter=100, tol=0.0, M=None,
-                 ip: str = "id", engine="fused") -> SolveResult:
+                 ip: str = "id", engine="fused",
+                 rr_tau: float = 0.0) -> SolveResult:
     """Batched PIPECG: solve A x_j = b_j for every row of ``B`` (k, n).
 
     With ``engine="fused"`` and a DIA operator the k systems share one
@@ -279,8 +344,9 @@ def pipecg_multi(A, B, X0=None, *, maxiter=100, tol=0.0, M=None,
     if native_batch:
         # FusedEngine's single-sweep path is batch-shaped already
         return _pipecg_engine(A, B, X0, maxiter=maxiter, tol=tol, M=M,
-                              ip=ip, engine=eng)
+                              ip=ip, engine=eng, rr_tau=rr_tau)
     solve = lambda b, x0: _pipecg_engine(
-        A, b, x0, maxiter=maxiter, tol=tol, M=M, ip=ip, engine=eng)
+        A, b, x0, maxiter=maxiter, tol=tol, M=M, ip=ip, engine=eng,
+        rr_tau=rr_tau)
     X0 = jnp.zeros_like(B) if X0 is None else X0
     return jax.vmap(solve)(B, X0)

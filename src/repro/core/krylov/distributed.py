@@ -141,12 +141,16 @@ def dia_matvec_local(offsets, bands_local, x_local, axis_name: str = AXIS,
 # Sharded fused engine: halo-aware single-sweep kernel + split-phase psum
 # ---------------------------------------------------------------------------
 
-def _local_partials(r, u, w):
-    """This shard's (k, 5) reduction row [<r,u>, <w,u>, <r,r>, <r,w>, <w,w>].
+def _local_partials(r, u, w, csum):
+    """This shard's (k, 6) reduction row
+    [<r,u>, <w,u>, <r,r>, <r,w>, <w,w>, 1^T w - c^T u].
 
     One fused pass per operand via the multi-dot kernel
     (kernels/fused_dots.py) — the same reduction tail the kernel sweep
-    accumulates in steady state.
+    accumulates in steady state, including the ABFT checksum partial
+    (``csum`` is this shard's slice of the GLOBAL column checksum
+    ``c = A^T 1``, so the psum'd entry is exactly ``1^T (A u) - c^T u``
+    up to fp reassociation; kernels/checksum.py).
     """
     from repro.kernels import ops as kops
 
@@ -155,7 +159,8 @@ def _local_partials(r, u, w):
         d_u = kops.fused_dots(rw, uj)          # <r,u>, <w,u>
         d_r = kops.fused_dots(rw, rj)          # <r,r>, <w,r> = <r,w>
         d_w = kops.fused_dots(wj[None], wj)    # <w,w>
-        return jnp.concatenate([d_u, d_r, d_w])
+        chk = (jnp.sum(wj) - jnp.sum(csum * uj))[None]
+        return jnp.concatenate([d_u, d_r, d_w, chk])
 
     return jax.vmap(one)(r, u, w)
 
@@ -172,11 +177,15 @@ def sharded_pipecg_solve(offsets: Tuple[int, ...], bands_local, b_local, *,
     Runs INSIDE shard_map.  Each iteration is one halo-aware Pallas sweep
     (kernels/pipecg_spmv_fused.py::pipecg_spmv_halo) plus one scalar psum
     — and the psum is *split-phase*: the kernel of iteration i emits a
-    partial (k, 5) reduction row that is carried unreduced across the
-    scan boundary; iteration i+1 first issues its halo ppermutes (which
-    depend only on the carried vectors), then finishes the reduction with
-    ``psum`` and feeds the result to the scalar alpha/beta recurrence
-    gating the kernel launch.  Inside one loop body the all-reduce and
+    partial (k, 6) reduction row — the five Krylov partials plus the ABFT
+    checksum partial ``1^T w' - c^T u'`` (kernels/checksum.py), which
+    therefore rides the SAME carried all-reduce at zero extra collectives
+    — that is carried unreduced across the scan boundary; iteration i+1
+    first issues its halo ppermutes (which depend only on the carried
+    vectors), then finishes the reduction with ``psum`` and feeds the
+    result to the scalar alpha/beta recurrence gating the kernel launch.
+    The psum'd checksum column is returned per iteration as
+    ``SolveResult.detect_history`` (detection latency: one iteration).  Inside one loop body the all-reduce and
     the collective-permutes therefore have no data dependence on each
     other, which is what lets XLA overlap them (the HLO assertion lives
     in launch/hlo_analysis.py::split_phase_overlap).
@@ -227,6 +236,11 @@ def sharded_pipecg_solve(offsets: Tuple[int, ...], bands_local, b_local, *,
     bands_ext = jnp.concatenate([bl, bands_local, br], axis=-1)
     il, ir = halo_exchange_cols(invd, halo, axis_name)
     invd_ext = jnp.concatenate([il, invd, ir], axis=-1)
+    # this shard's slice of the GLOBAL column checksum c = A^T 1: every
+    # contributing band value lives in the halo-extended local bands, so
+    # no extra exchange is needed (kernels/checksum.py)
+    from repro.kernels.checksum import dia_column_checksum
+    csum_loc = dia_column_checksum(offsets, bands_ext, halo=halo).astype(dt)
 
     def mv(v):  # (k, n_local) halo matvec — init only; the scan uses the kernel
         lv, rv = halo_exchange_cols(v, halo, axis_name)
@@ -273,7 +287,7 @@ def sharded_pipecg_solve(offsets: Tuple[int, ...], bands_local, b_local, *,
         done0 = jnp.zeros((k_rhs,), bool)
         first = jnp.asarray(True)
     w = mv(u)
-    red0 = _local_partials(r, u, w)
+    red0 = _local_partials(r, u, w, csum_loc)
     state0 = dict(x=x, r=r, u=u, p=p, red=red0,
                   gamma_prev=gamma_prev, alpha_prev=alpha_prev,
                   first=first, done=done0,
@@ -292,6 +306,7 @@ def sharded_pipecg_solve(offsets: Tuple[int, ...], bands_local, b_local, *,
         gamma, delta = ((red[:, 0], red[:, 1]) if ip == "id"
                         else (red[:, 3], red[:, 4]))
         rr = red[:, 2]
+        chk = red[:, 5]     # ABFT checksum residual, same carried psum
         beta = jnp.where(st["first"], jnp.zeros_like(gamma),
                          gamma / st["gamma_prev"])
         alpha = jnp.where(st["first"], gamma / delta,
@@ -318,19 +333,21 @@ def sharded_pipecg_solve(offsets: Tuple[int, ...], bands_local, b_local, *,
                    alpha_prev=frz(alpha, st["alpha_prev"]),
                    first=jnp.asarray(False), done=done,
                    iters=st["iters"] + (~done).astype(jnp.int32))
-        return new, jnp.sqrt(jnp.maximum(rr, 0.0))
+        return new, (jnp.sqrt(jnp.maximum(rr, 0.0)), chk)
 
-    st, hist = jax.lax.scan(step, state0, None, length=maxiter)
+    st, (hist, chk_hist) = jax.lax.scan(step, state0, None, length=maxiter)
     red_fin = jax.lax.psum(st["red"], axis_name)
     res = jnp.sqrt(jnp.maximum(red_fin[:, 2], 0.0))
     # roll the shifted history into the naive alignment hist[i] = ||r_{i+1}||
     hist = jnp.concatenate([hist[1:], res[None]], axis=0)  # (maxiter, k)
+    chk_hist = jnp.concatenate([chk_hist[1:], red_fin[:, 5][None]], axis=0)
     if batched:
         result = SolveResult(x=st["x"], iters=st["iters"], res_norm=res,
-                             res_history=hist.T)
+                             res_history=hist.T, detect_history=chk_hist.T)
     else:
         result = SolveResult(x=st["x"][0], iters=st["iters"][0],
-                             res_norm=res[0], res_history=hist[:, 0])
+                             res_norm=res[0], res_history=hist[:, 0],
+                             detect_history=chk_hist[:, 0])
     if not with_state:
         return result
     # the internal (k_rhs, .) batched form, always — so a later segment
@@ -342,7 +359,7 @@ def sharded_pipecg_solve(offsets: Tuple[int, ...], bands_local, b_local, *,
 
 
 # ---------------------------------------------------------------------------
-# Sharded pipelined BiCGStab: 3 halo pairs + ONE (6, 6) Gram psum per body
+# Sharded pipelined BiCGStab: 3 halo pairs + ONE (7, 6) Gram psum per body
 # ---------------------------------------------------------------------------
 
 def sharded_pipebicgstab_solve(offsets: Tuple[int, ...], bands_local,
@@ -356,7 +373,10 @@ def sharded_pipebicgstab_solve(offsets: Tuple[int, ...], bands_local,
 
     Runs INSIDE shard_map.  Each iteration is one halo-aware Pallas sweep
     (kernels/pipebicgstab_fused.py::pipebicgstab_halo) plus one scalar
-    psum of the (6, 6) partial Gram — and the psum is *split-phase*: the
+    psum of the (7, 6) partial Gram — six basis rows plus the ABFT
+    checksum partial ``1^T t' - c^T w'`` riding the same payload
+    (kernels/checksum.py; returned per iteration as
+    ``SolveResult.detect_history``) — and the psum is *split-phase*: the
     kernel of iteration i emits the partial Gram that is carried
     unreduced across the scan boundary; iteration i+1 first issues its
     halo ppermutes of w/t/c (which depend only on the carried vectors),
@@ -410,6 +430,11 @@ def sharded_pipebicgstab_solve(offsets: Tuple[int, ...], bands_local,
     # loop-invariant operator extension: one ppermute per solve
     bl, br = halo_exchange_cols(bands_local, halo, axis_name)
     bands_ext = jnp.concatenate([bl, bands_local, br], axis=-1)
+    # local slice of the global column checksum c = A_hat^T 1 (computed
+    # AFTER the Jacobi fold so the checksum guards the operator the
+    # kernel actually applies; kernels/checksum.py)
+    from repro.kernels.checksum import dia_column_checksum
+    csum_loc = dia_column_checksum(offsets, bands_ext, halo=halo).astype(dt)
 
     def mv(v):  # halo matvec — init only; the scan uses the kernel
         lv, rv = halo_exchange_cols(v, halo, axis_name)
@@ -428,6 +453,11 @@ def sharded_pipebicgstab_solve(offsets: Tuple[int, ...], bands_local,
     zero = jnp.zeros_like(b_local)
     V0 = jnp.stack([r, w, t, zero, zero, r_hat])
     G0 = V0 @ V0.T              # this shard's PARTIAL initial Gram
+    # 7th row: the ABFT checksum partial 1^T t - c^T w of the init basis,
+    # matching the kernel's (7, 6) partial-Gram layout
+    chk0 = jnp.sum(t) - jnp.sum(csum_loc * w)
+    G0 = jnp.concatenate([G0, jnp.zeros((1, 6), dt).at[0, 0].set(chk0)],
+                         axis=0)
     one = jnp.ones((), dt)
     eps = jnp.asarray(1e-300 if dt == jnp.float64 else 1e-30, dt)
     state0 = dict(x=x, r=r, w=w, t=t, pa=zero, a=zero, c=zero, G=G0,
@@ -446,6 +476,7 @@ def sharded_pipebicgstab_solve(offsets: Tuple[int, ...], bands_local,
         # ---- split-phase: finish the reduction initiated LAST iteration;
         # its only consumers are the scalar recurrences below ----
         G = jax.lax.psum(st["G"], axis_name)
+        chk = G[6, 0]   # ABFT checksum residual, same carried psum
         rr2, rho, alpha, beta, omega = pbicgstab_scalars(
             G, st["rho_prev"], st["alpha_prev"], st["omega_prev"],
             st["first"], eps)
@@ -471,16 +502,17 @@ def sharded_pipebicgstab_solve(offsets: Tuple[int, ...], bands_local,
                    omega_prev=frz(omega, st["omega_prev"]),
                    first=jnp.asarray(False), done=done,
                    iters=st["iters"] + (~done).astype(jnp.int32))
-        return new, jnp.sqrt(jnp.maximum(rr2, 0.0))
+        return new, (jnp.sqrt(jnp.maximum(rr2, 0.0)), chk)
 
-    st, hist = jax.lax.scan(step, state0, None, length=maxiter)
+    st, (hist, chk_hist) = jax.lax.scan(step, state0, None, length=maxiter)
     G_fin = jax.lax.psum(st["G"], axis_name)
     res = jnp.sqrt(jnp.maximum(G_fin[0, 0], 0.0))
     # roll the shifted history into the classical alignment
     hist = jnp.concatenate([hist[1:], res[None]])
+    chk_hist = jnp.concatenate([chk_hist[1:], G_fin[6, 0][None]])
     x_out = st["x"] if unscale is None else st["x"] * unscale
     return SolveResult(x=x_out, iters=st["iters"], res_norm=res,
-                       res_history=hist)
+                       res_history=hist, detect_history=chk_hist)
 
 
 # ---------------------------------------------------------------------------
@@ -512,7 +544,11 @@ def sharded_pipecg_depth_solve(offsets: Tuple[int, ...], bands_local,
 
     Semantics match ``core/krylov/pipeline.py::pipecg_l`` with
     ``rr=0`` (the sharded path reconstructs r from the chain so the
-    block body stays free of post-reduction halo exchanges).  ``M`` may
+    block body stays free of post-reduction halo exchanges).  The ABFT
+    state deviation ``1^T (b - A x - r)`` is evaluated once per block
+    from the column checksum (two local dots, bundled into the Gram psum
+    as a variadic operand — still one all-reduce per body) and returned
+    as ``SolveResult.detect_history``.  ``M`` may
     be None or ``"jacobi"`` (symmetrized in, locally, with one halo
     exchange of the scaling vector per solve); residual norms are then
     preconditioned norms.
@@ -554,14 +590,21 @@ def sharded_pipecg_depth_solve(offsets: Tuple[int, ...], bands_local,
     # loop-invariant operator extension (+l*halo), one exchange per solve
     bl, br = halo_exchange_cols(bands_local, H, axis_name)
     bands_ext = jnp.concatenate([bl, bands_local, br], axis=-1)
+    # local slice of the global column checksum (of the possibly
+    # symmetrized operator) for the per-block state-deviation detector
+    from repro.kernels.checksum import dia_column_checksum
+    csum_loc = dia_column_checksum(offsets, bands_ext, halo=H).astype(dt)
 
     x = jnp.zeros_like(b_local)
     r = b_local
     p = r
     Tm = _shift_matrix(l, dt)
     nblocks = -(-maxiter // l)
-    tol2 = (jnp.asarray(tol, dt) ** 2
-            * jax.lax.psum(jnp.sum(b_local * b_local), axis_name))
+    # one pre-scan psum covers both the tolerance scale and the 1^T b leg
+    # of the deviation detector (variadic tuple: still a single psum)
+    bb, bsum = jax.lax.psum(
+        (jnp.sum(b_local * b_local), jnp.sum(b_local)), axis_name)
+    tol2 = jnp.asarray(tol, dt) ** 2 * bb
 
     def body(st, _):
         # ONE halo exchange per block: l*halo-wide strips of p and r,
@@ -571,10 +614,24 @@ def sharded_pipecg_depth_solve(offsets: Tuple[int, ...], bands_local,
         C, gram = kops.ghost_chain_halo_step(
             offsets, bands_ext, st["p"], st["r"], pl_, pr_, rl_, rr_,
             theta, l, block=block, n_shards=n_shards)
+        # the block's single fused reduction: one psum per l iterations —
+        # the ABFT state-deviation partial c^T x + 1^T r rides it as an
+        # extra ROW of the Gram payload (one all-reduce in HLO; the
+        # hlo_analysis depth gate counts exactly one per body), giving
+        # delta = 1^T b - c^T x - 1^T r == 1^T (b - A x - r) per block.
+        # Riding INSIDE the array (not as a tuple sibling) means a
+        # corrupted reduction payload corrupts the detector entry with it
+        # — the injector's tick cannot poison the Gram while leaving the
+        # detector clean
+        devpart = jnp.sum(csum_loc * st["x"]) + jnp.sum(st["r"])
+        gram_ext = jnp.concatenate(
+            [gram, jnp.zeros((1, gram.shape[-1]), dt).at[0, 0]
+             .set(devpart)], axis=0)
         if noise is not None:
-            gram = gram + _noise_tick(noise, axis_name, dt)
-        # the block's single fused reduction: one psum per l iterations
-        G = jax.lax.psum(gram, axis_name)
+            gram_ext = gram_ext + _noise_tick(noise, axis_name, dt)
+        Ge = jax.lax.psum(gram_ext, axis_name)
+        G, devp = Ge[:-1], Ge[-1, 0]
+        delta = bsum - devp
         xc, rc, pc, hist = _block_cg_steps(G, Tm, l, theta, st["done"])
         x_new = jnp.where(st["done"], st["x"], st["x"] + C.T @ xc)
         r_new = jnp.where(st["done"], st["r"], C.T @ rc)
@@ -584,17 +641,21 @@ def sharded_pipecg_depth_solve(offsets: Tuple[int, ...], bands_local,
         hist = jnp.where(st["done"], jnp.sqrt(rr2), hist)
         iters = st["iters"] + jnp.where(st["done"], 0, l).astype(jnp.int32)
         return (dict(x=x_new, r=r_new, p=p_new, done=done, iters=iters),
-                hist)
+                (hist, delta))
 
     state0 = dict(x=x, r=r, p=p, done=jnp.asarray(False),
                   iters=jnp.asarray(0, jnp.int32))
-    st, hist = jax.lax.scan(body, state0, None, length=nblocks)
+    st, (hist, det_blocks) = jax.lax.scan(body, state0, None,
+                                          length=nblocks)
     hist = hist.reshape(-1)[:maxiter]
+    # per-block deviation, repeated to per-iteration length so every
+    # solver's detect_history shares the (maxiter,) shape contract
+    det = jnp.repeat(det_blocks, l)[:maxiter]
     res = jnp.sqrt(jnp.maximum(
         jax.lax.psum(jnp.sum(st["r"] * st["r"]), axis_name), 0.0))
     x_out = st["x"] if unscale is None else st["x"] * unscale
     return SolveResult(x=x_out, iters=jnp.minimum(st["iters"], maxiter),
-                       res_norm=res, res_history=hist)
+                       res_norm=res, res_history=hist, detect_history=det)
 
 
 # pipelined solvers the sharded engine can express, by function name
@@ -679,7 +740,7 @@ def _distributed_engine_solve(solver, A: DiaMatrix, b, mesh: Mesh, eng, *,
                          x0=x0_l, carried=carried_l, with_state=with_state)
 
     res_specs = SolveResult(x=spec_v, iters=P(), res_norm=P(),
-                            res_history=P())
+                            res_history=P(), detect_history=P())
     if with_state:
         out_specs = (res_specs,
                      dict(x=P(None, axis), r=P(None, axis),

@@ -89,8 +89,12 @@ class Engine:
 
     ``pipecg_init`` returns an opaque vector-state pytree plus the first
     (gamma, delta); ``pipecg_iter`` advances it by one iteration and
-    returns the next fused-reduction results.  ``dots`` is the GMRES-family
-    multi-dot; ``spmv`` / ``precond`` the standalone operator applications.
+    returns ``(vecs, gamma, delta, rr, aux)`` where ``aux`` is a dict of
+    detector side-channels riding the same reduction: ``chk`` (the ABFT
+    checksum residual ``1^T w - c^T u``, see core/krylov/abft.py) and
+    ``ww`` (``<w, w>``, feeding the deviation recursion).  ``dots`` is the
+    GMRES-family multi-dot; ``spmv`` / ``precond`` the standalone operator
+    applications.
     """
 
     name = "abstract"
@@ -125,6 +129,27 @@ def _ip_pick(ip: str, ru, wu, rw, ww):
 def _rdot(a, b):
     """Row-wise dot: scalar for (n,) operands, (k,) for batched (k, n)."""
     return jnp.sum(a * b, axis=-1)
+
+
+def _abft_chk(A, u, w):
+    """Signed ABFT checksum residual ``1^T w - c^T u`` (``c = A^T 1``).
+
+    Exactly ``1^T (A u - w)`` for a DIA operator — rounding-level when the
+    carried ``w`` faithfully tracks ``A u``, O(corruption) otherwise.  For
+    opaque operators (no band structure to checksum) it returns zeros, so
+    downstream detectors see a never-tripping channel rather than a
+    missing one.  ``A`` is a trace constant under jit, so the column
+    checksum is hoisted out of the solver scan.
+    """
+    if isinstance(A, DiaMatrix):
+        from repro.kernels.checksum import dia_column_checksum
+        c = dia_column_checksum(A.offsets, A.bands).astype(w.dtype)
+        # single reduction over (w - c*u): same checksum to rounding, and
+        # a standalone plain sum(w) would join XLA's multi-output reduce
+        # fusion over w and shift the existing dots' bits (pinned at
+        # rtol=1e-12 against the inline path by the equivalence tests)
+        return jnp.sum(w - c * u, axis=-1)
+    return jnp.zeros(w.shape[:-1], w.dtype)
 
 
 @register_engine
@@ -171,8 +196,9 @@ class NaiveEngine(Engine):
         rr = _rdot(r, r)
         m = Mf(w)
         n_ = self.spmv(A, m)
+        aux = dict(chk=_abft_chk(A, u, w), ww=_rdot(w, w))
         return (dict(x=x, r=r, u=u, w=w, m=m, n=n_, z=z, q=q, s=s, p=p),
-                gamma, delta, rr)
+                gamma, delta, rr, aux)
 
 
 @register_engine
@@ -226,7 +252,9 @@ class FusedEngine(Engine):
                 st["x"], st["r"], st["u"], st["p"], alpha, beta)
             gamma, delta = _ip_pick(ip, red[..., 0], red[..., 1],
                                     red[..., 3], red[..., 4])
-            return dict(x=x, r=r, u=u, p=p), gamma, delta, red[..., 2]
+            # checksum residual 1^T w' - c^T u' rode the same sweep (col 5)
+            aux = dict(chk=red[..., 5], ww=red[..., 4])
+            return dict(x=x, r=r, u=u, p=p), gamma, delta, red[..., 2], aux
 
         # two-sweep fallback: fused updates+dots, then M-apply + SpMV
         Mf = _resolve_M(A, M)
@@ -239,8 +267,9 @@ class FusedEngine(Engine):
             gamma, delta = _rdot(r, w), _rdot(w, w)
         m = Mf(w)
         n_ = self.spmv(A, m)
+        aux = dict(chk=_abft_chk(A, u, w), ww=_rdot(w, w))
         return (dict(x=x, r=r, u=u, w=w, m=m, n=n_, z=z, q=q, s=s, p=p),
-                gamma, delta, red[2])
+                gamma, delta, red[2], aux)
 
 
 @register_engine

@@ -41,6 +41,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.krylov import abft
 from repro.core.krylov.base import SolveResult
 from repro.core.krylov.engine import FusedEngine, get_engine
 from repro.core.krylov.operators import DiaMatrix
@@ -180,6 +181,7 @@ def _ghost_chain(A: DiaMatrix, p, r, theta, l: int, eng) -> Tuple:
 
 def pipecg_l(A, b, x0=None, *, l: int = 1, maxiter: int = 100,
              tol: float = 0.0, M=None, engine=None, rr: int = 0,
+             rr_tau: float = 0.0,
              theta: Optional[float] = None) -> SolveResult:
     """Depth-l pipelined CG.
 
@@ -196,6 +198,12 @@ def pipecg_l(A, b, x0=None, *, l: int = 1, maxiter: int = 100,
         Residual-replacement period in *blocks* (0 = off): every ``rr``
         blocks the residual is recomputed as ``b - A x`` (one extra SpMV)
         to bound the Cools-style true-residual drift at large l.
+    rr_tau:
+        ADAPTIVE residual replacement (0 = off): the block-aggregated
+        deviation recursion of core/krylov/abft.py estimates the
+        true-vs-recurrence residual gap and fires the same replacement
+        exactly when the estimate crosses ``rr_tau * ||r||``-scaled
+        roundoff.  Composes with ``rr`` (either trigger replaces).
     theta:
         Ghost-basis scale (a ||A||_inf estimate).  Derived locally for
         DIA operators; required for matrix-free ones.
@@ -209,7 +217,10 @@ def pipecg_l(A, b, x0=None, *, l: int = 1, maxiter: int = 100,
         raise ValueError(f"pipeline depth l must be >= 1, got {l}")
     if l == 1:
         from repro.core.krylov.cg import pipecg
-        return pipecg(A, b, x0, maxiter=maxiter, tol=tol, M=M, engine=engine)
+        return pipecg(A, b, x0, maxiter=maxiter, tol=tol, M=M,
+                      engine=engine if (engine is not None or not rr_tau)
+                      else "naive",
+                      rr_tau=rr_tau)
     eng = get_engine(engine)
     from repro.core.krylov.engine import ShardedFusedEngine
     if isinstance(eng, ShardedFusedEngine):
@@ -230,6 +241,8 @@ def pipecg_l(A, b, x0=None, *, l: int = 1, maxiter: int = 100,
     nblocks = -(-maxiter // l)
     tol2 = jnp.asarray(tol, dt) ** 2 * jnp.sum(b_h * b_h)
     rr_period = int(rr)
+    adaptive = float(rr_tau) > 0.0
+    eps_u = abft.machine_eps(dt)
 
     def block(st, bi):
         x, r, p = st["x"], st["r"], st["p"]
@@ -238,19 +251,37 @@ def pipecg_l(A, b, x0=None, *, l: int = 1, maxiter: int = 100,
         x_new = x + C.T @ xc
         p_new = jnp.where(st["done"], p, C.T @ pc)
         r_new = C.T @ rc
-        if rr_period:
-            do_rr = (bi + 1) % rr_period == 0
-            r_new = jnp.where(do_rr, b_h - mv(x_new), r_new)
+        dev = st["dev"]
+        if rr_period or adaptive:
+            do_rr = jnp.asarray(False)
+            if rr_period:
+                do_rr = (bi + 1) % rr_period == 0
+            if adaptive:
+                rr2_c = jnp.maximum(rc @ G @ rc, 0.0)
+                dev = abft.deviation_update_block(dev, l, theta, rr2_c,
+                                                  eps=eps_u)
+                do_rr = do_rr | abft.deviation_trip(dev, rr2_c, rr_tau)
+            do_rr = do_rr & ~st["done"]
+            # the replacement SpMV runs ONLY on replacement blocks: a
+            # lax.cond, matching bicgstab's _replace — the former
+            # jnp.where(do_rr, b_h - mv(x_new), r_new) evaluated BOTH
+            # arms, paying the extra SpMV every block
+            r_new = jax.lax.cond(do_rr, lambda xn: b_h - mv(xn),
+                                 lambda _: r_new, x_new)
+            dev = jnp.where(do_rr, jnp.zeros_like(dev), dev)
         x_new = jnp.where(st["done"], x, x_new)
         r_new = jnp.where(st["done"], r, r_new)
+        dev = jnp.where(st["done"], st["dev"], dev)
         rr2 = jnp.sum(r_new * r_new)
         done = st["done"] | (rr2 <= tol2)
         iters = st["iters"] + jnp.where(st["done"], 0, l).astype(jnp.int32)
         hist = jnp.where(st["done"], jnp.sqrt(jnp.maximum(rr2, 0.0)), hist)
-        return (dict(x=x_new, r=r_new, p=p_new, done=done, iters=iters),
+        return (dict(x=x_new, r=r_new, p=p_new, dev=dev, done=done,
+                     iters=iters),
                 hist)
 
-    state0 = dict(x=x, r=r, p=p, done=jnp.asarray(False),
+    state0 = dict(x=x, r=r, p=p, dev=jnp.zeros((), dt),
+                  done=jnp.asarray(False),
                   iters=jnp.asarray(0, jnp.int32))
     st, hist = jax.lax.scan(block, state0, jnp.arange(nblocks))
     hist = hist.reshape(-1)[:maxiter]

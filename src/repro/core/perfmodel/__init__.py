@@ -26,6 +26,9 @@ from repro.core.perfmodel.depth import (  # noqa: F401
 )
 from repro.core.perfmodel.resync import (  # noqa: F401
     FAULT_RECOVERY_KINDS,
+    abft_detection_iters,
+    adaptive_rr_overhead_iters,
+    adaptive_rr_replacements,
     detection_iters,
     expected_fault_makespan,
     optimal_checkpoint_period,

@@ -48,6 +48,58 @@ def detection_iters(period: int) -> float:
     return max((period + 1) / 2.0, 1.0)
 
 
+def abft_detection_iters(magnitude: float, threshold: float,
+                         period: int) -> float:
+    """Expected detection latency WITH the in-flight ABFT checksum.
+
+    A corruption whose checksum deflection exceeds the trip threshold is
+    surfaced by the next carried reduction — the checksum row rides the
+    same psum the corrupted payload does — so its latency is ONE
+    iteration regardless of the segment period.  A sub-threshold
+    corruption is invisible to the fast path and falls back to the
+    boundary-synchronous ``(period + 1) / 2`` of :func:`detection_iters`
+    (the slow-path true-residual check at the segment boundary).
+    """
+    if threshold < 0:
+        raise ValueError("threshold must be >= 0")
+    if magnitude > threshold:
+        return 1.0
+    return detection_iters(period)
+
+
+def adaptive_rr_replacements(K: int, eps: float, tau: float) -> float:
+    """Expected number of adaptive residual replacements in K iterations.
+
+    The deviation recursion grows by ~3 eps ||r|| per iteration (the
+    :func:`repro.core.krylov.abft.deviation_update` increment with
+    ``|alpha| ||w|| ~ ||r||``) and trips at ``tau ||r||``, so one
+    replacement fires every ~``tau / (3 eps)`` iterations — the
+    replacement CADENCE the adaptive scheme substitutes for a fixed
+    ``rr=`` period.
+    """
+    if K < 0:
+        raise ValueError("K must be >= 0")
+    if eps <= 0 or tau <= 0:
+        raise ValueError("eps and tau must be > 0")
+    return K / (tau / (3.0 * eps))
+
+
+def adaptive_rr_overhead_iters(K: int, eps: float, tau: float, *,
+                               l: int = 1, s_sync: int = 1) -> float:
+    """Expected iteration-equivalents spent on adaptive replacements.
+
+    Each re-glue ``r = b - A x`` (plus operator images) costs one extra
+    sweep and the ``l * s_sync`` pipeline-refill iterations the restart
+    spends rebuilding the overlap window — the same refill term as
+    :func:`recovery_overhead_bound`, but paid at the adaptive cadence of
+    :func:`adaptive_rr_replacements` instead of per-fault.
+    """
+    if l < 1 or s_sync < 1:
+        raise ValueError("pipeline depth l and sync count s must be >= 1")
+    per_replace = 1.0 + float(l * s_sync)
+    return adaptive_rr_replacements(K, eps, tau) * per_replace
+
+
 def recovery_overhead_bound(kind: str, period: int, *, l: int = 1,
                             s_sync: int = 1) -> float:
     """Lower bound on one fault's recovery overhead, in ITERATIONS.

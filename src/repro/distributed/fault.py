@@ -40,10 +40,12 @@ from __future__ import annotations
 import dataclasses
 import tempfile
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core.krylov import abft
+from repro.core.krylov.hostops import true_residual_norm
 from repro.core.perfmodel.expected_max import expected_max_mc  # noqa: F401
 from repro.core.stats.mle import (  # noqa: F401
     fit_exponential_shifted,
@@ -129,10 +131,14 @@ def pipelining_benefit(times: np.ndarray) -> Dict[str, float]:
 class RecoveryEvent:
     """One detected fault and how the controller recovered from it.
 
-    ``detect_iters`` is the boundary-synchronous detection latency (global
-    iterations from fault onset to the segment boundary that surfaced it);
+    ``detect_iters`` is the detection latency in global iterations from
+    fault onset to the iteration that surfaced it — for the in-flight ABFT
+    checksum fast path that is the iteration of the trip itself (~1),
+    while boundary-synchronous detectors average (period + 1) / 2.
     ``iters_lost`` is the rolled-back work re-executed afterwards (zero for
     a stall eviction, whose carried-state continuation loses nothing).
+    ``detector`` names the fast path that surfaced the fault (see
+    abft.DetectionReport).
     """
 
     kind: str                 # "kill" | "stall" | "corrupt"
@@ -142,6 +148,7 @@ class RecoveryEvent:
     iters_lost: int
     n_shards_after: int
     mode: str                 # "rollback_restart" | "evict_continue"
+    detector: str = "true_residual"
 
 
 @dataclasses.dataclass
@@ -165,25 +172,14 @@ class ResilientReport:
     recoveries: List[RecoveryEvent]
     wall_s: float
     segment_walls: List[float]
+    detections: List["abft.DetectionReport"] = dataclasses.field(
+        default_factory=list)
 
 
-def _dia_matvec_np(offsets: Sequence[int], bands: np.ndarray,
-                   x: np.ndarray) -> np.ndarray:
-    """Host-side DIA matvec (row-major bands convention of DiaMatrix)."""
-    n = x.shape[-1]
-    y = np.zeros_like(x)
-    for k, off in enumerate(offsets):
-        if off >= 0:
-            y[..., :n - off] += bands[k, :n - off] * x[..., off:]
-        else:
-            y[..., -off:] += bands[k, -off:] * x[..., :n + off]
-    return y
-
-
-def _true_residual(A, b: np.ndarray, x: np.ndarray) -> float:
-    """||b - A x|| computed synchronously on the host (the rr criterion)."""
-    r = b - _dia_matvec_np(A.offsets, np.asarray(A.bands), x)
-    return float(np.linalg.norm(r))
+# Host-side DIA matvec / true-residual live in core.krylov.hostops (the
+# single shared implementation also used by the serve layer and the ABFT
+# campaign stage); the old private copies were deduplicated there.
+_true_residual = true_residual_norm
 
 
 def resilient_distributed_solve(
@@ -241,6 +237,9 @@ def resilient_distributed_solve(
         raise ValueError("need at least one device")
     b_np = np.asarray(b)
     norm_b = float(np.linalg.norm(b_np))
+    n_dofs = int(b_np.shape[-1])
+    # ||A||_inf-style scale for the checksum trip threshold (host bands)
+    a_inf = float(np.abs(np.asarray(A.bands, np.float64)).sum(axis=0).max())
     alive = list(range(n_shards0))
     if ckpt_dir is None:
         ckpt_dir = tempfile.mkdtemp(prefix="resilient_ckpt_")
@@ -258,6 +257,7 @@ def resilient_distributed_solve(
     executed = 0
     seg = 0
     recoveries: List[RecoveryEvent] = []
+    detections: List[abft.DetectionReport] = []
     segment_walls: List[float] = []
     result = None
     converged = False
@@ -320,25 +320,53 @@ def resilient_distributed_solve(
                     kind="kill", shard=s, segment=seg - 1,
                     detect_iters=max(executed - onset, 1),
                     iters_lost=seg_len, n_shards_after=len(alive),
-                    mode="rollback_restart"))
+                    mode="rollback_restart", detector="psum_nan"))
             _recoveries_guard()
             continue
 
-        # ---- detector 2: corrupt (true-residual drift OR a jump in the
-        # per-iteration norm history: the iteration that consumed the
+        # ---- detector 2: corrupt — FAST paths first: (a) the in-flight
+        # ABFT checksum row the segment carried through its single psum
+        # (detection latency ~1 iteration), (b) a jump in the
+        # per-iteration norm history (the iteration that consumed a
         # poisoned reduction reports ||r|| orders of magnitude up, which
-        # a healthy near-monotone CG iteration never does) ----
-        x_np = np.asarray(res.x)
-        true_res = _true_residual(A, b_np, x_np)
-        drifted = true_res > drift_factor * max(res_norm, tol * norm_b)
+        # a healthy near-monotone CG iteration never does).  The host
+        # true-residual recompute is the SLOW path, consulted only to
+        # confirm a fast-path trip — it no longer runs on clean segments.
         hist = np.asarray(res.res_history, np.float64)
         hist = hist.reshape(-1, hist.shape[-1])      # (k_rhs, seg_len)
+        chk_trip, chk_value, chk_threshold = -1, 0.0, 0.0
+        if res.detect_history is not None:
+            det = np.asarray(res.detect_history, np.float64)
+            det = np.abs(det.reshape(-1, det.shape[-1])).max(axis=0)
+            seg_scale = a_inf * max(res_prev, float(hist.max()),
+                                    tol * norm_b)
+            chk_threshold = abft.checksum_threshold(
+                seg_scale, n_dofs, b_np.dtype)
+            chk_trip = abft.first_trip(det, chk_threshold)
+            if chk_trip >= 0 and np.isfinite(det[chk_trip]):
+                chk_value = float(det[chk_trip])
         prev = np.concatenate(
             [np.full((hist.shape[0], 1), res_prev), hist[:, :-1]], axis=1)
-        jumped = bool(np.any(
-            hist > jump_factor * np.maximum(prev, tol * norm_b)))
-        if drifted or jumped:
-            onset = executed - seg_len
+        jump_mask = hist > jump_factor * np.maximum(prev, tol * norm_b)
+        jump_iter = (int(np.argmax(jump_mask.any(axis=0)))
+                     if bool(jump_mask.any()) else -1)
+        if chk_trip >= 0 or jump_iter >= 0:
+            detector = "checksum" if chk_trip >= 0 else "history_jump"
+            trip_iter = chk_trip if chk_trip >= 0 else jump_iter
+            seg_start_iter = executed - seg_len
+            # slow-path confirm: ONE synchronous host ||b - A x||
+            true_res = true_residual_norm(A, b_np, np.asarray(res.x))
+            confirmed = bool(
+                not np.isfinite(true_res)
+                or true_res > drift_factor * max(res_norm, tol * norm_b)
+                or jump_iter >= 0)
+            detections.append(abft.DetectionReport(
+                solver="pipecg", detector=detector, tripped=True,
+                trip_iter=seg_start_iter + trip_iter,
+                value=chk_value if chk_trip >= 0 else float(hist.max()),
+                threshold=chk_threshold, action="rollback",
+                confirmed=confirmed))
+            onset = seg_start_iter
             ev = ([e for e in injector.events if e.kind == "corrupt"]
                   if injector is not None else [])
             if ev:
@@ -357,9 +385,9 @@ def resilient_distributed_solve(
                 res_prev = float(manifest.get("res_norm", norm_b))
             recoveries.append(RecoveryEvent(
                 kind="corrupt", shard=shard, segment=seg - 1,
-                detect_iters=max(executed - onset, 1),
+                detect_iters=max(seg_start_iter + trip_iter + 1 - onset, 1),
                 iters_lost=seg_len, n_shards_after=len(alive),
-                mode="rollback_restart"))
+                mode="rollback_restart", detector=detector))
             _recoveries_guard()
             continue
 
@@ -381,7 +409,7 @@ def resilient_distributed_solve(
                     kind="stall", shard=evicted, segment=seg - 1,
                     detect_iters=max(executed - onset, 1),
                     iters_lost=0, n_shards_after=len(alive),
-                    mode="evict_continue"))
+                    mode="evict_continue", detector="step_times"))
                 _recoveries_guard()
 
         # ---- segment accepted: advance + checkpoint the carried state ----
@@ -405,8 +433,9 @@ def resilient_distributed_solve(
         raise RuntimeError("no segment completed cleanly")
     report = ResilientReport(
         converged=converged, res_norm=float(result.res_norm),
-        true_res_norm=_true_residual(A, b_np, np.asarray(result.x)),
+        true_res_norm=true_residual_norm(A, b_np, np.asarray(result.x)),
         productive_iters=productive, executed_iters=executed,
         segments=seg, n_shards_final=len(alive), recoveries=recoveries,
-        wall_s=time.perf_counter() - t_begin, segment_walls=segment_walls)
+        wall_s=time.perf_counter() - t_begin, segment_walls=segment_walls,
+        detections=detections)
     return result, report

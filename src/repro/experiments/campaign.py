@@ -44,8 +44,10 @@ from repro.experiments.noise_sources import (
     sample_np,
     scale_distribution,
 )
+from repro.experiments.abft_exec import bench_record, run_abft_exec
 from repro.experiments.fault_exec import run_fault_exec
 from repro.experiments.report import (
+    write_abft_csv,
     write_depth_csv,
     write_ecdf_csv,
     write_fault_csv,
@@ -68,6 +70,7 @@ from repro.experiments.runner import (
 from repro.experiments.spec import SOLVER_PAIRS, CampaignSpec, get_preset
 from repro.experiments.validation import (
     modeled_speedup,
+    validate_abft_cells,
     validate_cells,
     validate_depth_cells,
     validate_fault_cells,
@@ -303,7 +306,8 @@ def _s_sync_predict_record(spec: CampaignSpec) -> Dict:
 def _acceptance(spec: CampaignSpec, cells, wait_fits,
                 depth_validation=None, sync_validation=None,
                 fault_validation=None,
-                serve_validation=None) -> Dict[str, bool]:
+                serve_validation=None,
+                abft_validation=None) -> Dict[str, bool]:
     """The ISSUE's acceptance checks, evaluated on this campaign's data."""
     exp_cells = [c for c in cells if c["noise"] == "exponential"]
     uni_cells = [c for c in cells if c["noise"] == "uniform"]
@@ -362,6 +366,17 @@ def _acceptance(spec: CampaignSpec, cells, wait_fits,
         checks["serve: queue drained with every request converged"] = (
             serve_validation["drained"]
             and serve_validation["all_converged"])
+    if abft_validation:
+        rows = list(abft_validation.values())
+        checks["abft: zero false positives on clean solves"] = all(
+            not row["false_positive"] for row in rows)
+        checks["abft: supra-threshold corruption detected in the "
+               "modeled window, sub-threshold never trips"] = all(
+            row["detection_ok"] for row in rows)
+        rec = [row for row in rows if "recovery_ok" in row]
+        checks["abft: elastic recovery driven by the checksum fast "
+               "path"] = bool(rec) and all(row["recovery_ok"]
+                                           for row in rec)
     return checks
 
 
@@ -436,6 +451,12 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
         from repro.experiments.serve_exec import run_serve_exec
         serve_record = run_serve_exec(spec)
 
+    # 3d. ABFT stage: detection coverage of the carried in-flight
+    # detectors (corruption magnitude x solver sweep, forced devices)
+    abft_record: Dict = {}
+    if not skip_exec and spec.abft_solvers:
+        abft_record = run_abft_exec(spec)
+
     # 4. validation
     validation = validate_cells(cells, dists)
     validation["depth"] = validate_depth_cells(depth_cells)
@@ -444,11 +465,13 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
         _s_sync_predict_record(spec))
     validation["fault"] = validate_fault_cells(fault_cells)
     validation["serve"] = validate_serve_cells(serve_record)
+    validation["abft"] = validate_abft_cells(abft_record.get("cells", []))
     validation["acceptance"] = _acceptance(spec, cells, wait_fits,
                                            validation["depth"],
                                            validation["s_sync"],
                                            validation["fault"],
-                                           validation["serve"])
+                                           validation["serve"],
+                                           validation["abft"])
 
     result = {
         "spec": dataclasses.asdict(spec),
@@ -463,6 +486,10 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
         "runtime_fits": runtime_fits,
         "fault_cells": fault_cells,
         "serve": serve_record,
+        "abft_cells": abft_record.get("cells", []),
+        # flat per-cell ABFT detection metrics: the check_regression
+        # tracked key (BENCH_campaign.json / BENCH_abft.json --key abft)
+        "abft": bench_record(abft_record)["abft"],
         # flat per-cell recovery metrics: the benchmarks/check_regression
         # tracked key (BENCH_campaign.json --key recovery)
         "recovery": {
@@ -487,6 +514,8 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
         write_fault_csv(out_dir, fault_cells)
     if serve_record:
         write_serve_csv(out_dir, serve_record)
+    if abft_record.get("cells"):
+        write_abft_csv(out_dir, abft_record["cells"])
     for noise, waits in wait_samples.items():
         write_ecdf_csv(out_dir, noise, waits)
     if noisy_exec:

@@ -12,6 +12,8 @@ Emitted artifacts (all schema-stable; tests assert on the headers):
   overheads vs the resync lower bound.
 * ``<out_dir>/figures/campaign_serve.csv`` — serve-stage sojourn
   quantiles: wall clock vs batch-queue replay vs the M/G/k model.
+* ``<out_dir>/figures/campaign_abft.csv`` — ABFT-stage detection
+  coverage: in-flight detector latency per corruption magnitude.
 * ``BENCH_campaign.json`` — the full machine-readable campaign record.
 * ``<out_dir>/REPORT.md`` — self-contained measured-vs-modeled report.
 """
@@ -33,6 +35,10 @@ SYNC_CSV_HEADER = "noise,P,s,measured,modeled,ceiling,red_latency"
 FAULT_CSV_HEADER = ("kind,rate,P,onset,recovered,converged,overhead_iters,"
                     "bound_iters,overhead_ratio,n_shards_final")
 SERVE_CSV_HEADER = "quantile,wall_s,sim_s,model_s,rel_err_model_vs_sim"
+ABFT_CSV_HEADER = ("solver,detector,magnitude,threshold,onset,trip_iter,"
+                   "detect_lag_iters,window_iters,modeled_iters,"
+                   "boundary_iters,tripped,expect_trip,in_window,"
+                   "false_positive")
 
 REPORT_SECTIONS = (
     "## 1. Setup",
@@ -45,6 +51,7 @@ REPORT_SECTIONS = (
     "## 8. s-sync generalization (four-sync BiCGStab)",
     "## 9. Fault injection and elastic recovery",
     "## 10. Solver-as-a-service (queueing model vs measured)",
+    "## 11. ABFT detection coverage (in-flight vs boundary)",
 )
 
 
@@ -163,6 +170,27 @@ def write_serve_csv(out_dir: Path, serve: Dict) -> Path:
             f.write(f"{q},{paced['wall']['latency'][q]:.6f},"
                     f"{paced['sim'][q]:.6f},{paced['predicted'][q]:.6f},"
                     f"{paced['rel_err'][q]:.6f}\n")
+    return path
+
+
+def write_abft_csv(out_dir: Path, abft_cells: Sequence[Dict]) -> Path:
+    """Write the ABFT detection-coverage grid CSV; returns the path."""
+    fig_dir = Path(out_dir) / "figures"
+    fig_dir.mkdir(parents=True, exist_ok=True)
+    path = fig_dir / "campaign_abft.csv"
+    with open(path, "w") as f:
+        f.write(ABFT_CSV_HEADER + "\n")
+        for c in abft_cells:
+            if c.get("skipped"):
+                continue
+            f.write(f"{c['solver']},{c['detector']},{c['magnitude']:g},"
+                    f"{c['threshold']:.3e},{c['onset_iter']},"
+                    f"{c['trip_iter']},{c['detect_lag_iters']},"
+                    f"{c['window_iters']},{c['modeled_detect_iters']:.1f},"
+                    f"{c['boundary_detect_iters']:.1f},{int(c['tripped'])},"
+                    f"{int(c['expect_trip'])},"
+                    f"{int(c['detected_in_window'])},"
+                    f"{int(c['false_positive'])}\n")
     return path
 
 
@@ -442,6 +470,42 @@ def write_report_md(out_dir: Path, result: Dict) -> Path:
             w("")
     else:
         w("(serve stage disabled: `serve_requests = 0`)")
+        w("")
+    w(REPORT_SECTIONS[10])
+    w("")
+    abft_cells = [c for c in result.get("abft_cells", [])
+                  if not c.get("skipped")]
+    if abft_cells:
+        w("One silent `corrupt` fault per cell injected into a REAL")
+        w("sharded solve; the carried ABFT detector (checksum row for the")
+        w("depth-1 bodies, state deviation for the depth-l blocks) must")
+        w("trip within the modeled window when the magnitude exceeds the")
+        w("rounding-floor threshold, and never trip on the clean twin.")
+        w("`boundary` is PR 6's segment-boundary detection latency")
+        w("`(period + 1) / 2` — the iterations the in-flight detector")
+        w("buys back.")
+        w("")
+        w("| solver | detector | magnitude | onset | trip | lag (it) "
+          "| window | boundary (it) | fp |")
+        w("|---|---|---:|---:|---:|---:|---:|---:|---|")
+        for c in abft_cells:
+            w(f"| {c['solver']} | {c['detector']} | {c['magnitude']:g} | "
+              f"{c['onset_iter']} | {c['trip_iter']} | "
+              f"{c['detect_lag_iters']} | {c['window_iters']} | "
+              f"{c['boundary_detect_iters']:.1f} | "
+              f"{'YES' if c['false_positive'] else 'no'} |")
+        w("")
+        for key, row in v.get("abft", {}).items():
+            extra = ""
+            if "recovery_ok" in row:
+                extra = (f", recovery via fast path = {row['recovery_ok']}"
+                         f" ({row['recovery_detect_iters']:.0f} it)")
+            w(f"- `{key}`: expect trip = {row['expect_trip']}, tripped = "
+              f"{row['tripped']}, in window = "
+              f"{row['detection_ok']}{extra}")
+        w("")
+    else:
+        w("(abft stage disabled: `abft_solvers = ()`)")
         w("")
     for check, ok in v["acceptance"].items():
         w(f"- {'PASS' if ok else 'FAIL'}: {check}")

@@ -86,6 +86,27 @@ class CampaignSpec:
         Reduction latency R for the s-sync sweep, in units of the
         waiting-time mean (the latency-dominated regime where the sync
         count matters).
+    abft_solvers:
+        Sharded solvers swept by the ABFT detection-coverage stage
+        (subset of {"pipecg", "pipebicgstab", "pipecg_l"}; empty tuple
+        disables the stage).  Each cell injects one silent ``corrupt``
+        fault of a given magnitude into a real multi-device shard_map
+        solve and measures the in-flight checksum detector: detection
+        latency (iterations from onset to trip), false positives on the
+        clean twin run, and — for pipecg — the elastic controller's
+        recovery overhead with the fast path active, all against the
+        ``core/perfmodel/resync.py`` ABFT detection model.
+    abft_magnitudes:
+        Corruption magnitudes swept (FaultSpec ``magnitude=``); the
+        smallest should sit near the checksum trip threshold so the
+        sweep covers both the sub-threshold (slow-path) and the
+        supra-threshold (one-iteration) detection regimes.
+    abft_n / abft_shards / abft_maxiter / abft_tol:
+        Problem size, mesh size, iteration cap and tolerance of each
+        ABFT-stage solve (same shifted Laplacian as the fault stage).
+    abft_depth:
+        Ghost-basis depth l of the ``pipecg_l`` cell — its detection
+        window is l iterations (block-granular reductions).
     fault_kinds:
         Fault kinds for the elastic-recovery stage (subset of
         ``core/noise/faults.FAULT_KINDS``; empty tuple disables the
@@ -174,6 +195,13 @@ class CampaignSpec:
     sync_counts: Tuple[int, ...] = (2, 4)
     sync_shard_counts: Tuple[int, ...] = (4, 8)
     sync_red_latency: float = 2.0
+    abft_solvers: Tuple[str, ...] = ("pipecg", "pipebicgstab", "pipecg_l")
+    abft_magnitudes: Tuple[float, ...] = (1e-12, 1.0, 1e3)
+    abft_n: int = 240
+    abft_shards: int = 4
+    abft_maxiter: int = 60
+    abft_tol: float = 1e-10
+    abft_depth: int = 2
     fault_kinds: Tuple[str, ...] = ("kill", "stall", "corrupt")
     fault_rates: Tuple[float, ...] = (0.05,)
     fault_shard_counts: Tuple[int, ...] = (4,)

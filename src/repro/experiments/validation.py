@@ -195,3 +195,43 @@ def validate_cells(cells: Sequence[Dict],
             "max_modeled": max(c["modeled_speedup"] for c in mine),
         }
     return out
+
+
+def validate_abft_cells(abft_cells: Sequence[Dict]) -> Dict:
+    """ABFT-stage validation: detection coverage of the carried detectors.
+
+    For every executed (solver, magnitude) cell: a supra-threshold
+    corruption must trip its carried detector within the modeled window
+    (1 iteration for the depth-1 bodies, l for the block-granular depth
+    path), a sub-threshold one must NOT trip (it is below the rounding
+    floor), and the clean twin run must never trip (zero false
+    positives).  pipecg cells additionally close the loop through the
+    elastic controller: the recovery must be driven by the ``checksum``
+    fast path and still converge.
+    """
+    out: Dict = {}
+    for c in abft_cells:
+        if c.get("skipped"):
+            continue
+        key = f"{c['solver']}/mag{c['magnitude']:g}"
+        detection_ok = bool(
+            (c["detected_in_window"] if c["expect_trip"]
+             else not c["tripped"]))
+        row = {
+            "detector": c["detector"],
+            "expect_trip": bool(c["expect_trip"]),
+            "tripped": bool(c["tripped"]),
+            "detect_lag_iters": float(c["detect_lag_iters"]),
+            "window_iters": float(c["window_iters"]),
+            "modeled_detect_iters": float(c["modeled_detect_iters"]),
+            "boundary_detect_iters": float(c["boundary_detect_iters"]),
+            "false_positive": bool(c["false_positive"]),
+            "detection_ok": detection_ok,
+        }
+        if "recovered" in c:
+            row["recovery_ok"] = bool(
+                c["recovered"] and c["recovery_converged"]
+                and c["recovery_detector"] == "checksum")
+            row["recovery_detect_iters"] = float(c["recovery_detect_iters"])
+        out[key] = row
+    return out

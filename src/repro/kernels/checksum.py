@@ -1,0 +1,54 @@
+"""ABFT column checksums for DIA operators.
+
+The classical algorithm-based fault-tolerance (ABFT) identity for an SpMV
+``y = A v`` is
+
+    1^T y  ==  (A^T 1)^T v  ==  c^T v,
+
+so carrying the column-sum vector ``c = A^T 1`` alongside the operator
+lets every fused sweep verify its own SpMV with two cheap partial sums:
+the *checksum residual* ``1^T (A v) - c^T v`` is rounding-level when the
+sweep executed faithfully and O(corruption) when any payload the sweep
+produced was silently damaged.  The fused kernels append that residual to
+their existing reduction row (``pipecg``: red[5]; ``pipebicgstab``: Gram
+row 6), so detection rides the reductions the solver already pays for.
+
+Sharding composes exactly: each shard owns a contiguous row range, so its
+partial ``sum(local rows of A v)`` tiles ``1^T (A v)`` and its partial
+``c_local^T v_local`` tiles ``c^T v`` — provided ``c_local`` is the slice
+of the GLOBAL column sums, which needs the neighbor rows' band values.
+Those are precisely the rows the halo-extended bands already carry, so
+:func:`dia_column_checksum` computes the correct local slice from
+``bands_ext`` with ``halo=h`` and no extra communication.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def dia_column_checksum(offsets: Sequence[int], bands: jnp.ndarray, *,
+                        halo: int = 0) -> jnp.ndarray:
+    """Column sums ``c = A^T 1`` of a DIA operator, per local column.
+
+    ``bands`` is ``(n_bands, n + 2*halo)`` — the plain band array
+    (``halo=0``) or the halo-extended local slice of a sharded operator
+    (``halo=h``, rows ``-h .. n+h-1`` with neighbor values, exactly the
+    ``bands_ext`` the halo kernels consume).  Returns ``c`` of length
+    ``n``: ``c[j] = sum_k bands[k, j - offsets[k]]`` over rows that
+    exist, i.e. the sum of column ``j`` of the (global) matrix restricted
+    to the rows this band array can see — the correct global slice for
+    interior shards, and the correct zero-extended sum at chain ends.
+    """
+    nb, ncols = bands.shape
+    n = ncols - 2 * halo
+    h = max(max(abs(int(o)) for o in offsets), halo)
+    ext = jnp.pad(bands, ((0, 0), (h - halo, h - halo)))
+    c = jnp.zeros((n,), bands.dtype)
+    for k, off in enumerate(offsets):
+        # column j is written by row j - off, whose band value sits at
+        # extended index (j - off) + h
+        c = c + jax.lax.dynamic_slice_in_dim(ext[k], h - off, n)
+    return c

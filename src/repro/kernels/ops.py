@@ -102,8 +102,9 @@ def pipecg_spmv_fused_step(offsets: Tuple[int, ...], bands, inv_diag,
             "pipecg_spmv", n, x.dtype,
             # tiled words/row: x,r reads + x,r,u,p writes
             words_per_row=6.0,
-            # once-per-sweep: u, p (+2h), bands (+h), diag^-1 (+h)
-            resident_words=(2 + bands.shape[0] + 1) * n,
+            # once-per-sweep: u, p (+2h), bands (+h), diag^-1 (+h),
+            # ABFT column sums c = A^T 1
+            resident_words=(2 + bands.shape[0] + 2) * n,
             min_block=2 * halo)
     block = max(min(block, n), 1)
     pad = (-n) % block
@@ -134,8 +135,8 @@ def pipecg_spmv_halo_step(offsets: Tuple[int, ...], bands_ext, invd_ext,
     Vectors are (k, n_local); ``u_left``/``u_right``/``p_left``/``p_right``
     are the (k, 2*halo) ppermute payloads; ``bands_ext`` / ``invd_ext``
     the once-per-solve halo-extended operator.  Returns (x', r', u', p',
-    red) where ``red`` (k, 5) is this shard's PARTIAL reduction row (the
-    caller psums it).  The default block is autotuned on
+    red) where ``red`` (k, 6) is this shard's PARTIAL reduction row
+    including the ABFT checksum entry red[:, 5] (the caller psums it).  The default block is autotuned on
     (backend, n_local, n_shards, k_rhs) — repeated campaign runs reuse the
     on-disk cache (kernels/autotune.py).
     """
@@ -151,7 +152,7 @@ def pipecg_spmv_halo_step(offsets: Tuple[int, ...], bands_ext, invd_ext,
         block = autotune.best_block(
             "pipecg_spmv_halo", n, x.dtype,
             words_per_row=6.0,
-            resident_words=(2 + bands_ext.shape[0] + 1) * n,
+            resident_words=(2 + bands_ext.shape[0] + 2) * n,
             min_block=2 * halo, n_shards=n_shards, k_rhs=k_rhs)
     block = max(min(block, n), 2 * halo)
     return _ps.pipecg_spmv_halo(offsets, bands_ext, invd_ext, x, r, u, p,
@@ -240,7 +241,8 @@ def pipebicgstab_fused_step(offsets: Tuple[int, ...], bands, x, r, w, t,
     (zero-padded rows contribute zeros to the Gram — no mask needed); the
     default block comes from the autotuner under the
     ``"pipebicgstab_spmv"`` key.  Returns (x', r', w', t', pa', a', c',
-    gram (6, 6)).
+    gram (7, 6)) — gram rows 0..5 are the Gram matrix, gram[6, 0] the
+    ABFT checksum residual of the in-kernel SpMV.
     """
     from repro.kernels import autotune
 
@@ -251,8 +253,8 @@ def pipebicgstab_fused_step(offsets: Tuple[int, ...], bands, x, r, w, t,
             "pipebicgstab_spmv", n, x.dtype,
             # tiled words/row: x,r,pa,a,r_hat reads + 7 writes
             words_per_row=12.0,
-            # once-per-sweep: w,t,c (+2h) + bands (+h)
-            resident_words=(3 + bands.shape[0]) * n,
+            # once-per-sweep: w,t,c (+2h) + bands (+h) + ABFT column sums
+            resident_words=(4 + bands.shape[0]) * n,
             min_block=2 * halo)
     block = max(min(block, n), 2 * halo)
     pad = (-n) % block
@@ -280,8 +282,9 @@ def pipebicgstab_halo_step(offsets: Tuple[int, ...], bands_ext, x, r, w, t,
     Vectors are (n_local,); ``*_left`` / ``*_right`` are the (2*halo,)
     ppermute payloads of w/t/c; ``bands_ext`` the once-per-solve
     halo-extended operator.  Returns (x', r', w', t', pa', a', c', gram)
-    where ``gram`` (6, 6) is this shard's PARTIAL Gram (the caller psums
-    it).  The default block is autotuned on (backend, n_local, n_shards).
+    where ``gram`` (7, 6) is this shard's PARTIAL Gram + checksum row
+    (the caller psums it).  The default block is autotuned on
+    (backend, n_local, n_shards).
     """
     from repro.kernels import autotune
 
@@ -295,7 +298,7 @@ def pipebicgstab_halo_step(offsets: Tuple[int, ...], bands_ext, x, r, w, t,
         block = autotune.best_block(
             "pipebicgstab_halo", n, x.dtype,
             words_per_row=12.0,
-            resident_words=(3 + bands_ext.shape[0]) * n,
+            resident_words=(4 + bands_ext.shape[0]) * n,
             min_block=2 * halo, n_shards=n_shards)
     block = max(min(block, n), 2 * halo)
     return _pb.pipebicgstab_halo(offsets, bands_ext, x, r, w, t, pa, a, c,

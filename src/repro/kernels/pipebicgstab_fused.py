@@ -22,9 +22,11 @@ The Jacobi preconditioner costs NOTHING here: right preconditioning folds
 kernel never sees it.  Per iteration the sweep moves
 
     reads:  x, r, pa, a, r_hat (tiled) + w, t, c (resident, +-2h)
-            + bands (resident, +-h)
+            + bands (resident, +-h) + c = A^T 1 (resident)
     writes: x', r', w', t', pa', a', c'
-    ==  (15 + n_bands) n words  ==  18n for tridiagonal operators
+    ==  (16 + n_bands) n words  ==  19n for tridiagonal operators
+    (the +1n over PR 5's 18n is the ABFT column-sum vector; the checksum
+    residual itself rides a 7th row of the Gram payload for free)
 
 vs ~(28 + 2 n_bands) n = 34n for the unfused classical chain (2 SpMVs +
 4 AXPY updates + 5 dots as separate ops).
@@ -46,13 +48,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.checksum import dia_column_checksum
+
 DEFAULT_BLOCK = 1024
 NBASIS = 6  # Gram basis [r', w', t', a', c', r_hat]
+NGRAM = NBASIS + 1  # + ABFT checksum row: gram[6, 0] = 1^T(Aw') - c^T w'
 
 
-def _kernel(sc_ref, bands_ref, w_ref, t_ref, c_ref, x_ref, r_ref, pa_ref,
-            a_ref, rh_ref, xo, ro, wo, to, pao, ao, co, gram_o, *,
-            offsets: Sequence[int], halo: int, block: int,
+def _kernel(sc_ref, bands_ref, csum_ref, w_ref, t_ref, c_ref, x_ref,
+            r_ref, pa_ref, a_ref, rh_ref, xo, ro, wo, to, pao, ao, co,
+            gram_o, *, offsets: Sequence[int], halo: int, block: int,
             n_valid: int = None):
     """One tile of the fused p-BiCGStab sweep (see module docstring)."""
     i = pl.program_id(0)
@@ -124,19 +129,26 @@ def _kernel(sc_ref, bands_ref, w_ref, t_ref, c_ref, x_ref, r_ref, pa_ref,
     if n_valid is not None:
         rows = base + jax.lax.broadcasted_iota(jnp.int32, (block,), 0)
         C = jnp.where(rows < n_valid, C, 0)
-    gram_o[:, :] += C @ C.T
+    gram_o[:NBASIS, :] += C @ C.T
+    # ABFT checksum partial for the in-kernel SpMV t' = A w': the signed
+    # residual 1^T(Aw') - c^T w' rides a 7th Gram row through the same
+    # (single) psum; |.| is taken after the reduction (C rows are already
+    # pad-masked, so tn/wn here are C[2]/C[1]).
+    c_tile = pl.load(csum_ref, (pl.dslice(base, block),))
+    gram_o[NBASIS, 0] += jnp.sum(C[2]) - jnp.sum(c_tile * C[1])
 
 
-def _sweep(offsets, bands_e, w_e, t_e, c_e, x, r, pa, a, rh, scalars, *,
-           halo: int, block: int, n_valid: int = None,
+def _sweep(offsets, bands_e, csum, w_e, t_e, c_e, x, r, pa, a, rh,
+           scalars, *, halo: int, block: int, n_valid: int = None,
            interpret: bool = False) -> Tuple[jnp.ndarray, ...]:
     """The shared pallas_call: one grid sweep over pre-extended operands.
 
     ``bands_e`` is extended by ``halo`` rows each side and ``w_e`` /
     ``t_e`` / ``c_e`` by ``2*halo`` — with zeros (single-device path) or
-    neighbor rows (sharded path).  ``scalars`` is the (3,) array
-    ``[alpha, beta, omega]``; ``n_valid`` (static) masks pad rows out of
-    the Gram partials.
+    neighbor rows (sharded path).  ``csum`` (n,) holds the local slice of
+    the ABFT column sums c = A^T 1 of the (Jacobi-folded) operator.
+    ``scalars`` is the (3,) array ``[alpha, beta, omega]``; ``n_valid``
+    (static) masks pad rows out of the Gram partials.
     """
     n = x.shape[0]
     assert n % block == 0, (n, block)
@@ -153,6 +165,7 @@ def _sweep(offsets, bands_e, w_e, t_e, c_e, x, r, pa, a, rh, scalars, *,
         in_specs=[
             resident((3,)),                  # alpha / beta / omega
             resident(bands_e.shape),         # bands (+h)
+            resident(csum.shape),            # c = A^T 1
             resident(w_e.shape),             # w (+2h)
             resident(t_e.shape),             # t (+2h)
             resident(c_e.shape),             # c (+2h)
@@ -162,11 +175,11 @@ def _sweep(offsets, bands_e, w_e, t_e, c_e, x, r, pa, a, rh, scalars, *,
             vec_spec,                        # a
             vec_spec,                        # r_hat
         ],
-        out_specs=[vec_spec] * 7 + [resident((NBASIS, NBASIS))],
+        out_specs=[vec_spec] * 7 + [resident((NGRAM, NBASIS))],
         out_shape=[jax.ShapeDtypeStruct((n,), dt)] * 7
-        + [jax.ShapeDtypeStruct((NBASIS, NBASIS), dt)],
+        + [jax.ShapeDtypeStruct((NGRAM, NBASIS), dt)],
         interpret=interpret,
-    )(scalars, bands_e, w_e, t_e, c_e, x, r, pa, a, rh)
+    )(scalars, bands_e, csum, w_e, t_e, c_e, x, r, pa, a, rh)
     return tuple(outs)
 
 
@@ -185,17 +198,19 @@ def pipebicgstab_fused(offsets: Sequence[int], bands: jnp.ndarray,
     All vectors are (n,) with scalar ``alpha`` / ``beta`` / ``omega``;
     ``bands`` is (n_bands, n) with the (Jacobi-folded) operator.  n must
     be a multiple of ``block`` (the ops.py wrapper pads).  Returns
-    ``(x', r', w', t', pa', a', c', gram)`` with ``gram`` the (6, 6) Gram
-    matrix of ``[r', w', t', a', c', r_hat]`` — the next iteration's
-    fused-reduction payload.
+    ``(x', r', w', t', pa', a', c', gram)`` with ``gram`` (7, 6): rows
+    0..5 the Gram matrix of ``[r', w', t', a', c', r_hat]`` — the next
+    iteration's fused-reduction payload — and ``gram[6, 0]`` the ABFT
+    checksum residual 1^T(Aw') - c^T w' of the in-kernel SpMV.
     """
     halo = max(abs(o) for o in offsets)
     bands_e = jnp.pad(bands, ((0, 0), (halo, halo)))
+    csum = dia_column_checksum(offsets, bands)
     w_e = jnp.pad(w, (2 * halo, 2 * halo))
     t_e = jnp.pad(t, (2 * halo, 2 * halo))
     c_e = jnp.pad(c, (2 * halo, 2 * halo))
-    return _sweep(offsets, bands_e, w_e, t_e, c_e, x, r, pa, a, r_hat,
-                  _scalars(alpha, beta, omega, x.dtype), halo=halo,
+    return _sweep(offsets, bands_e, csum, w_e, t_e, c_e, x, r, pa, a,
+                  r_hat, _scalars(alpha, beta, omega, x.dtype), halo=halo,
                   block=block, interpret=interpret)
 
 
@@ -217,7 +232,10 @@ def pipebicgstab_halo(offsets: Sequence[int], bands_ext: jnp.ndarray,
     ``halo`` per side, exchanged once per solve.  Pads the row dimension
     to ``block`` internally; pad rows are masked out of the Gram
     partials.  The returned ``gram`` holds this shard's PARTIAL sums —
-    the caller must finish them with a ``psum`` over the mesh axis.
+    the caller must finish them with a ``psum`` over the mesh axis.  The
+    checksum row gram[6] tiles exactly: its column sums come from
+    ``bands_ext`` (halo=h), the local slice of the GLOBAL c = A^T 1, so
+    the psum'd entry is the exact global 1^T(Aw') - c^T w'.
     """
     n = x.shape[0]
     halo = max(abs(o) for o in offsets)
@@ -234,8 +252,10 @@ def pipebicgstab_halo(offsets: Sequence[int], bands_ext: jnp.ndarray,
     t_e = jnp.concatenate([t_l, t, t_r, zpad])
     c_e = jnp.concatenate([c_l, c, c_r, zpad])
     bands_p = jnp.pad(bands_ext, ((0, 0), (0, pad)))
+    csum = jnp.pad(dia_column_checksum(offsets, bands_ext, halo=halo),
+                   (0, pad))
     vecs = [jnp.pad(v, (0, pad)) for v in (x, r, pa, a, r_hat)]
-    outs = _sweep(offsets, bands_p, w_e, t_e, c_e, *vecs,
+    outs = _sweep(offsets, bands_p, csum, w_e, t_e, c_e, *vecs,
                   _scalars(alpha, beta, omega, x.dtype), halo=halo,
                   block=block, n_valid=(n if pad else None),
                   interpret=interpret)

@@ -17,16 +17,20 @@ else is re-derived inside the tile sweep:
     x' = x + alpha p'      r' = r - alpha s'
     u' = u - alpha q'                                 (tile +-h)
     w' = A u'                                         (tile)
-    partials: <r',u'>, <w',u'>, <r',r'>, <r',w'>, <w',w'>
+    partials: <r',u'>, <w',u'>, <r',r'>, <r',w'>, <w',w'>,
+              1^T w' - c^T u'   (ABFT checksum of the in-kernel SpMV)
 
 The halo recompute duplicates O(halo) flops per tile — free on a
 memory-bound kernel.  ``u``, ``p``, the bands and ``diag^-1`` ride along
 VMEM-resident with zero halos (the spmv_dia trick), so per iteration the
 kernel moves
 
-    reads:  x, r (tiled) + u, p, diag^-1 (resident) + bands (resident)
+    reads:  x, r (tiled) + u, p, diag^-1, c = A^T 1 (resident)
+            + bands (resident)
     writes: x', r', u', p'
-    ==  (9 + n_bands) n words  ==  12n for the tridiagonal ex23 operator
+    ==  (10 + n_bands) n words  ==  13n for the tridiagonal ex23 operator
+    (the +1n over PR 5's 12n is the ABFT column-sum vector; the checksum
+    residual itself rides the existing reduction row for free)
 
 vs ~38n for the unfused chain (8 AXPYs x 3 + 3 dots x 2 + M-apply x 3 +
 SpMV x 5).  A leading multi-RHS grid dimension batches k right-hand sides
@@ -64,13 +68,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.checksum import dia_column_checksum
+
 DEFAULT_BLOCK = 1024
-NRED = 5  # <r,u>, <w,u>, <r,r>, <r,w>, <w,w>
+NRED = 6  # <r,u>, <w,u>, <r,r>, <r,w>, <w,w>, ABFT 1^T(Au') - c^T u'
 
 
-def _kernel(ab_ref, bands_ref, invd_ref, u_ref, p_ref, x_ref, r_ref,
-            xo, ro, uo, po, red_o, *, offsets: Sequence[int], halo: int,
-            block: int, n_valid: int = None):
+def _kernel(ab_ref, bands_ref, invd_ref, csum_ref, u_ref, p_ref, x_ref,
+            r_ref, xo, ro, uo, po, red_o, *, offsets: Sequence[int],
+            halo: int, block: int, n_valid: int = None):
     j = pl.program_id(0)          # RHS index (batch)
     i = pl.program_id(1)          # tile index
     base = i * block
@@ -132,6 +138,12 @@ def _kernel(ab_ref, bands_ref, invd_ref, u_ref, p_ref, x_ref, r_ref,
     red_o[0, 2] += jnp.sum(r2 * r2)
     red_o[0, 3] += jnp.sum(r2 * w2)
     red_o[0, 4] += jnp.sum(w2 * w2)
+    # ABFT checksum partial for the in-kernel SpMV w' = A u': the signed
+    # residual 1^T(Au') - c^T u' with c = A^T 1 (kernels/checksum.py).
+    # Rounding-level when the sweep executed faithfully, O(corruption)
+    # otherwise; the consumer takes |.| after finishing the psum.
+    c_tile = pl.load(csum_ref, (pl.dslice(base, block),))
+    red_o[0, 5] += jnp.sum(w2) - jnp.sum(c_tile * u2)
 
 
 def _ab(alpha, beta, k_rhs, dt):
@@ -140,15 +152,17 @@ def _ab(alpha, beta, k_rhs, dt):
     return ab.reshape(k_rhs, 2)
 
 
-def _sweep(offsets, bands_e, invd_e, u_e, p_e, x, r, ab, *, halo: int,
+def _sweep(offsets, bands_e, invd_e, csum, u_e, p_e, x, r, ab, *, halo: int,
            block: int, n_valid: int = None, interpret: bool = False
            ) -> Tuple[jnp.ndarray, ...]:
     """The shared pallas_call: one grid sweep over pre-extended operands.
 
     ``bands_e`` / ``invd_e`` are extended by ``halo`` rows each side and
     ``u_e`` / ``p_e`` by ``2*halo`` — with zeros (single-device path) or
-    neighbor rows (sharded path).  ``n_valid`` (static) masks pad rows out
-    of the reduction partials; None means every row is valid.
+    neighbor rows (sharded path).  ``csum`` (n,) holds the local slice of
+    the ABFT column sums c = A^T 1 (resident, loop-invariant).
+    ``n_valid`` (static) masks pad rows out of the reduction partials;
+    None means every row is valid.
     """
     k_rhs, n = x.shape
     assert n % block == 0, (n, block)
@@ -167,6 +181,7 @@ def _sweep(offsets, bands_e, invd_e, u_e, p_e, x, r, ab, *, halo: int,
             pl.BlockSpec((1, 2), lambda j, i: (j, 0)),          # alpha/beta
             resident(bands_e.shape),                            # bands (+h)
             resident(invd_e.shape),                             # diag^-1 (+h)
+            resident(csum.shape),                               # c = A^T 1
             pl.BlockSpec((1, n + 4 * halo), lambda j, i: (j, 0)),  # u (+2h)
             pl.BlockSpec((1, n + 4 * halo), lambda j, i: (j, 0)),  # p (+2h)
             vec_spec,                                           # x
@@ -176,7 +191,7 @@ def _sweep(offsets, bands_e, invd_e, u_e, p_e, x, r, ab, *, halo: int,
         out_shape=[jax.ShapeDtypeStruct((k_rhs, n), dt)] * 4
         + [jax.ShapeDtypeStruct((k_rhs, NRED), dt)],
         interpret=interpret,
-    )(ab, bands_e, invd_e, u_e, p_e, x, r)
+    )(ab, bands_e, invd_e, csum, u_e, p_e, x, r)
     return tuple(outs)
 
 
@@ -191,17 +206,20 @@ def pipecg_spmv_fused(offsets: Sequence[int], bands: jnp.ndarray,
     (n_bands, n), ``inv_diag`` (n,); both are shared across the batch.
     n must be a multiple of ``block`` (the ops.py wrapper pads).
 
-    Returns (x', r', u', p', red) with red (k, 5) =
-    (<r',u'>, <w',u'>, <r',r'>, <r',w'>, <w',w'>) per RHS.
+    Returns (x', r', u', p', red) with red (k, 6) =
+    (<r',u'>, <w',u'>, <r',r'>, <r',w'>, <w',w'>, chk) per RHS, where
+    chk = 1^T(Au') - c^T u' is the ABFT checksum residual of the
+    in-kernel SpMV (rounding-level unless the sweep was corrupted).
     """
     k_rhs, n = x.shape
     halo = max(abs(o) for o in offsets)
     # zero halo extensions (resident operands; fetched once, revisited)
     bands_e = jnp.pad(bands, ((0, 0), (halo, halo)))
     invd_e = jnp.pad(inv_diag, (halo, halo))
+    csum = dia_column_checksum(offsets, bands)
     u_e = jnp.pad(u, ((0, 0), (2 * halo, 2 * halo)))
     p_e = jnp.pad(p, ((0, 0), (2 * halo, 2 * halo)))
-    return _sweep(offsets, bands_e, invd_e, u_e, p_e, x, r,
+    return _sweep(offsets, bands_e, invd_e, csum, u_e, p_e, x, r,
                   _ab(alpha, beta, k_rhs, x.dtype), halo=halo, block=block,
                   interpret=interpret)
 
@@ -227,8 +245,13 @@ def pipecg_spmv_halo(offsets: Sequence[int], bands_ext: jnp.ndarray,
 
     Pads the row dimension to ``block`` internally; pad rows are masked
     out of the reduction partials (they see halo data, not zeros).  The
-    returned ``red`` (k, 5) holds this shard's PARTIAL sums — the caller
-    must finish them with a ``psum`` over the mesh axis.
+    returned ``red`` (k, 6) holds this shard's PARTIAL sums — the caller
+    must finish them with a ``psum`` over the mesh axis.  That includes
+    the checksum entry red[:, 5]: the column sums are computed from
+    ``bands_ext`` (halo=h), i.e. the local slice of the GLOBAL c = A^T 1
+    including neighbor-row contributions, so the psum of the per-shard
+    row/column partials reproduces the exact global checksum residual
+    with no extra communication.
     """
     k_rhs, n = x.shape
     halo = max(abs(o) for o in offsets)
@@ -244,9 +267,11 @@ def pipecg_spmv_halo(offsets: Sequence[int], bands_ext: jnp.ndarray,
     p_e = jnp.concatenate([p_l, p, p_r, zpad], axis=-1)
     bands_p = jnp.pad(bands_ext, ((0, 0), (0, pad)))
     invd_p = jnp.pad(invd_ext, (0, pad))
+    csum = jnp.pad(dia_column_checksum(offsets, bands_ext, halo=halo),
+                   (0, pad))
     x_p = jnp.pad(x, ((0, 0), (0, pad)))
     r_p = jnp.pad(r, ((0, 0), (0, pad)))
-    outs = _sweep(offsets, bands_p, invd_p, u_e, p_e, x_p, r_p,
+    outs = _sweep(offsets, bands_p, invd_p, csum, u_e, p_e, x_p, r_p,
                   _ab(alpha, beta, k_rhs, x.dtype), halo=halo, block=block,
                   n_valid=(n if pad else None), interpret=interpret)
     if pad:

@@ -63,8 +63,13 @@ def pipecg_spmv_fused_ref(offsets, bands, inv_diag, x, r, u, p, alpha, beta
 
     Batched over the leading axis: x/r/u/p (k, n), alpha/beta (k,).
     Derived-vector formulation (exact-arithmetic equal to the recurrences):
-    s' = A p', q' = diag^-1 s', w' = A u'.
+    s' = A p', q' = diag^-1 s', w' = A u'.  red (k, 6) carries the ABFT
+    checksum residual 1^T(Au') - c^T u' as its last entry.
     """
+    from repro.kernels.checksum import dia_column_checksum
+
+    csum = dia_column_checksum(offsets, bands)
+
     def one(x, r, u, p, alpha, beta):
         y = spmv_dia_ref  # alias
         n = x.shape[0]
@@ -79,7 +84,8 @@ def pipecg_spmv_fused_ref(offsets, bands, inv_diag, x, r, u, p, alpha, beta
         w2 = y(offsets, bands, ext(u2), halo)
         red = jnp.stack([jnp.sum(r2 * u2), jnp.sum(w2 * u2),
                          jnp.sum(r2 * r2), jnp.sum(r2 * w2),
-                         jnp.sum(w2 * w2)])
+                         jnp.sum(w2 * w2),
+                         jnp.sum(w2) - jnp.sum(csum * u2)])
         return x2, r2, u2, p2, red
 
     return jax.vmap(one)(x, r, u, p, jnp.asarray(alpha), jnp.asarray(beta))
@@ -113,9 +119,12 @@ def pipebicgstab_fused_ref(offsets, bands, x, r, w, t, pa, a, c, r_hat,
 
     All vectors (n,), scalars alpha/beta/omega.  Implements the carried-
     combo recurrences of core/krylov/bicgstab.py::pipebicgstab verbatim;
-    returns (x', r', w', t', pa', a', c', gram (6, 6)) with gram the Gram
-    matrix of [r', w', t', a', c', r_hat].
+    returns (x', r', w', t', pa', a', c', gram (7, 6)) with gram rows
+    0..5 the Gram matrix of [r', w', t', a', c', r_hat] and gram[6, 0]
+    the ABFT checksum residual 1^T(Aw') - c^T w'.
     """
+    from repro.kernels.checksum import dia_column_checksum
+
     halo = max(abs(o) for o in offsets)
     mv = lambda v: spmv_dia_ref(offsets, bands, jnp.pad(v, (halo, halo)),
                                 halo)
@@ -133,4 +142,7 @@ def pipebicgstab_fused_ref(offsets, bands, x, r, w, t, pa, a, c, r_hat,
     a2 = s - omega * z
     c2 = z - omega * v
     C = jnp.stack([r2, w2, t2, a2, c2, r_hat])
-    return x2, r2, w2, t2, pa2, a2, c2, C @ C.T
+    csum = dia_column_checksum(offsets, bands)
+    chk_row = jnp.zeros((1, 6), x.dtype).at[0, 0].set(
+        jnp.sum(t2) - jnp.sum(csum * w2))
+    return x2, r2, w2, t2, pa2, a2, c2, jnp.concatenate([C @ C.T, chk_row])

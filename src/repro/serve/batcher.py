@@ -29,6 +29,7 @@ import numpy as np
 from repro.core.krylov.cg import _pipecg_scalars
 from repro.core.krylov.engine import get_engine
 from repro.core.krylov.operators import DiaMatrix
+from repro.kernels.checksum import dia_column_checksum
 from repro.serve.request import SolveRequest
 
 _STEP_CACHE: Dict[Tuple, "_Compiled"] = {}
@@ -63,7 +64,7 @@ def _build(engine: str, offsets: Tuple[int, ...], n: int, k: int,
 
         def body(st, _):
             alpha, beta = _pipecg_scalars(st)
-            vecs, gamma_new, delta_new, rr = eng.pipecg_iter(
+            vecs, gamma_new, delta_new, rr, _aux = eng.pipecg_iter(
                 A, M, ip, st["vecs"], alpha, beta)
             done = st["done"] | (rr <= tol2)
             mask = st["done"]
@@ -88,7 +89,16 @@ def _build(engine: str, offsets: Tuple[int, ...], n: int, k: int,
         st, _ = jax.lax.scan(body, state, None, length=step_block)
         r = st["vecs"]["r"]
         rr = jnp.sum(r * r, axis=-1)
-        return st, (st["done"], st["iters"], rr)
+        # per-column ABFT state-deviation partials: the server combines
+        # them with its host-side 1^T b to form delta = 1^T(b - A x - r)
+        # (exact via c = A^T 1 — no SpMV), plus the |.|-sums that scale
+        # its trip threshold (signed sums cancel; see abft.py)
+        c = dia_column_checksum(offsets, bands)
+        x = st["vecs"]["x"]
+        det = jnp.stack([jnp.sum(c * x, axis=-1), jnp.sum(r, axis=-1),
+                         jnp.sum(jnp.abs(c * x), axis=-1),
+                         jnp.sum(jnp.abs(r), axis=-1)], axis=-1)
+        return st, (st["done"], st["iters"], rr, det)
 
     def init_fn(bands, B):
         counts["init"] += 1
@@ -177,8 +187,14 @@ class ContinuousBatcher:
                           done=jnp.ones((self.k,), bool),
                           iters=jnp.zeros((self.k,), jnp.int32))
         self.tol2 = np.zeros((self.k,), np.float64)
+        # host-side 1^T b and sum |b| per slot (the b-leg of the ABFT
+        # state deviation; device returns the x/r legs from step())
+        self.bsum = np.zeros((self.k,), np.float64)
+        self.babs = np.zeros((self.k,), np.float64)
         self.slots: List[Optional[SolveRequest]] = [None] * self.k
         self.blocks = 0
+        self.deviation = np.zeros((self.k,), np.float64)
+        self.dev_scale = np.zeros((self.k,), np.float64)
 
     @property
     def trace_counts(self) -> Dict[str, int]:
@@ -205,6 +221,9 @@ class ContinuousBatcher:
         bb = float(np.dot(np.asarray(req.b, np.float64),
                           np.asarray(req.b, np.float64)))
         self.tol2[slot] = req.tol ** 2 * bb
+        b64 = np.asarray(req.b, np.float64)
+        self.bsum[slot] = float(b64.sum())
+        self.babs[slot] = float(np.abs(b64).sum())
         self.slots[slot] = req
 
     def step(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -212,11 +231,18 @@ class ContinuousBatcher:
 
         Returns host copies of (done, iters, rr) — the per-column freeze
         flags, per-column iteration counts since admission, and squared
-        residual norms.
+        residual norms.  The per-column ABFT deviations of the same block
+        are cached on ``self.deviation`` / ``self.dev_scale`` (combined
+        with the host-side b-sums stored at admit).
         """
-        self.state, (done, iters, rr) = self.compiled.step(
+        self.state, (done, iters, rr, det) = self.compiled.step(
             self.bands, self.state, jnp.asarray(self.tol2))
         self.blocks += 1
+        det = np.asarray(det, np.float64)
+        # delta = 1^T b - c^T x - 1^T r == 1^T (b - A x - r); rounding-level
+        # for any state the recurrence produced, O(corruption) otherwise
+        self.deviation = self.bsum - det[:, 0] - det[:, 1]
+        self.dev_scale = self.babs + det[:, 2] + det[:, 3]
         return np.asarray(done), np.asarray(iters), np.asarray(rr)
 
     def take(self, slot: int) -> np.ndarray:

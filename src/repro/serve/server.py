@@ -27,28 +27,13 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.krylov.operators import DiaMatrix
+from repro.core.krylov import abft
+from repro.core.krylov.hostops import dia_matvec_np
 from repro.serve.batcher import ContinuousBatcher
 from repro.serve.chaos import ServeChaos
 from repro.serve.metrics import ServeStats, summarize
 from repro.serve.queue import RequestQueue
 from repro.serve.request import ServeRecord, SolveRequest, content_key
-
-
-def _np_dia_matvec(A: DiaMatrix, x: np.ndarray) -> np.ndarray:
-    """Host-numpy DIA matvec (mirrors ``DiaMatrix.matvec`` semantics)."""
-    bands = np.asarray(A.bands, np.float64)
-    n = x.shape[0]
-    y = np.zeros_like(x)
-    for k, off in enumerate(A.offsets):
-        if off == 0:
-            y += bands[k] * x
-        elif off > 0:
-            y[: n - off] += bands[k, : n - off] * x[off:]
-        else:
-            o = -off
-            y[o:] += bands[k, o:] * x[: n - o]
-    return y
 
 
 class SolverServer:
@@ -69,6 +54,9 @@ class SolverServer:
         self.batchers: Dict[Tuple, ContinuousBatcher] = {}
         self.blocks = 0
         self.per_block_active: List[int] = []
+        # ABFT provenance: one DetectionReport per mid-flight deviation
+        # trip (fast path) with its slow-path confirm outcome
+        self.detections: List[abft.DetectionReport] = []
 
     # -- submission ---------------------------------------------------------
 
@@ -172,6 +160,71 @@ class SolverServer:
                 meta = slot_meta[slot]
                 healthy = bool(np.isfinite(rr[slot]))
                 capped = bool(iters[slot] >= req.maxiter)
+                # mid-flight ABFT fast path: the batcher's per-column
+                # state deviation delta = 1^T(b - A x - r) trips on a
+                # poisoned/corrupted slot long before retire time (the
+                # recurrence never sees a corrupted x, so rr alone
+                # cannot).  Quarantine restarts ONLY this column —
+                # in-flight neighbours are untouched (columns are
+                # independent, see batcher.py).
+                if not done[slot] and not capped:
+                    dev = float(cur.deviation[slot])
+                    scale = float(cur.dev_scale[slot])
+                    if not np.isfinite(scale):
+                        scale = 0.0   # poisoned scale: any finite dev trips
+                    # the clean-state deviation accumulates one rounding
+                    # term per iteration (the Cools bound is linear in
+                    # the iteration count), so the trip threshold must
+                    # grow with it or long solves flood the slow path
+                    # with unconfirmed trips
+                    thr = abft.checksum_threshold(
+                        max(scale, 1e-300), req.A.n,
+                        cur.dtype) * max(1.0, float(iters[slot]))
+                    if not np.isfinite(dev) or abs(dev) > thr:
+                        # slow-path confirm: host true residual vs the
+                        # recurrence norm (corruption = the two disagree)
+                        x = cur.take(slot)
+                        b64 = np.asarray(req.b, np.float64)
+                        if np.all(np.isfinite(x)):
+                            res_true = float(np.linalg.norm(
+                                b64 - dia_matvec_np(req.A.offsets,
+                                                    req.A.bands, x)))
+                        else:
+                            res_true = math.inf
+                        rec_res = (math.sqrt(max(float(rr[slot]), 0.0))
+                                   if healthy else math.inf)
+                        confirmed = bool(
+                            not np.isfinite(res_true)
+                            or res_true > 10.0 * (rec_res + req.tol
+                                                  * float(np.linalg.norm(
+                                                      b64))))
+                        self.detections.append(abft.DetectionReport(
+                            solver="pipecg", detector="state_deviation",
+                            tripped=True, trip_iter=int(iters[slot]),
+                            value=(dev if np.isfinite(dev)
+                                   else math.inf),
+                            threshold=float(thr), action="quarantine",
+                            confirmed=confirmed))
+                        if confirmed:
+                            if meta["restarts"] < self.max_restarts:
+                                cur.release(slot)
+                                cur.admit(slot, req)
+                                meta["restarts"] += 1
+                                continue
+                            run_records.append(ServeRecord(
+                                rid=req.rid, x=None, iters=int(iters[slot]),
+                                res_norm=res_true, converged=False,
+                                arrival_s=req.arrival_s,
+                                admitted_s=meta["admitted_s"],
+                                finished_s=now,
+                                deadline_s=req.deadline_s,
+                                restarts=meta["restarts"],
+                                arrival_block=arrival_block.get(req.rid, 0),
+                                admitted_block=meta["admitted_block"],
+                                finished_block=self.blocks))
+                            cur.release(slot)
+                            slot_meta.pop(slot, None)
+                            continue
                 if healthy and not (done[slot] or capped):
                     continue
                 x = cur.take(slot) if healthy else None
@@ -216,7 +269,8 @@ class SolverServer:
         catches it.
         """
         b = np.asarray(req.b, np.float64)
-        y = _np_dia_matvec(req.A, np.asarray(x, np.float64))
+        y = dia_matvec_np(req.A.offsets, req.A.bands,
+                          np.asarray(x, np.float64))
         res = float(np.linalg.norm(b - y))
         bn = float(np.linalg.norm(b))
         return bool(np.isfinite(res) and res <= req.tol * bn * 1.01), res

@@ -1,0 +1,463 @@
+"""ABFT detector property lane (checksum kernels -> adaptive rr -> serve).
+
+Two property families pin the detection-coverage contract end to end:
+
+* ZERO FALSE POSITIVES — clean solves across the operator / dtype /
+  engine / depth grid never cross the checksum trip threshold
+  (``abft.checksum_threshold`` with the default headroom);
+* CORRUPTION ALWAYS TRIPS — a supra-threshold ``corrupt`` fault injected
+  into the carried reduction trips the in-flight detector within the
+  modeled detection window (1 iteration for depth-1 bodies, l for the
+  block-granular depth path), for every FaultSpec-grid magnitude.
+
+Plus unit tests for the shared host matvec (core/krylov/hostops.py), the
+abft scalar helpers, the resync-model ABFT terms, the adaptive-rr
+``lax.cond`` trace pin (the replacement SpMV must NOT run every block),
+the serve quarantine path, the elastic fast-path detector field, and the
+campaign stage schema (validate_abft_cells / bench_record / CSV).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.krylov import abft, pipebicgstab, pipecg, tridiagonal_laplacian
+from repro.core.krylov.distributed import distributed_solve
+from repro.core.krylov.hostops import dia_matvec_np, true_residual_norm
+from repro.core.krylov.operators import DiaMatrix
+from repro.core.krylov.pipeline import pipecg_l
+from repro.core.noise.faults import FaultInjector, FaultSpec
+from repro.core.perfmodel.resync import (
+    abft_detection_iters,
+    adaptive_rr_overhead_iters,
+    adaptive_rr_replacements,
+    detection_iters,
+)
+from repro.kernels.checksum import dia_column_checksum
+
+
+def _shifted_laplacian(n, dtype=jnp.float64):
+    A0 = tridiagonal_laplacian(n, dtype=dtype)
+    diag = A0.offsets.index(0)
+    bands = A0.bands.at[diag].add(jnp.asarray(1.0, dtype))
+    return DiaMatrix(offsets=A0.offsets, bands=bands)
+
+
+def _dense(A):
+    n = A.bands.shape[-1]
+    M = np.zeros((n, n))
+    for k, off in enumerate(A.offsets):
+        for i in range(n):
+            j = i + off
+            if 0 <= j < n:
+                M[i, j] = float(A.bands[k, i])
+    return M
+
+
+# ---------------------------------------------------------------------------
+# hostops (satellite b: the single shared host matvec)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("offsets", [(-1, 0, 1), (-2, 0, 3)])
+@pytest.mark.parametrize("batch", [(), (3,)])
+def test_dia_matvec_np_matches_device_matvec(rng, offsets, batch):
+    n = 40
+    bands = rng.standard_normal((len(offsets), n))
+    for k, off in enumerate(offsets):
+        if off > 0:
+            bands[k, n - off:] = 0.0
+        elif off < 0:
+            bands[k, :-off] = 0.0
+    A = DiaMatrix(offsets=offsets, bands=jnp.asarray(bands))
+    x = rng.standard_normal(batch + (n,))
+    got = dia_matvec_np(offsets, bands, x)
+    for idx in np.ndindex(*batch) if batch else [()]:
+        want = np.asarray(A.matvec(jnp.asarray(x[idx])))
+        np.testing.assert_allclose(got[idx], want, rtol=1e-13, atol=1e-13)
+
+
+def test_true_residual_norm_vanishes_at_solution(rng):
+    n = 48
+    A = _shifted_laplacian(n)
+    x = rng.standard_normal(n)
+    b = dia_matvec_np(A.offsets, np.asarray(A.bands), x)
+    assert true_residual_norm(A, b, x) < 1e-12
+    assert true_residual_norm(A, b, x + 1.0) > 0.1
+
+
+# ---------------------------------------------------------------------------
+# checksum + threshold + scalar detector units
+# ---------------------------------------------------------------------------
+
+def test_dia_column_checksum_is_column_sums(rng):
+    n = 32
+    A = _shifted_laplacian(n)
+    c = np.asarray(dia_column_checksum(A.offsets, A.bands))
+    np.testing.assert_allclose(c, _dense(A).sum(axis=0), rtol=1e-14)
+
+
+def test_checksum_residual_rounding_level_on_clean_spmv(rng):
+    n = 512
+    A = _shifted_laplacian(n)
+    c = dia_column_checksum(A.offsets, A.bands)
+    v = jnp.asarray(rng.standard_normal(n))
+    w = A.matvec(v)
+    chk = float(jnp.sum(w) - jnp.sum(c * v))
+    scale = float(jnp.sum(jnp.abs(w)) + jnp.sum(jnp.abs(c * v)))
+    assert abs(chk) < abft.checksum_threshold(scale, n, np.float64)
+
+
+def test_checksum_threshold_scalings():
+    t = abft.checksum_threshold(1.0, 100, np.float64)
+    assert abft.checksum_threshold(10.0, 100, np.float64) == pytest.approx(
+        10 * t)
+    assert abft.checksum_threshold(1.0, 400, np.float64) == pytest.approx(
+        2 * t)
+    # fp32's rounding floor is ~1e9 x coarser
+    assert abft.checksum_threshold(1.0, 100, np.float32) > 1e8 * t
+
+
+def test_first_trip_scan():
+    thr = 1.0
+    assert abft.first_trip([0.1, -0.2, 0.5], thr) == -1
+    assert abft.first_trip([0.1, -2.0, 5.0], thr) == 1
+    assert abft.first_trip([0.1, np.nan, 0.1], thr) == 1
+    assert abft.first_trip([np.inf], thr) == 0
+    assert abft.first_trip([], thr) == -1
+
+
+def test_deviation_recursion_monotone_and_trips():
+    eps = abft.machine_eps(np.float64)
+    dev = jnp.asarray(0.0)
+    for _ in range(5):
+        new = abft.deviation_update(dev, 0.5, 4.0, 9.0, eps=eps)
+        assert float(new) > float(dev)
+        dev = new
+    assert not bool(abft.deviation_trip(dev, 4.0, tau=1e3 * eps))
+    assert bool(abft.deviation_trip(jnp.asarray(1.0), 4.0, tau=0.1))
+    blk = abft.deviation_update_block(jnp.asarray(0.0), 4, 2.0, 4.0, eps=eps)
+    assert float(blk) == pytest.approx(4 * eps * 5.0 * 2.0)
+
+
+def test_detection_report_merge():
+    reps = [abft.DetectionReport("pipecg", "checksum", True, trip_iter=7,
+                                 confirmed=True),
+            abft.DetectionReport("pipecg", "true_residual", False)]
+    m = abft.merge_reports(reps)
+    assert m["n_tripped"] == 1 and m["first_trip_iter"] == 7
+    assert m["detectors"] == ["checksum"] and m["confirmed"]
+
+
+# ---------------------------------------------------------------------------
+# resync-model ABFT terms
+# ---------------------------------------------------------------------------
+
+def test_abft_detection_iters_regimes():
+    thr = 1e-10
+    assert abft_detection_iters(1.0, thr, period=10) == 1.0
+    assert abft_detection_iters(1e-12, thr, period=10) == detection_iters(10)
+    with pytest.raises(ValueError):
+        abft_detection_iters(1.0, -1.0, period=10)
+
+
+def test_adaptive_rr_model_terms():
+    eps = abft.machine_eps(np.float64)
+    reps = adaptive_rr_replacements(3000, eps, tau=1e3)
+    assert reps == pytest.approx(3000 * 3 * eps / 1e3)
+    # overhead = replacements x (1 SpMV + the depth-l resync penalty)
+    assert adaptive_rr_overhead_iters(3000, eps, 1e3, l=4, s_sync=2) == (
+        pytest.approx(reps * 9.0))
+    # tighter tau -> more replacements
+    assert adaptive_rr_replacements(3000, eps, 1e1) > reps
+
+
+# ---------------------------------------------------------------------------
+# property lane: zero false positives on clean solves
+# ---------------------------------------------------------------------------
+
+def _clean_threshold(A, b, res, dtype):
+    n = int(b.shape[-1])
+    a_inf = float(np.abs(np.asarray(A.bands, np.float64)).sum(axis=0).max())
+    hist = np.asarray(res.res_history, np.float64)
+    scale = a_inf * max(float(np.nanmax(hist)),
+                        float(np.linalg.norm(np.asarray(b, np.float64))))
+    return abft.checksum_threshold(scale, n, dtype)
+
+
+_OPERATORS = {"laplacian": tridiagonal_laplacian,
+              "shifted": _shifted_laplacian}
+
+
+@pytest.mark.parametrize("op", sorted(_OPERATORS))
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+@pytest.mark.parametrize("engine", ["naive", "fused"])
+def test_clean_pipecg_never_trips(op, dtype, engine):
+    n = 192
+    A = _OPERATORS[op](n, dtype=dtype)
+    b = jnp.ones((n,), dtype)
+    res = pipecg(A, b, maxiter=40, tol=0.0, engine=engine)
+    assert res.detect_history is not None
+    det = np.abs(np.asarray(res.detect_history, np.float64))
+    thr = _clean_threshold(A, b, res, np.dtype(dtype))
+    assert abft.first_trip(det, thr) == -1, (det.max(), thr)
+
+
+@pytest.mark.parametrize("op", sorted(_OPERATORS))
+def test_clean_pipebicgstab_never_trips(op):
+    n = 192
+    A = _OPERATORS[op](n)
+    b = jnp.ones((n,), jnp.float64)
+    res = pipebicgstab(A, b, maxiter=40, tol=0.0, engine="fused")
+    assert res.detect_history is not None
+    det = np.abs(np.asarray(res.detect_history, np.float64))
+    thr = _clean_threshold(A, b, res, np.float64)
+    assert abft.first_trip(det, thr) == -1, (det.max(), thr)
+
+
+def _mesh1():
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("shards",))
+
+
+@pytest.mark.parametrize("solver,kw", [
+    (pipecg, {}), (pipebicgstab, {}),
+    (pipecg_l, {"l": 2}), (pipecg_l, {"l": 4}),
+])
+def test_clean_sharded_detectors_never_trip(solver, kw):
+    """Clean sharded solves (the carried-psum detector row) never trip —
+    the depth axis of the zero-false-positive grid."""
+    n = 192
+    A = _shifted_laplacian(n)
+    b = jnp.ones((n,), jnp.float64)
+    res = distributed_solve(solver, A, b, _mesh1(), engine="sharded_fused",
+                            maxiter=36, tol=0.0, **kw)
+    assert res.detect_history is not None
+    det = np.abs(np.asarray(res.detect_history, np.float64))
+    assert det.shape[-1] == 36  # per-iteration shape contract
+    thr = _clean_threshold(A, b, res, np.float64)
+    assert abft.first_trip(det, thr) == -1, (det.max(), thr)
+
+
+# ---------------------------------------------------------------------------
+# property lane: injected corruption always trips within the window
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("magnitude", [1.0, 1e3])
+@pytest.mark.parametrize("solver,kw,window", [
+    (pipecg, {}, 2), (pipebicgstab, {}, 2), (pipecg_l, {"l": 2}, 3),
+])
+def test_injected_corruption_trips_in_window(solver, kw, window, magnitude):
+    n = 192
+    A = _shifted_laplacian(n)
+    b = jnp.ones((n,), jnp.float64)
+    ticks_per = kw.get("l", 1)
+    onset = 4                      # injector ticks: blocks on the depth path
+    inj = FaultInjector(faults=[FaultSpec(kind="corrupt", shard=0,
+                                          at_iter=onset,
+                                          magnitude=magnitude)],
+                        n_shards=1, seed=0)
+    res = distributed_solve(solver, A, b, _mesh1(), engine="sharded_fused",
+                            maxiter=36, tol=0.0, noise=inj, **kw)
+    det = np.abs(np.asarray(res.detect_history, np.float64))
+    thr = _clean_threshold(A, b, res, np.float64)
+    trip = abft.first_trip(det, thr)
+    onset_iters = onset * ticks_per
+    assert trip >= 0, (det.max(), thr)
+    lag = trip + 1 - onset_iters
+    assert 0 <= lag <= window, (trip, onset_iters, window)
+
+
+def test_sub_threshold_corruption_does_not_trip():
+    """A corruption below the rounding floor is indistinguishable from
+    roundoff — the detector must stay quiet (no false alarm)."""
+    n = 192
+    A = _shifted_laplacian(n)
+    b = jnp.ones((n,), jnp.float64)
+    inj = FaultInjector(faults=[FaultSpec(kind="corrupt", shard=0,
+                                          at_iter=4, magnitude=1e-14)],
+                        n_shards=1, seed=0)
+    res = distributed_solve(pipecg, A, b, _mesh1(), engine="sharded_fused",
+                            maxiter=36, tol=0.0, noise=inj)
+    det = np.abs(np.asarray(res.detect_history, np.float64))
+    thr = _clean_threshold(A, b, res, np.float64)
+    assert abft.first_trip(det, thr) == -1
+
+
+# ---------------------------------------------------------------------------
+# satellite a: the depth-l replacement SpMV is a lax.cond, not a where
+# ---------------------------------------------------------------------------
+
+def test_pipecg_l_replacement_spmv_is_conditional():
+    n = 64
+    A = _shifted_laplacian(n)
+    b = jnp.ones((n,), jnp.float64)
+    with_rr = str(jax.make_jaxpr(
+        lambda bb: pipecg_l(A, bb, l=2, maxiter=8, rr=2))(b))
+    without = str(jax.make_jaxpr(
+        lambda bb: pipecg_l(A, bb, l=2, maxiter=8))(b))
+    # the replacement r = b - A x must live under a cond (taken only on
+    # replacement blocks); the rr=0 trace has no cond at all, so the
+    # regression of evaluating both where-arms every block cannot return
+    assert "cond[" in with_rr
+    assert "cond[" not in without
+
+
+def test_pipecg_l_adaptive_rr_matches_periodic_accuracy():
+    n = 256
+    A = tridiagonal_laplacian(n)
+    b = jnp.ones((n,), jnp.float64)
+    base = pipecg_l(A, b, l=2, maxiter=120)
+    adaptive = pipecg_l(A, b, l=2, maxiter=120, rr_tau=1e3)
+    # adaptive replacement must not degrade the attainable accuracy
+    assert true_residual_norm(A, np.asarray(b), np.asarray(adaptive.x)) <= (
+        10 * true_residual_norm(A, np.asarray(b), np.asarray(base.x)) + 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# serve quarantine + elastic fast path
+# ---------------------------------------------------------------------------
+
+def test_serve_quarantine_reports_state_deviation():
+    # n large enough that the corrupted column is still MID-FLIGHT when
+    # the deviation trips (a fast solve retires the same block the
+    # corruption lands and only the retire-time verify would see it)
+    from repro.serve import ServeChaos, SolverServer, synthetic_requests
+
+    A = tridiagonal_laplacian(256)
+    # dense random RHS (no modes=): service demand ~ n iterations, so the
+    # corrupted column runs for dozens of blocks after the fault lands;
+    # tol stays above pipecg's attainable accuracy at this kappa
+    reqs = synthetic_requests(A, 4, tol=1e-8, maxiter=400, seed=7)
+    chaos = ServeChaos(["corrupt:1@2"])
+    srv = SolverServer(k_slots=4, engine="naive", step_block=4, chaos=chaos)
+    srv.warmup(reqs[0])
+    srv.submit_all(reqs)
+    stats = srv.run()
+    assert stats.drained and stats.n_converged == len(reqs)
+    hits = [d for d in srv.detections if d.detector == "state_deviation"]
+    assert hits and hits[0].action == "quarantine"
+    assert any(d.confirmed for d in hits)
+
+
+def test_serve_clean_run_reports_no_detections():
+    from repro.serve import SolverServer, synthetic_requests
+
+    A = tridiagonal_laplacian(64)
+    reqs = synthetic_requests(A, 4, tol=1e-10, maxiter=200, modes=(4, 24),
+                              seed=8)
+    srv = SolverServer(k_slots=4, engine="naive", step_block=4)
+    srv.warmup(reqs[0])
+    srv.submit_all(reqs)
+    stats = srv.run()
+    assert stats.drained and stats.n_converged == len(reqs)
+    assert srv.detections == []
+
+
+def test_resilient_solve_fast_path_detector_field():
+    """The elastic controller's corrupt recovery is driven by the carried
+    checksum (detector="checksum"), detected in ONE iteration — not the
+    segment-boundary true-residual sweep of PR 6."""
+    from repro.distributed.fault import resilient_distributed_solve
+
+    n = 192
+    A = _shifted_laplacian(n)
+    b = jnp.ones((n,), jnp.float64)
+    inj = FaultInjector(faults=[FaultSpec(kind="corrupt", shard=0,
+                                          at_iter=6, magnitude=1e3)],
+                        n_shards=1, seed=0)
+    x, rep = resilient_distributed_solve(A, b, jax.devices()[:1], tol=1e-10,
+                                         maxiter=120, checkpoint_period=10,
+                                         injector=inj)
+    assert rep.converged
+    ev = [e for e in rep.recoveries if e.kind == "corrupt"]
+    assert ev and ev[0].detector == "checksum"
+    assert ev[0].detect_iters <= detection_iters(10)  # beats the boundary
+    assert any(d.detector == "checksum" and d.action == "rollback"
+               for d in rep.detections)
+
+
+# ---------------------------------------------------------------------------
+# campaign stage schema (validate / bench_record / CSV)
+# ---------------------------------------------------------------------------
+
+def _fake_cell(**kw):
+    cell = {"solver": "pipecg", "detector": "checksum", "magnitude": 1.0,
+            "onset_iter": 5, "fault_shard": 0, "threshold": 1e-10,
+            "trip_iter": 5, "detect_lag_iters": 1, "window_iters": 2,
+            "expect_trip": True, "tripped": True,
+            "detected_in_window": True, "modeled_detect_iters": 1.0,
+            "boundary_detect_iters": 5.5, "clean_trip_iter": -1,
+            "clean_max_value": 1e-13, "false_positive": False,
+            "converged": True, "skipped": False}
+    cell.update(kw)
+    return cell
+
+
+def test_validate_abft_cells_coverage_rules():
+    from repro.experiments.validation import validate_abft_cells
+
+    cells = [
+        _fake_cell(recovered=True, recovery_detector="checksum",
+                   recovery_detect_iters=1.0, recovery_converged=True,
+                   recovery_overhead_iters=6.0),
+        _fake_cell(solver="pipecg_l", detector="state_deviation",
+                   magnitude=1e-12, expect_trip=False, tripped=False,
+                   trip_iter=-1, detect_lag_iters=-1,
+                   detected_in_window=False, modeled_detect_iters=5.5),
+        _fake_cell(solver="pipebicgstab", tripped=False, trip_iter=-1,
+                   detected_in_window=False),   # a MISSED detection
+        {"solver": "x", "magnitude": 1.0, "skipped": True},
+    ]
+    v = validate_abft_cells(cells)
+    assert set(v) == {"pipecg/mag1", "pipecg_l/mag1e-12",
+                      "pipebicgstab/mag1"}
+    assert v["pipecg/mag1"]["detection_ok"]
+    assert v["pipecg/mag1"]["recovery_ok"]
+    assert v["pipecg_l/mag1e-12"]["detection_ok"]     # no-trip expected
+    assert not v["pipebicgstab/mag1"]["detection_ok"]  # missed trip
+
+
+def test_bench_record_and_csv_schema(tmp_path):
+    from repro.experiments.abft_exec import bench_record, detection_window
+    from repro.experiments.report import ABFT_CSV_HEADER, write_abft_csv
+
+    cells = [_fake_cell(),
+             _fake_cell(magnitude=1e-12, expect_trip=False, tripped=False,
+                        trip_iter=-1, detect_lag_iters=-1,
+                        detected_in_window=False)]
+    rec = bench_record({"cells": cells})["abft"]
+    assert set(rec) == {"pipecg_mag1", "pipecg_mag1e-12"}
+    assert rec["pipecg_mag1"]["detection_ok"]
+    assert rec["pipecg_mag1"]["detect_lag_iters"] == 1.0
+    assert "detect_lag_iters" not in rec["pipecg_mag1e-12"]  # gate-safe
+    assert rec["pipecg_mag1e-12"]["detection_ok"]
+    path = write_abft_csv(tmp_path, cells)
+    lines = path.read_text().strip().splitlines()
+    assert lines[0] == ABFT_CSV_HEADER and len(lines) == 3
+    assert detection_window("pipecg", 2) == 2
+    assert detection_window("pipecg_l", 2) == 3
+
+
+def test_check_regression_abft_gate(tmp_path):
+    import importlib.util
+    import os
+    spec_ = importlib.util.spec_from_file_location(
+        "check_regression", os.path.join(os.path.dirname(__file__), "..",
+                                         "benchmarks", "check_regression.py"))
+    cr = importlib.util.module_from_spec(spec_)
+    spec_.loader.exec_module(cr)
+
+    base = {"abft": {"pipecg_mag1": {"detect_lag_iters": 1.0,
+                                     "detection_ok": True},
+                     "pipecg_mag1e-12": {"detection_ok": True}}}
+    same = {"abft": {k: dict(v) for k, v in base["abft"].items()}}
+    assert cr.compare(same, base, 0.10, key="abft") == []
+    slow = {"abft": {"pipecg_mag1": {"detect_lag_iters": 3.0,
+                                     "detection_ok": True},
+                     "pipecg_mag1e-12": {"detection_ok": True}}}
+    assert any("detect_lag_iters" in f
+               for f in cr.compare(slow, base, 0.10, key="abft"))
+    broken = {"abft": {"pipecg_mag1": {"detect_lag_iters": 1.0,
+                                       "detection_ok": False},
+                       "pipecg_mag1e-12": {"detection_ok": True}}}
+    assert any("detection_ok" in f
+               for f in cr.compare(broken, base, 0.10, key="abft"))
