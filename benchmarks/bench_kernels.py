@@ -23,6 +23,10 @@ nb = number of bands; Jacobi-preconditioned DIA operator):
     + bands + diag^-1 + c=A^T 1 resident    = (nb+2) n / k
                                      total  = (8 + (nb+2)/k) n -> 13 n
                                               tridiag at k=1, 8.6 n at k=8
+  bf16 storage (PrecisionPolicy(storage='bf16')): the r/u/p (resp.
+  BiCGStab chain) streams and the resident operator move at 0.5
+  fp32-equivalent words while x and the reduction rows stay fp32 —
+  13 n -> 7.5 n for the single sweep, 19 n -> 10.5 n for p-BiCGStab.
   pipecg_spmv_halo (sharded single sweep, per shard of n_l rows):
       same (8 + nb + 2) n_l kernel traffic
     + halo operands u,p (2h x 2 sides x 2)  =  8 h          (ppermute wire)
@@ -125,6 +129,20 @@ def _words_sharded_iter(n_local, nb, halo, k=1):
             + 6)                           # partial row + ABFT chk (psum)
 
 
+def _words_single_sweep_policy_iter(n, nb, k=1, sw=1.0):
+    """Policy-scaled single-sweep words: x read/write stays at accum
+    (2 words/row), the r/u/p streams (6) and the resident operator
+    (nb+2 per k RHS) move at ``sw`` fp32-equivalent words per element
+    (PrecisionPolicy.storage_words; 0.5 for bf16)."""
+    return (2.0 + 6.0 * sw + sw * (nb + 2) / k) * n
+
+
+def _words_pipebicgstab_policy_iter(n, nb, sw=1.0):
+    """Policy-scaled fused p-BiCGStab words: x at accum (2), the 13
+    carried-chain streams and the (nb+1) resident operator at ``sw``."""
+    return (2.0 + 13.0 * sw + sw * (nb + 1)) * n
+
+
 def _words_bicgstab_naive_iter(n, nb):
     """Classical BiCGStab as separate XLA ops (words/iteration):
     2 SpMVs (nb+2 each) + 4 vector updates (p:4, s:3, x:4, r:3)
@@ -223,12 +241,51 @@ def run(out_dir=None):
                      f"modeled_speedup={w_naive/w_fused:.2f}x"))
         record["kernels"][f"pipecg_spmv_fused_k{k_rhs}"] = {
             "n": n, "k_rhs": k_rhs, "err": err,
+            "dtype_storage": "fp32", "dtype_accum": "fp32",
             "words_per_iter_over_n": w_fused / n,
             "naive_words_over_n": w_naive / n,
             "update_kernel_words_over_n": _words_update_kernel_iter(n, nb) / n,
             "modeled_speedup_vs_naive": w_naive / w_fused,
             "modeled_us_v5e": us,
         }
+
+    # mixed-precision storage row: the same single-sweep kernel with the
+    # carried r/u/p vectors and the resident operator at bf16 (x and the
+    # reduction row stay fp32 — PrecisionPolicy accum).  Arithmetic
+    # up-casts every load, so vs the fp32 oracle on the SAME
+    # bf16-rounded inputs only the bf16 write-back rounding remains.
+    bf16 = jnp.bfloat16
+    xs1 = [jnp.asarray(rng.standard_normal((1, n)), jnp.float32)
+           for _ in range(4)]
+    al1 = jnp.asarray(rng.standard_normal(1), jnp.float32)
+    be1 = jnp.asarray(rng.standard_normal(1), jnp.float32)
+    stored = [xs1[0]] + [v.astype(bf16) for v in xs1[1:]]
+    bands16, invd16 = bands_f.astype(bf16), inv_d.astype(bf16)
+    got = ops.pipecg_spmv_fused_step(offsets, bands16, invd16, *stored,
+                                     al1, be1)
+    want = ref.pipecg_spmv_fused_ref(
+        offsets, bands16.astype(jnp.float32), invd16.astype(jnp.float32),
+        *(v.astype(jnp.float32) for v in stored), al1, be1)
+    err16 = max(float(jnp.max(jnp.abs(a.astype(jnp.float64)
+                                      - b.astype(jnp.float64))))
+                for a, b in zip(got, want))
+    eps16 = 2.0 ** -8
+    w_fused16 = _words_single_sweep_policy_iter(n, nb, 1, sw=0.5)
+    w_fused32 = _words_single_sweep_iter(n, nb, 1)
+    us = _modeled_us(w_fused16)
+    rows.append(("kernel/pipecg_spmv_fused/k1_bf16", us,
+                 f"err={err16:.1e} words_per_iter={w_fused16/n:.1f}n "
+                 f"fp32={w_fused32/n:.1f}n "
+                 f"modeled_speedup_vs_fp32={w_fused32/w_fused16:.2f}x"))
+    record["kernels"]["pipecg_spmv_fused_k1_bf16"] = {
+        "n": n, "k_rhs": 1, "err": err16,
+        "err_over_eps_storage": err16 / eps16,
+        "dtype_storage": "bf16", "dtype_accum": "fp32",
+        "words_per_iter_over_n": w_fused16 / n,
+        "fp32_words_over_n": w_fused32 / n,
+        "modeled_speedup_vs_fp32": w_fused32 / w_fused16,
+        "modeled_us_v5e": us,
+    }
 
     # pipecg_sharded_fused (halo-aware single sweep + split-phase psum):
     # correctness of the per-shard halo kernel against the full-vector
@@ -277,6 +334,7 @@ def run(out_dir=None):
                  f"hlo_overlap={bool(overlap.get('overlap_ok'))}"))
     record["kernels"]["pipecg_sharded_fused"] = {
         "n_local": n_local, "n_shards": S, "err": err,
+        "dtype_storage": "fp32", "dtype_accum": "fp32",
         "words_per_iter_over_n": w_shard / n_local,
         "naive_words_over_n": w_naive / n_local,
         "modeled_speedup_vs_naive": w_naive / w_shard,
@@ -306,9 +364,37 @@ def run(out_dir=None):
                  f"modeled_speedup={w_naive_b/w_fused_b:.2f}x"))
     record["kernels"]["pipebicgstab_fused"] = {
         "n": n, "err": err,
+        "dtype_storage": "fp32", "dtype_accum": "fp32",
         "words_per_iter_over_n": w_fused_b / n,
         "naive_words_over_n": w_naive_b / n,
         "modeled_speedup_vs_naive": w_naive_b / w_fused_b,
+        "modeled_us_v5e": us,
+    }
+
+    # bf16-storage p-BiCGStab sweep: the carried chains and operator at
+    # bf16, x and the (7, 6) Gram partials at fp32
+    stored_b = [bvecs[0]] + [v.astype(bf16) for v in bvecs[1:]]
+    got = ops.pipebicgstab_fused_step(offsets, bands16, *stored_b,
+                                      al_b, be_b, om_b)
+    want = ref.pipebicgstab_fused_ref(
+        offsets, bands16.astype(jnp.float32),
+        *(v.astype(jnp.float32) for v in stored_b), al_b, be_b, om_b)
+    err16 = max(float(jnp.max(jnp.abs(a.astype(jnp.float64)
+                                      - b.astype(jnp.float64))))
+                for a, b in zip(got, want))
+    w_fused_b16 = _words_pipebicgstab_policy_iter(n, nb, sw=0.5)
+    us = _modeled_us(w_fused_b16)
+    rows.append(("kernel/pipebicgstab_fused/bf16", us,
+                 f"err={err16:.1e} words_per_iter={w_fused_b16/n:.1f}n "
+                 f"fp32={w_fused_b/n:.1f}n "
+                 f"modeled_speedup_vs_fp32={w_fused_b/w_fused_b16:.2f}x"))
+    record["kernels"]["pipebicgstab_fused_bf16"] = {
+        "n": n, "err": err16,
+        "err_over_eps_storage": err16 / eps16,
+        "dtype_storage": "bf16", "dtype_accum": "fp32",
+        "words_per_iter_over_n": w_fused_b16 / n,
+        "fp32_words_over_n": w_fused_b / n,
+        "modeled_speedup_vs_fp32": w_fused_b / w_fused_b16,
         "modeled_us_v5e": us,
     }
 
@@ -354,6 +440,7 @@ def run(out_dir=None):
     bodies_b = overlap_b.get("bodies", {})
     record["kernels"]["pipebicgstab_sharded_fused"] = {
         "n_local": n_local, "n_shards": S, "err": err,
+        "dtype_storage": "fp32", "dtype_accum": "fp32",
         "words_per_iter_over_n": w_shard_b / n_local,
         "naive_words_over_n": w_naive_b / n_local,
         "modeled_speedup_vs_naive": w_naive_b / w_shard_b,

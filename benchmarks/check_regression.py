@@ -43,6 +43,18 @@ selected ``--key``:
                                 modeled window, sub-threshold never
                                 trips, zero clean false positives)
 
+``--key precision`` compares the mixed-precision rows of
+``BENCH_campaign.json`` (one per solver x PrecisionPolicy):
+
+* ``res_over_eps``            — lower is better (true-residual plateau of
+                                a SAFE policy, in storage-eps units;
+                                omitted on pinned-unsafe cells)
+* ``precision_ok`` / ``hlo_split_phase_overlap``
+                              — must stay True (safe policies within the
+                                Cools accuracy floor, unsafe
+                                demonstrators outside it, split-phase
+                                overlap preserved under the int8 wire)
+
 Row-set semantics (audited — the three ways a row set can drift):
 
 * rows present only in the BASELINE fail (a bench row silently
@@ -114,6 +126,17 @@ SERVE_FLAGS = ("drained", "accuracy_ok", "model_ok")
 ABFT_TRACKED = {"detect_lag_iters": "lower"}
 ABFT_FLAGS = ("detection_ok",)
 
+# the mixed-precision rows of BENCH_campaign.json ("precision" top-level
+# key, one per solver x PrecisionPolicy): the measured true-residual
+# plateau of each SAFE policy must not creep up toward its Cools
+# accuracy floor, every cell's safe/unsafe classification must keep
+# matching the measurement, and the compressed-wire solve must keep its
+# split-phase overlap window.  precision_exec.bench_record omits
+# res_over_eps on expected-UNSAFE cells (a relative band on a divergence
+# magnitude would flag spuriously — the flag pins those).
+PRECISION_TRACKED = {"res_over_eps": "lower"}
+PRECISION_FLAGS = ("precision_ok", "hlo_split_phase_overlap")
+
 # gate key -> (top-level container key, tracked metrics, must-hold flags,
 # default current record, default committed baseline)
 KEYS = {
@@ -121,6 +144,7 @@ KEYS = {
     "recovery": ("recovery", RECOVERY_TRACKED, RECOVERY_FLAGS),
     "serve": ("serve", SERVE_TRACKED, SERVE_FLAGS),
     "abft": ("abft", ABFT_TRACKED, ABFT_FLAGS),
+    "precision": ("precision", PRECISION_TRACKED, PRECISION_FLAGS),
 }
 
 
@@ -191,8 +215,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--key", default="kernels", choices=sorted(KEYS),
                     help="which gate to run: kernels (BENCH_kernels.json), "
-                    "recovery (BENCH_campaign.json fault stage), serve "
-                    "(BENCH_serve.json) or abft (BENCH_abft.json)")
+                    "recovery/precision (BENCH_campaign.json stages), "
+                    "serve (BENCH_serve.json) or abft (BENCH_abft.json)")
     ap.add_argument("--current", default=None,
                     help="current record (default depends on --key)")
     ap.add_argument("--baseline", default=None,
@@ -206,7 +230,8 @@ def main(argv=None) -> int:
     default_record = {"kernels": "BENCH_kernels.json",
                       "recovery": "BENCH_campaign.json",
                       "serve": "BENCH_serve.json",
-                      "abft": "BENCH_abft.json"}[args.key]
+                      "abft": "BENCH_abft.json",
+                      "precision": "BENCH_campaign.json"}[args.key]
     if args.current is None:
         args.current = os.path.join(REPO_ROOT, default_record)
     if args.baseline is None:

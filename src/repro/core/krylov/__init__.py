@@ -19,6 +19,13 @@ from repro.core.krylov.engine import (  # noqa: F401
     register_engine,
 )
 from repro.core.krylov.gmres import gmres, gmres_restarted  # noqa: F401
+from repro.core.krylov.options import (  # noqa: F401
+    UNSET,
+    PrecisionPolicy,
+    SolverOptions,
+    as_policy,
+    resolve_options,
+)
 from repro.core.krylov.operators import (  # noqa: F401
     DiaMatrix,
     MatFreeOperator,

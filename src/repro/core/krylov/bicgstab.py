@@ -51,22 +51,29 @@ from repro.core.krylov import abft
 from repro.core.krylov.base import SolveResult, as_matvec, local_dot
 from repro.core.krylov.engine import get_engine
 from repro.core.krylov.operators import DiaMatrix
+from repro.core.krylov.options import UNSET, check_supported, resolve_options
 
 # Gram-basis index convention shared with the kernel and the sharded path:
 # V = [r, w, t, a, c, r_hat]
 GRAM_R, GRAM_W, GRAM_T, GRAM_A, GRAM_C, GRAM_RHAT = range(6)
 
 
-def bicgstab(A, b, x0=None, *, maxiter=100, tol=0.0, M=None, dot=local_dot,
-             engine=None) -> SolveResult:
+def bicgstab(A, b, x0=None, *, maxiter=UNSET, tol=UNSET, M=UNSET,
+             dot=local_dot, engine=UNSET, options=None) -> SolveResult:
     """Preconditioned BiCGStab (fixed-trip-count scan, masked freeze).
 
-    ``engine`` ("naive" / "fused" / Engine / None) routes the SpMV and
-    preconditioner applications through an iteration engine, mirroring
-    ``cg``; ``engine=None`` keeps the historical inline path (required
-    for the distributed shard_map mode, which passes a psum ``dot`` and
-    a matvec closure).
+    ``options=SolverOptions(...)`` is the typed spelling of the solver
+    knobs (core/krylov/options.py); the loose kwargs keep working
+    through the deprecation shim.  ``engine`` ("naive" / "fused" /
+    Engine / None) routes the SpMV and preconditioner applications
+    through an iteration engine, mirroring ``cg``; ``engine=None`` keeps
+    the historical inline path (required for the distributed shard_map
+    mode, which passes a psum ``dot`` and a matvec closure).
     """
+    opts = resolve_options(options, maxiter=maxiter, tol=tol, M=M,
+                           engine=engine)
+    check_supported(opts, "bicgstab", supported=("engine",))
+    maxiter, tol, M, engine = opts.maxiter, opts.tol, opts.M, opts.engine
     eng = get_engine(engine)
     if eng is not None:
         if dot is not local_dot:
@@ -223,13 +230,14 @@ def _right_preconditioned(A, M, b, x0):
         f"got {M!r}")
 
 
-def pipebicgstab(A, b, x0=None, *, maxiter=100, tol=0.0, M=None,
-                 dot=local_dot, engine=None, rr: int = 0,
-                 rr_tau: float = 0.0,
-                 gram_reduce: Optional[Callable] = None) -> SolveResult:
+def pipebicgstab(A, b, x0=None, *, maxiter=UNSET, tol=UNSET, M=UNSET,
+                 dot=local_dot, engine=UNSET, rr=UNSET, rr_tau=UNSET,
+                 gram_reduce: Optional[Callable] = None,
+                 options=None) -> SolveResult:
     """Pipelined BiCGStab: one fused Gram reduction per iteration.
 
-    Same solver surface as ``bicgstab`` plus:
+    Same solver surface as ``bicgstab`` (including the typed
+    ``options=SolverOptions(...)`` spelling) plus:
 
     rr:
         Residual-replacement period in iterations (0 = off): every ``rr``
@@ -274,6 +282,12 @@ def pipebicgstab(A, b, x0=None, *, maxiter=100, tol=0.0, M=None,
     Iteration counts lag ``bicgstab`` by one: convergence is detected
     from the carried reduction, one scan body after the iterate froze.
     """
+    opts = resolve_options(options, maxiter=maxiter, tol=tol, M=M,
+                           engine=engine, rr=rr, rr_tau=rr_tau)
+    check_supported(opts, "pipebicgstab",
+                    supported=("engine", "rr", "rr_tau"))
+    maxiter, tol, M = opts.maxiter, opts.tol, opts.M
+    engine, rr, rr_tau = opts.engine, opts.rr, opts.rr_tau
     eng = get_engine(engine)
     from repro.core.krylov.engine import FusedEngine, ShardedFusedEngine
     if isinstance(eng, ShardedFusedEngine):

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from repro.core.krylov import abft
 from repro.core.krylov.base import SolveResult, as_matvec, local_dot
 from repro.core.krylov.engine import get_engine
+from repro.core.krylov.options import (UNSET, as_policy, check_supported,
+                                       resolve_options)
 
 
 def _ip_dots(ip: str, r, u, w, dot):
@@ -38,18 +40,26 @@ def _ip_dots(ip: str, r, u, w, dot):
 # Classical CG / CR (synchronizing)
 # ---------------------------------------------------------------------------
 
-def cg(A, b, x0=None, *, maxiter=100, tol=0.0, M=None, dot=local_dot,
-       ip: str = "id", engine=None) -> SolveResult:
+def cg(A, b, x0=None, *, maxiter=UNSET, tol=UNSET, M=UNSET, dot=local_dot,
+       ip: str = "id", engine=UNSET, options=None) -> SolveResult:
     """Preconditioned CG (ip='id') or CR (ip='A').
 
     Fixed-trip-count ``lax.scan`` over iterations (the paper forces 5000
     iterates; masked updates freeze the state once ``tol`` is reached).
 
-    ``engine`` ("naive" / "fused" / Engine / None) selects the iteration
-    engine for the SpMV and preconditioner applications; None keeps the
-    historical inline path (required for the shard_map distributed mode,
-    which passes a psum ``dot`` and a matvec closure).
+    ``options=SolverOptions(...)`` is the typed spelling of the solver
+    knobs (core/krylov/options.py); the loose ``maxiter=/tol=/M=/engine=``
+    kwargs keep working through the deprecation shim and resolve to the
+    identical code path.  ``engine`` ("naive" / "fused" / Engine / None)
+    selects the iteration engine for the SpMV and preconditioner
+    applications; None keeps the historical inline path (required for the
+    shard_map distributed mode, which passes a psum ``dot`` and a matvec
+    closure).
     """
+    opts = resolve_options(options, maxiter=maxiter, tol=tol, M=M,
+                           engine=engine)
+    check_supported(opts, "cg", supported=("engine",))
+    maxiter, tol, M, engine = opts.maxiter, opts.tol, opts.M, opts.engine
     eng = get_engine(engine)
     if eng is not None:
         if dot is not local_dot:
@@ -110,14 +120,19 @@ def cr(A, b, x0=None, **kw) -> SolveResult:
 # Pipelined CG / CR (split-phase reduction)
 # ---------------------------------------------------------------------------
 
-def pipecg(A, b, x0=None, *, maxiter=100, tol=0.0, M=None, dot=local_dot,
-           ip: str = "id", engine=None, rr_tau: float = 0.0) -> SolveResult:
+def pipecg(A, b, x0=None, *, maxiter=UNSET, tol=UNSET, M=UNSET,
+           dot=local_dot, ip: str = "id", engine=UNSET, rr_tau=UNSET,
+           precision=UNSET, options=None) -> SolveResult:
     """Ghysels-Vanroose pipelined CG (Alg. 4 there; PIPECR via ip='A').
 
     Per iteration: ONE fused reduction (gamma, delta, ||r||^2) whose result
     is consumed only after the SpMV ``n = A m`` and preconditioner ``m = M w``
     — the overlap window.  Extra state (z, q, s, p) vs classical CG is the
     pipelining cost the paper describes (more AXPYs + storage).
+
+    ``options=SolverOptions(...)`` is the typed spelling of the solver
+    knobs (core/krylov/options.py); the loose kwargs keep working through
+    the deprecation shim and resolve to the identical code path.
 
     ``engine`` ("naive" / "fused" / Engine / None) routes the whole
     iteration through an iteration engine (see core/krylov/engine.py);
@@ -130,19 +145,38 @@ def pipecg(A, b, x0=None, *, maxiter=100, tol=0.0, M=None, dot=local_dot,
     estimates the gap ``||b - A x - r||`` from the carried reduction and
     re-glues ``r = b - A x`` exactly when the estimate crosses
     ``rr_tau * machine_eps``-scaled ``||r||`` — no fixed period needed.
+
+    ``precision`` (a PrecisionPolicy / preset name) demotes the carried
+    basis vectors and the resident operator to the policy's storage
+    dtype on the single-sweep fused path; reductions, scalar recurrences
+    and ``x`` stay at accum precision.  Wire compression is a
+    distributed_solve feature (there are no ppermute payloads locally).
     """
+    opts = resolve_options(options, maxiter=maxiter, tol=tol, M=M,
+                           engine=engine, rr_tau=rr_tau, precision=precision)
+    check_supported(opts, "pipecg",
+                    supported=("engine", "rr_tau", "precision"))
+    maxiter, tol, M = opts.maxiter, opts.tol, opts.M
+    engine, rr_tau = opts.engine, opts.rr_tau
     if engine is not None:
         if dot is not local_dot:
             raise ValueError(
                 "engine= computes local reductions and cannot honor a custom "
                 "dot (e.g. the distributed psum dot); use engine=None there")
         return _pipecg_engine(A, b, x0, maxiter=maxiter, tol=tol, M=M,
-                              ip=ip, engine=engine, rr_tau=rr_tau)
+                              ip=ip, engine=engine, rr_tau=rr_tau,
+                              precision=opts.precision)
     if rr_tau:
         raise ValueError(
             "rr_tau= (adaptive residual replacement) needs the deviation "
             "recursion carried by an engine path; pass engine='naive' or "
             "'fused' (the inline engine=None path has no detector channel)")
+    if not opts.precision.is_default:
+        raise ValueError(
+            "mixed-precision policies need an engine path (the storage "
+            "demotion rides the DIA kernel sweeps): pass engine='fused', "
+            "or use distributed_solve(..., engine='sharded_fused') for "
+            "the wire-compressed policies")
     mv = as_matvec(A)
     M = M if M is not None else (lambda z: z)
     x = jnp.zeros_like(b) if x0 is None else x0
@@ -222,8 +256,8 @@ def _pipecg_scalars(st, ip_unused=None):
 
 
 def _pipecg_engine(A, b, x0=None, *, maxiter=100, tol=0.0, M=None,
-                   ip: str = "id", engine="naive",
-                   rr_tau: float = 0.0) -> SolveResult:
+                   ip: str = "id", engine="naive", rr_tau: float = 0.0,
+                   precision=None) -> SolveResult:
     """PIPECG with the vector work delegated to an iteration engine.
 
     Same scalar recurrences and masked-freeze semantics as the inline
@@ -235,10 +269,46 @@ def _pipecg_engine(A, b, x0=None, *, maxiter=100, tol=0.0, M=None,
     for 10-vector states) that costs its SpMVs only on iterations where
     the deviation estimate actually trips (cf. the fixed-period ``rr=``
     of ``pipecg_l``).
+
+    A storage-demoting ``precision`` policy keeps TWO operators: the
+    exact ``A`` for init and re-glue (full-precision residual recompute,
+    then cast back), and ``A_iter`` with bands in the storage dtype for
+    the per-iteration sweep — so the carried r/u/p and the streamed
+    bands ride at storage width while every reduction and ``x`` stay at
+    accum width (the kernel derives its accumulator from ``x.dtype``).
     """
     from repro.core.krylov.engine import _rdot
+    policy = as_policy(precision)
     eng = get_engine(engine)
+    A_iter = A
+    if not policy.is_default:
+        from repro.core.krylov.operators import DiaMatrix
+        if policy.wire != "fp32" or policy.wire_gram != "fp32":
+            raise ValueError(
+                "int8 wire compression applies to ppermute/psum payloads "
+                "and needs distributed_solve(..., engine='sharded_fused'); "
+                "local engine paths have no wire")
+        if not isinstance(A, DiaMatrix):
+            raise ValueError(
+                "precision storage demotion rides the DIA band stream; "
+                "wrap the operator as a DiaMatrix (matrix-free operators "
+                "have no resident operand to demote)")
+        sdt = policy.storage_dtype
+        if sdt is not None:
+            A_iter = DiaMatrix(offsets=A.offsets, bands=A.bands.astype(sdt))
+    else:
+        sdt = None
     vecs, gamma, delta = eng.pipecg_init(A, b, x0, M, ip)
+    if sdt is not None:
+        if "w" in vecs:
+            raise ValueError(
+                "precision storage demotion needs the single-sweep fused "
+                "path: engine='fused' with a DIA operator and M=None or "
+                "'jacobi' (the 10-vector fallback state is accum-only)")
+        # x stays at accum width; the carried basis vectors ride at
+        # storage width from here on
+        vecs = dict(vecs, r=vecs["r"].astype(sdt), u=vecs["u"].astype(sdt),
+                    p=vecs["p"].astype(sdt))
     one = jnp.ones_like(gamma)
     state0 = dict(vecs=vecs, gamma=gamma, delta=delta,
                   gamma_prev=one, alpha_prev=one,
@@ -251,11 +321,18 @@ def _pipecg_engine(A, b, x0=None, *, maxiter=100, tol=0.0, M=None,
     eps = abft.machine_eps(b.dtype)
 
     def _reglue(vecs_in):
-        """Recompute r = b - A x, u = M r (+ images for 10-vector state)."""
+        """Recompute r = b - A x, u = M r (+ images for 10-vector state).
+
+        Always runs against the EXACT operator at accum precision — that
+        is the whole point of the re-glue — then casts the replacement
+        vectors back to the carried storage dtype (identity when the
+        policy is default).
+        """
         r2 = b - eng.spmv(A, vecs_in["x"])
         u2 = eng.precond(A, M, r2)
         w2 = eng.spmv(A, u2)
-        rep = dict(vecs_in, r=r2, u=u2)
+        rep = dict(vecs_in, r=r2.astype(vecs_in["r"].dtype),
+                   u=u2.astype(vecs_in["u"].dtype))
         if "w" in vecs_in:   # 10-vector states carry operator images too
             m2 = eng.precond(A, M, w2)
             s2 = eng.spmv(A, vecs_in["p"])
@@ -269,7 +346,7 @@ def _pipecg_engine(A, b, x0=None, *, maxiter=100, tol=0.0, M=None,
     def step(st, _):
         alpha, beta = _pipecg_scalars(st)
         vecs, gamma_new, delta_new, rr, aux = eng.pipecg_iter(
-            A, M, ip, st["vecs"], alpha, beta)
+            A_iter, M, ip, st["vecs"], alpha, beta)
         dev = st["dev"]
         if rr_tau > 0.0:
             dev = abft.deviation_update(dev, alpha, rr, aux["ww"], eps=eps)
@@ -295,6 +372,16 @@ def _pipecg_engine(A, b, x0=None, *, maxiter=100, tol=0.0, M=None,
                 (vecs, gamma_new, delta_new, rr, dev))
         done = st["done"] | (rr <= tol2)
         mask = st["done"]
+        if not policy.is_default:
+            # breakdown guard: a demoted recurrence that decays past its
+            # attainable floor loses gamma positivity and blows up; freeze
+            # at the last good iterate instead of propagating inf/nan.
+            # Gated off the default path so exact-arithmetic semantics
+            # (incl. the ABFT fault-injection NaN poisoning) are untouched.
+            bad = ~(jnp.isfinite(alpha) & jnp.isfinite(gamma_new)
+                    & jnp.isfinite(delta_new) & jnp.isfinite(rr))
+            mask = mask | bad
+            done = done | bad
 
         def frz(nv, ov):  # freeze converged systems (masked update)
             m = (mask.reshape(mask.shape + (1,) * (nv.ndim - mask.ndim))
@@ -312,7 +399,7 @@ def _pipecg_engine(A, b, x0=None, *, maxiter=100, tol=0.0, M=None,
         return new, (jnp.sqrt(jnp.maximum(rr, 0.0)), aux["chk"])
 
     st, (hist, chk_hist) = jax.lax.scan(step, state0, None, length=maxiter)
-    r = st["vecs"]["r"]
+    r = st["vecs"]["r"].astype(b.dtype)  # accum-width norm (no-op at fp32)
     res = jnp.sqrt(jnp.maximum(jnp.sum(r * r, axis=-1), 0.0))
     if hist.ndim == 2:  # batched: (maxiter, k) -> (k, maxiter)
         hist = hist.T
@@ -323,7 +410,7 @@ def _pipecg_engine(A, b, x0=None, *, maxiter=100, tol=0.0, M=None,
 
 def pipecg_multi(A, B, X0=None, *, maxiter=100, tol=0.0, M=None,
                  ip: str = "id", engine="fused",
-                 rr_tau: float = 0.0) -> SolveResult:
+                 rr_tau: float = 0.0, precision=None) -> SolveResult:
     """Batched PIPECG: solve A x_j = b_j for every row of ``B`` (k, n).
 
     With ``engine="fused"`` and a DIA operator the k systems share one
@@ -344,9 +431,10 @@ def pipecg_multi(A, B, X0=None, *, maxiter=100, tol=0.0, M=None,
     if native_batch:
         # FusedEngine's single-sweep path is batch-shaped already
         return _pipecg_engine(A, B, X0, maxiter=maxiter, tol=tol, M=M,
-                              ip=ip, engine=eng, rr_tau=rr_tau)
+                              ip=ip, engine=eng, rr_tau=rr_tau,
+                              precision=precision)
     solve = lambda b, x0: _pipecg_engine(
         A, b, x0, maxiter=maxiter, tol=tol, M=M, ip=ip, engine=eng,
-        rr_tau=rr_tau)
+        rr_tau=rr_tau, precision=precision)
     X0 = jnp.zeros_like(B) if X0 is None else X0
     return jax.vmap(solve)(B, X0)

@@ -42,9 +42,15 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.krylov.base import SolveResult, make_psum_dot
 from repro.core.krylov.operators import DiaMatrix
+from repro.core.krylov.options import PrecisionPolicy, as_policy
 from repro.core.noise.injection import NoiseHook
 
 AXIS = "shards"
+
+
+def _resolve_precision(precision) -> PrecisionPolicy:
+    """Coerce a precision selector (policy / preset name / None)."""
+    return as_policy(precision)
 
 
 def _noise_tick(noise: NoiseHook, axis_name, dtype):
@@ -117,6 +123,55 @@ def halo_exchange(x_local: jnp.ndarray, halo: int, axis_name: str = AXIS):
     return halo_exchange_cols(x_local, halo, axis_name)
 
 
+def halo_exchange_compressed(x: jnp.ndarray, halo: int, axis_name: str,
+                             ef_l: jnp.ndarray, ef_r: jnp.ndarray,
+                             use_ef: bool):
+    """int8-wire variant of :func:`halo_exchange_cols`.
+
+    Each edge strip is quantized at the sender
+    (distributed/compression.py::compress_halo) and travels as an int8
+    payload plus a scalar fp32 scale — two ppermutes per direction
+    instead of one, but ~4x fewer wire bytes vs an fp32 strip (~8x vs
+    fp64).  Both payloads derive ONLY from the carried vector ``x``,
+    never from the pending split-phase reduction, so the overlap
+    invariant of the sharded engines (one all-reduce per body, no
+    permute->all-reduce dependence; launch/hlo_analysis.py) is
+    preserved — ``split_phase_overlap`` tolerates extra permutes.
+
+    ``ef_l`` / ``ef_r`` are the sender-side error-feedback strips for
+    the left/right EDGE of ``x`` (shape ``x.shape[:-1] + (halo,)``);
+    with ``use_ef`` the quantization residual of the same boundary rows
+    re-enters next iteration (Seide-style) instead of accumulating into
+    the attainable-accuracy floor.  Returns
+    ``(left, right, new_ef_l, new_ef_r)`` with the received halos cast
+    back to ``x.dtype``.
+    """
+    from repro.distributed import compression as comp
+
+    n_dev = _axis_size(axis_name)
+    if n_dev == 1 or halo == 0:
+        z = jnp.zeros(x.shape[:-1] + (halo,), x.dtype)
+        return z, z, jnp.zeros_like(ef_l), jnp.zeros_like(ef_r)
+    right_send = [(i, i + 1) for i in range(n_dev - 1)]   # i -> i+1
+    left_send = [(i + 1, i) for i in range(n_dev - 1)]    # i -> i-1
+    # right EDGE strip travels rightward (arrives as the neighbor's LEFT
+    # halo); left edge travels leftward — same routing as the fp32 path
+    qr, sr, ef_r_new = comp.compress_halo(
+        x[..., -halo:], ef_r if use_ef else None)
+    ql, sl, ef_l_new = comp.compress_halo(
+        x[..., :halo], ef_l if use_ef else None)
+    left = comp.decompress_halo(
+        jax.lax.ppermute(qr, axis_name, right_send),
+        jax.lax.ppermute(sr, axis_name, right_send), x.dtype)
+    right = comp.decompress_halo(
+        jax.lax.ppermute(ql, axis_name, left_send),
+        jax.lax.ppermute(sl, axis_name, left_send), x.dtype)
+    if not use_ef:
+        ef_l_new = jnp.zeros_like(ef_l)
+        ef_r_new = jnp.zeros_like(ef_r)
+    return left, right, ef_l_new, ef_r_new
+
+
 def dia_matvec_local(offsets, bands_local, x_local, axis_name: str = AXIS,
                      use_kernel: bool = False):
     """Per-shard DIA matvec with halo exchange.
@@ -171,7 +226,8 @@ def sharded_pipecg_solve(offsets: Tuple[int, ...], bands_local, b_local, *,
                          block: Optional[int] = None, n_shards: int = 1,
                          noise: Optional[NoiseHook] = None,
                          x0=None, carried=None,
-                         with_state: bool = False):
+                         with_state: bool = False,
+                         precision=None):
     """Per-shard PIPECG/PIPECR body of the ShardedFusedEngine.
 
     Runs INSIDE shard_map.  Each iteration is one halo-aware Pallas sweep
@@ -209,9 +265,27 @@ def sharded_pipecg_solve(offsets: Tuple[int, ...], bands_local, b_local, *,
     ``x0=`` instead RESTARTS the recurrence from an iterate with one
     synchronous true-residual evaluation ``r = b - A x0`` — the Cools
     residual-replacement re-glue used after a disruptive recovery.
+
+    ``precision`` (a :class:`~repro.core.krylov.options.PrecisionPolicy`,
+    preset name or None): with ``storage='bf16'`` the carried basis
+    vectors r/u/p and the operator extension live in bfloat16 — the
+    kernel loads them, accumulates at the solve dtype and stores back in
+    storage precision (kernels/pipecg_spmv_fused.py) — while ``x``, the
+    partial reduction row and the scalar recurrences stay full
+    precision.  With ``wire='int8'`` the ppermute halo strips travel as
+    int8 payloads with fp32 scales (:func:`halo_exchange_compressed`);
+    ``error_feedback`` carries the sender-side quantization residual in
+    the scan state.  ``wire_gram='int8'`` additionally squeezes the
+    carried reduction row through the int8 grid before the carry
+    (compression.compress_gram) — EXCEPT its ABFT checksum column,
+    preserved verbatim so the rounding-level detector keeps its floor.
+    The Gram wire is off by default and known-unsafe: each reduction is
+    consumed once, so its quantization error corrupts alpha/beta
+    directly (see options.PrecisionPolicy).
     """
     from repro.kernels import ops as kops
 
+    policy = _resolve_precision(precision)
     halo = max(abs(o) for o in offsets)
     batched = b_local.ndim == 2
     B = b_local if batched else b_local[None]
@@ -241,6 +315,15 @@ def sharded_pipecg_solve(offsets: Tuple[int, ...], bands_local, b_local, *,
     # no extra exchange is needed (kernels/checksum.py)
     from repro.kernels.checksum import dia_column_checksum
     csum_loc = dia_column_checksum(offsets, bands_ext, halo=halo).astype(dt)
+    # storage demotion AFTER the checksum: the detector's reference
+    # c = A^T 1 is computed from the full-precision operator
+    sdt = policy.storage_dtype
+    if sdt is not None:
+        bands_ext = bands_ext.astype(sdt)
+        invd_ext = invd_ext.astype(sdt)
+    wire_halo = policy.wire == "int8"
+    wire_gram = policy.wire_gram == "int8"
+    use_ef = policy.error_feedback
 
     def mv(v):  # (k, n_local) halo matvec — init only; the scan uses the kernel
         lv, rv = halo_exchange_cols(v, halo, axis_name)
@@ -288,18 +371,45 @@ def sharded_pipecg_solve(offsets: Tuple[int, ...], bands_local, b_local, *,
         first = jnp.asarray(True)
     w = mv(u)
     red0 = _local_partials(r, u, w, csum_loc)
+    # carried basis vectors demote to storage precision (x and the
+    # reduction row stay at the solve dtype); identity when sdt is None
+    if sdt is not None:
+        r, u, p = r.astype(sdt), u.astype(sdt), p.astype(sdt)
+    # the ABFT checksum column rides the carried psum verbatim — int8
+    # would silence the rounding-level detector (compression.py)
+    chk_mask = jnp.zeros((k_rhs, 6), bool).at[:, 5].set(True)
+    if wire_gram:
+        from repro.distributed import compression as comp
+        red0, gef0 = comp.compress_gram(red0, None, preserve=chk_mask)
+        if not use_ef:
+            gef0 = jnp.zeros_like(gef0)
     state0 = dict(x=x, r=r, u=u, p=p, red=red0,
                   gamma_prev=gamma_prev, alpha_prev=alpha_prev,
                   first=first, done=done0,
                   iters=jnp.zeros((k_rhs,), jnp.int32))
+    if wire_gram:
+        state0["gef"] = gef0
+    if wire_halo:
+        # sender-side error-feedback strips, one per edge per exchanged
+        # vector, carried across the scan
+        ef0 = jnp.zeros(r.shape[:-1] + (2 * halo,), r.dtype)
+        state0.update(efu_l=ef0, efu_r=ef0, efp_l=ef0, efp_r=ef0)
     bb = jax.lax.psum(jnp.sum(B * B, axis=-1), axis_name)
     tol2 = jnp.asarray(tol, dt) ** 2 * bb
 
     def step(st, _):
         # ---- halo exchange for THIS iteration's sweep: depends only on
         # the carried vectors, NOT on the pending reduction ----
-        ul, ur = halo_exchange_cols(st["u"], 2 * halo, axis_name)
-        pl_, pr = halo_exchange_cols(st["p"], 2 * halo, axis_name)
+        if wire_halo:
+            ul, ur, efu_l, efu_r = halo_exchange_compressed(
+                st["u"], 2 * halo, axis_name, st["efu_l"], st["efu_r"],
+                use_ef)
+            pl_, pr, efp_l, efp_r = halo_exchange_compressed(
+                st["p"], 2 * halo, axis_name, st["efp_l"], st["efp_r"],
+                use_ef)
+        else:
+            ul, ur = halo_exchange_cols(st["u"], 2 * halo, axis_name)
+            pl_, pr = halo_exchange_cols(st["p"], 2 * halo, axis_name)
         # ---- split-phase: finish the reduction initiated LAST iteration;
         # its only consumers are the scalar recurrences below ----
         red = jax.lax.psum(st["red"], axis_name)
@@ -314,13 +424,29 @@ def sharded_pipecg_solve(offsets: Tuple[int, ...], bands_local, b_local, *,
         x, r, u, p, red_new = kops.pipecg_spmv_halo_step(
             offsets, bands_ext, invd_ext, st["x"], st["r"], st["u"], st["p"],
             ul, ur, pl_, pr, alpha, beta, block=block, n_shards=n_shards)
+        if wire_gram:
+            # squeeze the partial reduction through the int8 wire grid
+            # BEFORE the carry: the psum count and dataflow — the HLO
+            # overlap invariant — are untouched (compression.py)
+            from repro.distributed import compression as comp
+            red_new, gef = comp.compress_gram(
+                red_new, st["gef"] if use_ef else None, preserve=chk_mask)
         if noise is not None:
             # the tick rides the partial-reduction row so the stall gates
             # the next psum — and a fault injector's NaN tick poisons it
             red_new = red_new + _noise_tick(noise, axis_name, dt)
 
-        done = st["done"] | (rr <= tol2)
         mask = st["done"]
+        if not policy.is_default:
+            # low-precision breakdown guard: past the storage floor the
+            # recurrence scalars can lose positivity / blow up — freeze
+            # AT the last good iterate instead of propagating NaN.  The
+            # default path is untouched (the ABFT fault campaign relies
+            # on a poisoned psum flowing through to the detector).
+            bad = ~(jnp.isfinite(gamma) & jnp.isfinite(alpha)
+                    & jnp.isfinite(rr))
+            mask = mask | bad
+        done = mask | (rr <= tol2)
 
         def frz(nv, ov):  # freeze converged systems (masked update)
             m = (mask.reshape(mask.shape + (1,) * (nv.ndim - mask.ndim))
@@ -333,6 +459,10 @@ def sharded_pipecg_solve(offsets: Tuple[int, ...], bands_local, b_local, *,
                    alpha_prev=frz(alpha, st["alpha_prev"]),
                    first=jnp.asarray(False), done=done,
                    iters=st["iters"] + (~done).astype(jnp.int32))
+        if wire_halo:
+            new.update(efu_l=efu_l, efu_r=efu_r, efp_l=efp_l, efp_r=efp_r)
+        if wire_gram:
+            new["gef"] = gef if use_ef else st["gef"]
         return new, (jnp.sqrt(jnp.maximum(rr, 0.0)), chk)
 
     st, (hist, chk_hist) = jax.lax.scan(step, state0, None, length=maxiter)
@@ -367,7 +497,8 @@ def sharded_pipebicgstab_solve(offsets: Tuple[int, ...], bands_local,
                                maxiter: int = 100, tol: float = 0.0,
                                block: Optional[int] = None,
                                n_shards: int = 1,
-                               noise: Optional[NoiseHook] = None
+                               noise: Optional[NoiseHook] = None,
+                               precision=None
                                ) -> SolveResult:
     """Per-shard pipelined BiCGStab body of the ShardedFusedEngine.
 
@@ -394,10 +525,19 @@ def sharded_pipebicgstab_solve(offsets: Tuple[int, ...], bands_local,
     ``A x = b`` and ``x`` is unscaled locally at the end.  The residual
     history is rolled into the classical alignment exactly like
     ``sharded_pipecg_solve``.
+
+    ``precision`` works as in :func:`sharded_pipecg_solve`: storage
+    demotion covers the six carried chain vectors r/w/t/pa/a/c and the
+    operator extension (x, the (7, 6) partial Gram and the scalar
+    recurrences stay full precision); ``wire='int8'`` compresses the
+    three w/t/c halo pairs with optional sender-side error feedback,
+    and ``wire_gram='int8'`` (off by default, known-unsafe) the carried
+    Gram payload minus its preserved ABFT checksum entry.
     """
     from repro.core.krylov.bicgstab import pbicgstab_scalars
     from repro.kernels import ops as kops
 
+    policy = _resolve_precision(precision)
     halo = max(abs(o) for o in offsets)
     if b_local.ndim != 1:
         raise ValueError(
@@ -435,6 +575,13 @@ def sharded_pipebicgstab_solve(offsets: Tuple[int, ...], bands_local,
     # kernel actually applies; kernels/checksum.py)
     from repro.kernels.checksum import dia_column_checksum
     csum_loc = dia_column_checksum(offsets, bands_ext, halo=halo).astype(dt)
+    # storage demotion AFTER the checksum (full-precision reference)
+    sdt = policy.storage_dtype
+    if sdt is not None:
+        bands_ext = bands_ext.astype(sdt)
+    wire_halo = policy.wire == "int8"
+    wire_gram = policy.wire_gram == "int8"
+    use_ef = policy.error_feedback
 
     def mv(v):  # halo matvec — init only; the scan uses the kernel
         lv, rv = halo_exchange_cols(v, halo, axis_name)
@@ -458,21 +605,49 @@ def sharded_pipebicgstab_solve(offsets: Tuple[int, ...], bands_local,
     chk0 = jnp.sum(t) - jnp.sum(csum_loc * w)
     G0 = jnp.concatenate([G0, jnp.zeros((1, 6), dt).at[0, 0].set(chk0)],
                          axis=0)
+    # carried chains demote to storage precision (x and the Gram stay dt)
+    if sdt is not None:
+        r, w, t = r.astype(sdt), w.astype(sdt), t.astype(sdt)
+        r_hat = r_hat.astype(sdt)
+        zero = zero.astype(sdt)
+    chk_mask = jnp.zeros((7, 6), bool).at[6, 0].set(True)
+    if wire_gram:
+        from repro.distributed import compression as comp
+        G0, gef0 = comp.compress_gram(G0, None, preserve=chk_mask)
+        if not use_ef:
+            gef0 = jnp.zeros_like(gef0)
     one = jnp.ones((), dt)
     eps = jnp.asarray(1e-300 if dt == jnp.float64 else 1e-30, dt)
     state0 = dict(x=x, r=r, w=w, t=t, pa=zero, a=zero, c=zero, G=G0,
                   rho_prev=one, alpha_prev=one, omega_prev=one,
                   first=jnp.asarray(True),
                   done=jnp.asarray(False), iters=jnp.asarray(0, jnp.int32))
+    if wire_gram:
+        state0["gef"] = gef0
+    if wire_halo:
+        ef0 = jnp.zeros((2 * halo,), r.dtype)
+        state0.update(efw_l=ef0, efw_r=ef0, eft_l=ef0, eft_r=ef0,
+                      efc_l=ef0, efc_r=ef0)
     bb = jax.lax.psum(jnp.sum(b_local * b_local), axis_name)
     tol2 = jnp.asarray(tol, dt) ** 2 * bb
 
     def step(st, _):
         # ---- halo exchange for THIS iteration's sweep: depends only on
         # the carried vectors, NOT on the pending reduction ----
-        wl, wr = halo_exchange_cols(st["w"], 2 * halo, axis_name)
-        tl, tr = halo_exchange_cols(st["t"], 2 * halo, axis_name)
-        cl, cr = halo_exchange_cols(st["c"], 2 * halo, axis_name)
+        if wire_halo:
+            wl, wr, efw_l, efw_r = halo_exchange_compressed(
+                st["w"], 2 * halo, axis_name, st["efw_l"], st["efw_r"],
+                use_ef)
+            tl, tr, eft_l, eft_r = halo_exchange_compressed(
+                st["t"], 2 * halo, axis_name, st["eft_l"], st["eft_r"],
+                use_ef)
+            cl, cr, efc_l, efc_r = halo_exchange_compressed(
+                st["c"], 2 * halo, axis_name, st["efc_l"], st["efc_r"],
+                use_ef)
+        else:
+            wl, wr = halo_exchange_cols(st["w"], 2 * halo, axis_name)
+            tl, tr = halo_exchange_cols(st["t"], 2 * halo, axis_name)
+            cl, cr = halo_exchange_cols(st["c"], 2 * halo, axis_name)
         # ---- split-phase: finish the reduction initiated LAST iteration;
         # its only consumers are the scalar recurrences below ----
         G = jax.lax.psum(st["G"], axis_name)
@@ -484,12 +659,23 @@ def sharded_pipebicgstab_solve(offsets: Tuple[int, ...], bands_local,
             offsets, bands_ext, st["x"], st["r"], st["w"], st["t"],
             st["pa"], st["a"], st["c"], r_hat, wl, wr, tl, tr, cl, cr,
             alpha, beta, omega, block=block, n_shards=n_shards)
+        if wire_gram:
+            # int8 wire grid for the carried Gram payload, checksum entry
+            # preserved; psum count/dataflow untouched (compression.py)
+            from repro.distributed import compression as comp
+            G_new, gef = comp.compress_gram(
+                G_new, st["gef"] if use_ef else None, preserve=chk_mask)
         if noise is not None:
             # the tick rides the partial Gram so the sampled stall gates
             # the next psum (critical path)
             G_new = G_new + _noise_tick(noise, axis_name, dt)
 
         done = st["done"] | (rr2 <= tol2)
+        if not policy.is_default:
+            # low-precision breakdown guard (cf. sharded_pipecg_solve):
+            # freeze at the last good iterate instead of carrying NaN
+            done = done | ~(jnp.isfinite(rr2) & jnp.isfinite(alpha)
+                            & jnp.isfinite(omega))
         # freeze AT the iterate whose residual met the tolerance (the
         # non-monotone-BiCGStab convention of the local pipebicgstab)
         frz = lambda nv, ov: jnp.where(done, ov, nv)
@@ -502,6 +688,11 @@ def sharded_pipebicgstab_solve(offsets: Tuple[int, ...], bands_local,
                    omega_prev=frz(omega, st["omega_prev"]),
                    first=jnp.asarray(False), done=done,
                    iters=st["iters"] + (~done).astype(jnp.int32))
+        if wire_halo:
+            new.update(efw_l=efw_l, efw_r=efw_r, eft_l=eft_l, eft_r=eft_r,
+                       efc_l=efc_l, efc_r=efc_r)
+        if wire_gram:
+            new["gef"] = gef if use_ef else st["gef"]
         return new, (jnp.sqrt(jnp.maximum(rr2, 0.0)), chk)
 
     st, (hist, chk_hist) = jax.lax.scan(step, state0, None, length=maxiter)
@@ -524,7 +715,8 @@ def sharded_pipecg_depth_solve(offsets: Tuple[int, ...], bands_local,
                                M=None, maxiter: int = 100, tol: float = 0.0,
                                block: Optional[int] = None,
                                n_shards: int = 1,
-                               noise: Optional[NoiseHook] = None
+                               noise: Optional[NoiseHook] = None,
+                               precision=None
                                ) -> SolveResult:
     """Per-shard depth-l pipelined CG body (ghost-basis blocks).
 
@@ -552,10 +744,24 @@ def sharded_pipecg_depth_solve(offsets: Tuple[int, ...], bands_local,
     be None or ``"jacobi"`` (symmetrized in, locally, with one halo
     exchange of the scaling vector per solve); residual norms are then
     preconditioned norms.
+
+    ``precision`` supports STORAGE demotion only (carried p/r and the
+    operator extension in bf16; the chain, Gram and block recurrences
+    stay full precision via the kernel's ``accum_dtype``).  The depth
+    path's Gram psum is consumed inside the same block body — it never
+    rides the wire as a carried payload — so ``wire='int8'`` is
+    rejected rather than silently modeling a wire that does not exist.
     """
     from repro.core.krylov.pipeline import _block_cg_steps, _shift_matrix
     from repro.kernels import ops as kops
 
+    policy = _resolve_precision(precision)
+    if policy.wire != "fp32" or policy.wire_gram != "fp32":
+        raise ValueError(
+            "the depth-l sharded path exchanges one l*halo strip and "
+            "finishes its Gram psum inside the same block body: int8 "
+            "wire compression applies to the depth-1 "
+            "pipecg/pipebicgstab bodies only")
     if b_local.ndim != 1:
         raise ValueError(
             "the depth-l sharded path is single-RHS; use l=1 for the "
@@ -594,9 +800,14 @@ def sharded_pipecg_depth_solve(offsets: Tuple[int, ...], bands_local,
     # symmetrized operator) for the per-block state-deviation detector
     from repro.kernels.checksum import dia_column_checksum
     csum_loc = dia_column_checksum(offsets, bands_ext, halo=H).astype(dt)
+    # storage demotion AFTER theta and the checksum (both reference the
+    # full-precision operator); the chain kernel accumulates at dt
+    sdt = policy.storage_dtype
+    if sdt is not None:
+        bands_ext = bands_ext.astype(sdt)
 
     x = jnp.zeros_like(b_local)
-    r = b_local
+    r = b_local if sdt is None else b_local.astype(sdt)
     p = r
     Tm = _shift_matrix(l, dt)
     nblocks = -(-maxiter // l)
@@ -613,7 +824,8 @@ def sharded_pipecg_depth_solve(offsets: Tuple[int, ...], bands_local,
         rl_, rr_ = halo_exchange_cols(st["r"], H, axis_name)
         C, gram = kops.ghost_chain_halo_step(
             offsets, bands_ext, st["p"], st["r"], pl_, pr_, rl_, rr_,
-            theta, l, block=block, n_shards=n_shards)
+            theta, l, block=block, n_shards=n_shards,
+            accum_dtype=None if sdt is None else dt)
         # the block's single fused reduction: one psum per l iterations —
         # the ABFT state-deviation partial c^T x + 1^T r rides it as an
         # extra ROW of the Gram payload (one all-reduce in HLO; the
@@ -623,7 +835,7 @@ def sharded_pipecg_depth_solve(offsets: Tuple[int, ...], bands_local,
         # corrupted reduction payload corrupts the detector entry with it
         # — the injector's tick cannot poison the Gram while leaving the
         # detector clean
-        devpart = jnp.sum(csum_loc * st["x"]) + jnp.sum(st["r"])
+        devpart = jnp.sum(csum_loc * st["x"]) + jnp.sum(st["r"].astype(dt))
         gram_ext = jnp.concatenate(
             [gram, jnp.zeros((1, gram.shape[-1]), dt).at[0, 0]
              .set(devpart)], axis=0)
@@ -633,9 +845,14 @@ def sharded_pipecg_depth_solve(offsets: Tuple[int, ...], bands_local,
         G, devp = Ge[:-1], Ge[-1, 0]
         delta = bsum - devp
         xc, rc, pc, hist = _block_cg_steps(G, Tm, l, theta, st["done"])
-        x_new = jnp.where(st["done"], st["x"], st["x"] + C.T @ xc)
-        r_new = jnp.where(st["done"], st["r"], C.T @ rc)
-        p_new = jnp.where(st["done"], st["p"], C.T @ pc)
+        # chain combinations accumulate at dt (bf16 C promotes against
+        # the dt coefficients); the carried r/p re-demote to storage
+        x_new = jnp.where(st["done"], st["x"],
+                          st["x"] + (C.T @ xc).astype(dt))
+        r_new = jnp.where(st["done"], st["r"],
+                          (C.T @ rc).astype(st["r"].dtype))
+        p_new = jnp.where(st["done"], st["p"],
+                          (C.T @ pc).astype(st["p"].dtype))
         rr2 = jnp.maximum(rc @ G @ rc, 0.0)   # already global (G is)
         done = st["done"] | (rr2 <= tol2)
         hist = jnp.where(st["done"], jnp.sqrt(rr2), hist)
@@ -651,8 +868,9 @@ def sharded_pipecg_depth_solve(offsets: Tuple[int, ...], bands_local,
     # per-block deviation, repeated to per-iteration length so every
     # solver's detect_history shares the (maxiter,) shape contract
     det = jnp.repeat(det_blocks, l)[:maxiter]
+    r_fin = st["r"].astype(dt)
     res = jnp.sqrt(jnp.maximum(
-        jax.lax.psum(jnp.sum(st["r"] * st["r"]), axis_name), 0.0))
+        jax.lax.psum(jnp.sum(r_fin * r_fin), axis_name), 0.0))
     x_out = st["x"] if unscale is None else st["x"] * unscale
     return SolveResult(x=x_out, iters=jnp.minimum(st["iters"], maxiter),
                        res_norm=res, res_history=hist, detect_history=det)
@@ -688,6 +906,7 @@ def _distributed_engine_solve(solver, A: DiaMatrix, b, mesh: Mesh, eng, *,
     maxiter = solver_kw.pop("maxiter", 100)
     tol = solver_kw.pop("tol", 0.0)
     depth = int(solver_kw.pop("l", 1))
+    precision = _resolve_precision(solver_kw.pop("precision", None))
     x0 = solver_kw.pop("x0", None)
     carried = solver_kw.pop("carried", None)
     with_state = bool(solver_kw.pop("with_state", False))
@@ -728,16 +947,19 @@ def _distributed_engine_solve(solver, A: DiaMatrix, b, mesh: Mesh, eng, *,
             return eng.solve_bicgstab(A.offsets, bands_local, b_local,
                                       axis_name=axis, M=M, maxiter=maxiter,
                                       tol=tol, block=block,
-                                      n_shards=n_shards, noise=noise)
+                                      n_shards=n_shards, noise=noise,
+                                      precision=precision)
         if depth > 1:
             return eng.solve_depth(A.offsets, bands_local, b_local,
                                    axis_name=axis, l=depth, M=M,
                                    maxiter=maxiter, tol=tol, block=block,
-                                   n_shards=n_shards, noise=noise)
+                                   n_shards=n_shards, noise=noise,
+                                   precision=precision)
         return eng.solve(A.offsets, bands_local, b_local, axis_name=axis,
                          ip=ip, M=M, maxiter=maxiter, tol=tol, block=block,
                          n_shards=n_shards, noise=noise,
-                         x0=x0_l, carried=carried_l, with_state=with_state)
+                         x0=x0_l, carried=carried_l, with_state=with_state,
+                         precision=precision)
 
     res_specs = SolveResult(x=spec_v, iters=P(), res_norm=P(),
                             res_history=P(), detect_history=P())
@@ -757,7 +979,7 @@ def distributed_solve(solver: Callable, A: DiaMatrix, b: jnp.ndarray,
                       mesh: Mesh, *, use_kernel: bool = False,
                       noise: Optional[NoiseHook] = None,
                       engine=None, block: Optional[int] = None,
-                      **solver_kw) -> SolveResult:
+                      options=None, **solver_kw) -> SolveResult:
     """Run ``solver`` (cg / pipecg / cr / pipecr / gmres / pgmres) with the
     vector sharded over every device of ``mesh`` (flattened).
 
@@ -774,8 +996,50 @@ def distributed_solve(solver: Callable, A: DiaMatrix, b: jnp.ndarray,
     psum and one l*halo-wide ppermute strip per l iterations
     (see sharded_pipecg_depth_solve).
     ``block`` overrides the sharded kernel's autotuned tile size.
+
+    ``options`` (a :class:`~repro.core.krylov.options.SolverOptions`)
+    bundles the solve configuration — engine, maxiter/tol, M, pipeline
+    depth, noise hook and the mixed-precision
+    :class:`~repro.core.krylov.options.PrecisionPolicy` — as one typed
+    value; it cannot be mixed with the loose equivalents
+    (``engine=`` / ``noise=`` / ``maxiter=`` / ...), which remain
+    supported for existing callers.  ``precision=`` (policy or preset
+    name) may also be passed directly; non-default policies need
+    ``engine='sharded_fused'``.
     """
     from repro.core.krylov.engine import ShardedFusedEngine, get_engine
+    from repro.core.krylov.options import SolverOptions
+
+    if options is not None:
+        if not isinstance(options, SolverOptions):
+            raise TypeError(
+                "options= must be a SolverOptions; got "
+                f"{type(options).__name__}")
+        clashes = [kw for kw in ("maxiter", "tol", "M", "l", "precision")
+                   if kw in solver_kw]
+        if engine is not None or noise is not None or clashes:
+            loose = [kw for kw, v in
+                     (("engine", engine), ("noise", noise)) if v is not None]
+            raise TypeError(
+                "pass the solve configuration either as options= or as "
+                "loose kwargs, not both (options= given alongside "
+                f"{sorted(loose + clashes)})")
+        engine = options.engine
+        noise = options.noise
+        solver_kw.update(maxiter=options.maxiter, tol=options.tol)
+        if options.M is not None:
+            solver_kw["M"] = options.M
+        if options.depth != 1:
+            solver_kw["l"] = options.depth
+        if not options.precision.is_default:
+            solver_kw["precision"] = options.precision
+        if options.rr or options.rr_tau:
+            # the sharded bodies re-glue via x0= (fault.py); per-iteration
+            # residual replacement is a local-solver feature
+            raise ValueError(
+                "rr= / rr_tau= (residual replacement) are local-solver "
+                "options; the sharded bodies re-glue via x0= restarts "
+                "(distributed/fault.py)")
 
     eng = get_engine(engine)
     if isinstance(eng, ShardedFusedEngine):
@@ -802,6 +1066,12 @@ def distributed_solve(solver: Callable, A: DiaMatrix, b: jnp.ndarray,
             raise ValueError(
                 f"{kw}= (elastic warm start) needs engine='sharded_fused'; "
                 "the historical inline path cannot resume carried state")
+    if not _resolve_precision(solver_kw.pop("precision", None)).is_default:
+        raise ValueError(
+            "mixed-precision policies (storage demotion / int8 wire) are "
+            "implemented by the sharded kernel bodies: use "
+            "engine='sharded_fused'; the historical inline path runs at "
+            "the solve dtype only")
 
     axes = mesh.axis_names
     spec_v = P(axes)       # vectors sharded over all axes (flattened)

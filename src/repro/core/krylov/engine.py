@@ -245,8 +245,11 @@ class FusedEngine(Engine):
 
         if "w" not in st:  # single-sweep mega-kernel state
             # loop-invariant under jit (A is a trace constant): XLA hoists
-            # the 1/diag out of the solver scan
-            inv_d = _jacobi_inv_diag(A, M, st["x"].shape[-1], st["x"].dtype)
+            # the 1/diag out of the scan.  dtype follows the BANDS, not x:
+            # under a storage-demoting PrecisionPolicy the operator rides
+            # in bf16/fp8 while x stays at accum precision, and diag^-1
+            # must match the resident-operand dtype the kernel streams.
+            inv_d = _jacobi_inv_diag(A, M, st["x"].shape[-1], A.bands.dtype)
             x, r, u, p, red = kops.pipecg_spmv_fused_step(
                 A.offsets, A.bands, inv_d,
                 st["x"], st["r"], st["u"], st["p"], alpha, beta)

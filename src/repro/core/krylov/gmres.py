@@ -14,6 +14,8 @@ import jax.numpy as jnp
 
 from repro.core.krylov.base import SolveResult, as_matvec, local_dot
 from repro.core.krylov.engine import get_engine
+from repro.core.krylov.options import (UNSET, SolverOptions, check_supported,
+                                       resolve_options)
 
 
 def _lstsq_hessenberg(H, beta, m):
@@ -23,8 +25,8 @@ def _lstsq_hessenberg(H, beta, m):
     return y
 
 
-def gmres(A, b, x0=None, *, restart: int = 30, tol: float = 0.0,
-          M=None, dot=local_dot, engine=None) -> SolveResult:
+def gmres(A, b, x0=None, *, restart: int = 30, tol=UNSET,
+          M=UNSET, dot=local_dot, engine=UNSET, options=None) -> SolveResult:
     """Single-cycle GMRES(restart) — Algorithm 1 of the paper.
 
     Returns the minimizer over the Krylov space of dimension ``restart``.
@@ -37,7 +39,21 @@ def gmres(A, b, x0=None, *, restart: int = 30, tol: float = 0.0,
     sweep via kernels/fused_dots.py).  CGS and MGS agree in exact
     arithmetic; the minimizer is identical, per-step coefficients differ
     at roundoff level.
+
+    ``options=SolverOptions(...)`` is the typed spelling of ``tol`` /
+    ``M`` / ``engine`` (core/krylov/options.py); ``restart`` stays a
+    solver-specific kwarg (GMRES has no ``maxiter`` — the cycle length
+    IS the iteration count, and ``gmres_restarted`` drives outer
+    cycles), so a non-default ``options.maxiter`` raises.
     """
+    opts = resolve_options(options, tol=tol, M=M, engine=engine)
+    check_supported(opts, "gmres", supported=("engine",))
+    if opts.maxiter != SolverOptions().maxiter:
+        raise ValueError(
+            "gmres() runs one restart cycle: its iteration count is "
+            "restart=, and outer cycles belong to gmres_restarted "
+            "(cycles=); options.maxiter is not honored")
+    tol, M, engine = opts.tol, opts.M, opts.engine
     eng = get_engine(engine)
     if eng is not None:
         if dot is not local_dot:
@@ -119,15 +135,20 @@ def gmres_restarted(A, b, x0=None, *, restart: int = 30, cycles: int = 5,
                     tol: float = 0.0, M=None, dot=local_dot,
                     inner=None, engine=None) -> SolveResult:
     """GMRES(m) with restarts: ``cycles`` outer cycles of ``restart`` inner
-    Arnoldi steps (``inner=pgmres`` gives restarted PGMRES)."""
+    Arnoldi steps (``inner=pgmres`` gives restarted PGMRES).
+
+    The inner solver is invoked with ``options=SolverOptions(...)`` (the
+    typed knob bag every in-repo solver accepts); a custom ``inner=``
+    must accept that kwarg.
+    """
     solver = inner if inner is not None else gmres
     x = jnp.zeros_like(b) if x0 is None else x0
     hists = []
     iters = 0
     res = None
-    kw = {} if engine is None else {"engine": engine}  # keep the pre-engine
-    for _ in range(cycles):                            # inner= contract intact
-        out = solver(A, b, x, restart=restart, tol=tol, M=M, dot=dot, **kw)
+    opts = SolverOptions(tol=tol, M=M, engine=engine)
+    for _ in range(cycles):
+        out = solver(A, b, x, restart=restart, dot=dot, options=opts)
         x = out.x
         hists.append(out.res_history)
         iters += int(out.iters)

@@ -20,10 +20,13 @@ import jax.numpy as jnp
 from repro.core.krylov.base import SolveResult, as_matvec, local_dot
 from repro.core.krylov.engine import get_engine
 from repro.core.krylov.gmres import _lstsq_hessenberg
+from repro.core.krylov.options import (UNSET, SolverOptions, check_supported,
+                                       resolve_options)
 
 
-def pgmres(A, b, x0=None, *, restart: int = 30, tol: float = 0.0,
-           M=None, dot=local_dot, engine=None, depth: int = 1) -> SolveResult:
+def pgmres(A, b, x0=None, *, restart: int = 30, tol=UNSET,
+           M=UNSET, dot=local_dot, engine=UNSET, depth=UNSET,
+           options=None) -> SolveResult:
     """``engine`` routes the fused h_{j,i} batch (line 18) and the SpMV
     through an iteration engine (one-pass multi-dot kernel); None keeps
     the inline path used by the distributed mode.
@@ -33,15 +36,26 @@ def pgmres(A, b, x0=None, *, restart: int = 30, tol: float = 0.0,
     ``depth >= 2`` routes to the ghost-basis deep-pipelined variant
     (core/krylov/pipeline.py::pgmres_l), where ONE fused Gram reduction
     serves ``depth`` iterations.
+
+    ``options=SolverOptions(...)`` is the typed spelling of ``tol`` /
+    ``M`` / ``engine`` / ``depth``; like ``gmres``, the cycle length is
+    ``restart=`` so a non-default ``options.maxiter`` raises.
     """
+    opts = resolve_options(options, tol=tol, M=M, engine=engine, depth=depth)
+    check_supported(opts, "pgmres", supported=("engine", "depth"))
+    if opts.maxiter != SolverOptions().maxiter:
+        raise ValueError(
+            "pgmres() runs one restart cycle: its iteration count is "
+            "restart=, and outer cycles belong to gmres_restarted "
+            "(inner=pgmres); options.maxiter is not honored")
+    tol, M, engine, depth = opts.tol, opts.M, opts.engine, opts.depth
     if depth != 1:
         from repro.core.krylov.pipeline import pgmres_l
         if dot is not local_dot:
             raise ValueError(
                 "depth-l pgmres computes its reductions as fused Gram "
                 "blocks and cannot honor a custom dot; use depth=1 there")
-        return pgmres_l(A, b, x0, restart=restart, l=depth, tol=tol, M=M,
-                        engine=engine)
+        return pgmres_l(A, b, x0, restart=restart, options=opts)
     eng = get_engine(engine)
     if eng is not None:
         if dot is not local_dot:

@@ -36,6 +36,7 @@ in ``core/krylov/distributed.py::sharded_pipecg_depth_solve``.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Tuple
 
 import jax
@@ -45,6 +46,7 @@ from repro.core.krylov import abft
 from repro.core.krylov.base import SolveResult
 from repro.core.krylov.engine import FusedEngine, get_engine
 from repro.core.krylov.operators import DiaMatrix
+from repro.core.krylov.options import UNSET, check_supported, resolve_options
 
 
 def dia_inf_norm(A: DiaMatrix) -> jnp.ndarray:
@@ -179,10 +181,10 @@ def _ghost_chain(A: DiaMatrix, p, r, theta, l: int, eng) -> Tuple:
     return C, C @ C.T
 
 
-def pipecg_l(A, b, x0=None, *, l: int = 1, maxiter: int = 100,
-             tol: float = 0.0, M=None, engine=None, rr: int = 0,
-             rr_tau: float = 0.0,
-             theta: Optional[float] = None) -> SolveResult:
+def pipecg_l(A, b, x0=None, *, l=UNSET, maxiter=UNSET,
+             tol=UNSET, M=UNSET, engine=UNSET, rr=UNSET,
+             rr_tau=UNSET, theta: Optional[float] = None,
+             options=None) -> SolveResult:
     """Depth-l pipelined CG.
 
     ``l = 1`` delegates to the Ghysels-Vanroose PIPECG recurrence
@@ -212,15 +214,28 @@ def pipecg_l(A, b, x0=None, *, l: int = 1, maxiter: int = 100,
     residual norms are then the preconditioned ones).  ``engine`` selects
     who builds the chain: ``"fused"`` uses the single-sweep ghost-chain
     kernel, None / ``"naive"`` plain matvecs.
+
+    ``options=SolverOptions(...)`` is the typed spelling of the solver
+    knobs; ``options.depth`` is this solver's ``l`` (the legacy ``l=``
+    kwarg aliases it through the deprecation shim).  ``theta`` stays a
+    solver-specific kwarg.
     """
+    opts = resolve_options(options, l=l, maxiter=maxiter, tol=tol, M=M,
+                           engine=engine, rr=rr, rr_tau=rr_tau)
+    check_supported(opts, "pipecg_l",
+                    supported=("engine", "depth", "rr", "rr_tau"))
+    l, maxiter, tol, M = opts.depth, opts.maxiter, opts.tol, opts.M
+    engine, rr, rr_tau = opts.engine, opts.rr, opts.rr_tau
     if l < 1:
         raise ValueError(f"pipeline depth l must be >= 1, got {l}")
     if l == 1:
         from repro.core.krylov.cg import pipecg
-        return pipecg(A, b, x0, maxiter=maxiter, tol=tol, M=M,
-                      engine=engine if (engine is not None or not rr_tau)
-                      else "naive",
-                      rr_tau=rr_tau)
+        # rr has no depth-1 analogue (replacement periods count BLOCKS);
+        # the historical entry dropped it silently at l=1, preserved here
+        return pipecg(A, b, x0, options=dataclasses.replace(
+            opts, depth=1, rr=0,
+            engine=engine if (engine is not None or not rr_tau)
+            else "naive"))
     eng = get_engine(engine)
     from repro.core.krylov.engine import ShardedFusedEngine
     if isinstance(eng, ShardedFusedEngine):
@@ -326,9 +341,9 @@ def _clipped_solve(G, rhs, eps: float = 1e-12):
     return evecs @ (inv * (evecs.T @ rhs))
 
 
-def pgmres_l(A, b, x0=None, *, restart: int = 30, l: int = 2,
-             tol: float = 0.0, M=None, theta: Optional[float] = None,
-             engine=None) -> SolveResult:
+def pgmres_l(A, b, x0=None, *, restart: int = 30, l=UNSET,
+             tol=UNSET, M=UNSET, theta: Optional[float] = None,
+             engine=UNSET, options=None) -> SolveResult:
     """Depth-l pipelined GMRES (ghost-basis blocks, Gram-space LS).
 
     Per block of l iterations: orthogonalize the newest basis vector in
@@ -346,7 +361,23 @@ def pgmres_l(A, b, x0=None, *, restart: int = 30, l: int = 2,
     ``tol`` is accepted for interface parity with the depth-1 solver:
     like ``pgmres``, one restart cycle runs to completion (the outer
     ``gmres_restarted`` driver is where tolerances stop cycles).
+
+    ``options=SolverOptions(...)`` is the typed spelling (``depth`` is
+    ``l``); with neither ``l=`` nor ``options=`` the historical default
+    depth 2 applies.
     """
+    opts = resolve_options(options, l=l, tol=tol, M=M, engine=engine)
+    check_supported(opts, "pgmres_l", supported=("engine", "depth"))
+    from repro.core.krylov.options import SolverOptions
+    if opts.maxiter != SolverOptions().maxiter:
+        raise ValueError(
+            "pgmres_l() runs one restart cycle: its iteration count is "
+            "restart= (rounded up to a multiple of l); options.maxiter "
+            "is not honored")
+    tol, M, engine = opts.tol, opts.M, opts.engine
+    # legacy default was l=2; SolverOptions defaults depth to 1, so only
+    # adopt the options depth when the caller actually set one of them
+    l = 2 if (options is None and l is UNSET) else opts.depth
     if l < 1:
         raise ValueError(f"pipeline depth l must be >= 1, got {l}")
     if M == "jacobi":

@@ -47,7 +47,15 @@ class Hardware:
 
 @dataclasses.dataclass(frozen=True)
 class SolverPhaseModel:
-    """Per-iteration times of a distributed Krylov step on P chips."""
+    """Per-iteration times of a distributed Krylov step on P chips.
+
+    ``storage_words`` / ``wire_words`` are the fp32-equivalent scaling
+    factors of a ``PrecisionPolicy`` (core/krylov/options.py): the HBM
+    sweep terms (SpMV band stream + carried-vector AXPY traffic) scale
+    with the storage width, the halo-exchange byte term with the wire
+    width.  ``halo`` is the stencil half-bandwidth; 0 keeps the
+    historical no-halo model (and its numbers) bit-for-bit.
+    """
 
     n: int                      # global problem size
     nnz_per_row: int            # 3 for ex23; ~21 for ex48-like band
@@ -56,25 +64,63 @@ class SolverPhaseModel:
     hw: Hardware = dataclasses.field(default_factory=Hardware)
     n_vec_reads: int = 6        # AXPY traffic multiple (CG)
     n_reductions: int = 2       # sync points per iteration (CG)
+    halo: int = 0               # stencil half-bandwidth (wire elements/side)
+    n_halo_vecs: int = 2        # vectors exchanged per iteration (u, p)
+    storage_words: float = 1.0  # sweep-bytes scale (PrecisionPolicy.storage)
+    wire_words: float = 1.0     # halo-bytes scale (PrecisionPolicy.wire)
 
     def t_spmv(self) -> float:
-        bytes_local = (self.nnz_per_row + 2) * self.dtype_bytes * self.n / self.p
+        bytes_local = ((self.nnz_per_row + 2) * self.dtype_bytes
+                       * self.storage_words * self.n / self.p)
         return bytes_local / self.hw.hbm_bw
 
     def t_axpy(self) -> float:
-        return (self.n_vec_reads * self.dtype_bytes * self.n / self.p
-                / self.hw.hbm_bw)
+        return (self.n_vec_reads * self.dtype_bytes * self.storage_words
+                * self.n / self.p / self.hw.hbm_bw)
 
     def t_reduction(self) -> float:
         return 2.0 * math.log2(max(self.p, 2)) * self.hw.hop_latency
 
+    def t_halo(self) -> float:
+        """Neighbor-exchange time: bytes on the ICI link + 2 ring hops.
+
+        A data dependence of the local stencil (the split-phase window
+        hides the REDUCTION, not this), so it adds to the compute side
+        of Eq. 6/7.  Zero when the model carries no halo (p = 1 or the
+        historical no-halo configuration).
+        """
+        if self.halo <= 0 or self.p <= 1:
+            return 0.0
+        bytes_wire = (2 * self.halo * self.n_halo_vecs * self.dtype_bytes
+                      * self.wire_words)
+        return bytes_wire / self.hw.link_bw + 2.0 * self.hw.hop_latency
+
     def t_compute(self) -> float:
-        return self.t_spmv() + self.t_axpy()
+        return self.t_spmv() + self.t_axpy() + self.t_halo()
+
+
+def apply_precision(model: SolverPhaseModel, precision) -> SolverPhaseModel:
+    """Scale a phase model's sweep/wire byte terms by a PrecisionPolicy.
+
+    ``precision`` is a PrecisionPolicy, a preset name, or None (no-op).
+    Storage width scales the HBM sweep terms (band stream + carried
+    vectors), wire width the halo-exchange bytes; the reduction-latency
+    term is untouched — its payload is O(6) scalars, latency-bound by
+    construction (which is also why ``wire_gram`` defaults to fp32).
+    """
+    from repro.core.krylov.options import as_policy
+    policy = as_policy(precision)
+    if policy.is_default:
+        return model
+    return dataclasses.replace(
+        model,
+        storage_words=model.storage_words * policy.storage_words,
+        wire_words=model.wire_words * policy.wire_words)
 
 
 def predict_speedup(model_sync: SolverPhaseModel, model_pipe: SolverPhaseModel,
                     noise: Distribution, K: int,
-                    depth: int = 1) -> Dict[str, float]:
+                    depth: int = 1, precision=None) -> Dict[str, float]:
     """E[T]/E[T'] with per-step noise ~ ``noise`` added to each process.
 
     Synchronized: every step costs max_p(t_c + w_p) + n_red * t_red.
@@ -84,8 +130,17 @@ def predict_speedup(model_sync: SolverPhaseModel, model_pipe: SolverPhaseModel,
     iterations of compute to hide behind, so its per-iteration floor
     shrinks to ``n_red * t_red / l`` (cf. core/perfmodel/depth.py for
     the waiting-time side of the depth term).
+
+    ``precision`` (PrecisionPolicy / preset name / None) applies to the
+    PIPELINED model only — the synchronized baseline stays full
+    precision, matching how the campaign measures speedup.  Shrinking
+    the sweep and halo bytes lowers ``t_compute`` until the overlapped
+    reduction floor binds: the model then predicts the bandwidth-bound
+    -> latency-bound regime conversion (reported as
+    ``pipe_latency_bound``).
     """
     p = model_sync.p
+    model_pipe = apply_precision(model_pipe, precision)
     tc_s = model_sync.t_compute()
     tc_p = model_pipe.t_compute()
     tr = model_sync.t_reduction()
@@ -95,8 +150,8 @@ def predict_speedup(model_sync: SolverPhaseModel, model_pipe: SolverPhaseModel,
     e_t_sync = K * (e_max + model_sync.n_reductions * tr)
     # pipelined: one overlapped reduction per depth-l window; steady
     # state per-process mean
-    e_t_pipe = K * max(tc_p + float(noise.mean),
-                       model_pipe.n_reductions * tr / max(depth, 1))
+    red_floor = model_pipe.n_reductions * tr / max(depth, 1)
+    e_t_pipe = K * max(tc_p + float(noise.mean), red_floor)
     return {
         "t_sync": e_t_sync,
         "t_pipe": e_t_pipe,
@@ -105,6 +160,9 @@ def predict_speedup(model_sync: SolverPhaseModel, model_pipe: SolverPhaseModel,
         "t_reduction": tr,
         "noise_mean": float(noise.mean),
         "e_max_step": e_max,
+        "t_pipe_compute": tc_p,
+        "t_pipe_halo": model_pipe.t_halo(),
+        "pipe_latency_bound": float(red_floor >= tc_p + float(noise.mean)),
     }
 
 

@@ -34,24 +34,36 @@ from repro.core.perfmodel.expected_max import expected_max
 
 
 def eq6_iteration_time(dist: Distribution, P: int, t_compute: float = 0.0,
-                       red_latency: float = 0.0, method: str = "auto") -> float:
+                       red_latency: float = 0.0, t_wire: float = 0.0,
+                       method: str = "auto") -> float:
     """Expected synchronized iteration time (paper Eq. 6 per-step mean).
 
-    ``t_compute + E[max_P W] + red_latency``: every process waits for the
-    slowest draw, then the reduction latency sits on the critical path.
+    ``t_compute + t_wire + E[max_P W] + red_latency``: every process
+    waits for the slowest draw, then the reduction latency sits on the
+    critical path.  ``t_wire`` is the neighbor-exchange (halo) byte time
+    — a DATA dependence of the local stencil, so unlike the reduction it
+    rides the compute side in BOTH variants; a PrecisionPolicy's int8
+    wire shrinks it (bytes / link_bw scaling, see
+    core/noise/simulator.py::SolverPhaseModel.t_halo).
     """
-    return t_compute + float(expected_max(dist, P, method=method)) \
+    return t_compute + t_wire + float(expected_max(dist, P, method=method)) \
         + red_latency
 
 
 def eq7_iteration_time(dist: Distribution, t_compute: float = 0.0,
-                       red_latency: float = 0.0) -> float:
+                       red_latency: float = 0.0,
+                       t_wire: float = 0.0) -> float:
     """Expected pipelined iteration time (paper Eq. 7 per-step mean).
 
     Per process the overlapped reduction only matters when it outlasts
-    compute + wait: ``max(t_compute + E[W], red_latency)``.
+    compute + wait: ``max(t_compute + t_wire + E[W], red_latency)``.
+    ``t_wire`` (halo bytes on the link) adds to the compute side — the
+    split-phase window hides the REDUCTION, not the stencil's neighbor
+    dependence — which is how storage/wire compression converts a
+    bandwidth-dominated step back into the latency-dominated regime this
+    model rewards.
     """
-    return max(t_compute + float(dist.mean), red_latency)
+    return max(t_compute + t_wire + float(dist.mean), red_latency)
 
 
 def quantile_key(q: float) -> str:

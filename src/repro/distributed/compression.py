@@ -1,42 +1,77 @@
-"""Gradient compression for the cross-pod (DCN) reduction.
+"""int8 wire compression: gradients, halo strips, carried Gram psums.
 
-At 1000+ nodes the pod-level gradient all-reduce crosses the slow
-data-center network; int8 quantization with per-tensor scales cuts its
-wire bytes 4x (vs fp32 master grads).  Error feedback (Seide et al.)
-accumulates the quantization residual locally so the compressed SGD
-trajectory tracks the exact one.
+Two consumers share the same quantizer:
+
+* the cross-pod (DCN) gradient all-reduce of the training substrate —
+  at 1000+ nodes int8 with per-tensor scales cuts wire bytes 4x (vs
+  fp32 master grads);
+* the pipelined-solver wire path (``PrecisionPolicy(wire='int8')``):
+  :func:`compress_halo` shrinks the 2h ppermute strips the sharded
+  engines exchange every iteration, and :func:`compress_gram` the
+  carried split-phase Gram psum payload — the very latency the overlap
+  window of core/krylov/distributed.py exists to cover.
+
+Error feedback (Seide et al.) accumulates the quantization residual at
+the SENDER so the compressed trajectory tracks the exact one; without
+it the per-iteration quantization error accumulates into the attainable
+accuracy floor (the failure mode pinned by tests/test_precision.py).
+The ABFT checksum channel of a Gram payload is never quantized — its
+clean value is rounding-level, so an int8 grid would silence the
+detector (``preserve=`` mask).
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 
-def quantize_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+def quantize_int8(g: jnp.ndarray, axis=None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 quantization with a max-abs scale.
+
+    ``axis=None`` uses one scale per array (gradient tensors, halo
+    strips — homogeneous magnitudes).  An int ``axis`` keeps one scale
+    per slice along it (``keepdims``, so :func:`dequantize_int8`
+    broadcasts) — Gram/reduction payloads need this: their entries span
+    ``||r||^2 .. ||A^2 r||^2``, and a single scale would flush the
+    small residual entry to 0 (instant false convergence).
+    """
+    scale = jnp.max(jnp.abs(g), axis=axis,
+                    keepdims=axis is not None)
+    scale = jnp.maximum(scale, 1e-12) / 127.0
     q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
     return q, scale.astype(jnp.float32)
 
 
 def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quantize_int8` (back to fp32)."""
     return q.astype(jnp.float32) * scale
 
 
 def compress_tree(grads, error_feedback=None):
-    """Returns (quantized tree, scales tree, new error feedback tree)."""
+    """Returns (quantized tree, scales tree, new error feedback tree).
+
+    Each leaf is quantized exactly ONCE: the (q, scale) pair comes from
+    a single :func:`quantize_int8` call per leaf (the max-abs reduction
+    and the round/clip pass are not repeated), pinned by the jaxpr test
+    in tests/test_precision.py.
+    """
     if error_feedback is None:
         error_feedback = jax.tree.map(jnp.zeros_like, grads)
     corrected = jax.tree.map(lambda g, e: g + e, grads, error_feedback)
-    q = jax.tree.map(lambda g: quantize_int8(g)[0], corrected)
-    s = jax.tree.map(lambda g: quantize_int8(g)[1], corrected)
+    flat, treedef = jax.tree.flatten(corrected)
+    pairs = [quantize_int8(g) for g in flat]
+    q = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+    s = jax.tree.unflatten(treedef, [p[1] for p in pairs])
     recon = jax.tree.map(dequantize_int8, q, s)
     new_ef = jax.tree.map(lambda c, r: c - r, corrected, recon)
     return q, s, new_ef
 
 
 def decompress_tree(q, s):
+    """Dequantize a (quantized tree, scales tree) pair."""
     return jax.tree.map(dequantize_int8, q, s)
 
 
@@ -45,3 +80,68 @@ def compressed_grads(grads, error_feedback=None):
     would carry); returns (effective grads, new error feedback)."""
     q, s, ef = compress_tree(grads, error_feedback)
     return decompress_tree(q, s), ef
+
+
+# -- pipelined-solver wire path ---------------------------------------------
+
+
+def compress_halo(strip: jnp.ndarray,
+                  error_feedback: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Quantize one ppermute halo strip to (int8 payload, fp32 scale).
+
+    ``strip`` is the (k, 2h) (or (l*h,)) boundary slab a sharded engine
+    sends its ring neighbor each iteration.  Returns ``(q, scale,
+    new_error_feedback)``; the sender carries ``new_error_feedback``
+    (same shape/dtype as ``strip``) in its scan state and feeds it back
+    next iteration so the quantization residual of the SAME boundary
+    rows is re-injected instead of lost.  Pass ``error_feedback=None``
+    for the no-feedback wire (the test-pinned accuracy-floor failure
+    mode) and ignore the returned feedback.
+    """
+    corrected = strip if error_feedback is None \
+        else strip + error_feedback.astype(strip.dtype)
+    q, scale = quantize_int8(corrected)
+    recon = dequantize_int8(q, scale).astype(strip.dtype)
+    return q, scale, (corrected - recon)
+
+
+def decompress_halo(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=None) -> jnp.ndarray:
+    """Receiver side of :func:`compress_halo`; optional target dtype."""
+    out = dequantize_int8(q, scale)
+    return out if dtype is None else out.astype(dtype)
+
+
+def compress_gram(partial: jnp.ndarray,
+                  error_feedback: Optional[jnp.ndarray] = None,
+                  preserve: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize->dequantize a carried Gram/reduction psum payload.
+
+    The sharded engines carry their per-shard partial reduction row one
+    iteration and finish it with a deferred psum (split-phase).  This
+    models the int8 wire for that payload: the partial is quantized and
+    immediately dequantized BEFORE entering the carry, so the psum
+    count and dataflow — the HLO overlap invariant — are untouched
+    while the summed values sit on the int8 grid the wire would carry.
+
+    ``preserve`` is a boolean mask of entries excluded from
+    quantization (the ABFT checksum channel: its clean value is
+    rounding-level, so the int8 grid would silence the detector).
+    Returns ``(wire_partial, new_error_feedback)``; feed the error
+    feedback back on the next call so the quantization residual of the
+    compressed entries re-enters instead of accumulating into the
+    attainable-accuracy floor.
+    """
+    if preserve is None:
+        preserve = jnp.zeros(partial.shape, bool)
+    corrected = partial if error_feedback is None \
+        else partial + error_feedback.astype(partial.dtype)
+    masked = jnp.where(preserve, 0.0, corrected)
+    # one scale per reduction row: Gram entries span ||r||^2..||A^2 r||^2
+    q, scale = quantize_int8(masked, axis=-1)
+    recon = dequantize_int8(q, scale).astype(partial.dtype)
+    out = jnp.where(preserve, partial, recon)
+    new_ef = jnp.where(preserve, 0.0, masked - recon)
+    return out, new_ef

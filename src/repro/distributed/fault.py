@@ -188,7 +188,7 @@ def resilient_distributed_solve(
         ckpt_dir: Optional[str] = None, injector=None, M=None,
         block: Optional[int] = None, drift_factor: float = 1e3,
         jump_factor: float = 10.0, restart_cost_steps: float = 0.0,
-        max_recoveries: int = 4, min_shards: int = 1):
+        max_recoveries: int = 4, min_shards: int = 1, options=None):
     """Fused sharded PIPECG solve that survives shard faults mid-flight.
 
     Runs ``distributed_solve(..., engine="sharded_fused")`` in segments of
@@ -221,6 +221,18 @@ def resilient_distributed_solve(
     meshes always use the first ``len(alive)`` devices, with the
     injector's ``set_mesh`` keeping logical shard identities stable.
     Returns ``(SolveResult, ResilientReport)``.
+
+    ``options`` (a :class:`~repro.core.krylov.options.SolverOptions`)
+    bundles ``tol`` / ``maxiter`` / ``M`` / the mixed-precision policy as
+    one typed value; it cannot be mixed with the loose equivalents.
+    ``options.noise`` fills the ``injector=`` slot (they are the same
+    hook).  The segment loop re-issues it with ``maxiter`` rebound to
+    each checkpoint window, so ``options.maxiter`` stays the TOTAL
+    productive-iteration budget.  ``engine`` must stay the sharded fused
+    path (the only one that can resume carried state), ``depth`` must be
+    1 (segments checkpoint the depth-1 carried tuple), and ``rr`` /
+    ``rr_tau`` are rejected — this loop IS the rollback/restart
+    residual-replacement mechanism.
     """
     import jax
     from jax.sharding import Mesh
@@ -228,6 +240,44 @@ def resilient_distributed_solve(
     from repro.checkpoint import CheckpointManager
     from repro.core.krylov.cg import pipecg
     from repro.core.krylov.distributed import distributed_solve
+    from repro.core.krylov.options import SolverOptions
+
+    if options is not None:
+        if not isinstance(options, SolverOptions):
+            raise TypeError("options= must be a SolverOptions; got "
+                            f"{type(options).__name__}")
+        loose = [name for name, value, default in
+                 (("tol", tol, 1e-10), ("maxiter", maxiter, 400),
+                  ("M", M, None)) if value != default]
+        if loose:
+            raise TypeError(
+                "pass the solve configuration either as options= or as "
+                "loose kwargs, not both (options= given alongside "
+                f"{sorted(loose)})")
+        if options.engine not in (None, "sharded_fused"):
+            raise ValueError(
+                "resilient_distributed_solve runs the sharded fused "
+                "engine (the only path that can checkpoint and resume "
+                f"carried state); got engine={options.engine!r}")
+        if options.depth != 1:
+            raise ValueError(
+                "the resilient segment loop checkpoints the depth-1 "
+                f"carried tuple; depth={options.depth} is not restartable")
+        if options.rr or options.rr_tau:
+            raise ValueError(
+                "rr= / rr_tau= are local-solver options; the resilient "
+                "loop already re-glues via checkpoint rollback + x0= "
+                "restarts")
+        if options.noise is not None:
+            if injector is not None:
+                raise TypeError(
+                    "options.noise and injector= fill the same hook "
+                    "slot — pass exactly one")
+            injector = options.noise
+        tol, maxiter, M = options.tol, options.maxiter, options.M
+        base_opts = options
+    else:
+        base_opts = SolverOptions(maxiter=maxiter, tol=tol, M=M)
 
     if solver is None:
         solver = pipecg
@@ -275,9 +325,12 @@ def resilient_distributed_solve(
             injector.set_mesh(alive)
         seg_start = executed
         t0 = time.perf_counter()
+        seg_opts = dataclasses.replace(
+            base_opts, maxiter=seg_len, tol=tol, M=M,
+            engine="sharded_fused", noise=injector, depth=1,
+            rr=0, rr_tau=0.0)
         res, carried_out = distributed_solve(
-            solver, A, b, mesh, engine="sharded_fused", tol=tol,
-            maxiter=seg_len, M=M, block=block, noise=injector,
+            solver, A, b, mesh, options=seg_opts, block=block,
             x0=x_restart, carried=carried, with_state=True)
         res_norm = float(res.res_norm)
         carried_out = jax.tree.map(np.asarray, carried_out)

@@ -64,6 +64,7 @@ def _run_cells(cfg: Dict) -> Dict:
     from repro.core.krylov.bicgstab import pipebicgstab
     from repro.core.krylov.cg import pipecg
     from repro.core.krylov.distributed import distributed_solve
+    from repro.core.krylov.options import SolverOptions
     from repro.core.krylov.pipeline import pipecg_l
     from repro.core.noise.faults import FaultInjector, FaultSpec
     from repro.core.perfmodel.resync import (
@@ -91,11 +92,11 @@ def _run_cells(cfg: Dict) -> Dict:
                   "pipecg_l": pipecg_l}
 
     def solve(solver, injector=None):
-        kw = dict(tol=tol, maxiter=maxiter, noise=injector)
-        if solver == "pipecg_l":
-            kw["l"] = depth
+        opts = SolverOptions(
+            engine="sharded_fused", tol=tol, maxiter=maxiter,
+            noise=injector, depth=depth if solver == "pipecg_l" else 1)
         res = distributed_solve(solver_fns[solver], A, b, mesh,
-                                engine="sharded_fused", **kw)
+                                options=opts)
         det = np.abs(np.asarray(res.detect_history, np.float64))
         hist = np.asarray(res.res_history, np.float64)
         return res, det, hist
@@ -178,8 +179,10 @@ def _run_cells(cfg: Dict) -> Dict:
                                   at_iter=onset, magnitude=mag)],
                 n_shards=P, seed=seed + ci)
             _, rep = resilient_distributed_solve(
-                A, b, devices[:P], tol=tol, maxiter=maxiter,
-                checkpoint_period=period, injector=inj2)
+                A, b, devices[:P],
+                options=SolverOptions(tol=tol, maxiter=maxiter,
+                                      noise=inj2),
+                checkpoint_period=period)
             ev = [e for e in rep.recoveries if e.kind == "corrupt"]
             row.update({
                 "recovered": bool(ev),

@@ -46,12 +46,17 @@ from repro.experiments.noise_sources import (
 )
 from repro.experiments.abft_exec import bench_record, run_abft_exec
 from repro.experiments.fault_exec import run_fault_exec
+from repro.experiments.precision_exec import (
+    bench_record as precision_bench_record,
+    run_precision_exec,
+)
 from repro.experiments.report import (
     write_abft_csv,
     write_depth_csv,
     write_ecdf_csv,
     write_fault_csv,
     write_json,
+    write_precision_csv,
     write_report_md,
     write_runtimes_csv,
     write_serve_csv,
@@ -74,6 +79,7 @@ from repro.experiments.validation import (
     validate_cells,
     validate_depth_cells,
     validate_fault_cells,
+    validate_precision_cells,
     validate_s_sync_cells,
     validate_serve_cells,
 )
@@ -307,7 +313,8 @@ def _acceptance(spec: CampaignSpec, cells, wait_fits,
                 depth_validation=None, sync_validation=None,
                 fault_validation=None,
                 serve_validation=None,
-                abft_validation=None) -> Dict[str, bool]:
+                abft_validation=None,
+                precision_validation=None) -> Dict[str, bool]:
     """The ISSUE's acceptance checks, evaluated on this campaign's data."""
     exp_cells = [c for c in cells if c["noise"] == "exponential"]
     uni_cells = [c for c in cells if c["noise"] == "uniform"]
@@ -377,6 +384,25 @@ def _acceptance(spec: CampaignSpec, cells, wait_fits,
         checks["abft: elastic recovery driven by the checksum fast "
                "path"] = bool(rec) and all(row["recovery_ok"]
                                            for row in rec)
+    if precision_validation:
+        cells_p = [row for key, row in precision_validation.items()
+                   if "/" in key]
+        checks["precision: safe policies within the Cools accuracy "
+               "floor, unsafe demonstrators outside it"] = all(
+            row["precision_ok"] for row in cells_p)
+        nef = precision_validation.get("noef_vs_ef")
+        if nef:
+            checks["precision: int8 wire without error feedback "
+                   "measurably degrades the plateau"] = nef["degrades"]
+        hlo = precision_validation.get("hlo")
+        if hlo:
+            checks["precision: split-phase overlap preserved under the "
+                   "compressed wire"] = hlo["overlap_ok"]
+        conv = precision_validation.get("regime_conversion")
+        if conv:
+            checks["precision: model predicts the bandwidth->latency "
+                   "regime conversion for bf16 storage"] = (
+                conv["converted"])
     return checks
 
 
@@ -457,6 +483,12 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
     if not skip_exec and spec.abft_solvers:
         abft_record = run_abft_exec(spec)
 
+    # 3e. precision stage: mixed-precision policies against the Cools
+    # attainable-accuracy floors (policy x solver sweep, forced devices)
+    precision_record: Dict = {}
+    if not skip_exec and spec.precision_policies and spec.precision_solvers:
+        precision_record = run_precision_exec(spec)
+
     # 4. validation
     validation = validate_cells(cells, dists)
     validation["depth"] = validate_depth_cells(depth_cells)
@@ -466,12 +498,14 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
     validation["fault"] = validate_fault_cells(fault_cells)
     validation["serve"] = validate_serve_cells(serve_record)
     validation["abft"] = validate_abft_cells(abft_record.get("cells", []))
+    validation["precision"] = validate_precision_cells(precision_record)
     validation["acceptance"] = _acceptance(spec, cells, wait_fits,
                                            validation["depth"],
                                            validation["s_sync"],
                                            validation["fault"],
                                            validation["serve"],
-                                           validation["abft"])
+                                           validation["abft"],
+                                           validation["precision"])
 
     result = {
         "spec": dataclasses.asdict(spec),
@@ -490,6 +524,11 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
         # flat per-cell ABFT detection metrics: the check_regression
         # tracked key (BENCH_campaign.json / BENCH_abft.json --key abft)
         "abft": bench_record(abft_record)["abft"],
+        "precision_cells": precision_record.get("cells", []),
+        "precision_model": precision_record.get("model", {}),
+        # flat per-cell precision metrics: the check_regression tracked
+        # key (BENCH_campaign.json --key precision)
+        "precision": precision_bench_record(precision_record)["precision"],
         # flat per-cell recovery metrics: the benchmarks/check_regression
         # tracked key (BENCH_campaign.json --key recovery)
         "recovery": {
@@ -516,6 +555,8 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
         write_serve_csv(out_dir, serve_record)
     if abft_record.get("cells"):
         write_abft_csv(out_dir, abft_record["cells"])
+    if precision_record.get("cells"):
+        write_precision_csv(out_dir, precision_record["cells"])
     for noise, waits in wait_samples.items():
         write_ecdf_csv(out_dir, noise, waits)
     if noisy_exec:

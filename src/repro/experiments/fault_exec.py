@@ -61,6 +61,7 @@ def _run_cells(cfg: Dict) -> Dict:
     import jax.numpy as jnp
     import numpy as np
 
+    from repro.core.krylov.options import SolverOptions
     from repro.core.noise.faults import FaultInjector, FaultSpec
     from repro.core.perfmodel.resync import recovery_overhead_bound
     from repro.distributed.fault import resilient_distributed_solve
@@ -87,7 +88,8 @@ def _run_cells(cfg: Dict) -> Dict:
             continue
         if P not in clean:
             res0, rep0 = resilient_distributed_solve(
-                A, b, devices[:P], tol=tol, maxiter=maxiter,
+                A, b, devices[:P],
+                options=SolverOptions(tol=tol, maxiter=maxiter),
                 checkpoint_period=period)
             clean[P] = {"executed_iters": rep0.executed_iters,
                         "productive_iters": rep0.productive_iters,
@@ -109,8 +111,9 @@ def _run_cells(cfg: Dict) -> Dict:
                               stall_s=stall_s)],
             n_shards=P, seed=seed + ci)
         res, rep = resilient_distributed_solve(
-            A, b, devices[:P], tol=tol, maxiter=maxiter,
-            checkpoint_period=period, injector=inj)
+            A, b, devices[:P],
+            options=SolverOptions(tol=tol, maxiter=maxiter, noise=inj),
+            checkpoint_period=period)
         events = [e for e in rep.recoveries if e.kind == kind]
         recovered = bool(events)
         if kind == "stall":

@@ -256,7 +256,8 @@ def run_engine_exec(solvers: Tuple[str, ...], engines: Tuple[str, ...],
     import jax.numpy as jnp
     import numpy as _np
     from jax.sharding import Mesh
-    from repro.core.krylov import distributed_solve, tridiagonal_laplacian
+    from repro.core.krylov import (SolverOptions, distributed_solve,
+                                   tridiagonal_laplacian)
 
     A = tridiagonal_laplacian(n)
     b = jnp.ones((n,), A.bands.dtype)
@@ -270,9 +271,11 @@ def run_engine_exec(solvers: Tuple[str, ...], engines: Tuple[str, ...],
             if engine == "sharded_fused":
                 if solver not in _SHARDED_SOLVERS or n % n_shards:
                     continue
-                solve = jax.jit(lambda bb, fn=fn: distributed_solve(
-                    fn, A, bb, mesh, engine="sharded_fused",
-                    maxiter=maxiter))
+                opts = SolverOptions(engine="sharded_fused",
+                                     maxiter=maxiter)
+                solve = jax.jit(lambda bb, fn=fn, opts=opts:
+                                distributed_solve(fn, A, bb, mesh,
+                                                  options=opts))
             else:
                 solve = jax.jit(lambda bb, fn=fn, engine=engine: fn(
                     A, bb, maxiter=maxiter, engine=engine))
@@ -356,7 +359,8 @@ def run_noisy_exec(solvers: Tuple[str, ...], dist: Distribution,
     import jax
     import jax.numpy as jnp
     from jax.sharding import Mesh
-    from repro.core.krylov import distributed_solve, tridiagonal_laplacian
+    from repro.core.krylov import (SolverOptions, distributed_solve,
+                                   tridiagonal_laplacian)
     from repro.core.noise.injection import NoiseHook
 
     A = tridiagonal_laplacian(n)
@@ -366,8 +370,9 @@ def run_noisy_exec(solvers: Tuple[str, ...], dist: Distribution,
     for si, solver in enumerate(solvers):
         fn = _solver_fn(solver)
         hook = NoiseHook(dist, scale=noise_scale, seed=seed + 977 * si)
-        solve = jax.jit(lambda bb, fn=fn: distributed_solve(
-            fn, A, bb, mesh, noise=hook, maxiter=maxiter))
+        opts = SolverOptions(noise=hook, maxiter=maxiter)
+        solve = jax.jit(lambda bb, fn=fn, opts=opts: distributed_solve(
+            fn, A, bb, mesh, options=opts))
         out = solve(b)
         jax.block_until_ready(out.x)  # compile outside the timed runs
         times = []

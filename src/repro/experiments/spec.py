@@ -167,6 +167,39 @@ class CampaignSpec:
         model is gated against (the short wall-clock run is transient;
         the analytic law is steady-state, so the gate needs a long
         deterministic replay of the measured demand distribution).
+    precision_policies:
+        ``PrecisionPolicy`` preset names swept by the mixed-precision
+        stage (empty tuple disables the stage).  The default grid spans
+        the safe ladder (``fp32`` -> ``bf16`` storage -> ``bf16`` +
+        int8 halo wire with error feedback) plus two demonstrators:
+        int8 wire WITHOUT error feedback (quantization residual
+        accumulates — ``degraded``: within the floor but measurably
+        above the EF plateau) and int8 on the carried Gram psum
+        (consumed once per iteration — corrupts alpha/beta directly;
+        ``unsafe``).  Each cell runs a REAL multi-device shard_map
+        solve and measures the TRUE residual ``|b - A x|/|b|`` against
+        the storage-precision attainable-accuracy floor
+        ``C_solver * eps_storage`` (the Cools et al. rounding-error
+        bound, scaled by the storage eps and a per-solver amplification
+        constant — ``precision_exec.FLOOR_FACTORS``).
+    precision_solvers:
+        Sharded solvers swept by the precision stage.  ``pipebicgstab``
+        only sweeps {fp32, bf16}: p-CG's cells already pin the wire
+        contract, and its two-SpMV recurrence amplifies storage
+        rounding by an order of magnitude (same order at fp32 and bf16,
+        so the bf16 cell saturates within its amplified floor).
+    precision_n / precision_shards:
+        Problem size and mesh size of each precision-stage solve.  The
+        p-CG cells run a diagonally dominant pentadiagonal band with
+        half-bandwidth 128 (wide enough that the int8 halo strips carry
+        real payload and dropping error feedback is measurable); the
+        p-BiCGStab cells a shifted tridiagonal Laplacian (see
+        ``precision_exec._spd_tridiagonal``).
+    precision_maxiter:
+        Iteration cap of the pipecg precision cells (the solve runs to
+        its attainable-accuracy plateau, not to a tolerance);
+        pipebicgstab cells use 1.5x of it (past the saturation knee of
+        the bf16 plateau).
     seed:
         Base seed; every stage derives its own stream from it.
     """
@@ -221,6 +254,13 @@ class CampaignSpec:
     serve_arrival: str = "poisson"
     serve_rho: float = 0.7
     serve_replay_requests: int = 16384
+    precision_policies: Tuple[str, ...] = ("fp32", "bf16", "bf16_int8wire",
+                                           "bf16_int8wire_noef",
+                                           "bf16_int8allwire")
+    precision_solvers: Tuple[str, ...] = ("pipecg", "pipebicgstab")
+    precision_n: int = 1024
+    precision_shards: int = 4
+    precision_maxiter: int = 300
     seed: int = 0
 
 

@@ -197,6 +197,71 @@ def validate_cells(cells: Sequence[Dict],
     return out
 
 
+def validate_precision_cells(precision: Dict,
+                             noef_factor: float = 1.05) -> Dict:
+    """Precision-stage validation: Cools floors + wire-compression safety.
+
+    ``precision`` is the record of ``precision_exec.run_precision_exec``
+    (empty dict = stage disabled, returns ``{}``).  Per (solver, policy)
+    cell ``precision_ok`` carries the worker's ``_classify`` verdict:
+    the measured TRUE residual within the solver's amplified
+    attainable-accuracy floor for safe cells, outside it for unsafe
+    demonstrators, floor + no-EF/EF ratio for degraded ones.  Three
+    cross-cell checks close the loop:
+
+    * ``noef_vs_ef`` — int8 wire WITHOUT error feedback must degrade the
+      pipecg plateau by at least ``noef_factor`` over the EF variant
+      (the bias the feedback loop removes is measurable, not cosmetic;
+      measured ratio 1.15 at 128-lane strips);
+    * ``hlo`` — the compiled bf16+int8-wire solve keeps the split-phase
+      one-all-reduce-per-body overlap window;
+    * ``regime_conversion`` — ``predict_speedup(precision=...)`` at the
+      bandwidth-bound operating point: bf16 storage must flip the
+      pipelined step into the latency-bound regime and beat the fp32
+      predicted speedup.
+    """
+    if not precision:
+        return {}
+    out: Dict = {}
+    res: Dict[str, float] = {}
+    for c in precision.get("cells", []):
+        if c.get("skipped"):
+            continue
+        key = f"{c['solver']}/{c['policy']}"
+        res[key] = c["true_res_rel"]
+        out[key] = {
+            "expect": c["expect"],
+            "expect_safe": bool(c["expect_safe"]),
+            "within_floor": bool(c["within_floor"]),
+            "precision_ok": bool(c["precision_ok"]),
+            "true_res_rel": float(c["true_res_rel"]),
+            "floor_rel": float(c["floor_rel"]),
+            "res_over_eps": float(c["res_over_eps"]),
+        }
+    ef = res.get("pipecg/bf16_int8wire")
+    noef = res.get("pipecg/bf16_int8wire_noef")
+    if ef and noef:
+        out["noef_vs_ef"] = {
+            "ratio": noef / ef,
+            "factor": noef_factor,
+            "degrades": bool(noef > ef * noef_factor),
+        }
+    hlo = precision.get("hlo_bf16_int8wire") or {}
+    if hlo:
+        out["hlo"] = {"overlap_ok": bool(hlo.get("overlap_ok"))}
+    model = precision.get("model", {})
+    if "fp32" in model and "bf16" in model:
+        out["regime_conversion"] = {
+            "fp32_speedup": model["fp32"]["speedup"],
+            "bf16_speedup": model["bf16"]["speedup"],
+            "bf16_latency_bound": bool(model["bf16"]["pipe_latency_bound"]),
+            "converted": bool(
+                model["bf16"]["pipe_latency_bound"]
+                and model["bf16"]["speedup"] > model["fp32"]["speedup"]),
+        }
+    return out
+
+
 def validate_abft_cells(abft_cells: Sequence[Dict]) -> Dict:
     """ABFT-stage validation: detection coverage of the carried detectors.
 

@@ -55,10 +55,19 @@ def cache_stats() -> Dict[str, int]:
 
 
 def _key(kind: str, n: int, dtype, backend: str, min_block: int,
-         n_shards: int, k_rhs: int) -> str:
-    """JSON-stable cache key: backend + full shape signature."""
-    return "|".join(str(v) for v in (kind, n, jnp.dtype(dtype).name,
-                                     backend, min_block, n_shards, k_rhs))
+         n_shards: int, k_rhs: int, dtype_storage=None) -> str:
+    """JSON-stable cache key: backend + full shape + dtype signature.
+
+    ``dtype_storage`` names the carried-vector storage dtype of a mixed
+    PrecisionPolicy; it is appended only when it differs from the accum
+    dtype, so the keys of pure fp32/fp64 sweeps (and every previously
+    persisted cache file) are unchanged.
+    """
+    parts = [kind, n, jnp.dtype(dtype).name, backend, min_block, n_shards,
+             k_rhs]
+    if dtype_storage is not None:
+        parts.append(jnp.dtype(dtype_storage).name)
+    return "|".join(str(v) for v in parts)
 
 
 def load_cache(path: str = DEFAULT_CACHE_PATH) -> int:
@@ -119,11 +128,14 @@ def best_block(kind: str, n: int, dtype, *,
                candidates: Sequence[int] = DEFAULT_CANDIDATES,
                probe: Optional[Callable[[int], Callable[[], jax.Array]]] = None,
                backend: Optional[str] = None,
-               n_shards: int = 1, k_rhs: int = 1) -> int:
+               n_shards: int = 1, k_rhs: int = 1,
+               dtype_storage=None) -> int:
     """Pick a block size for a tiled kernel sweep.
 
     kind            — cache namespace (e.g. "pipecg_spmv", "spmv_dia")
-    words_per_row   — tiled words moved per (padded) row
+    words_per_row   — tiled words moved per (padded) row, scaled to the
+                      accum dtype (storage-dtype operands count their
+                      itemsize ratio — see ops.py::_rel_words)
     resident_words  — words fetched once per sweep regardless of block
     min_block       — hard floor (e.g. 2*halo for stencil kernels)
     probe           — block -> thunk; required for measured (TPU) tuning
@@ -131,11 +143,15 @@ def best_block(kind: str, n: int, dtype, *,
                       the cache key (they change n_local and how resident
                       reads amortize) so a distributed caller never reuses
                       a single-device choice
+    dtype_storage   — carried-vector storage dtype when it differs from
+                      ``dtype`` (the accum dtype); part of the cache key
+                      so a bf16 sweep never reuses an fp32 choice
     """
     backend = backend or jax.default_backend()
     # min_block is part of the key: the same (kind, n) tuned for a narrow
     # band must not hand its block to a caller with a wider halo floor
-    key = _key(kind, n, dtype, backend, min_block, n_shards, k_rhs)
+    key = _key(kind, n, dtype, backend, min_block, n_shards, k_rhs,
+               dtype_storage=dtype_storage)
     if key in _CACHE:
         _STATS["hits"] += 1
         return _CACHE[key]

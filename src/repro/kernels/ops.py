@@ -25,6 +25,22 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _rel_words(dtype, ref_dtype) -> float:
+    """Traffic of one ``dtype`` element relative to one ``ref_dtype`` one.
+
+    The autotuner ranks blocks by modeled HBM words; under a mixed
+    PrecisionPolicy the carried vectors move ``itemsize(storage) /
+    itemsize(accum)`` of the bytes the accumulation dtype would.
+    """
+    return jnp.dtype(dtype).itemsize / jnp.dtype(ref_dtype).itemsize
+
+
+def _storage_key(dtype, ref_dtype):
+    """Autotune-key marker: the storage dtype when it differs from accum."""
+    return jnp.dtype(dtype) if jnp.dtype(dtype) != jnp.dtype(ref_dtype) \
+        else None
+
+
 def _pad_to(x, mult, axis=0):
     n = x.shape[axis]
     pad = (-n) % mult
@@ -98,14 +114,18 @@ def pipecg_spmv_fused_step(offsets: Tuple[int, ...], bands, inv_diag,
     n = x.shape[1]
     halo = max(abs(o) for o in offsets)
     if block is None:
+        rs = _rel_words(u.dtype, x.dtype)        # carried r/u/p storage
+        ro = _rel_words(bands.dtype, x.dtype)    # resident operator storage
         block = autotune.best_block(
             "pipecg_spmv", n, x.dtype,
-            # tiled words/row: x,r reads + x,r,u,p writes
-            words_per_row=6.0,
+            # tiled words/row: x,r reads + x,r,u,p writes (r/u/p at the
+            # storage dtype, x at accum)
+            words_per_row=2.0 + 4.0 * rs,
             # once-per-sweep: u, p (+2h), bands (+h), diag^-1 (+h),
             # ABFT column sums c = A^T 1
-            resident_words=(2 + bands.shape[0] + 2) * n,
-            min_block=2 * halo)
+            resident_words=(2 * rs + (bands.shape[0] + 2) * ro) * n,
+            min_block=2 * halo,
+            dtype_storage=_storage_key(u.dtype, x.dtype))
     block = max(min(block, n), 1)
     pad = (-n) % block
     if pad:
@@ -149,11 +169,14 @@ def pipecg_spmv_halo_step(offsets: Tuple[int, ...], bands_ext, invd_ext,
             f"local shard of {n} rows is narrower than the 2*halo={2*halo} "
             "stencil reach; use fewer shards or a wider local block")
     if block is None:
+        rs = _rel_words(u.dtype, x.dtype)
+        ro = _rel_words(bands_ext.dtype, x.dtype)
         block = autotune.best_block(
             "pipecg_spmv_halo", n, x.dtype,
-            words_per_row=6.0,
-            resident_words=(2 + bands_ext.shape[0] + 2) * n,
-            min_block=2 * halo, n_shards=n_shards, k_rhs=k_rhs)
+            words_per_row=2.0 + 4.0 * rs,
+            resident_words=(2 * rs + (bands_ext.shape[0] + 2) * ro) * n,
+            min_block=2 * halo, n_shards=n_shards, k_rhs=k_rhs,
+            dtype_storage=_storage_key(u.dtype, x.dtype))
     block = max(min(block, n), 2 * halo)
     return _ps.pipecg_spmv_halo(offsets, bands_ext, invd_ext, x, r, u, p,
                                 (u_left, u_right), (p_left, p_right),
@@ -161,9 +184,10 @@ def pipecg_spmv_halo_step(offsets: Tuple[int, ...], bands_ext, invd_ext,
                                 interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnums=(0, 5), static_argnames=("block",))
+@functools.partial(jax.jit, static_argnums=(0, 5),
+                   static_argnames=("block", "accum_dtype"))
 def ghost_chain_step(offsets: Tuple[int, ...], bands, p, r, theta, l: int,
-                     block: int = None):
+                     block: int = None, accum_dtype=None):
     """Depth-l ghost basis + Gram in one sweep (kernel-backed, padded).
 
     Returns ``(chain, gram)``: the (2l+1, n) theta-scaled basis
@@ -176,31 +200,38 @@ def ghost_chain_step(offsets: Tuple[int, ...], bands, p, r, theta, l: int,
     n = p.shape[-1]
     halo = max(abs(o) for o in offsets)
     H = l * halo
+    acc = accum_dtype if accum_dtype is not None else p.dtype
     if block is None:
+        rs = _rel_words(p.dtype, acc)
+        ro = _rel_words(bands.dtype, acc)
         block = autotune.best_block(
             "ghost_chain", n, p.dtype,
             # tiled words/row: 2l+1 chain writes (p/r resident)
-            words_per_row=float(2 * l + 1),
-            resident_words=(2 + bands.shape[0]) * n,
-            min_block=2 * H, k_rhs=l)
+            words_per_row=float(2 * l + 1) * rs,
+            resident_words=(2 * rs + bands.shape[0] * ro) * n,
+            min_block=2 * H, k_rhs=l,
+            dtype_storage=_storage_key(p.dtype, acc))
     block = max(min(block, n), 2 * H)
     pad = (-n) % block
     if pad:
         bands_p, _ = _pad_to(bands, block, axis=1)
         chain, gram = _ps.ghost_chain_fused(
             offsets, bands_p, jnp.pad(p, (0, pad)), jnp.pad(r, (0, pad)),
-            theta, l, block=block, interpret=_interpret())
+            theta, l, block=block, interpret=_interpret(),
+            accum_dtype=accum_dtype)
         # zero-padded rows contribute zeros to the Gram: no mask needed
         return chain[:, :n], gram
     return _ps.ghost_chain_fused(offsets, bands, p, r, theta, l, block=block,
-                                 interpret=_interpret())
+                                 interpret=_interpret(),
+                                 accum_dtype=accum_dtype)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 9),
-                   static_argnames=("block", "n_shards"))
+                   static_argnames=("block", "n_shards", "accum_dtype"))
 def ghost_chain_halo_step(offsets: Tuple[int, ...], bands_ext, p, r,
                           p_left, p_right, r_left, r_right, theta, l: int,
-                          block: int = None, n_shards: int = 1):
+                          block: int = None, n_shards: int = 1,
+                          accum_dtype=None):
     """Per-shard depth-l ghost-chain sweep with neighbor halos.
 
     ``p_left``/``p_right``/``r_left``/``r_right`` are the (l*halo,)
@@ -218,16 +249,21 @@ def ghost_chain_halo_step(offsets: Tuple[int, ...], bands_ext, p, r,
         raise ValueError(
             f"local shard of {n} rows is narrower than the 2*l*halo={2 * H} "
             "chain reach; use fewer shards or a smaller depth")
+    acc = accum_dtype if accum_dtype is not None else p.dtype
     if block is None:
+        rs = _rel_words(p.dtype, acc)
+        ro = _rel_words(bands_ext.dtype, acc)
         block = autotune.best_block(
             "ghost_chain_halo", n, p.dtype,
-            words_per_row=float(2 * l + 1),
-            resident_words=(2 + bands_ext.shape[0]) * n,
-            min_block=2 * H, n_shards=n_shards, k_rhs=l)
+            words_per_row=float(2 * l + 1) * rs,
+            resident_words=(2 * rs + bands_ext.shape[0] * ro) * n,
+            min_block=2 * H, n_shards=n_shards, k_rhs=l,
+            dtype_storage=_storage_key(p.dtype, acc))
     block = max(min(block, n), 2 * H)
     return _ps.ghost_chain_halo(offsets, bands_ext, p, r, (p_left, p_right),
                                 (r_left, r_right), theta, l, block=block,
-                                interpret=_interpret())
+                                interpret=_interpret(),
+                                accum_dtype=accum_dtype)
 
 
 @functools.partial(jax.jit, static_argnums=(0,), static_argnames=("block",))
@@ -249,13 +285,17 @@ def pipebicgstab_fused_step(offsets: Tuple[int, ...], bands, x, r, w, t,
     n = x.shape[0]
     halo = max(abs(o) for o in offsets)
     if block is None:
+        rs = _rel_words(r.dtype, x.dtype)        # carried-chain storage
+        ro = _rel_words(bands.dtype, x.dtype)    # resident operator
         block = autotune.best_block(
             "pipebicgstab_spmv", n, x.dtype,
-            # tiled words/row: x,r,pa,a,r_hat reads + 7 writes
-            words_per_row=12.0,
+            # tiled words/row: x read/write at accum + r,pa,a,r_hat reads
+            # and 6 chain writes at the storage dtype
+            words_per_row=2.0 + 10.0 * rs,
             # once-per-sweep: w,t,c (+2h) + bands (+h) + ABFT column sums
-            resident_words=(4 + bands.shape[0]) * n,
-            min_block=2 * halo)
+            resident_words=(3 * rs + (bands.shape[0] + 1) * ro) * n,
+            min_block=2 * halo,
+            dtype_storage=_storage_key(r.dtype, x.dtype))
     block = max(min(block, n), 2 * halo)
     pad = (-n) % block
     if pad:
@@ -295,11 +335,14 @@ def pipebicgstab_halo_step(offsets: Tuple[int, ...], bands_ext, x, r, w, t,
             f"local shard of {n} rows is narrower than the 2*halo={2*halo} "
             "stencil reach; use fewer shards or a wider local block")
     if block is None:
+        rs = _rel_words(r.dtype, x.dtype)
+        ro = _rel_words(bands_ext.dtype, x.dtype)
         block = autotune.best_block(
             "pipebicgstab_halo", n, x.dtype,
-            words_per_row=12.0,
-            resident_words=(4 + bands_ext.shape[0]) * n,
-            min_block=2 * halo, n_shards=n_shards)
+            words_per_row=2.0 + 10.0 * rs,
+            resident_words=(3 * rs + (bands_ext.shape[0] + 1) * ro) * n,
+            min_block=2 * halo, n_shards=n_shards,
+            dtype_storage=_storage_key(r.dtype, x.dtype))
     block = max(min(block, n), 2 * halo)
     return _pb.pipebicgstab_halo(offsets, bands_ext, x, r, w, t, pa, a, c,
                                  r_hat, (w_left, w_right),

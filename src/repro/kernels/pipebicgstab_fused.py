@@ -31,6 +31,14 @@ kernel never sees it.  Per iteration the sweep moves
 vs ~(28 + 2 n_bands) n = 34n for the unfused classical chain (2 SpMVs +
 4 AXPY updates + 5 dots as separate ops).
 
+Mixed precision: like the PIPECG sweep, the carried chains (r, w, t,
+pa, a, c, r_hat) and the resident operator may arrive in a narrower
+storage dtype (PrecisionPolicy).  Loads up-cast to x's dtype, all
+arithmetic and the Gram partials run there, and only the chain stores
+down-cast — at bf16 the sweep is (2 + (14 + n_bands) * 0.5) n = 10.5n
+fp32-equivalent words (vs 19n), gated by the
+``pipebicgstab_fused_bf16`` row of BENCH_kernels.json.
+
 ``pipebicgstab_halo`` is the sharded rendering: the caller passes the 2h
 left/right rows of w/t/c received from its ring neighbors
 (``lax.ppermute`` inside shard_map) and an operator pre-extended by h
@@ -63,21 +71,25 @@ def _kernel(sc_ref, bands_ref, csum_ref, w_ref, t_ref, c_ref, x_ref,
     i = pl.program_id(0)
     base = i * block
     h = halo
+    # accumulation dtype: loads up-cast here, arithmetic + Gram partials
+    # run at it; only the chain stores down-cast to the storage dtype
+    acc = gram_o.dtype
     alpha = sc_ref[0]
     beta = sc_ref[1]
     omega = sc_ref[2]
 
     # resident operands are extended by 2h per side: index 0 == row -2h
-    w2 = pl.load(w_ref, (pl.dslice(base, block + 4 * h),))
-    t2 = pl.load(t_ref, (pl.dslice(base, block + 4 * h),))
-    c2 = pl.load(c_ref, (pl.dslice(base, block + 4 * h),))
+    w2 = pl.load(w_ref, (pl.dslice(base, block + 4 * h),)).astype(acc)
+    t2 = pl.load(t_ref, (pl.dslice(base, block + 4 * h),)).astype(acc)
+    c2 = pl.load(c_ref, (pl.dslice(base, block + 4 * h),)).astype(acc)
     z2 = t2 + beta * c2                      # z on rows [base-2h, ..+2h)
 
     # v = A z on rows [base-h, base+block+h); bands_ref index 0 == row -h
-    v1 = jnp.zeros((block + 2 * h,), xo.dtype)
+    v1 = jnp.zeros((block + 2 * h,), acc)
     for k, off in enumerate(offsets):        # static unroll over bands
         bk = pl.load(bands_ref,
-                     (pl.dslice(k, 1), pl.dslice(base, block + 2 * h)))[0]
+                     (pl.dslice(k, 1),
+                      pl.dslice(base, block + 2 * h)))[0].astype(acc)
         v1 = v1 + bk * jax.lax.dynamic_slice_in_dim(
             z2, h + off, block + 2 * h)
 
@@ -88,10 +100,11 @@ def _kernel(sc_ref, bands_ref, csum_ref, w_ref, t_ref, c_ref, x_ref,
     wn1 = y1 - omega * (t1 - alpha * v1)     # w' on +-h
 
     # t' = A w' on the tile rows
-    tn = jnp.zeros((block,), xo.dtype)
+    tn = jnp.zeros((block,), acc)
     for k, off in enumerate(offsets):
         bk = pl.load(bands_ref,
-                     (pl.dslice(k, 1), pl.dslice(base + h, block)))[0]
+                     (pl.dslice(k, 1),
+                      pl.dslice(base + h, block)))[0].astype(acc)
         tn = tn + bk * jax.lax.dynamic_slice_in_dim(wn1, h + off, block)
 
     # tile-level updates
@@ -100,24 +113,24 @@ def _kernel(sc_ref, bands_ref, csum_ref, w_ref, t_ref, c_ref, x_ref,
     w_t = jax.lax.dynamic_slice_in_dim(w2, 2 * h, block)
     y_t = jax.lax.dynamic_slice_in_dim(y1, h, block)
     wn_t = jax.lax.dynamic_slice_in_dim(wn1, h, block)
-    r_t = r_ref[:]
-    rh_t = rh_ref[:]
-    p_t = r_t + beta * pa_ref[:]
-    s_t = w_t + beta * a_ref[:]
+    r_t = r_ref[:].astype(acc)
+    rh_t = rh_ref[:].astype(acc)
+    p_t = r_t + beta * pa_ref[:].astype(acc)
+    s_t = w_t + beta * a_ref[:].astype(acc)
     q_t = r_t - alpha * s_t
-    xn = x_ref[:] + alpha * p_t + omega * q_t
+    xn = x_ref[:].astype(acc) + alpha * p_t + omega * q_t
     rn = q_t - omega * y_t
     pan = p_t - omega * s_t
     an = s_t - omega * z_t
     cn = z_t - omega * v_t
 
-    xo[:] = xn
-    ro[:] = rn
-    wo[:] = wn_t
-    to[:] = tn
-    pao[:] = pan
-    ao[:] = an
-    co[:] = cn
+    xo[:] = xn.astype(xo.dtype)
+    ro[:] = rn.astype(ro.dtype)
+    wo[:] = wn_t.astype(wo.dtype)
+    to[:] = tn.astype(to.dtype)
+    pao[:] = pan.astype(pao.dtype)
+    ao[:] = an.astype(ao.dtype)
+    co[:] = cn.astype(co.dtype)
 
     @pl.when(i == 0)
     def _init():
@@ -134,7 +147,7 @@ def _kernel(sc_ref, bands_ref, csum_ref, w_ref, t_ref, c_ref, x_ref,
     # residual 1^T(Aw') - c^T w' rides a 7th Gram row through the same
     # (single) psum; |.| is taken after the reduction (C rows are already
     # pad-masked, so tn/wn here are C[2]/C[1]).
-    c_tile = pl.load(csum_ref, (pl.dslice(base, block),))
+    c_tile = pl.load(csum_ref, (pl.dslice(base, block),)).astype(acc)
     gram_o[NBASIS, 0] += jnp.sum(C[2]) - jnp.sum(c_tile * C[1])
 
 
@@ -153,6 +166,8 @@ def _sweep(offsets, bands_e, csum, w_e, t_e, c_e, x, r, pa, a, rh,
     n = x.shape[0]
     assert n % block == 0, (n, block)
     assert block >= 2 * halo, (block, halo)
+    # x and the Gram payload stay at the solve (accumulation) dtype; the
+    # carried chains keep whatever storage dtype the caller passes
     dt = x.dtype
 
     kern = functools.partial(_kernel, offsets=tuple(offsets), halo=halo,
@@ -176,8 +191,14 @@ def _sweep(offsets, bands_e, csum, w_e, t_e, c_e, x, r, pa, a, rh,
             vec_spec,                        # r_hat
         ],
         out_specs=[vec_spec] * 7 + [resident((NGRAM, NBASIS))],
-        out_shape=[jax.ShapeDtypeStruct((n,), dt)] * 7
-        + [jax.ShapeDtypeStruct((NGRAM, NBASIS), dt)],
+        out_shape=[jax.ShapeDtypeStruct((n,), dt),
+                   jax.ShapeDtypeStruct((n,), r.dtype),
+                   jax.ShapeDtypeStruct((n,), w_e.dtype),
+                   jax.ShapeDtypeStruct((n,), t_e.dtype),
+                   jax.ShapeDtypeStruct((n,), pa.dtype),
+                   jax.ShapeDtypeStruct((n,), a.dtype),
+                   jax.ShapeDtypeStruct((n,), c_e.dtype),
+                   jax.ShapeDtypeStruct((NGRAM, NBASIS), dt)],
         interpret=interpret,
     )(scalars, bands_e, csum, w_e, t_e, c_e, x, r, pa, a, rh)
     return tuple(outs)
@@ -244,13 +265,16 @@ def pipebicgstab_halo(offsets: Sequence[int], bands_ext: jnp.ndarray,
     t_l, t_r = t_lr
     c_l, c_r = c_lr
     assert w_l.shape == (2 * halo,), (w_l.shape, halo)
-    zpad = jnp.zeros((pad,), x.dtype)
     # extension layout: [left halo | local rows | right halo | zero pad] —
     # the pad must come AFTER the right halo so row n-1's stencil still
-    # reads the neighbor rows (cf. pipecg_spmv_halo)
-    w_e = jnp.concatenate([w_l, w, w_r, zpad])
-    t_e = jnp.concatenate([t_l, t, t_r, zpad])
-    c_e = jnp.concatenate([c_l, c, c_r, zpad])
+    # reads the neighbor rows (cf. pipecg_spmv_halo); pads match each
+    # carried array's storage dtype so a bf16 policy stays bf16
+    ext = lambda l_, v, r_: jnp.concatenate(
+        [l_.astype(v.dtype), v, r_.astype(v.dtype),
+         jnp.zeros((pad,), v.dtype)])
+    w_e = ext(w_l, w, w_r)
+    t_e = ext(t_l, t, t_r)
+    c_e = ext(c_l, c, c_r)
     bands_p = jnp.pad(bands_ext, ((0, 0), (0, pad)))
     csum = jnp.pad(dia_column_checksum(offsets, bands_ext, halo=halo),
                    (0, pad))

@@ -46,6 +46,17 @@ for a constant-factor win the interpret-mode benchmarks cannot observe.
 The reduction partials feed BOTH inner-product modes: CG-style (ip='id':
 gamma=<r,u>, delta=<w,u>) and CR-style (ip='A': gamma=<r,w>, delta=<w,w>).
 
+Mixed precision (PrecisionPolicy, core/krylov/options.py): the carried
+r/u/p and the resident operator (bands, diag^-1, c = A^T 1) may arrive
+in a narrower STORAGE dtype (bf16, fp8-e4m3).  Every load is up-cast to
+the accumulation dtype (x's dtype — x and the reduction row red never
+down-cast), all in-kernel arithmetic runs at that precision, and only
+the r'/u'/p' stores down-cast back.  At bf16 storage the sweep above
+shrinks to  x(1) + r(.5) reads + x(1) + r/u/p(1.5) writes  +  resident
+u/p(1) + bands(1.5) + diag^-1(.5) + c(.5)  ==  7.5n fp32-equivalent
+words for the tridiagonal operator (vs 13n) — measured and gated by the
+``pipecg_spmv_fused_bf16`` row of BENCH_kernels.json.
+
 ``pipecg_spmv_halo`` is the sharded rendering of the same sweep: instead
 of zero halo extensions, the caller passes the 2h left/right rows of u/p
 received from its ring neighbors (``lax.ppermute`` inside shard_map) and
@@ -81,47 +92,56 @@ def _kernel(ab_ref, bands_ref, invd_ref, csum_ref, u_ref, p_ref, x_ref,
     i = pl.program_id(1)          # tile index
     base = i * block
     h = halo
+    # accumulation dtype: every load is up-cast here and all arithmetic,
+    # reduction partials and x ride at this precision; only the r/u/p
+    # stores down-cast back to the carried storage dtype (bf16/fp8 under
+    # a PrecisionPolicy, == acc on the default fp32/fp64 path)
+    acc = red_o.dtype
     alpha = ab_ref[0, 0]
     beta = ab_ref[0, 1]
 
     # stage 1: p' = u + beta p on rows [base-2h, base+block+2h)
     #   (u_ref / p_ref are zero-extended by 2h, so index 0 == row -2h)
-    u_2h = pl.load(u_ref, (pl.dslice(0, 1), pl.dslice(base, block + 4 * h)))[0]
-    p_2h = pl.load(p_ref, (pl.dslice(0, 1), pl.dslice(base, block + 4 * h)))[0]
+    u_2h = pl.load(u_ref, (pl.dslice(0, 1),
+                           pl.dslice(base, block + 4 * h)))[0].astype(acc)
+    p_2h = pl.load(p_ref, (pl.dslice(0, 1),
+                           pl.dslice(base, block + 4 * h)))[0].astype(acc)
     p2_2h = u_2h + beta * p_2h
 
     # stage 2: s' = A p' and q' = diag^-1 s' on rows [base-h, base+block+h)
     #   (bands_ref / invd_ref are zero-extended by h, index 0 == row -h)
-    s2_h = jnp.zeros((block + 2 * h,), xo.dtype)
+    s2_h = jnp.zeros((block + 2 * h,), acc)
     for k, off in enumerate(offsets):  # static unroll over bands
         bk = pl.load(bands_ref,
-                     (pl.dslice(k, 1), pl.dslice(base, block + 2 * h)))[0]
+                     (pl.dslice(k, 1),
+                      pl.dslice(base, block + 2 * h)))[0].astype(acc)
         s2_h = s2_h + bk * jax.lax.dynamic_slice_in_dim(
             p2_2h, h + off, block + 2 * h)
-    invd_h = pl.load(invd_ref, (pl.dslice(base, block + 2 * h),))
+    invd_h = pl.load(invd_ref, (pl.dslice(base, block + 2 * h),)).astype(acc)
     q2_h = invd_h * s2_h
 
     # stage 3: u' = u - alpha q' on rows [base-h, base+block+h)
     u2_h = jax.lax.dynamic_slice_in_dim(u_2h, h, block + 2 * h) - alpha * q2_h
 
     # stage 4: w' = A u' on the tile rows [base, base+block)
-    w2 = jnp.zeros((block,), xo.dtype)
+    w2 = jnp.zeros((block,), acc)
     for k, off in enumerate(offsets):
         bk = pl.load(bands_ref,
-                     (pl.dslice(k, 1), pl.dslice(base + h, block)))[0]
+                     (pl.dslice(k, 1),
+                      pl.dslice(base + h, block)))[0].astype(acc)
         w2 = w2 + bk * jax.lax.dynamic_slice_in_dim(u2_h, h + off, block)
 
     # tile-level updates
     p2 = jax.lax.dynamic_slice_in_dim(p2_2h, 2 * h, block)
     s2 = jax.lax.dynamic_slice_in_dim(s2_h, h, block)
     u2 = jax.lax.dynamic_slice_in_dim(u2_h, h, block)
-    x2 = x_ref[0, :] + alpha * p2
-    r2 = r_ref[0, :] - alpha * s2
+    x2 = x_ref[0, :].astype(acc) + alpha * p2
+    r2 = r_ref[0, :].astype(acc) - alpha * s2
 
-    xo[0, :] = x2
-    ro[0, :] = r2
-    uo[0, :] = u2
-    po[0, :] = p2
+    xo[0, :] = x2.astype(xo.dtype)
+    ro[0, :] = r2.astype(ro.dtype)
+    uo[0, :] = u2.astype(uo.dtype)
+    po[0, :] = p2.astype(po.dtype)
 
     @pl.when(i == 0)
     def _init():
@@ -142,7 +162,7 @@ def _kernel(ab_ref, bands_ref, invd_ref, csum_ref, u_ref, p_ref, x_ref,
     # residual 1^T(Au') - c^T u' with c = A^T 1 (kernels/checksum.py).
     # Rounding-level when the sweep executed faithfully, O(corruption)
     # otherwise; the consumer takes |.| after finishing the psum.
-    c_tile = pl.load(csum_ref, (pl.dslice(base, block),))
+    c_tile = pl.load(csum_ref, (pl.dslice(base, block),)).astype(acc)
     red_o[0, 5] += jnp.sum(w2) - jnp.sum(c_tile * u2)
 
 
@@ -168,6 +188,8 @@ def _sweep(offsets, bands_e, invd_e, csum, u_e, p_e, x, r, ab, *, halo: int,
     assert n % block == 0, (n, block)
     assert block >= 2 * halo, (block, halo)
     grid = (k_rhs, n // block)
+    # x and the reduction row stay at the solve (accumulation) dtype;
+    # r/u/p keep whatever storage dtype the caller carries them in
     dt = x.dtype
 
     kern = functools.partial(_kernel, offsets=tuple(offsets), halo=halo,
@@ -188,8 +210,11 @@ def _sweep(offsets, bands_e, invd_e, csum, u_e, p_e, x, r, ab, *, halo: int,
             vec_spec,                                           # r
         ],
         out_specs=[vec_spec] * 4 + [pl.BlockSpec((1, NRED), lambda j, i: (j, 0))],
-        out_shape=[jax.ShapeDtypeStruct((k_rhs, n), dt)] * 4
-        + [jax.ShapeDtypeStruct((k_rhs, NRED), dt)],
+        out_shape=[jax.ShapeDtypeStruct((k_rhs, n), dt),
+                   jax.ShapeDtypeStruct((k_rhs, n), r.dtype),
+                   jax.ShapeDtypeStruct((k_rhs, n), u_e.dtype),
+                   jax.ShapeDtypeStruct((k_rhs, n), p_e.dtype),
+                   jax.ShapeDtypeStruct((k_rhs, NRED), dt)],
         interpret=interpret,
     )(ab, bands_e, invd_e, csum, u_e, p_e, x, r)
     return tuple(outs)
@@ -259,12 +284,16 @@ def pipecg_spmv_halo(offsets: Sequence[int], bands_ext: jnp.ndarray,
     u_l, u_r = u_lr
     p_l, p_r = p_lr
     assert u_l.shape == (k_rhs, 2 * halo), (u_l.shape, k_rhs, halo)
-    zpad = jnp.zeros((k_rhs, pad), x.dtype)
     # extension layout: [left halo | local rows | right halo | zero pad] —
     # the pad must come AFTER the right halo so row n-1's stencil still
-    # reads the neighbor rows at n..n+2h-1
-    u_e = jnp.concatenate([u_l, u, u_r, zpad], axis=-1)
-    p_e = jnp.concatenate([p_l, p, p_r, zpad], axis=-1)
+    # reads the neighbor rows at n..n+2h-1 (pads match each carried
+    # array's storage dtype so a bf16 policy stays bf16 end to end)
+    zpad_u = jnp.zeros((k_rhs, pad), u.dtype)
+    zpad_p = jnp.zeros((k_rhs, pad), p.dtype)
+    u_e = jnp.concatenate([u_l.astype(u.dtype), u, u_r.astype(u.dtype),
+                           zpad_u], axis=-1)
+    p_e = jnp.concatenate([p_l.astype(p.dtype), p, p_r.astype(p.dtype),
+                           zpad_p], axis=-1)
     bands_p = jnp.pad(bands_ext, ((0, 0), (0, pad)))
     invd_p = jnp.pad(invd_ext, (0, pad))
     csum = jnp.pad(dia_column_checksum(offsets, bands_ext, halo=halo),
@@ -319,18 +348,22 @@ def _chain_kernel(th_ref, bands_ref, p_ref, r_ref, chain_o, gram_o, *,
     i = pl.program_id(0)
     base = i * block
     H = l * halo                  # extension reach consumed by the chain
+    # Gram partials fix the accumulation dtype; p/r/bands loads up-cast
+    # to it and only the chain store down-casts to the storage dtype
+    acc = gram_o.dtype
     th_inv = th_ref[0]            # 1/theta (runtime scalar)
 
     def links(ref, depth):
         # a_j[q] = (Ã^j v)[base - (H - j*h) + q]; refs are +H extended so
         # index 0 == global row -H and global row g sits at index g + H
-        a = pl.load(ref, (pl.dslice(base, block + 2 * H),))
+        a = pl.load(ref, (pl.dslice(base, block + 2 * H),)).astype(acc)
         out = [jax.lax.dynamic_slice_in_dim(a, H, block)]
         for j in range(1, depth + 1):
-            nxt = jnp.zeros((block + 2 * (H - j * halo),), a.dtype)
+            nxt = jnp.zeros((block + 2 * (H - j * halo),), acc)
             bk_rows = pl.dslice(base + j * halo, block + 2 * (H - j * halo))
             for k, off in enumerate(offsets):
-                bk = pl.load(bands_ref, (pl.dslice(k, 1), bk_rows))[0]
+                bk = pl.load(bands_ref,
+                             (pl.dslice(k, 1), bk_rows))[0].astype(acc)
                 nxt = nxt + bk * jax.lax.dynamic_slice_in_dim(
                     a, halo + off, block + 2 * (H - j * halo))
             a = nxt * th_inv
@@ -339,7 +372,7 @@ def _chain_kernel(th_ref, bands_ref, p_ref, r_ref, chain_o, gram_o, *,
 
     rows = links(p_ref, l) + links(r_ref, l - 1)   # 2l+1 tile rows
     C = jnp.stack(rows)                            # (2l+1, block)
-    chain_o[:, :] = C
+    chain_o[:, :] = C.astype(chain_o.dtype)
 
     @pl.when(i == 0)
     def _init():
@@ -353,13 +386,20 @@ def _chain_kernel(th_ref, bands_ref, p_ref, r_ref, chain_o, gram_o, *,
 
 def _chain_sweep(offsets, bands_e, p_e, r_e, theta, *, halo: int, block: int,
                  l: int, n: int, n_valid: int = None,
-                 interpret: bool = False):
-    """Shared pallas_call for the ghost-chain sweep over +l*halo operands."""
+                 interpret: bool = False, accum_dtype=None):
+    """Shared pallas_call for the ghost-chain sweep over +l*halo operands.
+
+    ``accum_dtype`` fixes the Gram (and in-kernel arithmetic) dtype when
+    the chain is carried in a narrower storage dtype; it defaults to the
+    chain dtype promoted to at least float32.
+    """
     assert n % block == 0, (n, block)
     H = l * halo
     assert block >= 2 * H, (block, H)
     m = 2 * l + 1
     dt = p_e.dtype
+    acc = (jnp.dtype(accum_dtype) if accum_dtype is not None
+           else jnp.promote_types(dt, jnp.float32))
     kern = functools.partial(_chain_kernel, offsets=tuple(offsets), halo=halo,
                              block=block, l=l, n_valid=n_valid)
     resident = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
@@ -375,15 +415,15 @@ def _chain_sweep(offsets, bands_e, p_e, r_e, theta, *, halo: int, block: int,
         out_specs=[pl.BlockSpec((m, block), lambda i: (0, i)),
                    resident((m, m))],
         out_shape=[jax.ShapeDtypeStruct((m, n), dt),
-                   jax.ShapeDtypeStruct((m, m), dt)],
+                   jax.ShapeDtypeStruct((m, m), acc)],
         interpret=interpret,
-    )(jnp.reshape(1.0 / jnp.asarray(theta, dt), (1,)), bands_e, p_e, r_e)
+    )(jnp.reshape(1.0 / jnp.asarray(theta, acc), (1,)), bands_e, p_e, r_e)
     return chain, gram
 
 
 def ghost_chain_fused(offsets: Sequence[int], bands: jnp.ndarray, p, r,
                       theta, l: int, *, block: int = DEFAULT_BLOCK,
-                      interpret: bool = False):
+                      interpret: bool = False, accum_dtype=None):
     """Depth-l ghost basis + Gram partials in one sweep (zero extensions).
 
     ``p`` / ``r`` are (n,); returns ``(chain, gram)`` with ``chain``
@@ -398,13 +438,15 @@ def ghost_chain_fused(offsets: Sequence[int], bands: jnp.ndarray, p, r,
     p_e = jnp.pad(p, (H, H))
     r_e = jnp.pad(r, (H, H))
     return _chain_sweep(offsets, bands_e, p_e, r_e, theta, halo=halo,
-                        block=block, l=l, n=n, interpret=interpret)
+                        block=block, l=l, n=n, interpret=interpret,
+                        accum_dtype=accum_dtype)
 
 
 def ghost_chain_halo(offsets: Sequence[int], bands_ext: jnp.ndarray, p, r,
                      p_lr: Tuple[jnp.ndarray, jnp.ndarray],
                      r_lr: Tuple[jnp.ndarray, jnp.ndarray], theta, l: int, *,
-                     block: int = DEFAULT_BLOCK, interpret: bool = False):
+                     block: int = DEFAULT_BLOCK, interpret: bool = False,
+                     accum_dtype=None):
     """Sharded ghost-chain sweep with neighbor-supplied l*halo extensions.
 
     ``p_lr`` / ``r_lr`` are ``(left, right)`` strips of width ``l*halo``
@@ -429,7 +471,7 @@ def ghost_chain_halo(offsets: Sequence[int], bands_ext: jnp.ndarray, p, r,
     chain, gram = _chain_sweep(offsets, bands_p, p_e, r_e, theta, halo=halo,
                                block=block, l=l, n=n + pad,
                                n_valid=(n if pad else None),
-                               interpret=interpret)
+                               interpret=interpret, accum_dtype=accum_dtype)
     if pad:
         chain = chain[:, :n]
     return chain, gram

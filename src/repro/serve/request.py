@@ -28,6 +28,14 @@ class SolveRequest:
     (seconds since serve start; the open-loop load generator stamps it,
     interactive submission leaves 0.0 = available immediately).
     ``deadline_s`` is RELATIVE to arrival; ``math.inf`` = best-effort.
+
+    ``options`` (a :class:`~repro.core.krylov.options.SolverOptions`)
+    is the typed way to set ``maxiter`` / ``tol`` / ``M``; it cannot be
+    mixed with the loose equivalents, and fields the serve path cannot
+    honor per-request (``engine`` — a server-level choice, noise hooks,
+    depth, rr, non-default precision) raise instead of being silently
+    dropped.  The unpacked values land on the plain fields, so
+    ``group_key`` / batching are options-agnostic.
     """
 
     rid: int
@@ -39,8 +47,42 @@ class SolveRequest:
     arrival_s: float = 0.0
     M: Optional[str] = None      # None (identity) | "jacobi"
     ip: str = "id"               # "id" -> PIPECG, "A" -> PIPECR
+    options: Optional[object] = None
 
     def __post_init__(self):
+        if self.options is not None:
+            from repro.core.krylov.options import SolverOptions
+            if not isinstance(self.options, SolverOptions):
+                raise TypeError("options= must be a SolverOptions; got "
+                                f"{type(self.options).__name__}")
+            loose = [name for name, value, default in
+                     (("tol", self.tol, 1e-8), ("maxiter", self.maxiter, 500),
+                      ("M", self.M, None)) if value != default]
+            if loose:
+                raise TypeError(
+                    "pass the solve configuration either as options= or "
+                    "as loose kwargs, not both (options= given alongside "
+                    f"{sorted(loose)})")
+            for field, bad, hint in (
+                    ("engine", self.options.engine is not None,
+                     "a server-level choice: SolverServer(options=...)"),
+                    ("noise", self.options.noise is not None,
+                     "serve injects faults via ServeChaos"),
+                    ("depth", self.options.depth != 1,
+                     "the batched step is depth-1"),
+                    ("rr/rr_tau",
+                     bool(self.options.rr or self.options.rr_tau),
+                     "serve re-glues via quarantine restarts"),
+                    ("precision", not self.options.precision.is_default,
+                     "the single-device batched path runs at the solve "
+                     "dtype")):
+                if bad:
+                    raise ValueError(
+                        f"SolveRequest cannot honor options.{field}: "
+                        f"{hint}")
+            self.tol = float(self.options.tol)
+            self.maxiter = int(self.options.maxiter)
+            self.M = self.options.M
         if self.M not in (None, "jacobi"):
             raise ValueError("serve supports M in {None, 'jacobi'} — "
                              "callable preconditioners cannot be batched")

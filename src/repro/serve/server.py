@@ -37,11 +37,52 @@ from repro.serve.request import ServeRecord, SolveRequest, content_key
 
 
 class SolverServer:
-    """Continuous-batching solve server over one device."""
+    """Continuous-batching solve server over one device.
+
+    ``options`` (a :class:`~repro.core.krylov.options.SolverOptions`)
+    is the typed way to pick the batch-step engine; it cannot be mixed
+    with loose ``engine=``.  Per-request knobs (``maxiter`` / ``tol`` /
+    ``M``) live on :class:`~repro.serve.request.SolveRequest` (which
+    takes its own ``options=``), and solver features the single-device
+    batched path cannot express — noise hooks (serve uses ``chaos=``),
+    depth-l pipelining, residual replacement, non-default precision
+    policies — are rejected loudly instead of silently dropped.
+    """
 
     def __init__(self, *, k_slots: int = 8, engine: str = "naive",
                  step_block: int = 8, chaos: Optional[ServeChaos] = None,
-                 max_restarts: int = 3, poll_s: float = 0.002):
+                 max_restarts: int = 3, poll_s: float = 0.002,
+                 options=None):
+        if options is not None:
+            from repro.core.krylov.options import SolverOptions
+            if not isinstance(options, SolverOptions):
+                raise TypeError("options= must be a SolverOptions; got "
+                                f"{type(options).__name__}")
+            if engine != "naive":
+                raise TypeError(
+                    "pass the engine either as options= or as loose "
+                    "engine=, not both")
+            for field, bad, hint in (
+                    ("noise", options.noise is not None,
+                     "serve injects faults via chaos="),
+                    ("depth", options.depth != 1,
+                     "the batched step is depth-1"),
+                    ("rr/rr_tau", bool(options.rr or options.rr_tau),
+                     "serve re-glues via quarantine restarts"),
+                    ("precision", not options.precision.is_default,
+                     "the single-device batched path runs at the solve "
+                     "dtype"),
+                    ("maxiter/tol/M",
+                     (options.maxiter, options.tol, options.M)
+                     != (100, 0.0, None),
+                     "these are per-request — pass options= on "
+                     "SolveRequest")):
+                if bad:
+                    raise ValueError(
+                        f"SolverServer cannot honor options.{field}: "
+                        f"{hint}")
+            engine = options.engine if options.engine is not None \
+                else "naive"
         self.k_slots = int(k_slots)
         self.engine = engine
         self.step_block = int(step_block)

@@ -1,0 +1,164 @@
+"""SolverOptions / PrecisionPolicy: the typed configuration contract.
+
+Pins the api_redesign invariants: options= resolves to the BIT-IDENTICAL
+code path as the legacy loose kwargs, mixing the two spellings raises,
+unknown keys raise with the valid-field list, the legacy spellings warn
+``DeprecationWarning`` exactly once per process, and every consumer
+(solver fronts, distributed_solve, resilient_distributed_solve, the
+serve layer) rejects option fields it cannot honor instead of silently
+dropping them.
+"""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.krylov import (PrecisionPolicy, SolverOptions, cg, pipecg,
+                               tridiagonal_laplacian)
+from repro.core.krylov.options import (check_supported,
+                                       reset_deprecation_warning,
+                                       resolve_options)
+from repro.serve.request import SolveRequest
+from repro.serve.server import SolverServer
+
+
+@pytest.fixture
+def Ab():
+    A = tridiagonal_laplacian(64)
+    return A, jnp.ones(64, A.bands.dtype)
+
+
+# -- resolution ---------------------------------------------------------------
+
+
+def test_options_equivalent_to_legacy_bit_identical(Ab):
+    A, b = Ab
+    legacy = pipecg(A, b, maxiter=40, tol=1e-12)
+    typed = pipecg(A, b, options=SolverOptions(maxiter=40, tol=1e-12))
+    assert np.array_equal(np.asarray(legacy.x), np.asarray(typed.x))
+    assert np.array_equal(np.asarray(legacy.res_history),
+                          np.asarray(typed.res_history))
+
+
+def test_options_equivalent_on_engine_path(Ab):
+    A, b = Ab
+    legacy = pipecg(A, b, maxiter=25, engine="fused")
+    typed = pipecg(A, b, options=SolverOptions(maxiter=25, engine="fused"))
+    assert np.array_equal(np.asarray(legacy.x), np.asarray(typed.x))
+
+
+def test_mixing_options_and_legacy_raises(Ab):
+    A, b = Ab
+    with pytest.raises(TypeError, match="cannot mix"):
+        pipecg(A, b, maxiter=5, options=SolverOptions())
+
+
+def test_unknown_key_raises_with_valid_fields():
+    with pytest.raises(TypeError) as exc:
+        SolverOptions.from_kwargs(maxiters=5)
+    assert "maxiters" in str(exc.value)
+    assert "maxiter" in str(exc.value)       # the valid-field list
+    assert "precision" in str(exc.value)
+
+
+def test_legacy_l_alias_maps_to_depth():
+    assert SolverOptions.from_kwargs(l=3).depth == 3
+    with pytest.raises(TypeError, match="not both"):
+        SolverOptions.from_kwargs(l=2, depth=2)
+
+
+def test_resolve_options_requires_solver_options_type():
+    with pytest.raises(TypeError, match="SolverOptions"):
+        resolve_options({"maxiter": 5})
+
+
+def test_deprecation_warns_exactly_once_per_process():
+    reset_deprecation_warning()
+    with pytest.warns(DeprecationWarning, match="options=SolverOptions"):
+        SolverOptions.from_kwargs(M=None, rr=2)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        SolverOptions.from_kwargs(engine="fused")
+    assert not [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    reset_deprecation_warning()
+
+
+# -- per-solver capability checks ---------------------------------------------
+
+
+def test_check_supported_rejects_unhonored_fields(Ab):
+    A, b = Ab
+    with pytest.raises(ValueError, match="does not honor options.depth"):
+        cg(A, b, options=SolverOptions(depth=2, maxiter=5))
+    with pytest.raises(ValueError, match="rr_tau"):
+        cg(A, b, options=SolverOptions(rr_tau=1.0, maxiter=5))
+    # defaults pass everywhere: one shared options object fits any solver
+    check_supported(SolverOptions(), "anything", supported=())
+
+
+def test_inline_pipecg_rejects_precision(Ab):
+    A, b = Ab
+    with pytest.raises(ValueError, match="engine path"):
+        pipecg(A, b, options=SolverOptions(maxiter=5, precision="bf16"))
+
+
+# -- PrecisionPolicy ----------------------------------------------------------
+
+
+def test_precision_policy_accum_is_pinned_fp32():
+    with pytest.raises(ValueError, match="accum"):
+        PrecisionPolicy(accum="bf16")
+
+
+def test_precision_policy_unknown_preset_lists_valid():
+    with pytest.raises(ValueError, match="bf16_int8wire"):
+        PrecisionPolicy.from_name("int4")
+
+
+def test_precision_policy_words_and_eps():
+    bf16 = PrecisionPolicy.from_name("bf16")
+    assert bf16.storage_words == 0.5 and bf16.wire_words == 1.0
+    assert bf16.storage_eps == 2.0 ** -8
+    wire = PrecisionPolicy.from_name("bf16_int8wire")
+    assert wire.wire_words == 0.25 and wire.error_feedback
+    assert PrecisionPolicy.from_name("bf16_int8wire_noef").error_feedback \
+        is False
+    assert PrecisionPolicy.from_name("bf16_int8allwire").wire_gram == "int8"
+    assert PrecisionPolicy().is_default
+    assert not wire.is_default
+
+
+def test_options_coerces_precision_preset_name():
+    opts = SolverOptions(precision="bf16")
+    assert isinstance(opts.precision, PrecisionPolicy)
+    assert opts.precision.storage == "bf16"
+
+
+# -- serve-layer forwarding ---------------------------------------------------
+
+
+def test_solve_request_options_unpack(Ab):
+    A, _ = Ab
+    b = np.ones(64)
+    req = SolveRequest(rid=0, A=A, b=b,
+                       options=SolverOptions(maxiter=200, tol=1e-8))
+    assert (req.maxiter, req.tol) == (200, 1e-8)
+    with pytest.raises(TypeError, match="not both"):
+        SolveRequest(rid=1, A=A, b=b, tol=1e-6, options=SolverOptions())
+    with pytest.raises(ValueError, match="server-level"):
+        SolveRequest(rid=2, A=A, b=b, options=SolverOptions(engine="fused"))
+    with pytest.raises(ValueError, match="precision"):
+        SolveRequest(rid=3, A=A, b=b,
+                     options=SolverOptions(precision="bf16"))
+
+
+def test_solver_server_options(Ab):
+    server = SolverServer(options=SolverOptions(engine="fused"))
+    assert server.engine == "fused"
+    with pytest.raises(TypeError, match="not both"):
+        SolverServer(engine="fused", options=SolverOptions(engine="fused"))
+    with pytest.raises(ValueError, match="per-request"):
+        SolverServer(options=SolverOptions(maxiter=50))
+    with pytest.raises(ValueError, match="chaos"):
+        SolverServer(options=SolverOptions(noise=object()))
