@@ -32,6 +32,14 @@ nb = number of bands; Jacobi-preconditioned DIA operator):
     + halo operands u,p (2h x 2 sides x 2)  =  8 h          (ppermute wire)
     + psum payload (5 dots + ABFT chk)      =  6 k  words   (all-reduce)
                                      total  -> 13 n_l + O(h) <= 14 n_l
+  BSR operator (blocked-ELL, deg blocks of bs x bs per block row —
+  core/krylov/operator.py BsrMatrix.words_per_iter): the band sweep
+  (nb+2) n becomes (2 + deg*bs + deg/bs) n — dense blocks at deg*bs
+  words/row plus the int32 ELL indices at deg/bs — so the fused
+  iteration is (10 + deg*bs + deg/bs) n and the sharded wire moves
+  block_halo*bs elements per side.  2-D process grids swap the 1-D 8h
+  wire for the surface term 4 * halo_elems(extents, widths)
+  (core/perfmodel/comm.py; 2 vectors at double reach).
 
 Emits BENCH_kernels.json next to the repo root so the perf trajectory is
 tracked PR over PR.  Autotuner choices are persisted to
@@ -66,8 +74,10 @@ _OVERLAP_SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax
     import jax.numpy as jnp, numpy as np
-    from repro.core.krylov import (tridiagonal_laplacian, pipecg,
-                                   pipebicgstab, distributed_solve)
+    from repro.core.krylov import (tridiagonal_laplacian, laplacian_2d,
+                                   dia_to_bsr, pipecg, pipebicgstab,
+                                   distributed_solve)
+    from repro.core.krylov.operators import DiaMatrix
     from repro.launch.hlo_analysis import split_phase_overlap
     n = 1024
     A = tridiagonal_laplacian(n, dtype=jnp.float32)
@@ -79,8 +89,28 @@ _OVERLAP_SCRIPT = textwrap.dedent("""
             distributed_solve, solver, A, mesh=mesh, engine="sharded_fused",
             maxiter=5)).lower(b).compile().as_text()
         out[name] = split_phase_overlap(txt)
+    # BSR operator on the same 1-D shard chain
+    Ab = dia_to_bsr(A, bs=4)
+    txt = jax.jit(functools.partial(
+        distributed_solve, pipecg, Ab, mesh=mesh, engine="sharded_fused",
+        maxiter=5)).lower(b).compile().as_text()
+    out["pipecg_bsr"] = split_phase_overlap(txt)
+    # DIA operator on a 2-D (2, 4) process grid (gy, gx halo pairs)
+    A0 = laplacian_2d(nx=32, ny=32)
+    A2 = DiaMatrix(offsets=A0.offsets,
+                   bands=A0.bands.at[A0.offsets.index(0)].add(1.0),
+                   grid_shape=A0.grid_shape)
+    b2 = jnp.ones((A2.n,), A2.bands.dtype)
+    mesh2 = jax.sharding.Mesh(np.asarray(jax.devices()).reshape(2, 4),
+                              ("gy", "gx"))
+    txt = jax.jit(functools.partial(
+        distributed_solve, pipecg, A2, mesh=mesh2, engine="sharded_fused",
+        maxiter=5)).lower(b2).compile().as_text()
+    out["pipecg_2d"] = split_phase_overlap(txt)
     print(json.dumps(out))
 """)
+
+_OVERLAP_KEYS = ("pipecg", "pipebicgstab", "pipecg_bsr", "pipecg_2d")
 
 
 def _hlo_overlap_flags():
@@ -98,11 +128,11 @@ def _hlo_overlap_flags():
                              timeout=600)
         if out.returncode != 0:
             fail["error"] = out.stderr[-400:]
-            return {"pipecg": fail, "pipebicgstab": fail}
+            return {k: fail for k in _OVERLAP_KEYS}
         return json.loads(out.stdout.strip().splitlines()[-1])
     except Exception as e:  # pragma: no cover
         fail["error"] = f"{type(e).__name__}: {e}"
-        return {"pipecg": fail, "pipebicgstab": fail}
+        return {k: fail for k in _OVERLAP_KEYS}
 
 
 def _words_naive_iter(n, nb):
@@ -126,6 +156,41 @@ def _words_sharded_iter(n_local, nb, halo, k=1):
     sweep + the ppermute'd halo operands + the psum payload."""
     return ((8 + (nb + 2) / k) * n_local   # kernel sweep (per RHS)
             + 8 * halo                     # u/p halos, 2h x 2 sides x 2 vecs
+            + 6)                           # partial row + ABFT chk (psum)
+
+
+def _words_bsr_spmv(n, bs, deg):
+    """BSR SpMV words/row: x read + y write + deg dense (bs, bs) blocks
+    (deg*bs words/row) + the int32 ELL indices (deg/bs words/row)."""
+    return (2.0 + deg * bs + deg / bs) * n
+
+
+def _words_bsr_fused_iter(n, bs, deg):
+    """Fused BSR PIPECG iteration — BsrMatrix.words_per_iter * n."""
+    return (10.0 + deg * bs + deg / bs) * n
+
+
+def _words_bsr_naive_iter(n, bs, deg):
+    """Separate-ops BSR PIPECG: the (39+nb) n DIA accounting with the
+    band sweep replaced by the blocked-ELL SpMV traffic."""
+    return (37.0 + 2.0 + deg * bs + deg / bs) * n
+
+
+def _words_bsr_sharded_iter(n_local, bs, deg, block_halo):
+    """Per-shard fused BSR sweep + u/p block halos + Gram psum: the wire
+    moves block_halo*bs elements per side at double reach x 2 vectors."""
+    return ((10.0 + deg * bs + deg / bs) * n_local
+            + 8 * block_halo * bs          # u/p halos, 2h x 2 sides x 2 vecs
+            + 6)                           # partial row + ABFT chk (psum)
+
+
+def _words_2d_sharded_iter(n_local, nb, halo_el):
+    """Per-shard 2-D-grid sweep + the surface-law halo wire + Gram psum:
+    ``halo_el = comm.halo_elems(extents, widths)`` already sums both
+    sides of every decomposed axis, so u/p at double reach cost
+    ``4 * halo_el`` wire words."""
+    return ((8 + (nb + 2)) * n_local       # kernel sweep (k=1)
+            + 4 * halo_el                  # u/p halos, 2 vecs x double reach
             + 6)                           # partial row + ABFT chk (psum)
 
 
@@ -453,6 +518,131 @@ def run(out_dir=None):
             max(v.get("all_reduce", 0) for v in bodies_b.values())
             if bodies_b else None),
         "hlo_bodies": bodies_b,
+    }
+
+    # BSR operator lane (PR 10): the blocked-ELL kernels behind the
+    # SparseOperator layer, on the lossless DIA->BSR rendering of the
+    # same tridiagonal test operator (block reach 1 -> deg=3 at bs=4)
+    from repro.core.krylov import dia_to_bsr
+    from repro.core.krylov.operators import DiaMatrix
+
+    bs_b = 4
+    Absr = dia_to_bsr(DiaMatrix(offsets=offsets, bands=bands_f), bs=bs_b)
+    deg = Absr.max_deg
+
+    # spmv_bsr: gather + batched block-GEMV kernel vs the jnp oracle
+    x_v = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    got = ops.spmv_bsr(Absr.indices, Absr.blocks, x_v)
+    err = float(jnp.max(jnp.abs(
+        got.astype(jnp.float64)
+        - ref.spmv_bsr_ref(Absr.indices, Absr.blocks,
+                           x_v).astype(jnp.float64))))
+    w_spmv_b = _words_bsr_spmv(n, bs_b, deg)
+    us = _modeled_us(w_spmv_b)
+    rows.append((f"kernel/spmv_bsr/bs{bs_b}", us,
+                 f"err={err:.1e} deg={deg} "
+                 f"words_per_row={w_spmv_b/n:.2f} "
+                 f"modeled_us_v5e={us:.2f}"))
+    record["kernels"]["spmv_bsr"] = {
+        "n": n, "bs": bs_b, "deg": deg, "err": err,
+        "words_per_row": w_spmv_b / n,
+        "modeled_us_v5e": us,
+    }
+
+    # pipecg_bsr_fused: whole preconditioned iteration on the BSR
+    # operator in one sweep (words/iter = BsrMatrix.words_per_iter —
+    # the measured value the README format table quotes)
+    xs_b = [jnp.asarray(rng.standard_normal((1, n)), jnp.float32)
+            for _ in range(4)]
+    al1b = jnp.asarray(rng.standard_normal(1), jnp.float32)
+    be1b = jnp.asarray(rng.standard_normal(1), jnp.float32)
+    got = ops.pipecg_bsr_fused_step(Absr.indices, Absr.blocks, inv_d,
+                                    *xs_b, al1b, be1b)
+    want = ref.pipecg_bsr_fused_ref(Absr.indices, Absr.blocks, inv_d,
+                                    *xs_b, al1b, be1b)
+    err = max(float(jnp.max(jnp.abs(a.astype(jnp.float64)
+                                    - b.astype(jnp.float64))))
+              for a, b in zip(got, want))
+    w_bsr = _words_bsr_fused_iter(n, bs_b, deg)
+    w_bsr_naive = _words_bsr_naive_iter(n, bs_b, deg)
+    assert abs(w_bsr / n - Absr.words_per_iter()) < 1e-12
+    us = _modeled_us(w_bsr)
+    rows.append((f"kernel/pipecg_bsr_fused/bs{bs_b}", us,
+                 f"err={err:.1e} words_per_iter={w_bsr/n:.2f}n "
+                 f"naive={w_bsr_naive/n:.2f}n "
+                 f"modeled_speedup={w_bsr_naive/w_bsr:.2f}x"))
+    record["kernels"]["pipecg_bsr_fused"] = {
+        "n": n, "bs": bs_b, "deg": deg, "err": err,
+        "dtype_storage": "fp32", "dtype_accum": "fp32",
+        "words_per_iter_over_n": w_bsr / n,
+        "naive_words_over_n": w_bsr_naive / n,
+        "modeled_speedup_vs_naive": w_bsr_naive / w_bsr,
+        "modeled_us_v5e": us,
+    }
+
+    # pipecg_bsr_sharded: the BSR operator through the sharded engine —
+    # per-shard traffic model + the HLO overlap/collective counts from
+    # the 8-device subprocess probe (correctness is pinned at 1e-10 by
+    # tests/test_engine_equivalence.py)
+    overlap_bsr = overlaps.get("pipecg_bsr", {})
+    bodies_bsr = overlap_bsr.get("bodies", {})
+    w_bsr_sh = _words_bsr_sharded_iter(n_local, bs_b, deg, Absr.block_halo)
+    us = _modeled_us(w_bsr_sh)
+    rows.append((f"kernel/pipecg_bsr_sharded/S{S}", us,
+                 f"words_per_iter_per_shard={w_bsr_sh/n_local:.2f}n "
+                 f"naive={_words_bsr_naive_iter(n_local, bs_b, deg)/n_local:.0f}n "
+                 f"hlo_overlap={bool(overlap_bsr.get('overlap_ok'))}"))
+    record["kernels"]["pipecg_bsr_sharded"] = {
+        "n_local": n_local, "n_shards": S, "bs": bs_b, "deg": deg,
+        "dtype_storage": "fp32", "dtype_accum": "fp32",
+        "words_per_iter_over_n": w_bsr_sh / n_local,
+        "naive_words_over_n": _words_bsr_naive_iter(n_local, bs_b,
+                                                    deg) / n_local,
+        "modeled_speedup_vs_naive": (
+            _words_bsr_naive_iter(n_local, bs_b, deg) / w_bsr_sh),
+        "modeled_us_v5e": us,
+        "hlo_split_phase_overlap": bool(overlap_bsr.get("overlap_ok")),
+        "hlo_all_reduce_per_body": (
+            max(v.get("all_reduce", 0) for v in bodies_bsr.values())
+            if bodies_bsr else None),
+        "hlo_bodies": bodies_bsr,
+    }
+
+    # pipecg_2d_sharded: the DIA operator on a (2, 4) process grid — the
+    # surface-to-volume wire model (core/perfmodel/comm.py) + the HLO
+    # counts of the 2-axis mesh body (8 ppermutes: 2 vectors x 2
+    # messages per decomposed axis x 2 axes)
+    from repro.core.perfmodel import comm
+
+    grid_2d = (2, 4)
+    pts_2d = (32, 32)
+    ext_2d = comm.local_extents(pts_2d, grid_2d)
+    halo_el = comm.halo_elems(ext_2d, (1, 1))
+    n_loc2 = ext_2d[0] * ext_2d[1]
+    nb_2d = 5  # 5-point Laplacian bands
+    overlap_2d = overlaps.get("pipecg_2d", {})
+    bodies_2d = overlap_2d.get("bodies", {})
+    w_2d = _words_2d_sharded_iter(n_loc2, nb_2d, halo_el)
+    w_2d_naive = _words_naive_iter(n_loc2, nb_2d)
+    us = _modeled_us(w_2d)
+    rows.append((f"kernel/pipecg_2d_sharded/{grid_2d[0]}x{grid_2d[1]}", us,
+                 f"words_per_iter_per_shard={w_2d/n_loc2:.2f}n "
+                 f"surface_to_volume={comm.surface_to_volume(ext_2d, (1, 1)):.3f} "
+                 f"hlo_overlap={bool(overlap_2d.get('overlap_ok'))}"))
+    record["kernels"]["pipecg_2d_sharded"] = {
+        "grid": list(grid_2d), "points": list(pts_2d),
+        "n_local": n_loc2, "halo_elems": halo_el,
+        "surface_to_volume": comm.surface_to_volume(ext_2d, (1, 1)),
+        "dtype_storage": "fp32", "dtype_accum": "fp32",
+        "words_per_iter_over_n": w_2d / n_loc2,
+        "naive_words_over_n": w_2d_naive / n_loc2,
+        "modeled_speedup_vs_naive": w_2d_naive / w_2d,
+        "modeled_us_v5e": us,
+        "hlo_split_phase_overlap": bool(overlap_2d.get("overlap_ok")),
+        "hlo_all_reduce_per_body": (
+            max(v.get("all_reduce", 0) for v in bodies_2d.values())
+            if bodies_2d else None),
+        "hlo_bodies": bodies_2d,
     }
 
     # ghost_chain (depth-l blocks): chain + Gram vs the jnp oracle, and

@@ -4,10 +4,13 @@ from repro.core.krylov.bicgstab import bicgstab, pipebicgstab  # noqa: F401
 from repro.core.krylov.cg import cg, cr, pipecg, pipecg_multi, pipecr  # noqa: F401
 from repro.core.krylov.distributed import (  # noqa: F401
     distributed_solve,
+    halo_exchange_2d,
     halo_exchange_cols,
     sharded_pipebicgstab_solve,
+    sharded_pipecg_bsr_solve,
     sharded_pipecg_depth_solve,
     sharded_pipecg_solve,
+    sharded_pipecg_solve_2d,
 )
 from repro.core.krylov.engine import (  # noqa: F401
     ENGINES,
@@ -26,10 +29,18 @@ from repro.core.krylov.options import (  # noqa: F401
     as_policy,
     resolve_options,
 )
+from repro.core.krylov.operator import (  # noqa: F401
+    BsrMatrix,
+    HaloSpec,
+    SparseOperator,
+    as_operator,
+    dia_to_bsr,
+)
 from repro.core.krylov.operators import (  # noqa: F401
     DiaMatrix,
     MatFreeOperator,
     convection_diffusion,
+    dia_gather_matvec,
     glen_law_band,
     jacobi_preconditioner,
     laplacian_2d,

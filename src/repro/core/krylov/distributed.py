@@ -65,7 +65,13 @@ def _noise_tick(noise: NoiseHook, axis_name, dtype):
     """
     from jax.experimental import io_callback
 
-    idx = jax.lax.axis_index(axis_name)
+    names = axis_name if isinstance(axis_name, tuple) else (axis_name,)
+    # linearized (row-major) shard id over a tuple of mesh axes, so a 2D
+    # process grid addresses the same per-shard RNG substreams / fault
+    # schedule a flattened 1D mesh of equal size would
+    idx = jnp.zeros((), jnp.int32)
+    for nm in names:
+        idx = idx * _axis_size(nm) + jax.lax.axis_index(nm)
     tick = io_callback(noise, jax.ShapeDtypeStruct((), jnp.float32), idx,
                        ordered=False)
     return tick.astype(dtype)
@@ -489,6 +495,396 @@ def sharded_pipecg_solve(offsets: Tuple[int, ...], bands_local, b_local, *,
 
 
 # ---------------------------------------------------------------------------
+# 2D process grid: N/S/E/W halo pairs + ONE Gram psum over BOTH mesh axes
+# ---------------------------------------------------------------------------
+
+def _exchange_along(v: jnp.ndarray, w: int, axis_name: str, axis: int):
+    """(low, high) halos of width ``w`` along array axis ``axis``.
+
+    The generic-axis sibling of :func:`halo_exchange_cols`: strips travel
+    over the ONE mesh axis ``axis_name`` (a chain, not a ring), and
+    chain-boundary devices receive zeros — matching the zero band
+    coefficients a DIA operator carries at the matrix boundary.
+    """
+    n_dev = _axis_size(axis_name)
+    if n_dev == 1 or w == 0:
+        shp = list(v.shape)
+        shp[axis] = w
+        z = jnp.zeros(shp, v.dtype)
+        return z, z
+    fwd = [(i, i + 1) for i in range(n_dev - 1)]   # i -> i+1
+    bwd = [(i + 1, i) for i in range(n_dev - 1)]   # i -> i-1
+    ext = v.shape[axis]
+    low = jax.lax.ppermute(jax.lax.slice_in_dim(v, ext - w, ext, axis=axis),
+                           axis_name, fwd)
+    high = jax.lax.ppermute(jax.lax.slice_in_dim(v, 0, w, axis=axis),
+                            axis_name, bwd)
+    return low, high
+
+
+def halo_exchange_2d(v: jnp.ndarray, wy: int, wx: int,
+                     axis_y: str, axis_x: str) -> jnp.ndarray:
+    """Two-phase corner-carrying halo exchange on a 2D process grid.
+
+    ``v`` is ``(..., ly, lx)`` — this shard's tile of a ``(ny, nx)`` grid
+    field, sharded ``axis_y`` over rows and ``axis_x`` over columns.
+    Phase 1 exchanges N/S row strips of width ``wy``; phase 2 exchanges
+    W/E column strips of width ``wx`` of the *row-extended* array, so the
+    corner blocks ride through the edge neighbors and no diagonal
+    ppermute is needed — 4 messages per field (``HaloSpec.neighbors``),
+    the count perfmodel/comm.py charges.  Returns the
+    ``(..., ly + 2*wy, lx + 2*wx)`` extension with zeros past the chain
+    boundary.
+    """
+    n, s = _exchange_along(v, wy, axis_y, axis=-2)
+    v = jnp.concatenate([n, v, s], axis=-2)
+    w_, e = _exchange_along(v, wx, axis_x, axis=-1)
+    return jnp.concatenate([w_, v, e], axis=-1)
+
+
+def _apply2d(doffs, bands_e: jnp.ndarray, v_e: jnp.ndarray,
+             hy: int, hx: int) -> jnp.ndarray:
+    """Stencil apply ``y = A v`` on a (possibly halo-extended) 2D tile.
+
+    ``doffs`` are the per-band grid displacements ``(dy, dx)``
+    (``DiaMatrix.grid_offsets``); ``bands_e`` is ``(nb, oy, ox)`` — the
+    band coefficients at the OUTPUT rows — and ``v_e`` is
+    ``(..., oy + 2*hy, ox + 2*hx)``, the input extended ``(hy, hx)``
+    beyond the output extent.  Every slice is static, so the unrolled
+    band loop lowers to ``nb`` fused multiply-adds:
+    ``y[i, j] = sum_k bands_e[k, i, j] * v_e[i + hy + dy_k, j + hx + dx_k]``.
+    """
+    oy, ox = bands_e.shape[-2], bands_e.shape[-1]
+    y = jnp.zeros(v_e.shape[:-2] + (oy, ox), v_e.dtype)
+    for k, (dy, dx) in enumerate(doffs):
+        y = y + bands_e[k] * v_e[..., hy + dy:hy + dy + oy,
+                                 hx + dx:hx + dx + ox]
+    return y
+
+
+def _dia2d_column_checksum(doffs, bands_e: jnp.ndarray,
+                           hy: int, hx: int) -> jnp.ndarray:
+    """This shard's ``(ly, lx)`` slice of the GLOBAL column sums A^T 1.
+
+    Grid rendering of :func:`~repro.kernels.checksum.dia_column_checksum`:
+    column ``(i, j)`` is written by row ``(i - dy, j - dx)`` of band
+    ``k``, and every contributing row lives inside the ``(hy, hx)``
+    halo-extended local bands, so no extra communication is needed.
+    """
+    ly, lx = bands_e.shape[-2] - 2 * hy, bands_e.shape[-1] - 2 * hx
+    c = jnp.zeros((ly, lx), bands_e.dtype)
+    for k, (dy, dx) in enumerate(doffs):
+        c = c + bands_e[k, hy - dy:hy - dy + ly, hx - dx:hx - dx + lx]
+    return c
+
+
+def _crop2d(v: jnp.ndarray, cy: int, cx: int) -> jnp.ndarray:
+    """Drop a ``(cy, cx)``-wide frame from the trailing two axes."""
+    return v[..., cy:v.shape[-2] - cy, cx:v.shape[-1] - cx]
+
+
+def sharded_pipecg_solve_2d(doffs, bands_local, b_local, *,
+                            axis_names: Tuple[str, str], ip: str = "id",
+                            M=None, maxiter: int = 100, tol: float = 0.0,
+                            noise: Optional[NoiseHook] = None
+                            ) -> SolveResult:
+    """Per-shard PIPECG body on a 2D ``(py, px)`` process grid.
+
+    Runs INSIDE shard_map over BOTH mesh axes.  The 1D body's single
+    W/E halo pair becomes the ``HaloSpec`` neighbor set N/S/W/E — the
+    two-phase corner-carrying exchange of :func:`halo_exchange_2d` —
+    while the split-phase reduction structure is IDENTICAL: the partial
+    ``(6,)`` reduction row of iteration i (five Krylov partials + the
+    ABFT checksum partial) is carried unreduced across the scan
+    boundary, and iteration i+1 issues its u/p halo exchanges first
+    (they depend only on the carried vectors), then finishes the
+    reduction with ONE ``psum`` over the axis-name TUPLE — a single
+    all-reduce spanning the whole grid, so
+    ``launch/hlo_analysis.py::split_phase_overlap`` certifies the same
+    one-all-reduce-per-body window as the 1D engine.
+
+    The per-iteration sweep uses the recompute trick instead of a
+    second exchange: u/p travel once at width ``(2*hy, 2*hx)``, then the
+    derived quantities contract the extent ``(2h) -> (h) -> 0`` as
+    p' = u + beta p, s' = A p', u' = u - alpha diag^-1 s', w' = A u'.
+    Single-RHS (``b_local`` is this shard's ``(ly, lx)`` tile); ``M`` is
+    None or ``"jacobi"``.  The residual history is rolled into the naive
+    alignment exactly like :func:`sharded_pipecg_solve`, and the psum'd
+    checksum column is returned as ``detect_history``.
+    """
+    if ip != "id":
+        raise ValueError(
+            "the 2D-grid body implements the pipecg ('id') inner-product "
+            f"pairing only; got ip={ip!r}")
+    ay, ax = axis_names
+    axes = (ay, ax)
+    hy = max(abs(dy) for dy, _ in doffs)
+    hx = max(abs(dx) for _, dx in doffs)
+    if b_local.ndim != 2:
+        raise ValueError(
+            "sharded_pipecg_solve_2d is single-RHS: b_local must be this "
+            f"shard's (ly, lx) tile, got shape {b_local.shape}")
+    ly, lx = b_local.shape
+    dt = b_local.dtype
+    if ly < 2 * hy or lx < 2 * hx:
+        raise ValueError(
+            f"2D-grid engine: local tile ({ly}, {lx}) is narrower than "
+            f"the (2*hy, 2*hx) = ({2 * hy}, {2 * hx}) stencil reach")
+    diag_k = doffs.index((0, 0))
+    if M is None:
+        invd = jnp.ones((ly, lx), dt)
+    elif M == "jacobi":
+        invd = (1.0 / bands_local[diag_k]).astype(dt)
+    else:
+        raise ValueError(
+            "2D-grid engine preconditions in-kernel: M must be None or "
+            f"'jacobi', got {M!r}")
+
+    # loop-invariant operator extension: one 4-message exchange per solve
+    bands_h = halo_exchange_2d(bands_local, hy, hx, ay, ax)
+    invd_h = halo_exchange_2d(invd, hy, hx, ay, ax)
+    csum_loc = _dia2d_column_checksum(doffs, bands_h, hy, hx).astype(dt)
+
+    def mv(v):  # extent-0 matvec — init only; the scan fuses its own
+        v_e = halo_exchange_2d(v, hy, hx, ay, ax)
+        return _apply2d(doffs, bands_local, v_e, hy, hx)
+
+    def partials(r, u, w):
+        return jnp.stack([jnp.sum(r * u), jnp.sum(w * u), jnp.sum(r * r),
+                          jnp.sum(r * w), jnp.sum(w * w),
+                          jnp.sum(w) - jnp.sum(csum_loc * u)])
+
+    x = jnp.zeros_like(b_local)
+    r = b_local
+    u = invd * r
+    p = jnp.zeros_like(b_local)
+    w = mv(u)
+    red0 = partials(r, u, w)
+    one = jnp.ones((), dt)
+    state0 = dict(x=x, r=r, u=u, p=p, red=red0, gamma_prev=one,
+                  alpha_prev=one, first=jnp.asarray(True),
+                  done=jnp.asarray(False), iters=jnp.zeros((), jnp.int32))
+    bb = jax.lax.psum(jnp.sum(b_local * b_local), axes)
+    tol2 = jnp.asarray(tol, dt) ** 2 * bb
+
+    def step(st, _):
+        # ---- halo exchange first: depends only on the carried vectors,
+        # never on the pending reduction ----
+        u_e = halo_exchange_2d(st["u"], 2 * hy, 2 * hx, ay, ax)
+        p_e = halo_exchange_2d(st["p"], 2 * hy, 2 * hx, ay, ax)
+        # ---- split-phase: finish the reduction initiated LAST iteration
+        # with one all-reduce over the whole (py, px) grid ----
+        red = jax.lax.psum(st["red"], axes)
+        gamma, delta, rr, chk = red[0], red[1], red[2], red[5]
+        beta = jnp.where(st["first"], jnp.zeros_like(gamma),
+                         gamma / st["gamma_prev"])
+        alpha = jnp.where(st["first"], gamma / delta,
+                          gamma / (delta - beta * gamma / st["alpha_prev"]))
+        # recompute trick: extent (2hy, 2hx) -> (hy, hx) -> 0
+        pp_e = u_e + beta * p_e
+        s_e = _apply2d(doffs, bands_h, pp_e, hy, hx)
+        u2_e = _crop2d(u_e, hy, hx) - alpha * invd_h * s_e
+        w2 = _apply2d(doffs, bands_local, u2_e, hy, hx)
+        pp = _crop2d(pp_e, 2 * hy, 2 * hx)
+        s = _crop2d(s_e, hy, hx)
+        u2 = _crop2d(u2_e, hy, hx)
+        x2 = st["x"] + alpha * pp
+        r2 = st["r"] - alpha * s
+        red_new = partials(r2, u2, w2)
+        if noise is not None:
+            red_new = red_new + _noise_tick(noise, axes, dt)
+        done = st["done"] | (rr <= tol2)
+        frz = lambda nv, ov: jnp.where(st["done"], ov, nv)
+        new = dict(x=frz(x2, st["x"]), r=frz(r2, st["r"]),
+                   u=frz(u2, st["u"]), p=frz(pp, st["p"]),
+                   red=frz(red_new, st["red"]),
+                   gamma_prev=frz(gamma, st["gamma_prev"]),
+                   alpha_prev=frz(alpha, st["alpha_prev"]),
+                   first=jnp.asarray(False), done=done,
+                   iters=st["iters"] + (~done).astype(jnp.int32))
+        return new, (jnp.sqrt(jnp.maximum(rr, 0.0)), chk)
+
+    st, (hist, chk_hist) = jax.lax.scan(step, state0, None, length=maxiter)
+    red_fin = jax.lax.psum(st["red"], axes)
+    res = jnp.sqrt(jnp.maximum(red_fin[2], 0.0))
+    hist = jnp.concatenate([hist[1:], res[None]])
+    chk_hist = jnp.concatenate([chk_hist[1:], red_fin[5][None]])
+    return SolveResult(x=st["x"], iters=st["iters"], res_norm=res,
+                       res_history=hist, detect_history=chk_hist)
+
+
+# ---------------------------------------------------------------------------
+# Sharded BSR: block-DIA halo body, same split-phase psum carry
+# ---------------------------------------------------------------------------
+
+def _bsr_apply(boffs, bblocks_e: jnp.ndarray, v_e: jnp.ndarray,
+               hb: int) -> jnp.ndarray:
+    """Block-banded apply ``y = A v`` on a halo-extended block-row range.
+
+    ``bblocks_e`` is ``(n_boff, obr, bs, bs)`` — the per-block-row dense
+    blocks at the OUTPUT block rows (``BsrMatrix.block_bands``) — and
+    ``v_e`` is ``(..., obr + 2*hb, bs)``, the input extended ``hb`` block
+    rows beyond the output extent:
+    ``y[i] = sum_m bblocks_e[m, i] @ v_e[i + hb + boffs[m]]``.
+    """
+    obr = bblocks_e.shape[1]
+    y = jnp.zeros(v_e.shape[:-2] + (obr, v_e.shape[-1]), v_e.dtype)
+    for m, off in enumerate(boffs):
+        sl = jax.lax.slice_in_dim(v_e, hb + off, hb + off + obr, axis=-2)
+        y = y + jnp.einsum("rij,...rj->...ri", bblocks_e[m], sl)
+    return y
+
+
+def _bsr_column_checksum_local(boffs, bblocks_e: jnp.ndarray,
+                               hb: int) -> jnp.ndarray:
+    """This shard's ``(lbr, bs)`` slice of the GLOBAL column sums A^T 1.
+
+    Block column ``j`` is written by block row ``j - boffs[m]``, whose
+    blocks live inside the ``hb``-extended local block bands — the
+    block-DIA rendering of ``kernels/checksum.py``.
+    """
+    lbr = bblocks_e.shape[1] - 2 * hb
+    colsums = jnp.sum(bblocks_e, axis=-2)        # (n_boff, lbr + 2hb, bs)
+    c = jnp.zeros((lbr, bblocks_e.shape[-1]), bblocks_e.dtype)
+    for m, off in enumerate(boffs):
+        c = c + jax.lax.slice_in_dim(colsums[m], hb - off, hb - off + lbr,
+                                     axis=0)
+    return c
+
+
+def sharded_pipecg_bsr_solve(boffs, bblocks_local, b_local, *,
+                             axis_name: str, ip: str = "id", M=None,
+                             maxiter: int = 100, tol: float = 0.0,
+                             noise: Optional[NoiseHook] = None
+                             ) -> SolveResult:
+    """Per-shard PIPECG body for a BSR operator, sharded on block rows.
+
+    Runs INSIDE shard_map.  The driver converts the blocked-ELL layout to
+    block-DIA form (``BsrMatrix.block_bands``: static block offsets +
+    ``(n_boff, nbr, bs, bs)`` dense blocks) so the body can mirror the
+    1D DIA engine in BLOCK coordinates: the halo is ``hb = max|boffs|``
+    block rows, u/p travel once per iteration at width ``2*hb`` block
+    rows (:func:`_exchange_along` over the vectors' block axis), and the
+    recompute trick contracts the extent ``2hb -> hb -> 0`` through
+    p' = u + beta p, s' = A p', u' = u - alpha diag^-1 s', w' = A u'.
+    The split-phase structure is IDENTICAL to
+    :func:`sharded_pipecg_solve`: iteration i's partial ``(6,)``
+    reduction row (five Krylov partials + the ABFT checksum partial
+    against the locally sliced global column sums) is carried unreduced
+    across the scan boundary and finished by iteration i+1's single
+    ``psum`` AFTER the halo ppermutes are issued.
+
+    Single-RHS (``b_local`` is this shard's ``(lbr, bs)`` block rows);
+    ``M`` is None or ``"jacobi"``.  History alignment and
+    ``detect_history`` match the 1D DIA body.
+    """
+    if ip != "id":
+        raise ValueError(
+            "the sharded BSR body implements the pipecg ('id') "
+            f"inner-product pairing only; got ip={ip!r}")
+    hb = max(abs(int(o)) for o in boffs)
+    if b_local.ndim != 2:
+        raise ValueError(
+            "sharded_pipecg_bsr_solve is single-RHS: b_local must be this "
+            f"shard's (lbr, bs) block rows, got shape {b_local.shape}")
+    lbr, bs = b_local.shape
+    dt = b_local.dtype
+    if lbr < 2 * hb:
+        raise ValueError(
+            f"sharded BSR engine: local shard of {lbr} block rows is "
+            f"narrower than the 2*hb={2 * hb} block-stencil reach")
+    if M is None:
+        invd = jnp.ones((lbr, bs), dt)
+    elif M == "jacobi":
+        diag_m = boffs.index(0)
+        d = jnp.einsum("rii->ri", bblocks_local[diag_m])
+        invd = (1.0 / d).astype(dt)
+    else:
+        raise ValueError(
+            "sharded BSR engine preconditions in-kernel: M must be None "
+            f"or 'jacobi', got {M!r}")
+
+    # loop-invariant operator extension: one exchange per solve
+    def ext_rows(v, w):
+        lo, hi = _exchange_along(v, w, axis_name, axis=-3 if v.ndim == 4
+                                 else -2)
+        ax = -3 if v.ndim == 4 else -2
+        return jnp.concatenate([lo, v, hi], axis=ax)
+
+    bblocks_h = ext_rows(bblocks_local, hb)      # (n_boff, lbr+2hb, bs, bs)
+    invd_h = ext_rows(invd, hb)
+    csum_loc = _bsr_column_checksum_local(boffs, bblocks_h, hb).astype(dt)
+
+    def ext_vec(v, w):
+        lo, hi = _exchange_along(v, w, axis_name, axis=-2)
+        return jnp.concatenate([lo, v, hi], axis=-2)
+
+    def mv(v):  # extent-0 matvec — init only
+        return _bsr_apply(boffs, bblocks_local, ext_vec(v, hb), hb)
+
+    def partials(r, u, w):
+        return jnp.stack([jnp.sum(r * u), jnp.sum(w * u), jnp.sum(r * r),
+                          jnp.sum(r * w), jnp.sum(w * w),
+                          jnp.sum(w) - jnp.sum(csum_loc * u)])
+
+    crop = lambda v, c: v[..., c:v.shape[-2] - c, :]
+    x = jnp.zeros_like(b_local)
+    r = b_local
+    u = invd * r
+    p = jnp.zeros_like(b_local)
+    w = mv(u)
+    red0 = partials(r, u, w)
+    one = jnp.ones((), dt)
+    state0 = dict(x=x, r=r, u=u, p=p, red=red0, gamma_prev=one,
+                  alpha_prev=one, first=jnp.asarray(True),
+                  done=jnp.asarray(False), iters=jnp.zeros((), jnp.int32))
+    bb = jax.lax.psum(jnp.sum(b_local * b_local), axis_name)
+    tol2 = jnp.asarray(tol, dt) ** 2 * bb
+
+    def step(st, _):
+        # halo exchange first (depends only on carried vectors), then the
+        # split-phase psum finishing LAST iteration's reduction
+        u_e = ext_vec(st["u"], 2 * hb)
+        p_e = ext_vec(st["p"], 2 * hb)
+        red = jax.lax.psum(st["red"], axis_name)
+        gamma, delta, rr, chk = red[0], red[1], red[2], red[5]
+        beta = jnp.where(st["first"], jnp.zeros_like(gamma),
+                         gamma / st["gamma_prev"])
+        alpha = jnp.where(st["first"], gamma / delta,
+                          gamma / (delta - beta * gamma / st["alpha_prev"]))
+        pp_e = u_e + beta * p_e                       # extent 2hb
+        s_e = _bsr_apply(boffs, bblocks_h, pp_e, hb)  # extent hb
+        u2_e = crop(u_e, hb) - alpha * invd_h * s_e   # extent hb
+        w2 = _bsr_apply(boffs, bblocks_local, u2_e, hb)
+        pp = crop(pp_e, 2 * hb)
+        s = crop(s_e, hb)
+        u2 = crop(u2_e, hb)
+        x2 = st["x"] + alpha * pp
+        r2 = st["r"] - alpha * s
+        red_new = partials(r2, u2, w2)
+        if noise is not None:
+            red_new = red_new + _noise_tick(noise, axis_name, dt)
+        done = st["done"] | (rr <= tol2)
+        frz = lambda nv, ov: jnp.where(st["done"], ov, nv)
+        new = dict(x=frz(x2, st["x"]), r=frz(r2, st["r"]),
+                   u=frz(u2, st["u"]), p=frz(pp, st["p"]),
+                   red=frz(red_new, st["red"]),
+                   gamma_prev=frz(gamma, st["gamma_prev"]),
+                   alpha_prev=frz(alpha, st["alpha_prev"]),
+                   first=jnp.asarray(False), done=done,
+                   iters=st["iters"] + (~done).astype(jnp.int32))
+        return new, (jnp.sqrt(jnp.maximum(rr, 0.0)), chk)
+
+    st, (hist, chk_hist) = jax.lax.scan(step, state0, None, length=maxiter)
+    red_fin = jax.lax.psum(st["red"], axis_name)
+    res = jnp.sqrt(jnp.maximum(red_fin[2], 0.0))
+    hist = jnp.concatenate([hist[1:], res[None]])
+    chk_hist = jnp.concatenate([chk_hist[1:], red_fin[5][None]])
+    return SolveResult(x=st["x"], iters=st["iters"], res_norm=res,
+                       res_history=hist, detect_history=chk_hist)
+
+
+# ---------------------------------------------------------------------------
 # Sharded pipelined BiCGStab: 3 halo pairs + ONE (7, 6) Gram psum per body
 # ---------------------------------------------------------------------------
 
@@ -884,24 +1280,165 @@ _SHARDED_IP = {"pipecg": "id", "pipecg_multi": "id", "pipecr": "A",
 _SHARDED_GRAM = ("pipebicgstab",)
 
 
-def _distributed_engine_solve(solver, A: DiaMatrix, b, mesh: Mesh, eng, *,
-                              noise=None, block=None, **solver_kw
-                              ) -> SolveResult:
-    """shard_map entry for the ShardedFusedEngine path."""
+def _pop_basic_kw(solver_kw, path: str):
+    """Extract (M, maxiter, tol) and reject options the given sharded
+    path does not implement (depth, mixed precision, warm start, ...)."""
+    M = solver_kw.pop("M", None)
+    maxiter = solver_kw.pop("maxiter", 100)
+    tol = solver_kw.pop("tol", 0.0)
+    depth = int(solver_kw.pop("l", 1))
+    precision = _resolve_precision(solver_kw.pop("precision", None))
+    if depth > 1:
+        raise ValueError(
+            f"the {path} sharded body is depth-1 only (got l={depth}); "
+            "depth-l ghost blocks are implemented for the 1D DIA path")
+    if not precision.is_default:
+        raise ValueError(
+            f"the {path} sharded body runs at the solve dtype only; "
+            "mixed-precision policies are implemented for the 1D DIA path")
+    if solver_kw:
+        raise TypeError(
+            f"unsupported kwargs for the {path} sharded path: "
+            f"{sorted(solver_kw)}")
+    return M, maxiter, tol
+
+
+def _engine_solve_2d(name, ip, A: DiaMatrix, b, mesh: Mesh, eng, *,
+                     noise=None, block=None, **solver_kw) -> SolveResult:
+    """Drive :func:`sharded_pipecg_solve_2d` over a 2-axis process grid.
+
+    The operator's ``halo_spec`` (N/S/W/E neighbors, ``(hy, hx)`` strip
+    widths) is realized by tiling the ``(ny, nx)`` grid over the mesh
+    axes: ``b`` and each band reshape to their grid layout and shard
+    BOTH trailing axes, so every shard owns an ``(ny/py, nx/px)`` tile.
+    """
+    ay, ax = mesh.axis_names
+    py, px = mesh.devices.shape
+    if A.grid_shape is None:
+        raise ValueError(
+            "a 2-axis mesh needs a DiaMatrix built with grid_shape="
+            "(ny, nx) (e.g. operators.laplacian_2d) so its offsets "
+            "decompose into (dy, dx) grid displacements")
+    if name != "pipecg":
+        raise ValueError(
+            f"the 2D-grid sharded body implements pipecg only; got {name!r}")
+    if b.ndim != 1:
+        raise ValueError(
+            "the 2D-grid sharded body is single-RHS; got batched b of "
+            f"shape {b.shape}")
+    if block is not None:
+        raise ValueError(
+            "block= tunes the 1D halo kernel; the 2D-grid body has no "
+            "Pallas tile to override")
+    M, maxiter, tol = _pop_basic_kw(solver_kw, "2D-grid")
+    ny, nx = A.grid_shape
+    if ny % py or nx % px:
+        raise ValueError(
+            f"grid {A.grid_shape} does not tile evenly over the "
+            f"({py}, {px}) process grid")
+    doffs = tuple(A.grid_offsets())
+    body = eng.body("pipecg", "dia2d")
+    bands2 = A.bands.reshape((len(A.offsets), ny, nx))
+    b2 = b.reshape(ny, nx)
+
+    def run(bands_local, b_local):
+        return body(doffs, bands_local, b_local, axis_names=(ay, ax),
+                    ip=ip, M=M, maxiter=maxiter, tol=tol, noise=noise)
+
+    out_specs = SolveResult(x=P(ay, ax), iters=P(), res_norm=P(),
+                            res_history=P(), detect_history=P())
+    fn = shard_map(run, mesh=mesh, in_specs=(P(None, ay, ax), P(ay, ax)),
+                   out_specs=out_specs, check_rep=False)
+    res = fn(bands2, b2)
+    return res._replace(x=res.x.reshape(b.shape))
+
+
+def _engine_solve_bsr(name, ip, A, b, mesh: Mesh, eng, *, noise=None,
+                      block=None, **solver_kw) -> SolveResult:
+    """Drive :func:`sharded_pipecg_bsr_solve` over block rows.
+
+    Converts the blocked-ELL layout to its block-DIA form once on the
+    host (``BsrMatrix.block_bands``), reshapes ``b`` to ``(nbr, bs)``
+    and shards the block-row axis over the (single) mesh axis — the
+    1D W/E decomposition the operator's ``halo_spec`` describes.
+    """
     axes = mesh.axis_names
     if len(axes) != 1:
         raise ValueError(
-            "engine='sharded_fused' needs a single (flattened) mesh axis; "
-            f"got axes {axes!r}")
+            "the sharded BSR body shards block rows over a single mesh "
+            f"axis; got axes {axes!r}")
     axis = axes[0]
+    if name != "pipecg":
+        raise ValueError(
+            f"the sharded BSR body implements pipecg only; got {name!r}")
+    if b.ndim != 1:
+        raise ValueError(
+            "the sharded BSR body is single-RHS; got batched b of shape "
+            f"{b.shape}")
+    if block is not None:
+        raise ValueError(
+            "block= tunes the 1D DIA halo kernel; the sharded BSR body "
+            "has no Pallas tile to override")
+    M, maxiter, tol = _pop_basic_kw(solver_kw, "BSR")
+    boffs, bblocks = A.block_bands()
+    n_dev = int(mesh.devices.size)
+    if A.n_block_rows % n_dev:
+        raise ValueError(
+            f"{A.n_block_rows} block rows do not shard evenly over "
+            f"{n_dev} devices")
+    body = eng.body("pipecg", "bsr")
+    b2 = b.reshape(A.n_block_rows, A.bs)
+
+    def run(bb_local, b_local):
+        return body(boffs, bb_local, b_local, axis_name=axis, ip=ip, M=M,
+                    maxiter=maxiter, tol=tol, noise=noise)
+
+    out_specs = SolveResult(x=P(axis, None), iters=P(), res_norm=P(),
+                            res_history=P(), detect_history=P())
+    fn = shard_map(run, mesh=mesh,
+                   in_specs=(P(None, axis, None, None), P(axis, None)),
+                   out_specs=out_specs, check_rep=False)
+    res = fn(bblocks, b2)
+    return res._replace(x=res.x.reshape(b.shape))
+
+
+def _distributed_engine_solve(solver, A, b, mesh: Mesh, eng, *,
+                              noise=None, block=None, **solver_kw
+                              ) -> SolveResult:
+    """shard_map entry for the ShardedFusedEngine path.
+
+    Routes on the operator's declared format and the mesh rank through
+    the engine's dispatch table (``ShardedFusedEngine.body``):
+    ``DiaMatrix`` on a 1-axis mesh runs the historical halo-kernel
+    bodies; ``DiaMatrix`` with a ``grid_shape`` on a 2-axis mesh runs
+    :func:`sharded_pipecg_solve_2d` (the tile decomposition its
+    ``halo_spec`` describes); ``BsrMatrix`` runs
+    :func:`sharded_pipecg_bsr_solve` over block rows.
+    """
+    from repro.core.krylov.operator import BsrMatrix
+
+    axes = mesh.axis_names
     name = getattr(solver, "__name__", str(solver))
     ip = _SHARDED_IP.get(name)
     if ip is None and name not in _SHARDED_GRAM:
         raise ValueError(
             "engine='sharded_fused' supports pipecg / pipecg_multi / "
             f"pipecr / pipecg_l / pipebicgstab; got solver {name!r}")
+    if isinstance(A, BsrMatrix):
+        return _engine_solve_bsr(name, ip, A, b, mesh, eng, noise=noise,
+                                 block=block, **solver_kw)
     if not isinstance(A, DiaMatrix):
-        raise ValueError("engine='sharded_fused' needs a DiaMatrix operator")
+        raise ValueError(
+            "engine='sharded_fused' needs a DiaMatrix or BsrMatrix "
+            f"operator; got {type(A).__name__}")
+    if len(axes) == 2:
+        return _engine_solve_2d(name, ip, A, b, mesh, eng, noise=noise,
+                                block=block, **solver_kw)
+    if len(axes) != 1:
+        raise ValueError(
+            "engine='sharded_fused' needs a 1-axis (flattened) or 2-axis "
+            f"(process-grid) mesh; got axes {axes!r}")
+    axis = axes[0]
     M = solver_kw.pop("M", None)
     maxiter = solver_kw.pop("maxiter", 100)
     tol = solver_kw.pop("tol", 0.0)

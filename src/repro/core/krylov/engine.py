@@ -37,9 +37,14 @@ from typing import Callable, Dict, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from repro.core.krylov.operator import BsrMatrix
 from repro.core.krylov.operators import DiaMatrix
 
 ENGINES: Dict[str, "Engine"] = {}
+
+# operator formats whose fused single-sweep kernels exist (the in-kernel
+# Jacobi/identity preconditioning path of FusedEngine)
+_SWEEP_FORMATS = ("dia", "bsr")
 
 
 def register_engine(cls):
@@ -65,8 +70,10 @@ def _jacobi_inv_diag(A, M, n, dtype):
 
     M may be None (identity), the string "jacobi", or a callable; callables
     are opaque, so only the first two qualify for in-kernel preconditioning.
+    Dispatches on the operator protocol's ``format`` tag: any format with
+    a fused single-sweep kernel (DIA, BSR) qualifies.
     """
-    if not isinstance(A, DiaMatrix):
+    if getattr(A, "format", None) not in _SWEEP_FORMATS:
         return None
     if M is None:
         return jnp.ones((n,), dtype)
@@ -134,16 +141,16 @@ def _rdot(a, b):
 def _abft_chk(A, u, w):
     """Signed ABFT checksum residual ``1^T w - c^T u`` (``c = A^T 1``).
 
-    Exactly ``1^T (A u - w)`` for a DIA operator — rounding-level when the
-    carried ``w`` faithfully tracks ``A u``, O(corruption) otherwise.  For
-    opaque operators (no band structure to checksum) it returns zeros, so
-    downstream detectors see a never-tripping channel rather than a
-    missing one.  ``A`` is a trace constant under jit, so the column
-    checksum is hoisted out of the solver scan.
+    Exactly ``1^T (A u - w)`` for any ``SparseOperator`` exposing
+    ``column_checksum`` (DIA, BSR) — rounding-level when the carried ``w``
+    faithfully tracks ``A u``, O(corruption) otherwise.  For opaque
+    operators (no structure to checksum) it returns zeros, so downstream
+    detectors see a never-tripping channel rather than a missing one.
+    ``A`` is a trace constant under jit, so the column checksum is
+    hoisted out of the solver scan.
     """
-    if isinstance(A, DiaMatrix):
-        from repro.kernels.checksum import dia_column_checksum
-        c = dia_column_checksum(A.offsets, A.bands).astype(w.dtype)
+    if hasattr(A, "column_checksum"):
+        c = A.column_checksum().astype(w.dtype)
         # single reduction over (w - c*u): same checksum to rounding, and
         # a standalone plain sum(w) would join XLA's multi-output reduce
         # fusion over w and shift the existing dots' bits (pinned at
@@ -212,6 +219,9 @@ class FusedEngine(Engine):
             from repro.kernels import ops as kops
             h = A.halo
             return kops.spmv_dia_ext(A.offsets, A.bands, jnp.pad(v, (h, h)), h)
+        if isinstance(A, BsrMatrix):
+            from repro.kernels import ops as kops
+            return kops.spmv_bsr(A.indices, A.blocks, v)
         return A.matvec(v) if hasattr(A, "matvec") else A(v)
 
     def dots(self, V, z):
@@ -245,14 +255,21 @@ class FusedEngine(Engine):
 
         if "w" not in st:  # single-sweep mega-kernel state
             # loop-invariant under jit (A is a trace constant): XLA hoists
-            # the 1/diag out of the scan.  dtype follows the BANDS, not x:
-            # under a storage-demoting PrecisionPolicy the operator rides
-            # in bf16/fp8 while x stays at accum precision, and diag^-1
-            # must match the resident-operand dtype the kernel streams.
-            inv_d = _jacobi_inv_diag(A, M, st["x"].shape[-1], A.bands.dtype)
-            x, r, u, p, red = kops.pipecg_spmv_fused_step(
-                A.offsets, A.bands, inv_d,
-                st["x"], st["r"], st["u"], st["p"], alpha, beta)
+            # the 1/diag out of the scan.  dtype follows the OPERATOR, not
+            # x: under a storage-demoting PrecisionPolicy the operator
+            # rides in bf16/fp8 while x stays at accum precision, and
+            # diag^-1 must match the resident-operand dtype the kernel
+            # streams.  Format branch: DIA -> stencil sweep, BSR ->
+            # blocked-ELL gather sweep (kernels/spmv_bsr.py).
+            inv_d = _jacobi_inv_diag(A, M, st["x"].shape[-1], A.dtype)
+            if A.format == "bsr":
+                x, r, u, p, red = kops.pipecg_bsr_fused_step(
+                    A.indices, A.blocks, inv_d,
+                    st["x"], st["r"], st["u"], st["p"], alpha, beta)
+            else:
+                x, r, u, p, red = kops.pipecg_spmv_fused_step(
+                    A.offsets, A.bands, inv_d,
+                    st["x"], st["r"], st["u"], st["p"], alpha, beta)
             gamma, delta = _ip_pick(ip, red[..., 0], red[..., 1],
                                     red[..., 3], red[..., 4])
             # checksum residual 1^T w' - c^T u' rode the same sweep (col 5)
@@ -308,22 +325,47 @@ class ShardedFusedEngine(Engine):
     def pipecg_iter(self, A, M, ip, vecs, alpha, beta):
         self._reject()
 
+    # table-driven dispatch: (solver family, operator format) -> the name
+    # of the per-shard body in core/krylov/distributed.py.  "dia2d" is the
+    # DIA format on a 2-D process grid (N/S/W/E halo pairs per body); new
+    # (family, format) engines add a row here, not a fourth solve_* copy.
+    _BODIES = {
+        ("pipecg", "dia"): "sharded_pipecg_solve",
+        ("pipecg", "dia2d"): "sharded_pipecg_solve_2d",
+        ("pipecg", "bsr"): "sharded_pipecg_bsr_solve",
+        ("pipecg_l", "dia"): "sharded_pipecg_depth_solve",
+        ("pipebicgstab", "dia"): "sharded_pipebicgstab_solve",
+    }
+
+    def body(self, family: str, fmt: str = "dia"):
+        """Per-shard solve body for a (solver family, operator format).
+
+        Families: "pipecg" (the CG/CR single-sweep body — ``ip`` selects
+        CR), "pipecg_l" (depth-l ghost-basis blocks), "pipebicgstab".
+        Formats: "dia", "dia2d" (DIA on a 2-D process grid), "bsr".
+        """
+        from repro.core.krylov import distributed
+        try:
+            return getattr(distributed, self._BODIES[(family, fmt)])
+        except KeyError:
+            supported = sorted(self._BODIES)
+            raise ValueError(
+                f"no sharded body for solver family {family!r} with "
+                f"operator format {fmt!r}; supported: {supported}"
+            ) from None
+
     def solve(self, offsets, bands_local, b_local, **kw):
         """Per-shard solve body; see distributed.sharded_pipecg_solve."""
-        from repro.core.krylov.distributed import sharded_pipecg_solve
-        return sharded_pipecg_solve(offsets, bands_local, b_local, **kw)
+        return self.body("pipecg")(offsets, bands_local, b_local, **kw)
 
     def solve_depth(self, offsets, bands_local, b_local, **kw):
         """Depth-l per-shard body: one Gram psum + one l*halo ppermute
         per l iterations; see distributed.sharded_pipecg_depth_solve."""
-        from repro.core.krylov.distributed import sharded_pipecg_depth_solve
-        return sharded_pipecg_depth_solve(offsets, bands_local, b_local,
-                                          **kw)
+        return self.body("pipecg_l")(offsets, bands_local, b_local, **kw)
 
     def solve_bicgstab(self, offsets, bands_local, b_local, **kw):
         """Pipelined BiCGStab per-shard body: one (6, 6) Gram psum hides
         the FOUR classical synchronizations per iteration; see
         distributed.sharded_pipebicgstab_solve."""
-        from repro.core.krylov.distributed import sharded_pipebicgstab_solve
-        return sharded_pipebicgstab_solve(offsets, bands_local, b_local,
-                                          **kw)
+        return self.body("pipebicgstab")(offsets, bands_local, b_local,
+                                         **kw)

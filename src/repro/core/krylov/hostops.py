@@ -3,10 +3,12 @@
 The resilient distributed driver, the serve layer's retire verification
 and the ABFT campaign stage all need a true residual ``||b - A x||``
 computed OUTSIDE the jit'd solve — a synchronous numpy ground truth that
-a corrupted device recurrence cannot influence.  They previously carried
-private copies of the same DIA matvec loop; this module is the single
-shared implementation (unit-tested against ``DiaMatrix.matvec`` in
-tests/test_abft.py).
+a corrupted device recurrence cannot influence.  The DIA matvec is the
+shared vectorized padded-gather implementation from
+``core.krylov.operators.dia_gather_matvec`` (one gather + ordered band
+fold, bit-equivalent to the historical scatter loop); operators that
+implement the ``SparseOperator`` protocol supply their own
+``host_matvec`` and the residual helper dispatches on that.
 """
 from __future__ import annotations
 
@@ -14,34 +16,34 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.core.krylov.operators import dia_gather_matvec
+
 
 def dia_matvec_np(offsets: Sequence[int], bands: np.ndarray,
                   x: np.ndarray) -> np.ndarray:
     """Host-numpy DIA matvec ``y = A x`` (DiaMatrix band convention).
 
     ``A[i, i + off_k] = bands[k, i]``; ``x`` may carry leading batch
-    dimensions (the matvec applies along the last axis).
+    dimensions (the matvec applies along the last axis).  Thin wrapper
+    over the shared gather contraction with ``xp=np``.
     """
-    bands = np.asarray(bands)
-    n = x.shape[-1]
-    y = np.zeros_like(x)
-    for k, off in enumerate(offsets):
-        off = int(off)
-        if off >= 0:
-            y[..., : n - off] += bands[k, : n - off] * x[..., off:]
-        else:
-            y[..., -off:] += bands[k, -off:] * x[..., : n + off]
-    return y
+    return dia_gather_matvec(offsets, np.asarray(bands), np.asarray(x), np)
 
 
 def true_residual_norm(A, b: np.ndarray, x: np.ndarray) -> float:
-    """``||b - A x||_2`` on the host for a DiaMatrix-like operator.
+    """``||b - A x||_2`` on the host for a ``SparseOperator``.
 
     The ABFT slow-path confirm: carried detectors (checksum rows,
     deviation recursions) are the fast path; this synchronous recompute
     is consulted only once a fast-path detector has tripped (or at
-    retire time) to rule the corruption in or out.
+    retire time) to rule the corruption in or out.  Dispatches to the
+    operator's ``host_matvec`` when present (DIA and BSR both provide
+    one); falls back to the DIA band convention otherwise.
     """
-    r = np.asarray(b, np.float64) - dia_matvec_np(
-        A.offsets, np.asarray(A.bands, np.float64), np.asarray(x, np.float64))
+    x64 = np.asarray(x, np.float64)
+    if hasattr(A, "bands"):
+        ax = dia_matvec_np(A.offsets, np.asarray(A.bands, np.float64), x64)
+    else:
+        ax = A.host_matvec(x64)
+    r = np.asarray(b, np.float64) - np.asarray(ax, np.float64)
     return float(np.linalg.norm(r))

@@ -1,0 +1,356 @@
+"""Typed ``SparseOperator`` protocol: one operator object through every layer.
+
+Historically every layer of the stack — solvers, engines, fused kernels,
+``distributed_solve``, ABFT checksums, the serve fingerprint, the
+perfmodel's words/iter accounting — passed a raw ``(offsets, bands)`` DIA
+pair positionally, so the repo could only express banded operators on 1-D
+shard strips.  This module defines the protocol that replaces that
+plumbing with a single typed object:
+
+=================  ========================================================
+protocol member    consumer
+=================  ========================================================
+``matvec``         solvers / engines (device SpMV)
+``diagonal``       Jacobi preconditioner resolution (engine.py)
+``halo_spec``      distributed halo exchange: neighbor set + strip widths
+``column_checksum``  ABFT ``c = A^T 1`` (abft.py / kernels/checksum.py)
+``words_per_iter``   perfmodel HBM-traffic accounting (Eq. 3 style)
+``fingerprint``    serve content key (serve/request.py)
+``structure_key``  serve/autotune compile-compatibility grouping
+``inf_norm``       ABFT thresholds (``||A||_inf`` on the host)
+``host_matvec``    numpy ground-truth residuals (hostops.py)
+=================  ========================================================
+
+Two implementations ship: ``DiaMatrix`` (core/krylov/operators.py, banded
+stencils) and ``BsrMatrix`` (blocked-row sparse in a padded uniform
+row-degree ELL layout, the Pallas-friendly unstructured format; see
+kernels/spmv_bsr.py).  ``as_operator`` is the deprecation shim that keeps
+legacy ``(offsets, bands)`` call sites working with a one-time
+``DeprecationWarning`` (mirroring options.py's ``from_kwargs``).
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import hashlib
+import warnings
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloSpec:
+    """Neighbor set + strip widths one halo exchange must cover.
+
+    ``neighbors`` names the logical directions ("W"/"E" for a 1-D chain
+    decomposition, "N"/"S"/"W"/"E" for a 2-D process grid); ``widths``
+    gives the matching strip width per neighbor, in lattice sites along
+    the exchanged axis (block rows for BSR).  The distributed engine turns
+    each (neighbor, width) pair into one ``lax.ppermute`` per body; the
+    perfmodel's surface-to-volume term (perfmodel/comm.py) prices the same
+    pairs as messages + bytes.
+    """
+
+    ndim: int
+    neighbors: Tuple[str, ...]
+    widths: Tuple[int, ...]
+
+    def __post_init__(self):
+        if len(self.neighbors) != len(self.widths):
+            raise ValueError("neighbors and widths must align")
+        if len(self.neighbors) != 2 * self.ndim:
+            raise ValueError(
+                f"a {self.ndim}-D decomposition has {2 * self.ndim} "
+                f"neighbors, got {self.neighbors}")
+
+    @property
+    def messages_per_exchange(self) -> int:
+        """ppermute messages per exchanged vector for an interior process."""
+        return len(self.neighbors)
+
+    def width(self, name: str) -> int:
+        """Strip width toward neighbor ``name`` (e.g. ``"W"``)."""
+        return self.widths[self.neighbors.index(name)]
+
+
+class SparseOperator(abc.ABC):
+    """Abstract base for the operator protocol (see module docstring).
+
+    Concrete formats (``DiaMatrix``, ``BsrMatrix``) register themselves as
+    virtual subclasses, so ``isinstance(A, SparseOperator)`` is the single
+    dispatch test everywhere an operator crosses a layer boundary.
+    """
+
+    @property
+    @abc.abstractmethod
+    def n(self) -> int:
+        """Global problem size (rows)."""
+
+    @abc.abstractmethod
+    def matvec(self, x):
+        """Device SpMV ``y = A x`` (pure jnp; jit/vmap friendly)."""
+
+    @abc.abstractmethod
+    def diagonal(self):
+        """``diag(A)`` as an (n,) vector (Jacobi preconditioning)."""
+
+    @abc.abstractmethod
+    def halo_spec(self) -> HaloSpec:
+        """Neighbor set + strip widths for one distributed halo exchange."""
+
+    @abc.abstractmethod
+    def column_checksum(self):
+        """ABFT column checksum ``c = A^T 1`` as an (n,) vector."""
+
+    @abc.abstractmethod
+    def words_per_iter(self) -> float:
+        """Modeled HBM words per row for one fused PIPECG iteration."""
+
+    @abc.abstractmethod
+    def fingerprint(self) -> str:
+        """Content hash over structure + coefficients (serve cache key)."""
+
+
+def _sha1_hex16(*chunks: bytes) -> str:
+    h = hashlib.sha1()
+    for c in chunks:
+        h.update(c)
+    return h.hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# BSR (blocked-row sparse, padded uniform row-degree ELL layout)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BsrMatrix:
+    """Blocked-row sparse matrix in a padded uniform row-degree ELL layout.
+
+    ``indices[i, d]`` is the block-column of the d-th stored block of
+    block-row ``i`` and ``blocks[i, d]`` its dense (bs, bs) coefficients;
+    every block row stores exactly ``max_deg`` entries, padded with
+    SELF-POINTING all-zero blocks (``indices[i, d] = i``) so gathers never
+    index out of range and the halo of a pad entry is the row itself.
+    The fixed degree is what makes the gather shapes static for Pallas
+    (kernels/spmv_bsr.py).
+    """
+
+    indices: jnp.ndarray  # (n_block_rows, max_deg) int32
+    blocks: jnp.ndarray   # (n_block_rows, max_deg, bs, bs)
+
+    @property
+    def n(self) -> int:
+        """Global row count ``n_block_rows * bs``."""
+        return self.blocks.shape[0] * self.blocks.shape[-1]
+
+    @property
+    def n_block_rows(self) -> int:
+        """Number of block rows."""
+        return self.blocks.shape[0]
+
+    @property
+    def bs(self) -> int:
+        """Dense block edge length."""
+        return self.blocks.shape[-1]
+
+    @property
+    def max_deg(self) -> int:
+        """Stored blocks per block row (pad entries included)."""
+        return self.blocks.shape[1]
+
+    @property
+    def dtype(self):
+        """Coefficient dtype."""
+        return self.blocks.dtype
+
+    @property
+    def format(self) -> str:
+        """Format tag ("bsr") for table-driven dispatch."""
+        return "bsr"
+
+    @property
+    def halo(self) -> int:
+        """Max |block-column - block-row| reach, in SCALAR rows."""
+        reach = np.abs(np.asarray(self.indices, np.int64)
+                       - np.arange(self.n_block_rows)[:, None])
+        return int(reach.max()) * self.bs
+
+    @property
+    def block_halo(self) -> int:
+        """Max |block-column - block-row| reach, in BLOCK rows."""
+        reach = np.abs(np.asarray(self.indices, np.int64)
+                       - np.arange(self.n_block_rows)[:, None])
+        return int(reach.max())
+
+    def matvec(self, x):
+        """``y = A x``: one gather of x-blocks + one batched block GEMV."""
+        xb = jnp.reshape(x, x.shape[:-1] + (self.n_block_rows, self.bs))
+        g = jnp.take(xb, self.indices, axis=-2)  # (..., nbr, deg, bs)
+        y = jnp.einsum("rdij,...rdj->...ri", self.blocks, g)
+        return jnp.reshape(y, x.shape)
+
+    def diagonal(self):
+        """``diag(A)`` — the diagonals of the self-column blocks."""
+        own = (self.indices == jnp.arange(self.n_block_rows)[:, None])
+        d = jnp.diagonal(self.blocks, axis1=-2, axis2=-1)  # (nbr, deg, bs)
+        diag = jnp.sum(jnp.where(own[..., None], d, 0.0), axis=1)
+        return jnp.reshape(diag, (self.n,))
+
+    def to_dense(self):
+        """Dense (n, n) rendering (tests / small problems only)."""
+        nbr, bs = self.n_block_rows, self.bs
+        A = jnp.zeros((nbr, bs, nbr, bs), self.dtype)
+        rows = jnp.arange(nbr)
+        for d in range(self.max_deg):
+            A = A.at[rows, :, self.indices[:, d], :].add(self.blocks[:, d])
+        return jnp.reshape(jnp.transpose(A, (0, 1, 2, 3)), (self.n, self.n))
+
+    def halo_spec(self) -> HaloSpec:
+        """1-D block-row chain decomposition: W/E strips of the block reach."""
+        h = self.block_halo
+        return HaloSpec(ndim=1, neighbors=("W", "E"), widths=(h, h))
+
+    def column_checksum(self):
+        """``c = A^T 1`` (kernels/checksum.py scatter-add rendering)."""
+        from repro.kernels.checksum import bsr_column_checksum
+        return bsr_column_checksum(self.indices, self.blocks)
+
+    def words_per_iter(self) -> float:
+        """Fused-iteration HBM words/row: 10 vectors + blocks + int32 ELL."""
+        return 10.0 + float(self.max_deg) * self.bs + float(self.max_deg) / self.bs
+
+    def fingerprint(self) -> str:
+        """sha1 over (format, shape, indices, blocks) — serve content key."""
+        ind = np.ascontiguousarray(np.asarray(self.indices, np.int32))
+        blk = np.ascontiguousarray(np.asarray(self.blocks))
+        return _sha1_hex16(b"bsr", repr(ind.shape).encode(),
+                           ind.tobytes(), blk.tobytes())
+
+    def structure_key(self) -> Tuple:
+        """Compile-compatibility key (shapes only, not coefficients)."""
+        return ("bsr", self.n_block_rows, self.max_deg, self.bs)
+
+    def inf_norm(self) -> float:
+        """Host ``||A||_inf`` = max absolute row sum."""
+        blk = np.asarray(self.blocks, np.float64)
+        rowsum = np.abs(blk).sum(axis=(1, 3))  # (nbr, bs)
+        return float(rowsum.max())
+
+    def host_matvec(self, x: np.ndarray) -> np.ndarray:
+        """Numpy ground-truth ``y = A x`` (ABFT slow-path residuals)."""
+        blk = np.asarray(self.blocks)
+        ind = np.asarray(self.indices)
+        xb = np.reshape(x, x.shape[:-1] + (self.n_block_rows, self.bs))
+        g = xb[..., ind, :]  # (..., nbr, deg, bs)
+        y = np.einsum("rdij,...rdj->...ri", blk, g)
+        return np.reshape(y, x.shape)
+
+    def block_bands(self):
+        """Block-DIA rendering: ``(boffs, bblocks)`` for the sharded body.
+
+        ``boffs`` is the sorted tuple of distinct block-column offsets
+        ``indices[i, d] - i`` and ``bblocks[m, i]`` the dense block
+        connecting block-row ``i`` to block-column ``i + boffs[m]``
+        (zero where the ELL row stores no such block).  Self-pointing
+        pad entries carry zero blocks, so they fold harmlessly into the
+        offset-0 band.  This is the layout
+        ``distributed.sharded_pipecg_bsr_solve`` consumes: static
+        offsets make every halo slice static, exactly like DIA bands.
+        """
+        ind = np.asarray(self.indices, np.int64)
+        blk = np.asarray(self.blocks)
+        offs_all = ind - np.arange(self.n_block_rows)[:, None]  # (nbr, deg)
+        boffs = tuple(int(o) for o in np.unique(offs_all))
+        bblocks = np.zeros((len(boffs), self.n_block_rows, self.bs, self.bs),
+                           blk.dtype)
+        for m, off in enumerate(boffs):
+            mask = (offs_all == off)
+            bblocks[m] = np.einsum("rd,rdij->rij", mask, blk)
+        return boffs, jnp.asarray(bblocks)
+
+
+SparseOperator.register(BsrMatrix)
+
+
+def dia_to_bsr(A, bs: int = 4) -> BsrMatrix:
+    """Convert a ``DiaMatrix`` to BSR with block size ``bs`` (lossless).
+
+    Every band entry ``A[i, i+off]`` lands in block
+    ``(i // bs, (i+off) // bs)``; the resulting block rows are padded to
+    the uniform max degree with self-pointing zero blocks.  Requires
+    ``A.n % bs == 0``.  The round trip ``dia_to_bsr(A).to_dense()``
+    equals ``A.to_dense()`` exactly (tested in tests/test_operator.py).
+    """
+    if A.n % bs:
+        raise ValueError(f"n={A.n} not divisible by block size {bs}")
+    nbr = A.n // bs
+    bands = np.asarray(A.bands)
+    dense_blocks = {}  # (brow, bcol) -> (bs, bs) np array
+    for k, off in enumerate(A.offsets):
+        band = bands[k]
+        for i in range(max(0, -off), min(A.n, A.n - off)):
+            v = band[i]
+            if v == 0.0:
+                continue
+            br, bi = divmod(i, bs)
+            bc, bj = divmod(i + off, bs)
+            blk = dense_blocks.setdefault((br, bc), np.zeros((bs, bs),
+                                                            bands.dtype))
+            blk[bi, bj] += v
+    deg = max((sum(1 for (br, _) in dense_blocks if br == i)
+               for i in range(nbr)), default=1)
+    deg = max(deg, 1)
+    indices = np.tile(np.arange(nbr, dtype=np.int32)[:, None], (1, deg))
+    blocks = np.zeros((nbr, deg, bs, bs), bands.dtype)
+    fill = [0] * nbr
+    for (br, bc) in sorted(dense_blocks):
+        d = fill[br]
+        indices[br, d] = bc
+        blocks[br, d] = dense_blocks[(br, bc)]
+        fill[br] += 1
+    return BsrMatrix(indices=jnp.asarray(indices), blocks=jnp.asarray(blocks))
+
+
+# ---------------------------------------------------------------------------
+# Legacy (offsets, bands) deprecation shim
+# ---------------------------------------------------------------------------
+
+# one-time flag, module-global like options._warned_deprecated so the
+# warning fires once per process, not once per call site
+_warned_legacy_pair = False
+
+
+def reset_operator_deprecation_warning() -> None:
+    """Re-arm the one-time legacy-pair warning (test helper)."""
+    global _warned_legacy_pair
+    _warned_legacy_pair = False
+
+
+def as_operator(A, bands=None):
+    """Coerce ``A`` to a ``SparseOperator``, accepting the legacy DIA pair.
+
+    ``as_operator(op)`` passes a protocol object through unchanged;
+    ``as_operator(offsets, bands)`` or ``as_operator((offsets, bands))``
+    wraps the legacy positional pair in a ``DiaMatrix`` and emits a
+    one-time ``DeprecationWarning`` (the options.py ``from_kwargs``
+    convention).  Matrix-free callables pass through untouched so solver
+    fronts can call this unconditionally.
+    """
+    global _warned_legacy_pair
+    if bands is None and not (isinstance(A, tuple) and len(A) == 2):
+        return A
+    if bands is None:
+        offsets, bands = A
+    else:
+        offsets = A
+    if not _warned_legacy_pair:
+        _warned_legacy_pair = True
+        warnings.warn(
+            "passing a raw (offsets, bands) DIA pair is deprecated; "
+            "construct a DiaMatrix (core.krylov.operators) and pass the "
+            "operator object", DeprecationWarning, stacklevel=2)
+    from repro.core.krylov.operators import DiaMatrix
+    return DiaMatrix(offsets=tuple(int(o) for o in offsets),
+                     bands=jnp.asarray(bands))

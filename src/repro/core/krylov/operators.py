@@ -9,10 +9,41 @@ pure-jnp reference matvec (shifted adds) and the Pallas stencil kernel
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core.krylov.operator import HaloSpec, SparseOperator
+
+
+def dia_gather_matvec(offsets: Sequence[int], bands, x, xp=jnp):
+    """Vectorized DIA matvec via one padded gather + ordered band fold.
+
+    ``y[i] = sum_k bands[k, i] * x[i + offsets[k]]`` — pad ``x`` by the
+    halo on both sides, gather all band-shifted views in ONE advanced-index
+    read, then fold the band terms in band order.  The left-fold keeps the
+    float addition order identical to the historical per-band
+    ``.at[].add`` scatter loop, so results are BIT-equivalent (pinned in
+    tests/test_operator.py); out-of-range positions gather zeros from the
+    pad, matching the scatter loop's untouched segments.  ``xp`` selects
+    the array namespace (``jnp`` on device, ``np`` for hostops.py's
+    ground-truth path); ``x`` may carry leading batch dimensions.
+    """
+    n = x.shape[-1]
+    offs = [int(o) for o in offsets]
+    h = max((abs(o) for o in offs), default=0)
+    pad = [(0, 0)] * (x.ndim - 1) + [(h, h)]
+    x_ext = xp.pad(x, pad)
+    # static (n_bands, n) index table -> a single gather
+    idx = np.arange(n)[None, :] + np.asarray(offs)[:, None] + h
+    terms = bands * x_ext[..., idx]
+    y = terms[..., 0, :]
+    for k in range(1, len(offs)):
+        y = y + terms[..., k, :]
+    return y
 
 
 @dataclasses.dataclass(frozen=True)
@@ -20,46 +51,121 @@ class DiaMatrix:
     """Banded matrix: ``A[i, i+off] = bands[k, i]`` for ``off = offsets[k]``.
 
     Entries of a band that would fall outside the matrix must be zero.
+    One of the two ``SparseOperator`` implementations (the other is
+    ``BsrMatrix``, core/krylov/operator.py).  ``grid_shape=(ny, nx)`` may
+    be set by 2-D stencil factories (``laplacian_2d``) to declare that
+    the offsets decompose onto a row-major lattice, which upgrades
+    ``halo_spec()`` to the 4-neighbor N/S/W/E form used by the 2-D
+    process-grid sharded engine.
     """
 
     offsets: Tuple[int, ...]
     bands: jnp.ndarray  # (n_bands, N)
+    grid_shape: Optional[Tuple[int, int]] = None
 
     @property
     def n(self) -> int:
+        """Global problem size (rows)."""
         return self.bands.shape[1]
 
     @property
     def halo(self) -> int:
+        """Max |offset| — the 1-D halo strip width."""
         return max(abs(o) for o in self.offsets)
+
+    @property
+    def dtype(self):
+        """Coefficient dtype."""
+        return self.bands.dtype
+
+    @property
+    def format(self) -> str:
+        """Format tag ("dia") for table-driven dispatch."""
+        return "dia"
 
     def matvec(self, x: jnp.ndarray) -> jnp.ndarray:
         """y[i] = sum_k bands[k, i] * x[i + offsets[k]] (pure jnp)."""
-        y = jnp.zeros_like(x)
-        n = x.shape[0]
-        for k, off in enumerate(self.offsets):
-            if off == 0:
-                y = y + self.bands[k] * x
-            elif off > 0:
-                seg = self.bands[k, : n - off] * x[off:]
-                y = y.at[: n - off].add(seg)
-            else:
-                o = -off
-                seg = self.bands[k, o:] * x[: n - o]
-                y = y.at[o:].add(seg)
-        return y
+        return dia_gather_matvec(self.offsets, self.bands, x, jnp)
 
     def diagonal(self) -> jnp.ndarray:
+        """``diag(A)`` — the offset-0 band."""
         k = self.offsets.index(0)
         return self.bands[k]
 
     def to_dense(self) -> jnp.ndarray:
+        """Dense (n, n) rendering (tests / small problems only)."""
         n = self.n
         A = jnp.zeros((n, n), self.bands.dtype)
         for k, off in enumerate(self.offsets):
             idx = jnp.arange(max(0, -off), min(n, n - off))
             A = A.at[idx, idx + off].set(self.bands[k, idx])
         return A
+
+    def grid_offsets(self) -> Tuple[Tuple[int, int], ...]:
+        """Decompose each offset into a (dy, dx) lattice displacement.
+
+        Requires ``grid_shape``; each offset must be either a pure-x step
+        (|off| < nx) or a pure-y step (off = k * nx), the separable-stencil
+        condition the 2-D sharded engine relies on.
+        """
+        if self.grid_shape is None:
+            raise ValueError("grid_offsets() needs grid_shape=(ny, nx)")
+        _, nx = self.grid_shape
+        out = []
+        for off in self.offsets:
+            if off % nx == 0:
+                out.append((off // nx, 0))
+            elif abs(off) < nx:
+                out.append((0, off))
+            else:
+                raise ValueError(
+                    f"offset {off} is neither a pure-x (|off|<{nx}) nor a "
+                    f"pure-y (off % {nx} == 0) lattice step")
+        return tuple(out)
+
+    def halo_spec(self) -> HaloSpec:
+        """W/E strips of the band reach; N/S/W/E when ``grid_shape`` set."""
+        if self.grid_shape is not None:
+            d = self.grid_offsets()
+            hy = max((abs(dy) for dy, _ in d), default=0)
+            hx = max((abs(dx) for _, dx in d), default=0)
+            return HaloSpec(ndim=2, neighbors=("N", "S", "W", "E"),
+                            widths=(hy, hy, hx, hx))
+        h = self.halo
+        return HaloSpec(ndim=1, neighbors=("W", "E"), widths=(h, h))
+
+    def column_checksum(self) -> jnp.ndarray:
+        """ABFT column checksum ``c = A^T 1`` (kernels/checksum.py)."""
+        from repro.kernels.checksum import dia_column_checksum
+        return dia_column_checksum(self.offsets, self.bands)
+
+    def words_per_iter(self) -> float:
+        """Fused-iteration HBM words/row: 10 vectors + one band sweep."""
+        return 10.0 + float(len(self.offsets))
+
+    def fingerprint(self) -> str:
+        """sha1 over (offsets, bands) — the serve content key."""
+        h = hashlib.sha1()
+        h.update(repr(tuple(self.offsets)).encode())
+        h.update(np.ascontiguousarray(np.asarray(self.bands)).tobytes())
+        return h.hexdigest()[:16]
+
+    def structure_key(self) -> Tuple:
+        """Compile-compatibility key (offsets + size, not coefficients)."""
+        return ("dia",) + tuple(self.offsets)
+
+    def inf_norm(self) -> float:
+        """Host ``||A||_inf`` = max absolute row sum."""
+        return float(np.abs(np.asarray(self.bands, np.float64))
+                     .sum(axis=0).max())
+
+    def host_matvec(self, x: np.ndarray) -> np.ndarray:
+        """Numpy ground-truth ``y = A x`` (ABFT slow-path residuals)."""
+        return dia_gather_matvec(self.offsets, np.asarray(self.bands),
+                                 np.asarray(x), np)
+
+
+SparseOperator.register(DiaMatrix)
 
 
 def tridiagonal_laplacian(n: int, dtype=jnp.float64) -> DiaMatrix:
@@ -82,7 +188,8 @@ def laplacian_2d(nx: int, ny: int, dtype=jnp.float64) -> DiaMatrix:
     # zero the out-of-range ends so DIA invariants hold
     west = west.at[0].set(0.0)
     bands = jnp.stack([north, west, main, east, south])
-    return DiaMatrix(offsets=(-nx, -1, 0, 1, nx), bands=bands)
+    return DiaMatrix(offsets=(-nx, -1, 0, 1, nx), bands=bands,
+                     grid_shape=(ny, nx))
 
 
 def glen_law_band(n: int, bandwidth: int = 10, seed: int = 0,

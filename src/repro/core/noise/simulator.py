@@ -68,6 +68,8 @@ class SolverPhaseModel:
     n_halo_vecs: int = 2        # vectors exchanged per iteration (u, p)
     storage_words: float = 1.0  # sweep-bytes scale (PrecisionPolicy.storage)
     wire_words: float = 1.0     # halo-bytes scale (PrecisionPolicy.wire)
+    grid: tuple = ()            # process grid (py, px); () = 1-D chain of p
+    grid_points: tuple = ()     # global lattice extents matching ``grid``
 
     def t_spmv(self) -> float:
         bytes_local = ((self.nnz_per_row + 2) * self.dtype_bytes
@@ -82,18 +84,35 @@ class SolverPhaseModel:
         return 2.0 * math.log2(max(self.p, 2)) * self.hw.hop_latency
 
     def t_halo(self) -> float:
-        """Neighbor-exchange time: bytes on the ICI link + 2 ring hops.
+        """Neighbor-exchange time: surface bytes on the link + face hops.
 
         A data dependence of the local stencil (the split-phase window
         hides the REDUCTION, not this), so it adds to the compute side
         of Eq. 6/7.  Zero when the model carries no halo (p = 1 or the
-        historical no-halo configuration).
+        historical no-halo configuration).  With ``grid`` set the term
+        generalizes to the surface-to-volume law of
+        ``core/perfmodel/comm.py`` — strips per face, bytes scaled by
+        the perpendicular tile extents; the empty-grid (1-D chain)
+        value reproduces the historical formula bit-for-bit.
         """
+        from repro.core.perfmodel import comm
+
         if self.halo <= 0 or self.p <= 1:
             return 0.0
-        bytes_wire = (2 * self.halo * self.n_halo_vecs * self.dtype_bytes
-                      * self.wire_words)
-        return bytes_wire / self.hw.link_bw + 2.0 * self.hw.hop_latency
+        if self.grid:
+            if math.prod(self.grid) != self.p:
+                raise ValueError(
+                    f"process grid {self.grid} does not multiply to "
+                    f"p={self.p}")
+            extents = comm.local_extents(self.grid_points, self.grid)
+            widths = (self.halo,) * len(self.grid)
+        else:
+            extents = (self.n // self.p,)
+            widths = (self.halo,)
+        return comm.halo_wire_time(
+            extents, widths, n_halo_vecs=self.n_halo_vecs,
+            dtype_bytes=self.dtype_bytes, wire_words=self.wire_words,
+            link_bw=self.hw.link_bw, hop_latency=self.hw.hop_latency)
 
     def t_compute(self) -> float:
         return self.t_spmv() + self.t_axpy() + self.t_halo()
@@ -120,7 +139,8 @@ def apply_precision(model: SolverPhaseModel, precision) -> SolverPhaseModel:
 
 def predict_speedup(model_sync: SolverPhaseModel, model_pipe: SolverPhaseModel,
                     noise: Distribution, K: int,
-                    depth: int = 1, precision=None) -> Dict[str, float]:
+                    depth: int = 1, precision=None,
+                    grid=None, grid_points=None) -> Dict[str, float]:
     """E[T]/E[T'] with per-step noise ~ ``noise`` added to each process.
 
     Synchronized: every step costs max_p(t_c + w_p) + n_red * t_red.
@@ -138,7 +158,20 @@ def predict_speedup(model_sync: SolverPhaseModel, model_pipe: SolverPhaseModel,
     reduction floor binds: the model then predicts the bandwidth-bound
     -> latency-bound regime conversion (reported as
     ``pipe_latency_bound``).
+
+    ``grid`` / ``grid_points`` (both or neither) re-shape BOTH models'
+    halo term onto a d-dimensional process grid before evaluating — the
+    surface-to-volume generalization of ``core/perfmodel/comm.py``; the
+    report then also carries ``halo_msgs`` and ``surface_to_volume``.
     """
+    if grid is not None:
+        if grid_points is None:
+            raise ValueError("grid= needs grid_points= (the global "
+                             "lattice extents)")
+        model_sync = dataclasses.replace(model_sync, grid=tuple(grid),
+                                         grid_points=tuple(grid_points))
+        model_pipe = dataclasses.replace(model_pipe, grid=tuple(grid),
+                                         grid_points=tuple(grid_points))
     p = model_sync.p
     model_pipe = apply_precision(model_pipe, precision)
     tc_s = model_sync.t_compute()
@@ -152,7 +185,7 @@ def predict_speedup(model_sync: SolverPhaseModel, model_pipe: SolverPhaseModel,
     # state per-process mean
     red_floor = model_pipe.n_reductions * tr / max(depth, 1)
     e_t_pipe = K * max(tc_p + float(noise.mean), red_floor)
-    return {
+    out = {
         "t_sync": e_t_sync,
         "t_pipe": e_t_pipe,
         "speedup": e_t_sync / e_t_pipe,
@@ -164,6 +197,13 @@ def predict_speedup(model_sync: SolverPhaseModel, model_pipe: SolverPhaseModel,
         "t_pipe_halo": model_pipe.t_halo(),
         "pipe_latency_bound": float(red_floor >= tc_p + float(noise.mean)),
     }
+    if model_pipe.grid and model_pipe.halo > 0:
+        from repro.core.perfmodel import comm
+        ext = comm.local_extents(model_pipe.grid_points, model_pipe.grid)
+        widths = (model_pipe.halo,) * len(model_pipe.grid)
+        out["halo_msgs"] = float(comm.halo_messages(len(model_pipe.grid)))
+        out["surface_to_volume"] = comm.surface_to_volume(ext, widths)
+    return out
 
 
 def ex23_models(p: int, hw: Hardware = Hardware()) -> Dict[str, SolverPhaseModel]:

@@ -17,6 +17,14 @@ from repro.core.perfmodel.distributions import (  # noqa: F401
     Shifted,
     Uniform,
 )
+from repro.core.perfmodel.comm import (  # noqa: F401
+    best_grid,
+    halo_elems,
+    halo_messages,
+    halo_wire_time,
+    local_extents,
+    surface_to_volume,
+)
 from repro.core.perfmodel.depth import (  # noqa: F401
     block_expected_max,
     crossover_depth,

@@ -46,6 +46,7 @@ from repro.experiments.noise_sources import (
 )
 from repro.experiments.abft_exec import bench_record, run_abft_exec
 from repro.experiments.fault_exec import run_fault_exec
+from repro.experiments.geometry_exec import run_geometry_exec
 from repro.experiments.precision_exec import (
     bench_record as precision_bench_record,
     run_precision_exec,
@@ -55,6 +56,7 @@ from repro.experiments.report import (
     write_depth_csv,
     write_ecdf_csv,
     write_fault_csv,
+    write_geometry_csv,
     write_json,
     write_precision_csv,
     write_report_md,
@@ -79,6 +81,7 @@ from repro.experiments.validation import (
     validate_cells,
     validate_depth_cells,
     validate_fault_cells,
+    validate_geometry_cells,
     validate_precision_cells,
     validate_s_sync_cells,
     validate_serve_cells,
@@ -314,7 +317,8 @@ def _acceptance(spec: CampaignSpec, cells, wait_fits,
                 fault_validation=None,
                 serve_validation=None,
                 abft_validation=None,
-                precision_validation=None) -> Dict[str, bool]:
+                precision_validation=None,
+                geometry_validation=None) -> Dict[str, bool]:
     """The ISSUE's acceptance checks, evaluated on this campaign's data."""
     exp_cells = [c for c in cells if c["noise"] == "exponential"]
     uni_cells = [c for c in cells if c["noise"] == "uniform"]
@@ -403,6 +407,22 @@ def _acceptance(spec: CampaignSpec, cells, wait_fits,
             checks["precision: model predicts the bandwidth->latency "
                    "regime conversion for bf16 storage"] = (
                 conv["converted"])
+    if geometry_validation:
+        rows = [row for key, row in geometry_validation.items()
+                if key != "best_grid"]
+        checks["geometry: split-phase overlap (one all-reduce per body) "
+               "for every format x grid"] = all(
+            row["one_all_reduce"] and row["overlap_ok"] for row in rows)
+        checks["geometry: XLA ppermute count matches the "
+               "surface-to-volume message model"] = all(
+            row["hlo_msgs_match"] for row in rows)
+        checks["geometry: every sharded solve matches the single-device "
+               "reference"] = all(row["accuracy_ok"] for row in rows)
+        bg = geometry_validation.get("best_grid")
+        if bg:
+            checks["geometry: comm model's best grid minimizes halo "
+                   "elements over the swept grids"] = (
+                bg["matches_comm_model"])
     return checks
 
 
@@ -489,6 +509,12 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
     if not skip_exec and spec.precision_policies and spec.precision_solvers:
         precision_record = run_precision_exec(spec)
 
+    # 3f. geometry stage: operator format x process grid x noise sweep,
+    # gated on the surface-to-volume communication model (comm.py)
+    geometry_record: Dict = {}
+    if not skip_exec and spec.geometry_formats:
+        geometry_record = run_geometry_exec(spec)
+
     # 4. validation
     validation = validate_cells(cells, dists)
     validation["depth"] = validate_depth_cells(depth_cells)
@@ -499,13 +525,16 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
     validation["serve"] = validate_serve_cells(serve_record)
     validation["abft"] = validate_abft_cells(abft_record.get("cells", []))
     validation["precision"] = validate_precision_cells(precision_record)
+    validation["geometry"] = validate_geometry_cells(
+        geometry_record.get("cells", []))
     validation["acceptance"] = _acceptance(spec, cells, wait_fits,
                                            validation["depth"],
                                            validation["s_sync"],
                                            validation["fault"],
                                            validation["serve"],
                                            validation["abft"],
-                                           validation["precision"])
+                                           validation["precision"],
+                                           validation["geometry"])
 
     result = {
         "spec": dataclasses.asdict(spec),
@@ -529,6 +558,7 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
         # flat per-cell precision metrics: the check_regression tracked
         # key (BENCH_campaign.json --key precision)
         "precision": precision_bench_record(precision_record)["precision"],
+        "geometry_cells": geometry_record.get("cells", []),
         # flat per-cell recovery metrics: the benchmarks/check_regression
         # tracked key (BENCH_campaign.json --key recovery)
         "recovery": {
@@ -557,6 +587,8 @@ def run_campaign(spec: CampaignSpec, out_dir=None, json_out=None,
         write_abft_csv(out_dir, abft_record["cells"])
     if precision_record.get("cells"):
         write_precision_csv(out_dir, precision_record["cells"])
+    if geometry_record.get("cells"):
+        write_geometry_csv(out_dir, geometry_record["cells"])
     for noise, waits in wait_samples.items():
         write_ecdf_csv(out_dir, noise, waits)
     if noisy_exec:

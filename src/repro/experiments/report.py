@@ -42,6 +42,10 @@ ABFT_CSV_HEADER = ("solver,detector,magnitude,threshold,onset,trip_iter,"
 PRECISION_CSV_HEADER = ("solver,policy,expect,true_res_rel,eps_storage,"
                         "floor_rel,res_over_eps,within_floor,precision_ok,"
                         "storage_words,wire_words,iters")
+GEOMETRY_CSV_HEADER = ("format,grid,P,halo_elems,surface_to_volume,"
+                       "msgs_modeled,ppermute_expected,ppermute_hlo,"
+                       "all_reduce_hlo,overlap_ok,t_iter_us,"
+                       "t_iter_noisy_us,accuracy_err")
 
 REPORT_SECTIONS = (
     "## 1. Setup",
@@ -56,6 +60,7 @@ REPORT_SECTIONS = (
     "## 10. Solver-as-a-service (queueing model vs measured)",
     "## 11. ABFT detection coverage (in-flight vs boundary)",
     "## 12. Mixed precision (Cools attainable-accuracy floors)",
+    "## 13. Operator geometry (format x process-grid x noise sweep)",
 )
 
 
@@ -215,6 +220,27 @@ def write_precision_csv(out_dir: Path,
                     f"{int(c['within_floor'])},{int(c['precision_ok'])},"
                     f"{c['storage_words']:g},"
                     f"{c['wire_words']:g},{c['iters']}\n")
+    return path
+
+
+def write_geometry_csv(out_dir: Path,
+                       geometry_cells: Sequence[Dict]) -> Path:
+    """Write the geometry-stage format x grid sweep CSV; returns the path."""
+    fig_dir = Path(out_dir) / "figures"
+    fig_dir.mkdir(parents=True, exist_ok=True)
+    path = fig_dir / "campaign_geometry.csv"
+    with open(path, "w") as f:
+        f.write(GEOMETRY_CSV_HEADER + "\n")
+        for c in geometry_cells:
+            if c.get("skipped"):
+                continue
+            grid = "x".join(str(g) for g in c["grid"])
+            f.write(f"{c['format']},{grid},{c['P']},{c['halo_elems']},"
+                    f"{c['surface_to_volume']:.6f},{c['msgs_modeled']},"
+                    f"{c['ppermute_expected']},{c['hlo_ppermute']},"
+                    f"{c['hlo_all_reduce']},{int(c['overlap_ok'])},"
+                    f"{c['t_iter_us']:.1f},{c['t_iter_noisy_us']:.1f},"
+                    f"{c['accuracy_err']:.3e}\n")
     return path
 
 
@@ -580,6 +606,53 @@ def write_report_md(out_dir: Path, result: Dict) -> Path:
         w("")
     else:
         w("(precision stage disabled: `precision_policies = ()`)")
+        w("")
+    w(REPORT_SECTIONS[12])
+    w("")
+    geo_cells = [c for c in result.get("geometry_cells", [])
+                 if not c.get("skipped")]
+    if geo_cells:
+        w("Each cell runs a REAL forced-device `sharded_fused` solve for")
+        w("one operator format x process-grid point and is gated against")
+        w("the surface-to-volume communication model")
+        w("(`core/perfmodel/comm.py`): the compiled while body must carry")
+        w("exactly ONE all-reduce (the split-phase Gram psum) and a halo")
+        w("ppermute count equal to `2 vectors x 2 messages per decomposed")
+        w("axis`; the sharded")
+        w("solution must match the single-device reference.  `noisy` adds")
+        w("a wall-clock per-iteration stall (the noise axis).")
+        w("")
+        w("| format | grid | P | halo elems | S/V | msgs (model) "
+          "| ppermute (HLO/model) | all-reduce | t/iter (us) "
+          "| noisy (us) | err |")
+        w("|---|---|---:|---:|---:|---:|---:|---:|---:|---:|---:|")
+        for c in geo_cells:
+            grid = "x".join(str(g) for g in c["grid"])
+            w(f"| {c['format']} | {grid} | {c['P']} | {c['halo_elems']} | "
+              f"{_fmt(c['surface_to_volume'])} | {c['msgs_modeled']} | "
+              f"{c['hlo_ppermute']}/{c['ppermute_expected']} | "
+              f"{c['hlo_all_reduce']} | {_fmt(c['t_iter_us'], 1)} | "
+              f"{_fmt(c['t_iter_noisy_us'], 1)} | "
+              f"{c['accuracy_err']:.2e} |")
+        w("")
+        gv = v.get("geometry", {})
+        for key, row in gv.items():
+            if key == "best_grid":
+                continue
+            w(f"- `{key}`: accuracy ok = {row['accuracy_ok']}, one "
+              f"all-reduce = {row['one_all_reduce']}, overlap = "
+              f"{row['overlap_ok']}, msgs match = "
+              f"{row['hlo_msgs_match']}, noise slowdown = "
+              f"{_fmt(row['noise_slowdown'], 2)}x")
+        bg = gv.get("best_grid")
+        if bg:
+            w(f"- `best_grid`: comm model picks "
+              f"{tuple(bg['modeled'])}; swept minimum "
+              f"{tuple(bg['swept_min_elems'])} (matches = "
+              f"{bg['matches_comm_model']})")
+        w("")
+    else:
+        w("(geometry stage disabled: `geometry_formats = ()`)")
         w("")
     for check, ok in v["acceptance"].items():
         w(f"- {'PASS' if ok else 'FAIL'}: {check}")

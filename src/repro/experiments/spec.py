@@ -200,6 +200,36 @@ class CampaignSpec:
         its attainable-accuracy plateau, not to a tolerance);
         pipebicgstab cells use 1.5x of it (past the saturation knee of
         the bf16 plateau).
+    geometry_formats:
+        Operator formats swept by the geometry stage (subset of
+        {"dia", "bsr", "dia2d"}; empty tuple disables the stage).  Each
+        cell runs a REAL multi-device ``sharded_fused`` solve in a
+        forced-device subprocess (``geometry_exec.py``) and is gated on
+        (a) matching the single-device reference to 1e-8, (b) exactly
+        one all-reduce per compiled while body with the halo ppermutes
+        independent of it (split-phase overlap), and (c) an XLA
+        ppermute count equal to the surface-to-volume message model of
+        ``core/perfmodel/comm.py`` (2 vectors x 2 messages per
+        decomposed axis).
+    geometry_grids:
+        2-D process grids (py, px) swept by the ``dia2d`` cells; the
+        sweep must include ``comm.best_grid``'s pick so the validation
+        can check the model's minimizer against the swept set.
+    geometry_shards:
+        1-D shard count of the ``dia`` / ``bsr`` cells.
+    geometry_points:
+        Global lattice extents (ny, nx); the 1-D cells flatten to
+        ``ny * nx`` rows.
+    geometry_bs:
+        BSR block size of the ``bsr`` cells.
+    geometry_maxiter / geometry_tol / geometry_repeats:
+        Iteration count (the scan always runs ``maxiter`` steps, so the
+        per-iteration time is wall / maxiter), freeze tolerance, and
+        timed repeats per cell.
+    geometry_noise_scale:
+        Seconds per unit draw of the wall-clock ``NoiseHook`` stall in
+        each cell's noisy twin run (exponential waits; the noise axis
+        of the format x grid x noise sweep).
     seed:
         Base seed; every stage derives its own stream from it.
     """
@@ -261,6 +291,15 @@ class CampaignSpec:
     precision_n: int = 1024
     precision_shards: int = 4
     precision_maxiter: int = 300
+    geometry_formats: Tuple[str, ...] = ("dia", "bsr", "dia2d")
+    geometry_grids: Tuple[Tuple[int, int], ...] = ((4, 1), (2, 2), (1, 4))
+    geometry_shards: int = 4
+    geometry_points: Tuple[int, int] = (16, 16)
+    geometry_bs: int = 4
+    geometry_maxiter: int = 40
+    geometry_tol: float = 1e-10
+    geometry_repeats: int = 3
+    geometry_noise_scale: float = 4e-3
     seed: int = 0
 
 

@@ -262,6 +262,62 @@ def validate_precision_cells(precision: Dict,
     return out
 
 
+def validate_geometry_cells(geometry_cells: Sequence[Dict],
+                            accuracy_tol: float = 1e-8) -> Dict:
+    """Geometry-stage validation: measured collectives vs the comm model.
+
+    For every executed (format, grid) cell: the sharded solution must
+    match the single-device reference to ``accuracy_tol``, the compiled
+    while body must carry exactly ONE all-reduce with the halo
+    ppermutes independent of it (split-phase overlap), and the body's
+    ppermute count must equal the surface-to-volume message model over
+    the DECOMPOSED axes, ``n_halo_vecs * 2 * active_dims``
+    (``core/perfmodel/comm.py``; a size-1 grid axis has no neighbor).
+    A cross-cell check confirms ``comm.best_grid`` names the swept 2-D
+    grid with the fewest modeled halo elements.
+    """
+    from repro.core.perfmodel import comm
+
+    out: Dict = {}
+    grids_2d: Dict[tuple, int] = {}
+    for c in geometry_cells:
+        if c.get("skipped"):
+            continue
+        key = f"{c['format']}/{'x'.join(str(g) for g in c['grid'])}"
+        out[key] = {
+            "P": int(c["P"]),
+            "accuracy_err": float(c["accuracy_err"]),
+            "accuracy_ok": bool(c["accuracy_err"] <= accuracy_tol),
+            "one_all_reduce": bool(c["hlo_all_reduce"] == 1),
+            "overlap_ok": bool(c["overlap_ok"]
+                               and not c["permute_depends_on_reduce"]),
+            "hlo_msgs_match": bool(
+                c["hlo_ppermute"] == c["ppermute_expected"]),
+            "surface_to_volume": float(c["surface_to_volume"]),
+            "halo_elems": int(c["halo_elems"]),
+            "t_iter_us": float(c["t_iter_us"]),
+            "noise_slowdown": float(c["t_iter_noisy_us"]
+                                    / max(c["t_iter_us"], 1e-9)),
+        }
+        if c["format"] == "dia2d":
+            grids_2d[tuple(c["grid"])] = int(c["halo_elems"])
+    if grids_2d:
+        c0 = next(c for c in geometry_cells
+                  if c.get("format") == "dia2d" and not c.get("skipped"))
+        points = tuple(int(e) * int(g) for e, g
+                       in zip(c0["extents"], c0["grid"]))
+        best = comm.best_grid(points, int(c0["P"]))
+        swept_min = min(grids_2d, key=grids_2d.get)
+        out["best_grid"] = {
+            "modeled": list(best),
+            "swept_min_elems": list(swept_min),
+            "matches_comm_model": bool(
+                best not in grids_2d
+                or grids_2d[best] == grids_2d[swept_min]),
+        }
+    return out
+
+
 def validate_abft_cells(abft_cells: Sequence[Dict]) -> Dict:
     """ABFT-stage validation: detection coverage of the carried detectors.
 

@@ -55,18 +55,22 @@ def cache_stats() -> Dict[str, int]:
 
 
 def _key(kind: str, n: int, dtype, backend: str, min_block: int,
-         n_shards: int, k_rhs: int, dtype_storage=None) -> str:
+         n_shards: int, k_rhs: int, dtype_storage=None,
+         fmt: Optional[str] = None) -> str:
     """JSON-stable cache key: backend + full shape + dtype signature.
 
     ``dtype_storage`` names the carried-vector storage dtype of a mixed
-    PrecisionPolicy; it is appended only when it differs from the accum
-    dtype, so the keys of pure fp32/fp64 sweeps (and every previously
-    persisted cache file) are unchanged.
+    PrecisionPolicy and ``fmt`` a non-default operator format ("bsr");
+    each is appended only when set, so the keys of pure fp32/fp64 DIA
+    sweeps (and every previously persisted cache file) are unchanged —
+    the append-only convention for extending this key.
     """
     parts = [kind, n, jnp.dtype(dtype).name, backend, min_block, n_shards,
              k_rhs]
     if dtype_storage is not None:
         parts.append(jnp.dtype(dtype_storage).name)
+    if fmt is not None:
+        parts.append(str(fmt))
     return "|".join(str(v) for v in parts)
 
 
@@ -129,7 +133,7 @@ def best_block(kind: str, n: int, dtype, *,
                probe: Optional[Callable[[int], Callable[[], jax.Array]]] = None,
                backend: Optional[str] = None,
                n_shards: int = 1, k_rhs: int = 1,
-               dtype_storage=None) -> int:
+               dtype_storage=None, fmt: Optional[str] = None) -> int:
     """Pick a block size for a tiled kernel sweep.
 
     kind            — cache namespace (e.g. "pipecg_spmv", "spmv_dia")
@@ -146,12 +150,15 @@ def best_block(kind: str, n: int, dtype, *,
     dtype_storage   — carried-vector storage dtype when it differs from
                       ``dtype`` (the accum dtype); part of the cache key
                       so a bf16 sweep never reuses an fp32 choice
+    fmt             — operator format when not the default DIA ("bsr");
+                      part of the cache key (block units and resident
+                      footprints differ per format)
     """
     backend = backend or jax.default_backend()
     # min_block is part of the key: the same (kind, n) tuned for a narrow
     # band must not hand its block to a caller with a wider halo floor
     key = _key(kind, n, dtype, backend, min_block, n_shards, k_rhs,
-               dtype_storage=dtype_storage)
+               dtype_storage=dtype_storage, fmt=fmt)
     if key in _CACHE:
         _STATS["hits"] += 1
         return _CACHE[key]

@@ -1,4 +1,4 @@
-"""ABFT column checksums for DIA operators.
+"""ABFT column checksums for DIA and BSR operators.
 
 The classical algorithm-based fault-tolerance (ABFT) identity for an SpMV
 ``y = A v`` is
@@ -52,3 +52,22 @@ def dia_column_checksum(offsets: Sequence[int], bands: jnp.ndarray, *,
         # extended index (j - off) + h
         c = c + jax.lax.dynamic_slice_in_dim(ext[k], h - off, n)
     return c
+
+
+def bsr_column_checksum(indices: jnp.ndarray,
+                        blocks: jnp.ndarray) -> jnp.ndarray:
+    """Column sums ``c = A^T 1`` of a blocked-ELL (BSR) operator.
+
+    ``indices`` (nbr, deg) int32, ``blocks`` (nbr, deg, bs, bs); pad
+    entries are self-pointing zero blocks, so they scatter zeros and need
+    no masking.  Returns ``c`` of length ``nbr * bs``: the within-block
+    column sums of every stored block, scatter-added onto the block
+    column it names (a static ``deg``-step unroll, trace-time friendly).
+    """
+    nbr, deg = indices.shape
+    bs = blocks.shape[-1]
+    colsums = jnp.sum(blocks, axis=-2)  # (nbr, deg, bs)
+    c = jnp.zeros((nbr, bs), blocks.dtype)
+    for d in range(deg):
+        c = c.at[indices[:, d]].add(colsums[:, d])
+    return c.reshape(nbr * bs)

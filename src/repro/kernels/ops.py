@@ -65,6 +65,111 @@ def spmv_dia_ext(offsets: Tuple[int, ...], bands, x_ext, halo: int):
                         interpret=_interpret())
 
 
+def _bsr_pad(indices, blocks, brows):
+    """Pad block rows to a multiple of ``brows`` with self-pointing zeros."""
+    nbr, deg = indices.shape
+    pad = (-nbr) % brows
+    if pad == 0:
+        return indices, blocks, 0
+    idx_pad = jnp.tile(jnp.arange(nbr, nbr + pad,
+                                  dtype=indices.dtype)[:, None], (1, deg))
+    indices_p = jnp.concatenate([indices, idx_pad], axis=0)
+    blocks_p = jnp.pad(blocks, ((0, pad), (0, 0), (0, 0), (0, 0)))
+    return indices_p, blocks_p, pad
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def spmv_bsr(indices, blocks, x, block: int = None):
+    """Blocked-ELL SpMV ``y = A x`` (kernel-backed, padded).
+
+    ``indices`` (nbr, deg) int32 with self-pointing zero-block pad
+    entries, ``blocks`` (nbr, deg, bs, bs), ``x`` (n,) with
+    ``n = nbr * bs``.  ``block`` is the tile size in BLOCK ROWS; the
+    default comes from the autotuner under the format-extended key.
+    """
+    from repro.kernels import autotune
+    from repro.kernels import spmv_bsr as _sb
+
+    nbr, deg = indices.shape
+    bs = blocks.shape[-1]
+    if block is None:
+        ro = _rel_words(blocks.dtype, x.dtype)
+        block = autotune.best_block(
+            "spmv_bsr", nbr, x.dtype,
+            # tiled words per BLOCK row: y write + gathered x reads at bs
+            # words each, blocks at deg*bs^2, int32 ELL indices at deg
+            words_per_row=2.0 * bs + (deg * bs * bs) * ro + deg * 0.5,
+            resident_words=float(nbr * bs),
+            min_block=1, fmt="bsr")
+    block = max(min(block, nbr), 1)
+    indices_p, blocks_p, pad = _bsr_pad(indices, blocks, block)
+    if pad:
+        xp = jnp.pad(x, (0, pad * bs))
+        y = _sb.spmv_bsr(indices_p, blocks_p, xp, brows=block,
+                         interpret=_interpret())
+        return y[: nbr * bs]
+    return _sb.spmv_bsr(indices, blocks, x, brows=block,
+                        interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def pipecg_bsr_fused_step(indices, blocks, inv_diag, x, r, u, p, alpha,
+                          beta, block: int = None):
+    """Single-sweep PIPECG iteration on a blocked-ELL (BSR) operator.
+
+    The BSR rendering of :func:`pipecg_spmv_fused_step` — same contract:
+    (n,) vectors with scalar alpha/beta or batched (k, n) with (k,);
+    returns (x', r', u', p', red) with the shared (k, 6) reduction row
+    (5 Gram partials + the ABFT checksum residual, computed from column
+    sums taken at the operator's dtype before any storage demotion).
+    Pads the block-row dimension with self-pointing zero-block rows,
+    which contribute exact zeros to every partial — no mask needed.
+    """
+    from repro.kernels import autotune
+    from repro.kernels import spmv_bsr as _sb
+    from repro.kernels.checksum import bsr_column_checksum
+
+    squeeze = x.ndim == 1
+    if squeeze:
+        x, r, u, p = (v[None] for v in (x, r, u, p))
+        alpha = jnp.asarray(alpha)[None]
+        beta = jnp.asarray(beta)[None]
+    k_rhs = x.shape[0]
+    nbr, deg = indices.shape
+    bs = blocks.shape[-1]
+    if block is None:
+        rs = _rel_words(u.dtype, x.dtype)
+        ro = _rel_words(blocks.dtype, x.dtype)
+        block = autotune.best_block(
+            "pipecg_spmv", nbr, x.dtype,
+            # tiled words per BLOCK row: x,r reads + x,r,u,p writes
+            words_per_row=(2.0 + 4.0 * rs) * bs,
+            # once-per-sweep residents: u, p, diag^-1, column sums,
+            # blocks and the int32 ELL indices
+            resident_words=(2 * rs + 2) * nbr * bs
+            + (deg * bs * bs * ro + deg * 0.5) * nbr,
+            min_block=1, k_rhs=k_rhs,
+            dtype_storage=_storage_key(u.dtype, x.dtype), fmt="bsr")
+    block = max(min(block, nbr), 1)
+    csum = bsr_column_checksum(indices, blocks)
+    indices_p, blocks_p, pad = _bsr_pad(indices, blocks, block)
+    if pad:
+        invd_p = jnp.pad(inv_diag, (0, pad * bs))
+        csum_p = jnp.pad(csum, (0, pad * bs))
+        vecs = [jnp.pad(v, ((0, 0), (0, pad * bs))) for v in (x, r, u, p)]
+        outs = _sb.pipecg_bsr_fused(indices_p, blocks_p, invd_p, csum_p,
+                                    *vecs, alpha, beta, brows=block,
+                                    interpret=_interpret())
+        outs = tuple(o[:, : nbr * bs] for o in outs[:4]) + (outs[4],)
+    else:
+        outs = _sb.pipecg_bsr_fused(indices, blocks, inv_diag, csum,
+                                    x, r, u, p, alpha, beta, brows=block,
+                                    interpret=_interpret())
+    if squeeze:
+        outs = tuple(o[0] for o in outs)
+    return outs
+
+
 @functools.partial(jax.jit, static_argnames=("causal",))
 def flash_mha(q, k, v, causal: bool = True):
     """Flash attention fwd; pads S to the block size."""

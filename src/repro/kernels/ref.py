@@ -146,3 +146,45 @@ def pipebicgstab_fused_ref(offsets, bands, x, r, w, t, pa, a, c, r_hat,
     chk_row = jnp.zeros((1, 6), x.dtype).at[0, 0].set(
         jnp.sum(t2) - jnp.sum(csum * w2))
     return x2, r2, w2, t2, pa2, a2, c2, jnp.concatenate([C @ C.T, chk_row])
+
+
+def spmv_bsr_ref(indices, blocks, x) -> jnp.ndarray:
+    """Blocked-ELL SpMV oracle: one gather + one batched block GEMV.
+
+    ``indices`` (nbr, deg) int32 (self-pointing zero-block pads),
+    ``blocks`` (nbr, deg, bs, bs); ``x`` may carry leading batch dims.
+    """
+    nbr, _ = indices.shape
+    bs = blocks.shape[-1]
+    xb = x.reshape(x.shape[:-1] + (nbr, bs))
+    g = jnp.take(xb, indices, axis=-2)
+    y = jnp.einsum("rdij,...rdj->...ri", blocks, g)
+    return y.reshape(x.shape)
+
+
+def pipecg_bsr_fused_ref(indices, blocks, inv_diag, x, r, u, p, alpha, beta
+                         ) -> Tuple[jnp.ndarray, ...]:
+    """Whole-iteration oracle for the single-sweep BSR PIPECG kernel.
+
+    Same contract as :func:`pipecg_spmv_fused_ref` — batched (k, n)
+    vectors, (k,) scalars, red (k, 6) with the ABFT checksum last.
+    """
+    from repro.kernels.checksum import bsr_column_checksum
+
+    csum = bsr_column_checksum(indices, blocks)
+
+    def one(x, r, u, p, alpha, beta):
+        p2 = u + beta * p
+        s2 = spmv_bsr_ref(indices, blocks, p2)
+        q2 = inv_diag * s2
+        x2 = x + alpha * p2
+        r2 = r - alpha * s2
+        u2 = u - alpha * q2
+        w2 = spmv_bsr_ref(indices, blocks, u2)
+        red = jnp.stack([jnp.sum(r2 * u2), jnp.sum(w2 * u2),
+                         jnp.sum(r2 * r2), jnp.sum(r2 * w2),
+                         jnp.sum(w2 * w2),
+                         jnp.sum(w2) - jnp.sum(csum * u2)])
+        return x2, r2, u2, p2, red
+
+    return jax.vmap(one)(x, r, u, p, jnp.asarray(alpha), jnp.asarray(beta))

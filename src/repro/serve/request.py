@@ -91,13 +91,30 @@ class SolveRequest:
 
 
 def group_key(req: SolveRequest) -> Tuple:
-    """Compile-compatibility key: requests sharing it share one executable."""
-    return (tuple(req.A.offsets), int(req.A.n),
+    """Compile-compatibility key: requests sharing it share one executable.
+
+    The structural part comes from the operator protocol
+    (``SparseOperator.structure_key``: format tag + shape parameters, no
+    coefficients) so DIA and BSR operators of identical global size can
+    never share a compiled batch step.
+    """
+    A = req.A
+    skey = (tuple(A.structure_key()) if hasattr(A, "structure_key")
+            else tuple(A.offsets))
+    return (skey, int(A.n),
             np.dtype(np.asarray(req.b).dtype).name, req.M, req.ip)
 
 
 def operator_fingerprint(A: DiaMatrix) -> str:
-    """Digest of the operator coefficients (batch-sharing identity)."""
+    """Digest of the operator coefficients (batch-sharing identity).
+
+    Delegates to the operator protocol (``SparseOperator.fingerprint``);
+    the legacy inline digest is kept for raw objects that predate it and
+    produces the SAME hex for a ``DiaMatrix`` (the protocol method uses
+    the identical byte stream — pinned in tests/test_operator.py).
+    """
+    if hasattr(A, "fingerprint"):
+        return A.fingerprint()
     h = hashlib.sha1()
     h.update(repr(tuple(A.offsets)).encode())
     h.update(np.ascontiguousarray(np.asarray(A.bands)).tobytes())

@@ -19,15 +19,18 @@ from repro.experiments.report import (
     DEPTH_CSV_HEADER,
     ECDF_CSV_HEADER,
     FAULT_CSV_HEADER,
+    GEOMETRY_CSV_HEADER,
     REPORT_SECTIONS,
     RUNTIME_CSV_HEADER,
     SERVE_CSV_HEADER,
     SPEEDUP_CSV_HEADER,
     write_fault_csv,
+    write_geometry_csv,
     write_serve_csv,
 )
 from repro.experiments.validation import (
     validate_fault_cells,
+    validate_geometry_cells,
     validate_serve_cells,
 )
 
@@ -57,6 +60,10 @@ TINY = CampaignSpec(
     # serve-smoke job; synthetic serve records below exercise its
     # validation/report plumbing (same pattern as the fault stage)
     serve_requests=0,
+    # the geometry stage needs a forced multi-device subprocess — covered
+    # by the slow lane (tests/test_engine_equivalence.py) and the CI
+    # smoke campaign; synthetic cells below exercise its plumbing
+    geometry_formats=(),
     seed=1234,
 )
 
@@ -360,6 +367,123 @@ def test_fault_csv_schema(tmp_path):
     assert lines[0] == FAULT_CSV_HEADER
     assert len(lines) == 2               # the skipped cell is not a row
     assert lines[1].startswith("kill,0.05,4,14,1,1,")
+
+
+def _geometry_cell(**over):
+    """A synthetic geometry-stage cell (geometry_exec worker schema)."""
+    cell = {
+        "format": "dia2d", "grid": [2, 2], "P": 4,
+        "res_norm": 1e-11, "ref_res_norm": 1e-11, "accuracy_err": 3e-11,
+        "t_iter_us": 100.0, "t_iter_noisy_us": 900.0,
+        "extents": [8, 8], "widths": [1, 1],
+        "halo_elems": 32, "surface_to_volume": 0.5,
+        "msgs_modeled": 4, "msgs_active": 4, "t_halo_modeled_s": 1e-6,
+        "ppermute_expected": 8, "hlo_all_reduce": 1, "hlo_ppermute": 8,
+        "permute_depends_on_reduce": False, "overlap_ok": True,
+        "skipped": False,
+    }
+    cell.update(over)
+    return cell
+
+
+def _geometry_cells():
+    """The smoke sweep's shape: 1-D dia + bsr rows and three 2-D grids
+    (the strip grids have one active axis -> half the ppermutes)."""
+    return [
+        _geometry_cell(format="dia", grid=[4], extents=[64], widths=[1],
+                       halo_elems=2, surface_to_volume=2 / 64,
+                       msgs_modeled=2, msgs_active=2,
+                       ppermute_expected=4, hlo_ppermute=4),
+        _geometry_cell(format="bsr", grid=[4], extents=[64], widths=[4],
+                       halo_elems=8, surface_to_volume=8 / 64,
+                       msgs_modeled=2, msgs_active=2,
+                       ppermute_expected=4, hlo_ppermute=4),
+        _geometry_cell(grid=[4, 1], extents=[4, 16], widths=[1, 1],
+                       halo_elems=40, surface_to_volume=40 / 64,
+                       msgs_active=2, ppermute_expected=4, hlo_ppermute=4),
+        _geometry_cell(),  # (2, 2): both axes active, 8 ppermutes
+        _geometry_cell(grid=[1, 4], extents=[16, 4], widths=[1, 1],
+                       halo_elems=40, surface_to_volume=40 / 64,
+                       msgs_active=2, ppermute_expected=4, hlo_ppermute=4),
+    ]
+
+
+def test_geometry_stage_disabled_keeps_schema(campaign):
+    """With geometry_formats=() the record still carries the (empty)
+    geometry keys and REPORT.md still renders section 13."""
+    out, result = campaign
+    assert result["geometry_cells"] == []
+    assert result["validation"]["geometry"] == {}
+    report = (out / "REPORT.md").read_text()
+    assert REPORT_SECTIONS[12] in report
+    assert "geometry stage disabled" in report
+    assert not (out / "figures" / "campaign_geometry.csv").exists()
+    assert not any(k.startswith("geometry:")
+                   for k in result["validation"]["acceptance"])
+
+
+def test_validate_geometry_cells_criteria():
+    v = validate_geometry_cells(_geometry_cells())
+    assert set(v) == {"dia/4", "bsr/4", "dia2d/4x1", "dia2d/2x2",
+                      "dia2d/1x4", "best_grid"}
+    for key, row in v.items():
+        if key == "best_grid":
+            continue
+        assert row["accuracy_ok"] and row["one_all_reduce"]
+        assert row["overlap_ok"] and row["hlo_msgs_match"]
+        assert row["noise_slowdown"] == pytest.approx(9.0)
+    # the (16, 16) lattice over 4 shards: comm.best_grid says (2, 2),
+    # which is also the swept grid with the fewest halo elements
+    bg = v["best_grid"]
+    assert bg["modeled"] == [2, 2]
+    assert bg["swept_min_elems"] == [2, 2]
+    assert bg["matches_comm_model"]
+
+    # each gate trips on the matching defect
+    off = validate_geometry_cells([_geometry_cell(accuracy_err=1e-5)])
+    assert not off["dia2d/2x2"]["accuracy_ok"]
+    two = validate_geometry_cells([_geometry_cell(hlo_all_reduce=2)])
+    assert not two["dia2d/2x2"]["one_all_reduce"]
+    dep = validate_geometry_cells(
+        [_geometry_cell(permute_depends_on_reduce=True)])
+    assert not dep["dia2d/2x2"]["overlap_ok"]
+    # an elided (or extra) ppermute breaks the message-count gate
+    eli = validate_geometry_cells([_geometry_cell(hlo_ppermute=4)])
+    assert not eli["dia2d/2x2"]["hlo_msgs_match"]
+    # skipped cells (not enough devices) are excluded, not failed
+    assert validate_geometry_cells(
+        [_geometry_cell(skipped=True, reason="2 devices < P=4")]) == {}
+    assert validate_geometry_cells([]) == {}
+
+
+def test_geometry_acceptance_checks():
+    from repro.experiments.campaign import _acceptance
+
+    ok = validate_geometry_cells(_geometry_cells())
+    acc = _acceptance(TINY, [], {}, geometry_validation=ok)
+    assert acc["geometry: split-phase overlap (one all-reduce per body) "
+               "for every format x grid"]
+    assert acc["geometry: XLA ppermute count matches the "
+               "surface-to-volume message model"]
+    assert acc["geometry: every sharded solve matches the single-device "
+               "reference"]
+    assert acc["geometry: comm model's best grid minimizes halo "
+               "elements over the swept grids"]
+
+    bad = validate_geometry_cells([_geometry_cell(hlo_ppermute=4)])
+    acc = _acceptance(TINY, [], {}, geometry_validation=bad)
+    assert not acc["geometry: XLA ppermute count matches the "
+                   "surface-to-volume message model"]
+
+
+def test_geometry_csv_schema(tmp_path):
+    cells = _geometry_cells() + [_geometry_cell(skipped=True)]
+    path = write_geometry_csv(tmp_path, cells)
+    lines = path.read_text().splitlines()
+    assert lines[0] == GEOMETRY_CSV_HEADER
+    assert len(lines) == 6               # the skipped cell is not a row
+    assert lines[1].startswith("dia,4,4,2,")
+    assert lines[4].startswith("dia2d,2x2,4,32,")
 
 
 def test_measured_makespans_deterministic_and_near_closed():

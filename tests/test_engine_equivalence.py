@@ -346,6 +346,109 @@ def test_sharded_engine_distributed_equivalence():
         assert tag in out.stdout, out.stdout
 
 
+OPERATOR_GEOMETRY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import functools
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh
+    from repro.core.krylov import (distributed_solve, pipecg, dia_to_bsr,
+                                   glen_law_band, laplacian_2d)
+    from repro.launch.hlo_analysis import split_phase_overlap
+
+    TOL = 1e-10  # the PR acceptance gate (fp64)
+    devs = np.array(jax.devices())
+
+    def solver_body(A, b, mesh, **kw):
+        txt = jax.jit(functools.partial(
+            distributed_solve, pipecg, A, mesh=mesh, engine="sharded_fused",
+            maxiter=5, **kw)).lower(b).compile().as_text()
+        rep = split_phase_overlap(txt)
+        assert rep["overlap_ok"], rep
+        mixed = [r for r in rep["bodies"].values() if r["all_reduce"] > 0]
+        assert len(mixed) == 1, rep["bodies"]
+        return mixed[0]
+
+    # ---- DIA on a 2-D process grid vs the single-device solve ----
+    A = laplacian_2d(nx=16, ny=8)
+    b = jnp.asarray(np.random.default_rng(0).standard_normal(A.n))
+    ref = pipecg(lambda v: A.matvec(v), b, maxiter=60, tol=0.0)
+    for (py, px) in ((1, 2), (2, 1), (2, 2), (2, 4)):
+        mesh = Mesh(devs[: py * px].reshape(py, px), ("gy", "gx"))
+        out = distributed_solve(pipecg, A, b, mesh, engine="sharded_fused",
+                                maxiter=60, tol=0.0, M=None)
+        err = float(jnp.max(jnp.abs(out.x - ref.x)))
+        assert err < TOL, (py, px, err)
+        print("2d grid", (py, px), "ok")
+
+    # the (2, 2) body: ONE split-phase all-reduce; 8 ppermutes = 2
+    # vectors x 2 messages per decomposed axis x 2 active axes (a size-1
+    # axis has no neighbor, so XLA elides its permutes: (1, 2) -> 4)
+    body = solver_body(A, b, Mesh(devs[:4].reshape(2, 2), ("gy", "gx")))
+    assert body["all_reduce"] == 1, body
+    assert body["collective_permute"] == 8, body
+    body = solver_body(A, b, Mesh(devs[:2].reshape(1, 2), ("gy", "gx")))
+    assert body["collective_permute"] == 4, body
+    print("2d hlo ok")
+
+    # Jacobi variant stays equivalent on the 2-D grid
+    refj = pipecg(lambda v: A.matvec(v), b, maxiter=60, tol=0.0,
+                  M=lambda v: v / A.diagonal())
+    outj = distributed_solve(pipecg, A, b,
+                             Mesh(devs[:4].reshape(2, 2), ("gy", "gx")),
+                             engine="sharded_fused", maxiter=60, tol=0.0,
+                             M="jacobi")
+    assert float(jnp.max(jnp.abs(outj.x - refj.x))) < TOL
+    print("2d jacobi ok")
+
+    # ---- BSR on the 1-D block chain vs the single-device solve ----
+    B = dia_to_bsr(glen_law_band(256, bandwidth=8), bs=4)
+    b2 = jnp.asarray(np.random.default_rng(0).standard_normal(256))
+    ref2 = pipecg(lambda v: B.matvec(v), b2, maxiter=80, tol=0.0)
+    for ns in (1, 2, 4):
+        mesh = Mesh(devs[:ns], ("shards",))
+        out = distributed_solve(pipecg, B, b2, mesh, engine="sharded_fused",
+                                maxiter=80, tol=0.0, M=None)
+        err = float(jnp.max(jnp.abs(out.x - ref2.x)))
+        assert err < TOL, (ns, err)
+        print("bsr shards", ns, "ok")
+
+    body = solver_body(B, b2, Mesh(devs[:4], ("shards",)))
+    assert body["all_reduce"] == 1, body
+    assert body["collective_permute"] == 4, body  # u, p x W/E
+    print("bsr hlo ok")
+
+    refj2 = pipecg(lambda v: B.matvec(v), b2, maxiter=80, tol=1e-12,
+                   M=lambda v: v / B.diagonal())
+    outj2 = distributed_solve(pipecg, B, b2, Mesh(devs[:4], ("shards",)),
+                              engine="sharded_fused", maxiter=80,
+                              tol=1e-12, M="jacobi")
+    assert float(jnp.max(jnp.abs(outj2.x - refj2.x))) < TOL
+    print("bsr jacobi ok")
+""")
+
+
+@pytest.mark.slow
+def test_operator_geometry_distributed_equivalence():
+    """The PR-10 operator decompositions end to end (subprocess with 8
+    forced host devices): DIA on (1,2)/(2,1)/(2,2)/(2,4) process grids
+    and BSR on 1/2/4 block-chain shards each match the single-device
+    solve to 1e-10, plain and Jacobi-preconditioned, and the compiled
+    while bodies carry exactly ONE split-phase all-reduce with the
+    surface-law ppermute counts (8 on a 2-axis grid, 4 on the chain)."""
+    from conftest import run_subprocess_with_retry
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = run_subprocess_with_retry(OPERATOR_GEOMETRY_SCRIPT, env=env)
+    for tag in ("2d grid (2, 4) ok", "2d hlo ok", "2d jacobi ok",
+                "bsr shards 4 ok", "bsr hlo ok", "bsr jacobi ok"):
+        assert tag in out.stdout, out.stdout
+
+
 def test_fused_engine_callable_M_fallback(tri_system):
     """An opaque callable M cannot run in-kernel: the FusedEngine falls
     back to the update-kernel path and must still match naive."""

@@ -1,0 +1,367 @@
+"""SparseOperator conformance suite (PR 10 operator layer).
+
+One parametrized contract for every concrete format — ``DiaMatrix`` and
+``BsrMatrix`` must agree with their dense renderings on ``matvec`` /
+``diagonal`` / ``column_checksum``, expose consistent ``halo_spec`` /
+``words_per_iter`` / ``fingerprint`` members, and survive the lossless
+DIA -> BSR conversion exactly.  Also holds the bit-exactness pins the
+refactor promised in docstrings elsewhere:
+
+* ``dia_gather_matvec`` == the historical per-band ``.at[].add`` scatter
+  loop, bit for bit (core/krylov/operators.py);
+* ``serve.request.operator_fingerprint`` == the legacy inline sha1 it
+  replaced (serve/request.py);
+* ``comm.halo_wire_time`` at d = 1 == the historical
+  ``SolverPhaseModel.t_halo`` wire formula, bit for bit
+  (core/perfmodel/comm.py).
+"""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.krylov.operator import (BsrMatrix, HaloSpec, SparseOperator,
+                                        as_operator, dia_to_bsr,
+                                        reset_operator_deprecation_warning)
+from repro.core.krylov.operators import (DiaMatrix, dia_gather_matvec,
+                                         glen_law_band, laplacian_2d,
+                                         tridiagonal_laplacian)
+from repro.core.perfmodel import comm
+
+
+def _operators(rng):
+    """The conformance fixtures: one instance per format x structure."""
+    A_tri = tridiagonal_laplacian(96)
+    A_band = glen_law_band(64, bandwidth=3, seed=1)
+    A_2d = laplacian_2d(nx=8, ny=6)
+    rand = DiaMatrix(
+        offsets=(-2, 0, 1),
+        bands=jnp.asarray(np.stack([
+            np.concatenate([[0.0, 0.0], rng.standard_normal(46)]),
+            rng.standard_normal(48) + 8.0,
+            np.concatenate([rng.standard_normal(47), [0.0]]),
+        ])))
+    return {
+        "dia_tri": A_tri,
+        "dia_band": A_band,
+        "dia_2d": A_2d,
+        "dia_rand": rand,
+        "bsr_tri": dia_to_bsr(A_tri, bs=4),
+        "bsr_band": dia_to_bsr(A_band, bs=8),
+        "bsr_rand": dia_to_bsr(rand, bs=2),
+    }
+
+
+@pytest.fixture(params=["dia_tri", "dia_band", "dia_2d", "dia_rand",
+                        "bsr_tri", "bsr_band", "bsr_rand"])
+def op(request, rng):
+    return _operators(rng)[request.param]
+
+
+def test_registered_as_sparse_operator(op):
+    assert isinstance(op, SparseOperator)
+    assert op.format in ("dia", "bsr")
+
+
+def test_matvec_matches_dense(op, rng):
+    x = jnp.asarray(rng.standard_normal(op.n))
+    dense = np.asarray(op.to_dense(), np.float64)
+    want = dense @ np.asarray(x, np.float64)
+    np.testing.assert_allclose(np.asarray(op.matvec(x)), want,
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_matvec_batched(op, rng):
+    X = jnp.asarray(rng.standard_normal((3, op.n)))
+    got = op.matvec(X)
+    assert got.shape == X.shape
+    for k in range(3):
+        np.testing.assert_allclose(np.asarray(got[k]),
+                                   np.asarray(op.matvec(X[k])),
+                                   rtol=1e-13, atol=1e-13)
+
+
+def test_diagonal_matches_dense(op):
+    np.testing.assert_allclose(np.asarray(op.diagonal()),
+                               np.diag(np.asarray(op.to_dense())),
+                               rtol=0, atol=0)
+
+
+def test_column_checksum_is_At_ones(op):
+    want = np.asarray(op.to_dense(), np.float64).T @ np.ones(op.n)
+    np.testing.assert_allclose(np.asarray(op.column_checksum()), want,
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_host_matvec_matches_device(op, rng):
+    x = rng.standard_normal(op.n)
+    np.testing.assert_allclose(op.host_matvec(x),
+                               np.asarray(op.matvec(jnp.asarray(x))),
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_inf_norm_matches_dense(op):
+    dense = np.asarray(op.to_dense(), np.float64)
+    assert op.inf_norm() == pytest.approx(np.abs(dense).sum(axis=1).max(),
+                                          rel=1e-12)
+
+
+def test_halo_spec_shape_contract(op):
+    hs = op.halo_spec()
+    assert len(hs.neighbors) == 2 * hs.ndim == len(hs.widths)
+    assert hs.messages_per_exchange == comm.halo_messages(hs.ndim)
+    assert all(w >= 0 for w in hs.widths)
+
+
+def test_words_per_iter_formula(op):
+    w = op.words_per_iter()
+    if op.format == "dia":
+        assert w == 10.0 + len(op.offsets)
+    else:
+        assert w == 10.0 + op.max_deg * op.bs + op.max_deg / op.bs
+
+
+def test_fingerprint_keys_coefficients(op):
+    fp = op.fingerprint()
+    assert isinstance(fp, str) and len(fp) == 16
+    assert fp == op.fingerprint()  # deterministic
+    if op.format == "dia":
+        other = DiaMatrix(offsets=op.offsets,
+                          bands=op.bands.at[op.offsets.index(0), 0].add(1.0),
+                          grid_shape=op.grid_shape)
+    else:
+        other = BsrMatrix(indices=op.indices,
+                          blocks=op.blocks.at[0, 0, 0, 0].add(1.0))
+    assert other.fingerprint() != fp
+    assert other.structure_key() == op.structure_key()
+
+
+# --------------------------------------------------------------------------
+# format specifics
+# --------------------------------------------------------------------------
+
+def test_dia_to_bsr_round_trip_exact(rng):
+    for A, bs in ((tridiagonal_laplacian(96), 4),
+                  (glen_law_band(64, bandwidth=3, seed=1), 8),
+                  (laplacian_2d(nx=8, ny=6), 4)):
+        B = dia_to_bsr(A, bs=bs)
+        assert B.n == A.n and B.bs == bs
+        np.testing.assert_array_equal(np.asarray(B.to_dense()),
+                                      np.asarray(A.to_dense()))
+
+
+def test_dia_to_bsr_rejects_uneven_blocks():
+    with pytest.raises(ValueError, match="not divisible"):
+        dia_to_bsr(tridiagonal_laplacian(10), bs=4)
+
+
+def test_bsr_halo_reach():
+    B = dia_to_bsr(tridiagonal_laplacian(96), bs=4)
+    assert B.block_halo == 1          # tridiag couples adjacent blocks only
+    assert B.halo == B.block_halo * B.bs
+    hs = B.halo_spec()
+    assert hs.ndim == 1 and hs.neighbors == ("W", "E")
+    assert hs.widths == (B.block_halo, B.block_halo)
+
+
+def test_bsr_pad_entries_are_self_pointing_zero_blocks():
+    B = dia_to_bsr(tridiagonal_laplacian(96), bs=4)
+    ind = np.asarray(B.indices)
+    blk = np.asarray(B.blocks)
+    own_row = np.arange(B.n_block_rows)[:, None]
+    # first/last block rows have only 2 neighbors -> one pad slot each
+    pads = (ind == own_row) & ~np.any(blk != 0.0, axis=(2, 3))
+    assert pads.sum() == 2
+    # and every block row stores exactly max_deg entries
+    assert ind.shape == (B.n_block_rows, B.max_deg)
+
+
+def test_bsr_block_bands_rebuild_dense():
+    B = dia_to_bsr(glen_law_band(64, bandwidth=3, seed=1), bs=8)
+    boffs, bblocks = B.block_bands()
+    nbr, bs = B.n_block_rows, B.bs
+    dense = np.zeros((B.n, B.n))
+    for m, off in enumerate(boffs):
+        for i in range(nbr):
+            j = i + off
+            if 0 <= j < nbr:
+                dense[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs] += \
+                    np.asarray(bblocks[m, i])
+    np.testing.assert_allclose(dense, np.asarray(B.to_dense()),
+                               rtol=0, atol=0)
+
+
+def test_dia_2d_halo_spec():
+    A = laplacian_2d(nx=8, ny=6)
+    hs = A.halo_spec()
+    assert hs.ndim == 2
+    assert hs.neighbors == ("N", "S", "W", "E")
+    assert hs.widths == (1, 1, 1, 1)
+    assert hs.width("N") == 1
+    # stripping grid_shape demotes to the 1-D W/E chain form
+    A1 = DiaMatrix(offsets=A.offsets, bands=A.bands)
+    assert A1.halo_spec().ndim == 1
+
+
+def test_grid_offsets_requires_separable_stencil():
+    A = laplacian_2d(nx=8, ny=6)
+    assert set(A.grid_offsets()) == {(-1, 0), (0, -1), (0, 0), (0, 1),
+                                     (1, 0)}
+    bad = DiaMatrix(offsets=(0, 9), bands=jnp.zeros((2, 48)),
+                    grid_shape=(6, 8))
+    with pytest.raises(ValueError, match="neither a pure-x"):
+        bad.grid_offsets()
+    with pytest.raises(ValueError, match="grid_shape"):
+        DiaMatrix(offsets=(0,), bands=jnp.zeros((1, 48))).grid_offsets()
+
+
+def test_halo_spec_validates_shape():
+    with pytest.raises(ValueError, match="align"):
+        HaloSpec(ndim=1, neighbors=("W", "E"), widths=(1,))
+    with pytest.raises(ValueError, match="neighbors"):
+        HaloSpec(ndim=2, neighbors=("W", "E"), widths=(1, 1))
+
+
+# --------------------------------------------------------------------------
+# bit-exactness pins promised elsewhere
+# --------------------------------------------------------------------------
+
+def _dia_scatter_matvec(offsets, bands, x):
+    """The historical per-band ``.at[].add`` scatter loop, verbatim."""
+    n = x.shape[-1]
+    y = jnp.zeros_like(x)
+    for k, off in enumerate(offsets):
+        lo, hi = max(0, -off), min(n, n - off)
+        idx = jnp.arange(lo, hi)
+        y = y.at[..., idx].add(bands[k, idx] * x[..., idx + off])
+    return y
+
+
+@pytest.mark.parametrize("offsets", [(-1, 0, 1), (-3, -1, 0, 2, 5)])
+def test_dia_gather_matvec_bitexact_vs_scatter(rng, offsets):
+    n = 257
+    bands_np = rng.standard_normal((len(offsets), n))
+    for k, off in enumerate(offsets):  # DIA invariant: out-of-range zeros
+        if off < 0:
+            bands_np[k, :(-off)] = 0.0
+        elif off > 0:
+            bands_np[k, n - off:] = 0.0
+    bands = jnp.asarray(bands_np)
+    x = jnp.asarray(rng.standard_normal(n))
+    got = dia_gather_matvec(offsets, bands, x, jnp)
+    want = _dia_scatter_matvec(offsets, bands, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_serve_fingerprint_matches_legacy_inline_sha1():
+    import hashlib
+    import types
+
+    from repro.serve.request import operator_fingerprint
+
+    A = tridiagonal_laplacian(64)
+    h = hashlib.sha1()
+    h.update(repr(tuple(A.offsets)).encode())
+    h.update(np.ascontiguousarray(np.asarray(A.bands)).tobytes())
+    legacy_hex = h.hexdigest()[:16]
+    assert A.fingerprint() == legacy_hex
+    assert operator_fingerprint(A) == legacy_hex
+    # a raw pre-protocol object (no .fingerprint) takes the inline path
+    raw = types.SimpleNamespace(offsets=A.offsets, bands=A.bands)
+    assert operator_fingerprint(raw) == legacy_hex
+
+
+def test_comm_1d_wire_time_bit_identical_to_legacy_t_halo():
+    from repro.core.noise.simulator import Hardware, SolverPhaseModel
+
+    hw = Hardware()
+    for n, p, halo, vecs, wire in ((1 << 21, 16, 1, 2, 1.0),
+                                   (1 << 18, 4, 10, 2, 0.25),
+                                   (4096, 2, 3, 3, 1.0)):
+        model = SolverPhaseModel(n=n, nnz_per_row=3, p=p, halo=halo,
+                                 n_halo_vecs=vecs, wire_words=wire)
+        # the historical 1-D chain formula, verbatim
+        legacy = (2 * halo * vecs * model.dtype_bytes * wire / hw.link_bw
+                  + 2.0 * hw.hop_latency)
+        got = comm.halo_wire_time(
+            (n // p,), (halo,), n_halo_vecs=vecs,
+            dtype_bytes=model.dtype_bytes, wire_words=wire,
+            link_bw=hw.link_bw, hop_latency=hw.hop_latency)
+        assert got == legacy            # bit-for-bit, no tolerance
+        assert model.t_halo() == legacy
+
+
+# --------------------------------------------------------------------------
+# comm.py geometry units
+# --------------------------------------------------------------------------
+
+def test_local_extents_and_errors():
+    assert comm.local_extents((16, 16), (2, 2)) == (8, 8)
+    assert comm.local_extents((1024,), (4,)) == (256,)
+    with pytest.raises(ValueError, match="rank mismatch"):
+        comm.local_extents((16, 16), (4,))
+    with pytest.raises(ValueError, match="tile evenly"):
+        comm.local_extents((16, 16), (3, 2))
+
+
+def test_halo_elems_surface_law():
+    # 1-D chain: the historical 2 * halo
+    assert comm.halo_elems((256,), (1,)) == 2
+    assert comm.halo_elems((256,), (10,)) == 20
+    # 2-D tile (ly, lx) with unit reach: 2 * (lx + ly)
+    assert comm.halo_elems((8, 8), (1, 1)) == 32
+    assert comm.halo_elems((16, 4), (1, 1)) == 40
+    assert comm.surface_to_volume((8, 8), (1, 1)) == 32 / 64
+    with pytest.raises(ValueError, match="rank mismatch"):
+        comm.halo_elems((8, 8), (1,))
+
+
+def test_halo_messages_two_faces_per_dim():
+    assert comm.halo_messages(1) == 2
+    assert comm.halo_messages(2) == 4
+    assert comm.halo_messages(3) == 6
+
+
+def test_best_grid_prefers_square_tiles():
+    assert comm.best_grid((16, 16), 4) == (2, 2)
+    assert comm.best_grid((16, 16), 16) == (4, 4)
+    # a strip lattice is best cut along its long axis
+    assert comm.best_grid((64, 4), 4) == (4, 1)
+    # 1-D degenerates to the chain
+    assert comm.best_grid((1024,), 8) == (8,)
+
+
+def test_best_grid_respects_stencil_floor():
+    # extents must stay >= 2*width: 16/4 = 4 < 2*3, so (4, 4) is illegal
+    # for width-3 stencils and the search falls back to a coarser cut
+    g = comm.best_grid((16, 16), 4, widths=(3, 3))
+    ext = comm.local_extents((16, 16), g)
+    assert all(e >= 6 for e in ext)
+    with pytest.raises(ValueError, match="no process grid"):
+        comm.best_grid((8, 8), 64, widths=(3, 3))
+
+
+# --------------------------------------------------------------------------
+# legacy-pair deprecation shim
+# --------------------------------------------------------------------------
+
+def test_as_operator_passthrough_and_one_time_warning():
+    A = tridiagonal_laplacian(64)
+    reset_operator_deprecation_warning()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # passthroughs must not warn
+        assert as_operator(A) is A
+        fn = lambda v: v  # noqa: E731 — matrix-free callable passthrough
+        assert as_operator(fn) is fn
+    with pytest.warns(DeprecationWarning, match="DiaMatrix"):
+        wrapped = as_operator(tuple(A.offsets), A.bands)
+    assert isinstance(wrapped, DiaMatrix)
+    assert wrapped.fingerprint() == A.fingerprint()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # second legacy call: silent
+        tup = as_operator((tuple(A.offsets), A.bands))
+    assert isinstance(tup, DiaMatrix)
+    reset_operator_deprecation_warning()
+    with pytest.warns(DeprecationWarning):  # re-armed
+        as_operator(tuple(A.offsets), A.bands)
